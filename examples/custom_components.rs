@@ -1,0 +1,66 @@
+//! The paper's second example: swapping components.
+//!
+//! The C++ original changes two template parameters:
+//! ```cpp
+//! using Kernel_t = limbo::kernel::MaternFiveHalves<Params>;
+//! using GP_t     = limbo::model::GP<Params, Kernel_t, Mean_t>;
+//! using Acqui_t  = limbo::acqui::UCB<Params, GP_t>;
+//! limbo::bayes_opt::BOptimizer<Params, modelfun<GP_t>, acquifun<Acqui_t>> opt;
+//! ```
+//! Here the same swap is a different set of generic type arguments — still
+//! fully monomorphized, no trait objects anywhere on the hot path.
+//!
+//! Run: `cargo run --release --example custom_components`
+
+use limbo::prelude::*;
+use limbo::bayes_opt::HpSchedule;
+use limbo::opt::Cmaes;
+
+fn main() {
+    let my_fun = FnEval::new(2, |x: &[f64]| {
+        -x.iter().map(|&v| v * v * (2.0 * v).sin()).sum::<f64>()
+    });
+
+    // ---- variant 1: Matérn-5/2 + UCB (the paper's snippet) ----
+    let gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-3);
+    let mut opt = BOptimizer::new(
+        gp,
+        Ucb { alpha: 0.5 },
+        RandomSampling { n: 10 },
+        RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
+        MaxIterations(30),
+        1,
+    );
+    let best = opt.optimize(&my_fun);
+    println!("Matern52 + UCB          : best {:.6} at {:?}", best.value, best.x);
+
+    // ---- variant 2: SE-ARD kernel + EI + CMA-ES inner optimizer,
+    //      with periodic hyper-parameter learning (KernelLFOpt) ----
+    let mut gp = Gp::new(SquaredExpArd::new(2), DataMean::default(), 1e-3);
+    gp.hp_opt.config.restarts = 2;
+    let mut opt = BOptimizer::new(
+        gp,
+        Ei { xi: 0.01 },
+        Lhs { n: 10 },
+        Cmaes::new(400),
+        MaxIterations(30),
+        2,
+    )
+    .with_hp_schedule(HpSchedule::Every(5));
+    let best = opt.optimize(&my_fun);
+    println!("SE-ARD + EI + CMA-ES/HPO: best {:.6} at {:?}", best.value, best.x);
+
+    // ---- variant 3: GP-UCB + DIRECT (deterministic inner optimizer) ----
+    let gp = Gp::new(Matern32::new(2), ZeroMean, 1e-3);
+    let mut opt = BOptimizer::new(
+        gp,
+        GpUcb { delta: 0.1 },
+        limbo::init::GridSampling { bins: 3 },
+        limbo::opt::Direct::new(400),
+        MaxIterations(30),
+        3,
+    );
+    let best = opt.optimize(&my_fun);
+    println!("Matern32 + GP-UCB+DIRECT: best {:.6} at {:?}", best.value, best.x);
+    println!("ok");
+}

@@ -1,0 +1,123 @@
+//! Figure-1 reproduction — the end-to-end experiment driver.
+//!
+//! Regenerates both panels of the paper's Figure 1: per-test-function box
+//! statistics of (a) accuracy `|f(best) - f(x*)|` and (b) wall-clock time,
+//! for the statically-dispatched implementation ("limbo") vs the
+//! classic-OO comparator ("bayesopt"), with and without hyper-parameter
+//! optimization, plus the text's headline speed-up ratios.
+//!
+//! Protocol (paper): 250 replicates, BayesOpt default parameters
+//! (LHS(10) init, ARD Matérn-5/2, EI, DIRECT). Defaults here are scaled
+//! down to stay minutes-fast; pass `--full` for the 250-replicate run.
+//!
+//! Run: `cargo run --release --example fig1_repro -- [--full]
+//!       [replicates=N] [iterations=N] [functions=a,b,c] [csv=PATH]`
+
+use std::io::Write;
+
+use limbo::benchfns;
+use limbo::coordinator::config::Config;
+use limbo::coordinator::experiment::{print_table, speedups, ExperimentRow, ExperimentRunner};
+use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let full = raw.iter().any(|a| a == "--full");
+    let kv: Vec<String> = raw.into_iter().filter(|a| a.contains('=')).collect();
+    let cfg = Config::from_args(&kv).expect("key=value arguments");
+
+    let replicates = cfg.get_usize("replicates", if full { 250 } else { 30 });
+    let iterations = cfg.get_usize("iterations", 40);
+    let runner = ExperimentRunner {
+        replicates,
+        threads: cfg.get_usize(
+            "threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        ),
+        base_seed: cfg.get_usize("seed", 1000) as u64,
+    };
+    let functions: Vec<Box<dyn benchfns::TestFunction>> = match cfg.get("functions") {
+        Some(names) => names
+            .split(',')
+            .map(|n| benchfns::by_name(n.trim(), 2).unwrap_or_else(|| panic!("unknown fn {n}")))
+            .collect(),
+        None => benchfns::figure1_suite(),
+    };
+
+    eprintln!(
+        "fig1: {} functions x 4 configs x {replicates} replicates, {iterations} iterations each",
+        functions.len()
+    );
+
+    let base = Fig1Settings { iterations, ..Default::default() };
+    let mut rows: Vec<ExperimentRow> = Vec::new();
+
+    // panel 1: without hyper-parameter optimization
+    let limbo = LimboConfig::new(base);
+    let bayesopt = BaselineConfig::new(base);
+    rows.extend(runner.run_grid(&functions, &[&limbo, &bayesopt]));
+
+    // panel 2: with hyper-parameter optimization
+    let limbo_hpo = LimboConfig::new(base.with_hpo());
+    let bayesopt_hpo = BaselineConfig::new(base.with_hpo());
+    rows.extend(runner.run_grid(&functions, &[&limbo_hpo, &bayesopt_hpo]));
+
+    println!("\n=== Figure 1: accuracy & wall-clock (box statistics) ===");
+    print_table(&rows);
+
+    println!("\n=== headline ratios (paper: 1.47-1.76x no-HPO, 2.05-2.54x HPO) ===");
+    let mut no_hpo: Vec<f64> = Vec::new();
+    let mut with_hpo: Vec<f64> = Vec::new();
+    for (f, ratio, dacc) in speedups(&rows, "limbo", "bayesopt") {
+        println!("  no-HPO  {f:<18} {ratio:>6.2}x   |Δ acc median| = {dacc:.2e}");
+        no_hpo.push(ratio);
+    }
+    for (f, ratio, dacc) in speedups(&rows, "limbo+hpo", "bayesopt+hpo") {
+        println!("  HPO     {f:<18} {ratio:>6.2}x   |Δ acc median| = {dacc:.2e}");
+        with_hpo.push(ratio);
+    }
+    let rng = |v: &[f64]| {
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    };
+    if !no_hpo.is_empty() {
+        let (lo, hi) = rng(&no_hpo);
+        println!("\nspeed-up range without HPO: {lo:.2}x – {hi:.2}x (paper: 1.47x – 1.76x)");
+    }
+    if !with_hpo.is_empty() {
+        let (lo, hi) = rng(&with_hpo);
+        println!("speed-up range with HPO   : {lo:.2}x – {hi:.2}x (paper: 2.05x – 2.54x)");
+    }
+
+    if let Some(path) = cfg.get("csv") {
+        let mut f = std::fs::File::create(path).expect("csv file");
+        writeln!(
+            f,
+            "function,config,replicates,acc_min,acc_q1,acc_median,acc_q3,acc_max,\
+             time_min,time_q1,time_median,time_q3,time_max"
+        )
+        .unwrap();
+        for r in &rows {
+            writeln!(
+                f,
+                "{},{},{},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e}",
+                r.function,
+                r.config,
+                r.replicates,
+                r.accuracy.min,
+                r.accuracy.q1,
+                r.accuracy.median,
+                r.accuracy.q3,
+                r.accuracy.max,
+                r.wall.min,
+                r.wall.q1,
+                r.wall.median,
+                r.wall.q3,
+                r.wall.max
+            )
+            .unwrap();
+        }
+        eprintln!("wrote {path}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Hyper-parameter tuning of a learning algorithm — the Snoek et al.
+//! (2012) use case the paper's introduction leads with: each evaluation
+//! (a full train + validate cycle) is expensive, gradients are
+//! unavailable, and results are noisy.
+//!
+//! The "learner" is an RBF ridge-regression model trained on synthetic
+//! data; BO tunes (log regularization, RBF width, #centers) against
+//! validation RMSE and is compared with random search at the same budget.
+//!
+//! Run: `cargo run --release --example hyperparam_tuning`
+
+use limbo::bayes_opt::HpSchedule;
+use limbo::prelude::*;
+use limbo::la::{CholeskyFactor, Matrix};
+use limbo::opt::{NelderMead, RandomPoint};
+
+/// Synthetic regression task: y = sin(3x) + 0.5 cos(7x) + noise.
+struct Task {
+    train: Vec<(f64, f64)>,
+    valid: Vec<(f64, f64)>,
+}
+
+impl Task {
+    fn generate(seed: u64) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let mut sample = |n: usize| -> Vec<(f64, f64)> {
+            (0..n)
+                .map(|_| {
+                    let x = rng.uniform(-2.0, 2.0);
+                    let y = (3.0 * x).sin() + 0.5 * (7.0 * x).cos() + 0.1 * rng.normal();
+                    (x, y)
+                })
+                .collect()
+        };
+        Self { train: sample(120), valid: sample(200) }
+    }
+
+    /// Train an RBF ridge regressor with the given hyper-parameters and
+    /// return the validation RMSE. `u` in [0,1]^3 decodes to:
+    /// lambda in [1e-6, 1e1] (log), width in [0.05, 2.0] (log),
+    /// centers in {5..60}.
+    fn train_eval(&self, u: &[f64]) -> f64 {
+        let lambda = 10f64.powf(-6.0 + 7.0 * u[0]);
+        let width = (0.05f64.ln() + (2.0f64.ln() - 0.05f64.ln()) * u[1]).exp();
+        let m = (5.0 + 55.0 * u[2]).round() as usize;
+
+        // centers: evenly spread over the input range
+        let centers: Vec<f64> = (0..m).map(|i| -2.0 + 4.0 * i as f64 / (m - 1) as f64).collect();
+        let phi = |x: f64, c: f64| (-((x - c) / width).powi(2)).exp();
+
+        // ridge solve: (Phi^T Phi + lambda I) w = Phi^T y
+        let n = self.train.len();
+        let mut pt_p = Matrix::zeros(m, m);
+        let mut pt_y = vec![0.0; m];
+        for &(x, y) in &self.train {
+            let feats: Vec<f64> = centers.iter().map(|&c| phi(x, c)).collect();
+            for i in 0..m {
+                pt_y[i] += feats[i] * y;
+                for j in 0..m {
+                    pt_p[(i, j)] += feats[i] * feats[j];
+                }
+            }
+        }
+        for i in 0..m {
+            pt_p[(i, i)] += lambda * n as f64;
+        }
+        let Ok(chol) = CholeskyFactor::factor(&pt_p) else {
+            return 10.0; // numerically broken configuration
+        };
+        let w = chol.solve(&pt_y);
+
+        // validation RMSE
+        let mse: f64 = self
+            .valid
+            .iter()
+            .map(|&(x, y)| {
+                let pred: f64 = centers.iter().zip(&w).map(|(&c, &wi)| wi * phi(x, c)).sum();
+                (pred - y).powi(2)
+            })
+            .sum::<f64>()
+            / self.valid.len() as f64;
+        mse.sqrt()
+    }
+}
+
+fn main() {
+    let task = Task::generate(7);
+    let budget = 40;
+
+    // ---- Bayesian optimization (maximize -RMSE) ----
+    let mut gp = Gp::new(Matern52::new(3), DataMean::default(), 1e-3);
+    gp.hp_opt.config.restarts = 2;
+    let mut opt = BOptimizer::new(
+        gp,
+        Ei::default(),
+        Lhs { n: 8 },
+        RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
+        MaxIterations(budget - 8),
+        1,
+    )
+    .with_hp_schedule(HpSchedule::Every(5));
+    let bo_best = opt.optimize(&FnEval::new(3, |u: &[f64]| -task.train_eval(u)));
+    let bo_rmse = -bo_best.value;
+
+    // ---- random search at the same budget ----
+    let mut rng = Pcg64::seed(1);
+    let mut rs_rmse = f64::INFINITY;
+    for _ in 0..budget {
+        let u = rng.unit_point(3);
+        rs_rmse = rs_rmse.min(task.train_eval(&u));
+    }
+
+    println!("budget: {budget} train+validate cycles each");
+    println!("random search best validation RMSE : {rs_rmse:.4}");
+    println!("BO best validation RMSE            : {bo_rmse:.4}");
+    let u = bo_best.x;
+    println!(
+        "BO config: lambda=10^{:.2}, width={:.3}, centers={}",
+        -6.0 + 7.0 * u[0],
+        (0.05f64.ln() + (2.0f64.ln() - 0.05f64.ln()) * u[1]).exp(),
+        (5.0 + 55.0 * u[2]).round()
+    );
+    assert!(bo_rmse <= rs_rmse * 1.2, "BO should be competitive with random search");
+    println!("ok");
+}

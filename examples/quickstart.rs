@@ -1,0 +1,33 @@
+//! Quickstart — the paper's first code example, translated to Rust.
+//!
+//! The C++ original:
+//! ```cpp
+//! limbo::bayes_opt::BOptimizer<Params> opt;
+//! opt.optimize(my_fun());
+//! ```
+//! maximizes `my_fun(x) = -sum_i x_i^2 sin(2 x_i)` over `[0, 1]^2` with
+//! the library defaults.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use limbo::prelude::*;
+
+fn main() {
+    // the functor: dim_in = 2, dim_out = 1
+    let my_fun = FnEval::new(2, |x: &[f64]| {
+        -x.iter().map(|&v| v * v * (2.0 * v).sin()).sum::<f64>()
+    });
+
+    // default parameters (the `Params` struct of the C++ version):
+    // Matérn-5/2 GP, data mean, UCB(0.5), 10 random init samples,
+    // parallel-restarted random+Nelder-Mead inner optimizer, 40 iterations
+    let mut opt = BOptimizer::with_defaults(2, 42);
+    let best = opt.optimize(&my_fun);
+
+    println!("evaluations : {}", best.evaluations);
+    println!("best x      : [{:.4}, {:.4}]", best.x[0], best.x[1]);
+    println!("best value  : {:.6}", best.value);
+    // on [0,1]^2 the maximum of -x^2 sin(2x) is 0 at x = (0, 0)
+    assert!(best.value > -0.02, "should approach the optimum 0");
+    println!("ok");
+}

@@ -1,0 +1,126 @@
+"""AOT emission: lower every (program, kernel, tier) graph to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True`` — the Rust side unwraps with ``to_tupleN()``.
+
+Also writes ``artifacts/manifest.txt`` (one line per artifact:
+``name program kind n_max d_max b hp_dim path``) which the Rust
+``runtime::registry`` parses, plus a handful of golden test vectors
+(``artifacts/golden/*.txt``) used by the Rust parity integration test.
+
+Run via ``make artifacts``; python never runs after that.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+KINDS = ("se_ard", "matern52")
+PROGRAMS = ("predict", "ucb", "lml")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(program: str, kind: str, n: int) -> str:
+    fn = model.program_fn(program, kind)
+    specs = model.arg_specs(program, n)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def golden_vectors(outdir: str) -> None:
+    """Deterministic test vectors for the Rust parity integration test.
+
+    Layout (all flat, space-separated f32 text): inputs for a tier-32
+    se_ard + matern52 predict/ucb/lml call with 7 real points in 2-D,
+    plus the expected outputs computed here in python.
+    """
+    rng = np.random.default_rng(42)
+    n, d, n_real, d_real = 32, model.D_MAX, 7, 2
+    x = np.zeros((n, d), np.float32)
+    x[:n_real, :d_real] = rng.uniform(0.0, 1.0, (n_real, d_real))
+    y = np.zeros((n,), np.float32)
+    y[:n_real] = rng.normal(0.0, 1.0, n_real)
+    mask = np.zeros((n,), np.float32)
+    mask[:n_real] = 1.0
+    xs = np.zeros((model.B, d), np.float32)
+    xs[:, :d_real] = rng.uniform(0.0, 1.0, (model.B, d_real))
+    loghp = np.zeros((model.HP_DIM,), np.float32)
+    loghp[:d_real] = np.log(0.35)
+    loghp[model.D_MAX] = np.log(1.2)       # sigma_f
+    loghp[model.D_MAX + 1] = np.log(0.05)  # sigma_n
+    mean0 = np.asarray([float(y[:n_real].mean())], np.float32)
+    alpha = np.asarray([1.96], np.float32)
+
+    gdir = os.path.join(outdir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+
+    def dump(name, arr):
+        with open(os.path.join(gdir, name + ".txt"), "w") as f:
+            f.write(" ".join(repr(float(v)) for v in np.asarray(arr).ravel()))
+
+    dump("x", x); dump("y", y); dump("mask", mask); dump("xs", xs)
+    dump("loghp", loghp); dump("mean0", mean0); dump("alpha_ucb", alpha)
+    jx, jy, jm, jxs, jhp, jm0, ja = (
+        jnp.asarray(a) for a in (x, y, mask, xs, loghp, mean0, alpha))
+    for kind in KINDS:
+        mu, var = model.gp_predict(kind, jx, jy, jm, jxs, jhp, jm0)
+        (acq,) = model.gp_ucb(kind, jx, jy, jm, jxs, jhp, jm0, ja)
+        lml, grad = model.gp_lml_grad(kind, jx, jy, jm, jhp, jm0)
+        dump(f"{kind}_mu", mu); dump(f"{kind}_var", var)
+        dump(f"{kind}_acq", acq)
+        dump(f"{kind}_lml", lml); dump(f"{kind}_grad", grad)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--tiers", default=",".join(str(t) for t in model.TIERS))
+    ap.add_argument("--kinds", default=",".join(KINDS))
+    ap.add_argument("--programs", default=",".join(PROGRAMS))
+    args = ap.parse_args()
+
+    tiers = [int(t) for t in args.tiers.split(",") if t]
+    kinds = [k for k in args.kinds.split(",") if k]
+    programs = [p for p in args.programs.split(",") if p]
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for program in programs:
+        for kind in kinds:
+            for n in tiers:
+                name = f"{program}_{kind}_n{n}"
+                path = f"{name}.hlo.txt"
+                text = lower_one(program, kind, n)
+                with open(os.path.join(args.out, path), "w") as f:
+                    f.write(text)
+                manifest.append(
+                    f"{name} {program} {kind} {n} {model.D_MAX} {model.B} "
+                    f"{model.HP_DIM} {path}")
+                print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    golden_vectors(args.out)
+    print(f"manifest: {len(manifest)} artifacts; golden vectors written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""L1 Pallas kernels: tiled Gram-matrix computation for the GP hot spot.
+
+The O(n1*n2*d) Gram matrix (and its cross-covariance sibling) dominates GP
+inference cost, so it is the layer-1 kernel.  The kernel is tiled for a TPU
+VMEM budget with ``BlockSpec``: the grid walks (row-tile, col-tile) blocks of
+the output; each program loads one ``(TN, D)`` block of ``x1`` and one
+``(TM, D)`` block of ``x2`` into VMEM and produces a ``(TN, TM)`` output
+block.
+
+MXU mapping (the §Hardware-Adaptation story): instead of materializing the
+``(TN, TM, D)`` difference tensor, we pre-scale the inputs by
+``sqrt(inv_ls2)`` and use the classic expansion
+
+    r2[i, j] = |x1t[i]|^2 + |x2t[j]|^2 - 2 * x1t @ x2t^T
+
+so the inner product runs on the systolic array (``jnp.dot``) rather than
+the VPU.  The tiny negative values the expansion can produce are clamped.
+
+``interpret=True`` everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls, and interpret-mode lowers to portable HLO that the Rust
+runtime replays.  Correctness versus ``ref.py`` is pinned by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and scales).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes.  All capacity tiers (32/64/128/256) and the candidate
+# batch (64) are multiples of 32, so no output-block masking is needed.
+TILE_N = 32
+TILE_M = 32
+
+
+def _scaled_sq_dists(x1t, x2t):
+    """Blockwise ARD squared distances via the MXU-friendly expansion."""
+    n1 = jnp.sum(x1t * x1t, axis=-1)  # (TN,)
+    n2 = jnp.sum(x2t * x2t, axis=-1)  # (TM,)
+    cross = jnp.dot(x1t, x2t.T, preferred_element_type=jnp.float32)
+    r2 = n1[:, None] + n2[None, :] - 2.0 * cross
+    return jnp.maximum(r2, 0.0)
+
+
+def _kernel_body(kind, x1_ref, x2_ref, ils_ref, s2_ref, o_ref):
+    ils = ils_ref[...]
+    scale = jnp.sqrt(ils)[None, :]
+    x1t = x1_ref[...] * scale
+    x2t = x2_ref[...] * scale
+    r2 = _scaled_sq_dists(x1t, x2t)
+    s2 = s2_ref[0]
+    if kind == "se_ard":
+        o_ref[...] = s2 * jnp.exp(-0.5 * r2)
+    elif kind == "matern52":
+        r = jnp.sqrt(jnp.maximum(r2, 1e-30))
+        o_ref[...] = s2 * (1.0 + ref.SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-ref.SQRT5 * r)
+    elif kind == "matern32":
+        r = jnp.sqrt(jnp.maximum(r2, 1e-30))
+        o_ref[...] = s2 * (1.0 + ref.SQRT3 * r) * jnp.exp(-ref.SQRT3 * r)
+    else:  # pragma: no cover - guarded by GRAM_KINDS
+        raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+GRAM_KINDS = ("se_ard", "matern52", "matern32")
+
+
+def gram(kind, x1, x2, inv_ls2, sigma2, *, tile_n=TILE_N, tile_m=TILE_M,
+         interpret=True):
+    """Tiled Pallas Gram matrix ``K[kind](x1, x2)`` of shape ``[n1, n2]``.
+
+    ``x1: [n1, d]``, ``x2: [n2, d]``, ``inv_ls2: [d]``, ``sigma2: [1]``.
+    ``n1`` and ``n2`` must be multiples of the tile sizes (callers pad to
+    capacity tiers anyway).
+    """
+    if kind not in GRAM_KINDS:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    n1, d = x1.shape
+    n2 = x2.shape[0]
+    tile_n = min(tile_n, n1)
+    tile_m = min(tile_m, n2)
+    if n1 % tile_n or n2 % tile_m:
+        raise ValueError(f"gram: ({n1},{n2}) not divisible by ({tile_n},{tile_m})")
+    grid = (n1 // tile_n, n2 // tile_m)
+    return pl.pallas_call(
+        functools.partial(_kernel_body, kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n1, n2), x1.dtype),
+        interpret=interpret,
+    )(x1, x2, inv_ls2, sigma2)

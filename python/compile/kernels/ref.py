@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas Gram kernels (the L1 correctness signal).
+
+These are the reference implementations every Pallas kernel in
+``gram.py`` is checked against (pytest + hypothesis), and they are also
+used inside the differentiable LML graph (``model.py``) where autodiff
+through ``pallas_call`` is not wanted.
+
+Hyper-parameter conventions (shared with the Rust side):
+
+* ``inv_ls2``  -- per-dimension inverse squared lengthscales ``1/l_d^2``
+* ``sigma2``   -- signal variance ``sigma_f^2``
+
+Padded feature dimensions carry constant zeros on both inputs, so they
+contribute nothing to any stationary kernel regardless of ``inv_ls2``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SQRT5 = 2.2360679774997896
+SQRT3 = 1.7320508075688772
+
+
+def sq_dists(x1: jnp.ndarray, x2: jnp.ndarray, inv_ls2: jnp.ndarray) -> jnp.ndarray:
+    """ARD-scaled pairwise squared distances, shape ``[n1, n2]``."""
+    diff = x1[:, None, :] - x2[None, :, :]
+    return jnp.sum(diff * diff * inv_ls2[None, None, :], axis=-1)
+
+
+def gram_se_ard(x1, x2, inv_ls2, sigma2):
+    """Squared-exponential ARD kernel: ``s2 * exp(-0.5 * r2)``."""
+    return sigma2 * jnp.exp(-0.5 * sq_dists(x1, x2, inv_ls2))
+
+
+def gram_matern52(x1, x2, inv_ls2, sigma2):
+    """Matern-5/2 ARD kernel: ``s2 (1 + sqrt5 r + 5/3 r^2) exp(-sqrt5 r)``."""
+    r2 = sq_dists(x1, x2, inv_ls2)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-30))
+    return sigma2 * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-SQRT5 * r)
+
+
+def gram_matern32(x1, x2, inv_ls2, sigma2):
+    """Matern-3/2 ARD kernel: ``s2 (1 + sqrt3 r) exp(-sqrt3 r)``."""
+    r2 = sq_dists(x1, x2, inv_ls2)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-30))
+    return sigma2 * (1.0 + SQRT3 * r) * jnp.exp(-SQRT3 * r)
+
+
+GRAMS = {
+    "se_ard": gram_se_ard,
+    "matern52": gram_matern52,
+    "matern32": gram_matern32,
+}

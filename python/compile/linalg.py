@@ -1,0 +1,77 @@
+"""Portable (pure-HLO) linear algebra for the L2 GP graphs.
+
+`jnp.linalg.cholesky` / `lax.linalg.triangular_solve` lower on CPU to
+jaxlib FFI custom-calls (``lapack_spotrf_ffi`` etc.) that only exist inside
+jaxlib's runtime.  The standalone xla_extension 0.5.1 used by the Rust
+``xla`` crate cannot execute those custom-calls, so every artifact we emit
+must contain *portable HLO ops only*.  This module implements the linear
+algebra the GP needs with ``lax.fori_loop`` + vectorized updates:
+
+* :func:`cholesky`        -- right-looking (outer-product) Cholesky
+* :func:`solve_lower`     -- forward substitution  L x = b
+* :func:`solve_lower_t`   -- backward substitution L^T x = b
+* :func:`spd_solve`       -- A x = b through the two substitutions
+
+Shapes are static; ``b`` may be a vector ``(n,)`` or a matrix ``(n, m)``.
+Correctness versus ``jnp.linalg`` is pinned by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def cholesky(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular Cholesky factor of SPD matrix ``a`` (pure HLO ops).
+
+    Right-looking form: at step ``j`` the trailing submatrix holds the Schur
+    complement; we scale column ``j`` and subtract its outer product from the
+    strictly-trailing block.  O(n) ``fori_loop`` steps of O(n^2) vector work.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, mat):
+        pivot = jnp.sqrt(mat[j, j])
+        col = mat[:, j] / pivot
+        # zero entries above the diagonal, set the pivot itself
+        col = jnp.where(idx > j, col, 0.0)
+        col = col.at[j].set(pivot)
+        # Schur update of the strictly-trailing block only
+        trailing = (idx[:, None] > j) & (idx[None, :] > j)
+        mat = mat - jnp.where(trailing, jnp.outer(col, col), 0.0)
+        mat = mat.at[:, j].set(col)
+        return mat
+
+    out = lax.fori_loop(0, n, body, a)
+    return jnp.tril(out)
+
+
+def solve_lower(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``L x = b`` with ``L`` lower triangular (forward substitution)."""
+    n = l.shape[0]
+
+    def body(i, x):
+        # entries x[j >= i] are still zero, so the dot only sees j < i
+        val = (b[i] - l[i, :] @ x) / l[i, i]
+        return x.at[i].set(val)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def solve_lower_t(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``L^T x = b`` with ``L`` lower triangular (backward substitution)."""
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        val = (b[i] - l[:, i] @ x) / l[i, i]
+        return x.at[i].set(val)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def spd_solve(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``A x = b`` given the Cholesky factor ``L`` of ``A``."""
+    return solve_lower_t(l, solve_lower(l, b))

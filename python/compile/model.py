@@ -1,0 +1,139 @@
+"""L2: the GP compute graphs that get AOT-lowered to HLO artifacts.
+
+Three programs per (kernel kind, capacity tier):
+
+* ``gp_predict``  -- posterior mean/variance of a batch of candidates
+                     (forward path; Gram matrices via the L1 Pallas kernel)
+* ``gp_ucb``      -- ``gp_predict`` fused with the UCB acquisition
+                     ``mu + alpha * sqrt(var)`` (the optimized hot path)
+* ``gp_lml_grad`` -- log marginal likelihood + gradient w.r.t. the log
+                     hyper-parameters (uses the differentiable ``ref``
+                     Gram; ``pallas_call`` has no registered VJP)
+
+Static-shape protocol (shared with the Rust runtime — keep in sync with
+``rust/src/runtime/``):
+
+* capacity tier ``n``: training inputs are padded to ``n`` rows with a 0/1
+  ``mask``; the masked Gram ``K' = (m m^T) o (K + s_n^2 I) + diag(1 - m)``
+  makes padded rows exact no-ops (block-diagonal Cholesky, alpha = 0 there).
+* features padded to ``D_MAX`` columns of zeros (stationary kernels ignore
+  constant-zero coordinates).
+* hyper-parameters: ``loghp[0:D_MAX]`` = log lengthscales, ``loghp[D_MAX]``
+  = log sigma_f, ``loghp[D_MAX + 1]`` = log sigma_n.
+* the prior-mean *value* ``mean0`` is an input (shape ``[1]``): the Rust
+  side evaluates its configurable mean functor (Zero/Constant/Data) and
+  passes the scalar, keeping the artifact mean-agnostic for constant-type
+  means.
+
+All linear algebra goes through ``linalg`` (pure-HLO ops — see DESIGN.md
+§Portability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels import gram as gram_mod
+from .kernels import ref
+
+D_MAX = 8
+B = 64  # candidate batch size
+HP_DIM = D_MAX + 2
+TIERS = (32, 64, 128, 256)
+VAR_FLOOR = 1e-10
+
+
+def _split_hp(loghp):
+    inv_ls2 = jnp.exp(-2.0 * loghp[:D_MAX])
+    sigma2_f = jnp.exp(2.0 * loghp[D_MAX])
+    sigma2_n = jnp.exp(2.0 * loghp[D_MAX + 1])
+    return inv_ls2, sigma2_f, sigma2_n
+
+
+def _gram_pallas(kind, x1, x2, inv_ls2, sigma2):
+    return gram_mod.gram(kind, x1, x2, inv_ls2, jnp.reshape(sigma2, (1,)))
+
+
+def _gram_ref(kind, x1, x2, inv_ls2, sigma2):
+    return ref.GRAMS[kind](x1, x2, inv_ls2, sigma2)
+
+
+def _masked_chol_alpha(kind, x, y, mask, loghp, mean0, gram_fn):
+    """Shared fit path: masked Gram -> Cholesky -> alpha."""
+    inv_ls2, sigma2_f, sigma2_n = _split_hp(loghp)
+    kxx = gram_fn(kind, x, x, inv_ls2, sigma2_f)
+    mm = mask[:, None] * mask[None, :]
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=x.dtype)
+    # zero padded rows/cols, put exactly 1 on their diagonal:
+    kp = mm * (kxx + sigma2_n * eye) + (1.0 - mask)[:, None] * eye
+    l = linalg.cholesky(kp)
+    resid = mask * (y - mean0)
+    alpha = linalg.spd_solve(l, resid)
+    return l, alpha, inv_ls2, sigma2_f, sigma2_n
+
+
+def gp_predict(kind, x, y, mask, xs, loghp, mean0, *, gram_fn=_gram_pallas):
+    """Posterior ``(mu[B], var[B])`` at candidates ``xs`` given masked data."""
+    mean0 = jnp.reshape(mean0, ())
+    l, alpha, inv_ls2, sigma2_f, _ = _masked_chol_alpha(
+        kind, x, y, mask, loghp, mean0, gram_fn)
+    ks = gram_fn(kind, x, xs, inv_ls2, sigma2_f) * mask[:, None]  # [n, B]
+    mu = mean0 + ks.T @ alpha
+    v = linalg.solve_lower(l, ks)  # [n, B]
+    var = sigma2_f - jnp.sum(v * v, axis=0)
+    return mu, jnp.maximum(var, VAR_FLOOR)
+
+
+def gp_ucb(kind, x, y, mask, xs, loghp, mean0, alpha_ucb, *, gram_fn=_gram_pallas):
+    """Fused predict -> UCB acquisition ``mu + alpha * sqrt(var)``."""
+    mu, var = gp_predict(kind, x, y, mask, xs, loghp, mean0, gram_fn=gram_fn)
+    return (mu + jnp.reshape(alpha_ucb, ()) * jnp.sqrt(var),)
+
+
+def gp_lml(kind, x, y, mask, loghp, mean0):
+    """Log marginal likelihood of the masked dataset (differentiable)."""
+    mean0 = jnp.reshape(mean0, ())
+    l, alpha, *_ = _masked_chol_alpha(kind, x, y, mask, loghp, mean0, _gram_ref)
+    resid = mask * (y - mean0)
+    n_eff = jnp.sum(mask)
+    # padded diagonal entries of L are exactly 1 -> log contributes 0
+    logdet = jnp.sum(jnp.log(jnp.diagonal(l)))
+    return -0.5 * resid @ alpha - logdet - 0.5 * n_eff * jnp.log(2.0 * jnp.pi)
+
+
+def gp_lml_grad(kind, x, y, mask, loghp, mean0):
+    """``(lml[1], dlml/dloghp[HP_DIM])`` for ML-II hyper-parameter fits."""
+    val, grad = jax.value_and_grad(
+        lambda hp: gp_lml(kind, x, y, mask, hp, mean0))(loghp)
+    return jnp.reshape(val, (1,)), grad
+
+
+# ---------------------------------------------------------------------------
+# Program registry used by aot.py
+# ---------------------------------------------------------------------------
+
+def arg_specs(program: str, n: int, dtype=jnp.float32):
+    """jax.ShapeDtypeStruct argument specs for a program at tier ``n``."""
+    f = lambda shape: jax.ShapeDtypeStruct(shape, dtype)
+    base = [f((n, D_MAX)), f((n,)), f((n,))]  # x, y, mask
+    if program == "predict":
+        return base + [f((B, D_MAX)), f((HP_DIM,)), f((1,))]
+    if program == "ucb":
+        return base + [f((B, D_MAX)), f((HP_DIM,)), f((1,)), f((1,))]
+    if program == "lml":
+        return base + [f((HP_DIM,)), f((1,))]
+    raise ValueError(f"unknown program {program!r}")
+
+
+def program_fn(program: str, kind: str):
+    """The jittable function for a (program, kernel-kind) pair."""
+    if program == "predict":
+        return lambda x, y, m, xs, hp, m0: gp_predict(kind, x, y, m, xs, hp, m0)
+    if program == "ucb":
+        return lambda x, y, m, xs, hp, m0, a: gp_ucb(kind, x, y, m, xs, hp, m0, a)
+    if program == "lml":
+        return lambda x, y, m, hp, m0: gp_lml_grad(kind, x, y, m, hp, m0)
+    raise ValueError(f"unknown program {program!r}")

@@ -1,0 +1,167 @@
+"""L2 graph correctness: masking exactness, GP math vs a dense unpadded
+reference, LML gradients vs finite differences, and AOT emission."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import linalg, model
+from compile.kernels import ref
+
+
+def _problem(seed, n_real, d_real, kind="se_ard"):
+    rng = np.random.default_rng(seed)
+    n, d = 32, model.D_MAX
+    x = np.zeros((n, d), np.float32)
+    x[:n_real, :d_real] = rng.uniform(0, 1, (n_real, d_real))
+    y = np.zeros((n,), np.float32)
+    y[:n_real] = rng.normal(size=n_real)
+    mask = np.zeros((n,), np.float32)
+    mask[:n_real] = 1.0
+    xs = np.zeros((model.B, d), np.float32)
+    xs[:, :d_real] = rng.uniform(0, 1, (model.B, d_real))
+    loghp = np.zeros((model.HP_DIM,), np.float32)
+    loghp[:d_real] = np.log(0.4)
+    loghp[model.D_MAX] = np.log(1.1)
+    loghp[model.D_MAX + 1] = np.log(0.08)
+    mean0 = np.asarray([y[:n_real].mean()], np.float32)
+    j = jnp.asarray
+    return (j(x), j(y), j(mask), j(xs), j(loghp), j(mean0)), (n_real, d_real, kind)
+
+
+def _dense_reference(x, y, xs, loghp, mean0, n_real, d_real, kind):
+    """Unpadded dense GP posterior in float64 (the ground truth)."""
+    x = np.asarray(x, np.float64)[:n_real]
+    y = np.asarray(y, np.float64)[:n_real]
+    xs = np.asarray(xs, np.float64)
+    inv_ls2 = np.exp(-2.0 * np.asarray(loghp[:model.D_MAX], np.float64))
+    sf2 = float(np.exp(2.0 * loghp[model.D_MAX]))
+    sn2 = float(np.exp(2.0 * loghp[model.D_MAX + 1]))
+    gram = np.asarray(
+        ref.GRAMS[kind](jnp.asarray(x), jnp.asarray(x), jnp.asarray(inv_ls2), sf2),
+        np.float64,
+    )
+    kxx = gram + sn2 * np.eye(n_real)
+    ks = np.asarray(
+        ref.GRAMS[kind](jnp.asarray(x), jnp.asarray(xs), jnp.asarray(inv_ls2), sf2),
+        np.float64,
+    )
+    m0 = float(mean0[0])
+    alpha = np.linalg.solve(kxx, y - m0)
+    mu = m0 + ks.T @ alpha
+    v = np.linalg.solve(np.linalg.cholesky(kxx), ks)
+    var = sf2 - (v * v).sum(axis=0)
+    # lml
+    sign, logdet = np.linalg.slogdet(kxx)
+    lml = -0.5 * (y - m0) @ alpha - 0.5 * logdet - 0.5 * n_real * np.log(2 * np.pi)
+    return mu, var, lml
+
+
+@pytest.mark.parametrize("kind", ["se_ard", "matern52"])
+@pytest.mark.parametrize("n_real,d_real", [(1, 1), (7, 2), (20, 6), (32, 8)])
+def test_masked_predict_equals_dense(kind, n_real, d_real):
+    (x, y, mask, xs, loghp, mean0), _ = _problem(11, n_real, d_real, kind)
+    mu, var = model.gp_predict(kind, x, y, mask, xs, loghp, mean0)
+    mu_ref, var_ref, _ = _dense_reference(x, y, xs, loghp, mean0, n_real, d_real, kind)
+    np.testing.assert_allclose(np.asarray(mu), mu_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(var), var_ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("kind", ["se_ard", "matern52"])
+def test_masked_lml_equals_dense(kind):
+    (x, y, mask, xs, loghp, mean0), (n_real, d_real, _) = _problem(13, 12, 3, kind)
+    lml = model.gp_lml(kind, x, y, mask, loghp, mean0)
+    _, _, lml_ref = _dense_reference(x, y, xs, loghp, mean0, 12, 3, kind)
+    np.testing.assert_allclose(float(lml), lml_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_mask_position_invariance():
+    """Padding rows are inert: growing the pad changes nothing."""
+    (x, y, mask, xs, loghp, mean0), _ = _problem(17, 9, 2)
+    mu1, var1 = model.gp_predict("se_ard", x, y, mask, xs, loghp, mean0)
+    # scribble garbage into padded rows — must not matter
+    x2 = x.at[9:].set(123.456)
+    y2 = y.at[9:].set(-999.0)
+    mu2, var2 = model.gp_predict("se_ard", x2, y2, mask, xs, loghp, mean0)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var1), np.asarray(var2), rtol=1e-5, atol=1e-5)
+
+
+def test_lml_grad_matches_finite_differences():
+    (x, y, mask, _, loghp, mean0), _ = _problem(23, 10, 2)
+    _, grad = model.gp_lml_grad("se_ard", x, y, mask, loghp, mean0)
+    grad = np.asarray(grad, np.float64)
+    eps = 1e-3
+    for i in [0, 1, model.D_MAX, model.D_MAX + 1]:
+        hp_up = loghp.at[i].add(eps)
+        hp_dn = loghp.at[i].add(-eps)
+        fd = (float(model.gp_lml("se_ard", x, y, mask, hp_up, mean0))
+              - float(model.gp_lml("se_ard", x, y, mask, hp_dn, mean0))) / (2 * eps)
+        assert abs(grad[i] - fd) < 5e-2 * (1 + abs(fd)), f"hp[{i}]: {grad[i]} vs {fd}"
+
+
+def test_fused_ucb_matches_predict():
+    (x, y, mask, xs, loghp, mean0), _ = _problem(29, 8, 2)
+    alpha = jnp.asarray([1.96], jnp.float32)
+    (acq,) = model.gp_ucb("se_ard", x, y, mask, xs, loghp, mean0, alpha)
+    mu, var = model.gp_predict("se_ard", x, y, mask, xs, loghp, mean0)
+    expected = np.asarray(mu) + 1.96 * np.sqrt(np.asarray(var))
+    np.testing.assert_allclose(np.asarray(acq), expected, rtol=1e-5, atol=1e-5)
+
+
+def test_variance_floor_holds():
+    # exact duplicate training/candidate point with tiny noise: var >= floor
+    (x, y, mask, xs, loghp, mean0), _ = _problem(31, 5, 2)
+    xs = xs.at[0].set(x[0])
+    _, var = model.gp_predict("se_ard", x, y, mask, xs, loghp, mean0)
+    assert float(var[0]) >= model.VAR_FLOOR
+
+
+@pytest.mark.parametrize("program", ["predict", "ucb", "lml"])
+def test_aot_lowering_emits_portable_hlo(program):
+    """The lowered HLO must contain no jaxlib custom-calls (portability)."""
+    from compile import aot
+
+    text = aot.lower_one(program, "se_ard", 32)
+    assert "ENTRY" in text
+    for banned in ["lapack", "custom-call", "custom_call"]:
+        assert banned not in text.lower(), f"{program}: HLO contains {banned}"
+
+
+def test_arg_specs_shapes():
+    specs = model.arg_specs("predict", 64)
+    assert [tuple(s.shape) for s in specs] == [
+        (64, 8), (64,), (64,), (model.B, 8), (model.HP_DIM,), (1,)]
+    specs = model.arg_specs("lml", 128)
+    assert [tuple(s.shape) for s in specs] == [
+        (128, 8), (128,), (128,), (model.HP_DIM,), (1,)]
+    with pytest.raises(ValueError):
+        model.arg_specs("nope", 32)
+
+
+def test_portable_cholesky_used_not_lax():
+    """Guard: the predict graph goes through our fori_loop Cholesky, whose
+    HLO signature is a while-loop, not a cholesky op."""
+    from compile import aot
+
+    text = aot.lower_one("predict", "se_ard", 32)
+    assert "while" in text, "expected fori_loop Cholesky lowering"
+    assert "cholesky" not in text.lower()
+
+
+def test_jit_roundtrip_runs():
+    (x, y, mask, xs, loghp, mean0), _ = _problem(37, 6, 2)
+    fn = jax.jit(model.program_fn("predict", "matern52"))
+    mu, var = fn(x, y, mask, xs, loghp, mean0)
+    assert mu.shape == (model.B,)
+    assert var.shape == (model.B,)
+    assert bool(jnp.all(var > 0))
+
+
+def test_linalg_inside_graph_matches_numpy():
+    a = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)))
+    spd = a @ a.T + 16 * jnp.eye(16)
+    l = linalg.cholesky(spd)
+    np.testing.assert_allclose(
+        np.asarray(l @ l.T), np.asarray(spd), rtol=1e-4, atol=1e-4)

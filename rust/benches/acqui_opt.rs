@@ -1,0 +1,66 @@
+//! Inner-optimizer ablation: time + quality of each acquisition maximizer
+//! on a realistic acquisition landscape (UCB over a fitted GP), the design
+//! choice DESIGN.md calls out (DIRECT vs CMA-ES vs restarted local search
+//! vs random).
+
+use limbo::acqui::{AcquiContext, AcquiFn, Ucb};
+use limbo::benchlib::{header, Bencher};
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::opt::{Cmaes, Direct, GridSearch, NelderMead, Optimizer, OptimizerExt, RandomPoint};
+use limbo::rng::Pcg64;
+
+fn fitted_gp(dim: usize, n: usize) -> Gp<Matern52, DataMean> {
+    let mut rng = Pcg64::seed(17);
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+    let ys: Vec<f64> = xs
+        .iter()
+        .map(|x| x.iter().map(|&v| (6.0 * v).sin()).sum::<f64>())
+        .collect();
+    let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), 1e-2);
+    gp.fit(&xs, &ys);
+    gp
+}
+
+fn main() {
+    let b = Bencher::quick();
+    for (dim, n) in [(2usize, 30usize), (6, 60)] {
+        header(&format!("acquisition maximization (UCB over {n}-point GP, dim={dim})"));
+        let gp = fitted_gp(dim, n);
+        let ctx = AcquiContext { iteration: n, best: 1.0, dim };
+        let acq = Ucb { alpha: 0.5 };
+        let gp_ref = &gp;
+        let objective = move |x: &[f64]| acq.eval(gp_ref, x, &ctx);
+
+        let optimizers: Vec<(&str, Box<dyn Optimizer>)> = vec![
+            ("random_512", Box::new(RandomPoint::new(512))),
+            ("grid", Box::new(GridSearch::new(if dim == 2 { 23 } else { 3 }))),
+            ("direct_500", Box::new(Direct::new(500))),
+            ("cmaes_500", Box::new(Cmaes::new(500))),
+            (
+                "rand+nm_x8",
+                Box::new(RandomPoint::new(32).then(NelderMead::default()).restarts(8, 4)),
+            ),
+        ];
+        for (name, opt) in &optimizers {
+            let mut rng = Pcg64::seed(5);
+            let res = b.bench(&format!("{name}/dim={dim}"), || {
+                opt.optimize(&objective, dim, &mut rng)
+            });
+            // quality at fixed budget (median over a few fresh runs)
+            let mut vals = Vec::new();
+            for s in 0..10 {
+                let mut rng = Pcg64::seed(100 + s);
+                vals.push(opt.optimize(&objective, dim, &mut rng).value);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!(
+                "    -> acquisition value found: median {:.4}, worst {:.4} ({} samples/iter)",
+                vals[vals.len() / 2],
+                vals[0],
+                res.iters
+            );
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Backend ablation: native Rust GP vs the AOT-compiled XLA artifact
+//! backend, at every capacity tier, for single-point predict, batched
+//! predict (64 candidates), fused UCB, and the LML+gradient used by
+//! hyper-parameter fits.
+//!
+//! Expected shape on CPU: the native f64 GP wins at small N (padding +
+//! FFI overhead dominate); the XLA graph amortizes better on the batched
+//! paths as N approaches the tier capacity. Skips cleanly when
+//! `artifacts/` is absent.
+
+use std::sync::Arc;
+
+use limbo::benchlib::{header, Bencher};
+use limbo::coordinator::xla_model::XlaGpModel;
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::rng::Pcg64;
+use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
+
+fn main() {
+    let Some(dir) = find_artifact_dir() else {
+        eprintln!("skipping backend_compare: artifacts/ not built");
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().expect("PJRT client"));
+    let backend = Arc::new(XlaGp::new(client, &dir, "matern52").expect("backend"));
+    let b = Bencher::quick();
+
+    for n in [24usize, 56, 120, 250] {
+        header(&format!("backend compare at n={n} (dim=2)"));
+        let mut rng = Pcg64::seed(9);
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (4.0 * x[0]).sin() + x[1]).collect();
+
+        let mut native = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        native.fit(&xs, &ys);
+        let mut xla = XlaGpModel::new(backend.clone(), 2);
+        xla.loghp = native.xla_loghp();
+        xla.fit(&xs, &ys);
+
+        let probe = [0.41, 0.13];
+        b.bench(&format!("native/predict1/n={n}"), || native.predict(&probe));
+        b.bench(&format!("xla/predict1/n={n}"), || xla.predict(&probe));
+
+        let cands: Vec<Vec<f64>> = (0..64).map(|_| rng.unit_point(2)).collect();
+        b.bench(&format!("native/predict64/n={n}"), || native.predict_batch(&cands));
+        b.bench(&format!("xla/predict64/n={n}"), || xla.predict_batch(&cands));
+        b.bench(&format!("xla/ucb64_fused/n={n}"), || xla.ucb_batch(&cands, 1.96));
+
+        // acquisition maximization on the XLA backend: the batched fused-UCB
+        // search (8 rounds x 64 candidates = 512 evals in 8 executions) vs
+        // 64 per-point predicts (64 executions)
+        let batched = limbo::coordinator::batched_opt::BatchedUcbSearch::default();
+        let mut brng = limbo::rng::Pcg64::seed(3);
+        b.bench(&format!("xla/acq_batched_512evals/n={n}"), || {
+            batched.optimize(&xla, 2, &mut brng)
+        });
+        b.bench(&format!("xla/acq_perpoint_64evals/n={n}"), || {
+            let mut acc = 0.0;
+            for c in cands.iter() {
+                acc += xla.predict(c).0;
+            }
+            acc
+        });
+
+        b.bench(&format!("native/lml+grad/n={n}"), || {
+            (native.log_marginal_likelihood(), native.lml_grad())
+        });
+        let loghp = xla.loghp.clone();
+        b.bench(&format!("xla/lml+grad/n={n}"), || {
+            let flat: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+            backend.lml_grad(&flat, &ys, 2, &loghp, 0.0).expect("lml")
+        });
+    }
+}

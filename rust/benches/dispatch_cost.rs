@@ -1,0 +1,42 @@
+//! Dispatch-cost ablation: the identical BO algorithm (LHS(10) + Matérn-5/2
+//! + EI + DIRECT) through the monomorphized `BOptimizer` vs the
+//! trait-object `BayesOptLike` — the isolated version of the paper's
+//! Figure-1 architecture comparison (same machine, same seeds, same
+//! algorithm; only the design style differs).
+
+use limbo::benchlib::{header, Bencher};
+use limbo::benchfns::{Branin, Sphere, TestFunction};
+use limbo::coordinator::experiment::BenchConfig;
+use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
+
+fn main() {
+    let b = Bencher::quick();
+    header("dispatch cost: static generics vs trait objects (same algorithm)");
+
+    for (fname, f) in [
+        ("sphere2", Box::new(Sphere::new(2)) as Box<dyn TestFunction>),
+        ("branin", Box::new(Branin)),
+    ] {
+        for (label, settings) in [
+            ("", Fig1Settings { iterations: 20, inner_evals: 300, ..Default::default() }),
+            (
+                "+hpo",
+                Fig1Settings { iterations: 20, inner_evals: 300, ..Default::default() }
+                    .with_hpo(),
+            ),
+        ] {
+            let limbo = LimboConfig::new(settings);
+            let baseline = BaselineConfig::new(settings);
+            let r1 = b.bench(&format!("limbo{label}/{fname}/20iters"), || {
+                limbo.run(f.as_ref(), 7)
+            });
+            let r2 = b.bench(&format!("bayesopt{label}/{fname}/20iters"), || {
+                baseline.run(f.as_ref(), 7)
+            });
+            println!(
+                "    -> speed-up {:.2}x (median)",
+                r2.per_iter.median / r1.per_iter.median
+            );
+        }
+    }
+}

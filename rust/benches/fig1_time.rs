@@ -1,0 +1,47 @@
+//! Figure-1 wall-clock panel, steady-state form: full-run timing of the
+//! static vs dynamic implementation per test function (quick protocol —
+//! the full 250-replicate study with accuracy panels is
+//! `examples/fig1_repro.rs`).
+
+use limbo::benchlib::{header, Bencher};
+use limbo::benchfns::{by_name, TestFunction};
+use limbo::coordinator::experiment::BenchConfig;
+use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
+
+fn main() {
+    // single-core-friendly protocol: 4 representative functions, 12
+    // iterations, 5 samples (the full study is examples/fig1_repro)
+    let b = Bencher { samples: 5, ..Bencher::quick() };
+    let settings = Fig1Settings { iterations: 12, inner_evals: 300, ..Default::default() };
+    let limbo = LimboConfig::new(settings);
+    let bayesopt = BaselineConfig::new(settings);
+    let limbo_hpo = LimboConfig::new(settings.with_hpo());
+    let bayesopt_hpo = BaselineConfig::new(settings.with_hpo());
+
+    header("fig1 wall-clock (12 iterations/run, quick protocol)");
+    let functions: Vec<Box<dyn TestFunction>> = ["branin", "sphere", "ackley", "hartmann3"]
+        .iter()
+        .map(|n| by_name(n, 2).unwrap())
+        .collect();
+    let mut ratios = Vec::new();
+    let mut ratios_hpo = Vec::new();
+    for f in functions {
+        let name = f.name().to_string();
+        let r1 = b.bench(&format!("limbo/{name}"), || limbo.run(f.as_ref(), 3));
+        let r2 = b.bench(&format!("bayesopt/{name}"), || bayesopt.run(f.as_ref(), 3));
+        let ratio = r2.per_iter.median / r1.per_iter.median;
+        ratios.push(ratio);
+        let r3 = b.bench(&format!("limbo+hpo/{name}"), || limbo_hpo.run(f.as_ref(), 3));
+        let r4 = b.bench(&format!("bayesopt+hpo/{name}"), || bayesopt_hpo.run(f.as_ref(), 3));
+        let ratio_hpo = r4.per_iter.median / r3.per_iter.median;
+        ratios_hpo.push(ratio_hpo);
+        println!("    -> speed-up: {ratio:.2}x (no HPO), {ratio_hpo:.2}x (HPO)");
+    }
+    let rng = |v: &[f64]| {
+        (v.iter().cloned().fold(f64::INFINITY, f64::min),
+         v.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+    };
+    let (lo, hi) = rng(&ratios);
+    let (lo_h, hi_h) = rng(&ratios_hpo);
+    println!("\nspeed-up ranges: {lo:.2}-{hi:.2}x no-HPO (paper 1.47-1.76), {lo_h:.2}-{hi_h:.2}x HPO (paper 2.05-2.54)");
+}

@@ -1,0 +1,50 @@
+//! GP scaling bench: per-iteration cost of adding a sample + predicting,
+//! incremental Cholesky vs full refit, as N grows.
+//!
+//! Expected shape: incremental `add_sample` grows ~O(n^2) while the full
+//! refit grows ~O(n^3) — the reason Limbo stays usable on embedded
+//! hardware as the dataset grows.
+
+use limbo::benchlib::{header, Bencher};
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::rng::Pcg64;
+
+fn dataset(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Pcg64::seed(seed);
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| (4.0 * x[0]).sin() + x[1]).collect();
+    (xs, ys)
+}
+
+fn main() {
+    let b = Bencher::default();
+    header("GP scaling (dim=2): add-sample (incremental) vs full refit vs predict");
+    for n in [16, 32, 64, 128, 256] {
+        let (xs, ys) = dataset(n, 2, 42);
+
+        // incremental add of the n-th point to an (n-1)-point GP
+        let mut warm = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        warm.fit(&xs[..n - 1].to_vec(), &ys[..n - 1]);
+        let (xn, yn) = (xs[n - 1].clone(), ys[n - 1]);
+        b.bench(&format!("add_sample_incremental/n={n}"), || {
+            let mut gp = warm.clone();
+            gp.add_sample(&xn, yn);
+            gp.n_samples()
+        });
+
+        // full refit of all n points
+        b.bench(&format!("fit_full/n={n}"), || {
+            let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+            gp.fit(&xs, &ys);
+            gp.n_samples()
+        });
+
+        // single-point posterior
+        let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        gp.fit(&xs, &ys);
+        let probe = [0.31, 0.77];
+        b.bench(&format!("predict/n={n}"), || gp.predict(&probe));
+    }
+}

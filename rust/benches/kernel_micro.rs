@@ -1,0 +1,64 @@
+//! Kernel micro-bench: the Gram-matrix hot spot.
+//!
+//! Compares the native Rust kernel evaluation loop (what `Gp::refit` does)
+//! against one full XLA `predict` artifact call (which contains the
+//! Pallas-tiled Gram + Cholesky + solves), plus per-pair kernel eval costs
+//! for each kernel type — the L1-level numbers behind DESIGN.md §Perf.
+
+use std::sync::Arc;
+
+use limbo::benchlib::{header, Bencher};
+use limbo::kernel::{Exponential, Kernel, Matern32, Matern52, SquaredExpArd};
+use limbo::la::Matrix;
+use limbo::rng::Pcg64;
+use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
+
+fn gram_native<K: Kernel>(kernel: &K, xs: &[Vec<f64>]) -> Matrix {
+    let n = xs.len();
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = kernel.eval(&xs[i], &xs[j]);
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    k
+}
+
+fn main() {
+    let b = Bencher::quick();
+    let mut rng = Pcg64::seed(4);
+
+    header("per-pair kernel evaluation (dim=6)");
+    let a = rng.unit_point(6);
+    let c = rng.unit_point(6);
+    let se = SquaredExpArd::new(6);
+    let m52 = Matern52::new(6);
+    let m32 = Matern32::new(6);
+    let ex = Exponential::new(6);
+    b.bench("se_ard/pair", || se.eval(&a, &c));
+    b.bench("matern52/pair", || m52.eval(&a, &c));
+    b.bench("matern32/pair", || m32.eval(&a, &c));
+    b.bench("exponential/pair", || ex.eval(&a, &c));
+
+    for n in [64usize, 128, 256] {
+        header(&format!("Gram matrix n={n} (dim=2)"));
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
+        let k2 = Matern52::new(2);
+        b.bench(&format!("native_gram/n={n}"), || gram_native(&k2, &xs));
+
+        if let Some(dir) = find_artifact_dir() {
+            let client = Arc::new(RtClient::cpu().expect("client"));
+            let backend = Arc::new(XlaGp::new(client, &dir, "matern52").expect("backend"));
+            let flat: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+            let ys: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+            let cands: Vec<f64> = (0..64 * 2).map(|_| rng.next_f64()).collect();
+            let loghp = vec![0.0, 0.0, 0.0, (1e-2f64).ln()];
+            // one artifact call = Pallas gram + masked cholesky + solves
+            b.bench(&format!("xla_predict_full/n={n}"), || {
+                backend.predict(&flat, &ys, 2, &cands, &loghp, 0.0).expect("predict")
+            });
+        }
+    }
+}

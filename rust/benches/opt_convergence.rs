@@ -1,0 +1,42 @@
+//! Optimizer-substrate bench: raw global optimizers (no GP) on the suite —
+//! time per full optimization and solution quality at a fixed 500-eval
+//! budget. Validates that the from-scratch CMA-ES/DIRECT substrates are
+//! usable standalone and quantifies their overhead per evaluation.
+
+use limbo::benchlib::{header, Bencher};
+use limbo::benchfns::{Ackley, Branin, Hartmann6, Rastrigin, TestFunction};
+use limbo::opt::{Cmaes, Direct, NelderMead, Optimizer, OptimizerExt, RandomPoint};
+use limbo::rng::Pcg64;
+
+fn main() {
+    let b = Bencher::quick();
+    let functions: Vec<Box<dyn TestFunction>> = vec![
+        Box::new(Branin),
+        Box::new(Ackley::new(2)),
+        Box::new(Rastrigin::new(2)),
+        Box::new(Hartmann6),
+    ];
+    for f in &functions {
+        header(&format!("raw optimizers on {} ({}-D), 500-eval budget", f.name(), f.dim()));
+        let objective = |x: &[f64]| f.eval(x);
+        let optimizers: Vec<(&str, Box<dyn Optimizer>)> = vec![
+            ("random", Box::new(RandomPoint::new(500))),
+            ("direct", Box::new(Direct::new(500))),
+            ("cmaes", Box::new(Cmaes::new(500))),
+            ("nm_restarts", Box::new(NelderMead::default().restarts(4, 4))),
+        ];
+        for (name, opt) in &optimizers {
+            let mut rng = Pcg64::seed(12);
+            b.bench(&format!("{name}/{}", f.name()), || {
+                opt.optimize(&objective, f.dim(), &mut rng)
+            });
+            let mut accs = Vec::new();
+            for s in 0..10 {
+                let mut rng = Pcg64::seed(200 + s);
+                accs.push(f.accuracy(opt.optimize(&objective, f.dim(), &mut rng).value));
+            }
+            accs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!("    -> accuracy: median {:.3e}, worst {:.3e}", accs[5], accs[9]);
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Standard-normal pdf/cdf (no libm special functions in scope —
+//! erf via the Abramowitz & Stegun 7.1.26 rational approximation,
+//! |error| < 1.5e-7, plenty for acquisition ranking).
+
+/// Standard normal density.
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via `0.5 (1 + erf(z / sqrt2))`.
+#[inline]
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function (A&S 7.1.26).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 5e-8);
+        assert!((erf(1.0) - 0.8427007929).abs() < 2e-7);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 2e-7);
+        assert!((erf(3.0) - 0.9999779095).abs() < 2e-7);
+    }
+
+    #[test]
+    fn cdf_symmetry_and_tails() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 5e-8);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        for z in [-2.0, -0.5, 0.3, 1.7] {
+            assert!((norm_cdf(z) + norm_cdf(-z) - 1.0).abs() < 1e-7);
+        }
+        assert!(norm_cdf(-8.0) < 1e-10);
+        assert!(norm_cdf(8.0) > 1.0 - 1e-10);
+    }
+
+    #[test]
+    fn pdf_is_density_shaped() {
+        assert!((norm_pdf(0.0) - 0.3989422804).abs() < 1e-9);
+        assert!(norm_pdf(1.0) < norm_pdf(0.0));
+        assert!((norm_pdf(2.0) - norm_pdf(-2.0)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,197 @@
+//! Acquisition functions — the `limbo::acqui::*` policy family.
+//!
+//! Each acquisition scores a candidate from the model posterior and the
+//! run context (iteration count for GP-UCB, incumbent best for EI/PI).
+//! All are generic over [`Model`], so they work identically on the native
+//! [`crate::model::gp::Gp`] and the XLA-artifact backend.
+
+mod math;
+
+pub use math::{norm_cdf, norm_pdf};
+
+use crate::model::Model;
+
+/// Run context the optimizer passes to the acquisition at each iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct AcquiContext {
+    /// Current BO iteration (number of non-init samples so far).
+    pub iteration: usize,
+    /// Incumbent best observation (max), `-inf` before any data.
+    pub best: f64,
+    /// Problem dimensionality.
+    pub dim: usize,
+}
+
+impl AcquiContext {
+    /// Context for a fresh run.
+    pub fn start(dim: usize) -> Self {
+        Self { iteration: 0, best: f64::NEG_INFINITY, dim }
+    }
+}
+
+/// An acquisition function over model `M`.
+pub trait AcquiFn<M: Model + ?Sized>: Send + Sync {
+    /// Score candidate `x` (higher = more promising).
+    fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64;
+}
+
+/// Upper Confidence Bound: `mu + alpha * sigma` (Limbo's `acqui::UCB`).
+#[derive(Clone, Debug)]
+pub struct Ucb {
+    /// Exploration weight.
+    pub alpha: f64,
+}
+
+impl Default for Ucb {
+    fn default() -> Self {
+        Self { alpha: 0.5 }
+    }
+}
+
+impl<M: Model + ?Sized> AcquiFn<M> for Ucb {
+    fn eval(&self, model: &M, x: &[f64], _ctx: &AcquiContext) -> f64 {
+        let (mu, var) = model.predict(x);
+        mu + self.alpha * var.sqrt()
+    }
+}
+
+/// GP-UCB (Srinivas et al. 2010) with the theoretical beta schedule
+/// `beta_t = sqrt(2 log(t^(d/2+2) pi^2 / (3 delta)))` (Limbo's
+/// `acqui::GP_UCB`).
+#[derive(Clone, Debug)]
+pub struct GpUcb {
+    /// Confidence parameter (smaller = more exploration).
+    pub delta: f64,
+}
+
+impl Default for GpUcb {
+    fn default() -> Self {
+        Self { delta: 0.1 }
+    }
+}
+
+impl<M: Model + ?Sized> AcquiFn<M> for GpUcb {
+    fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
+        let t = (ctx.iteration + 1) as f64;
+        let d = ctx.dim as f64;
+        let beta2 = 2.0
+            * (t.powf(d / 2.0 + 2.0) * std::f64::consts::PI.powi(2) / (3.0 * self.delta))
+                .ln();
+        let (mu, var) = model.predict(x);
+        mu + beta2.max(0.0).sqrt() * var.sqrt()
+    }
+}
+
+/// Expected Improvement over the incumbent (BayesOpt's default criterion).
+#[derive(Clone, Debug)]
+pub struct Ei {
+    /// Exploration jitter `xi`.
+    pub xi: f64,
+}
+
+impl Default for Ei {
+    fn default() -> Self {
+        Self { xi: 0.01 }
+    }
+}
+
+impl<M: Model + ?Sized> AcquiFn<M> for Ei {
+    fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
+        let (mu, var) = model.predict(x);
+        let sigma = var.sqrt();
+        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
+        if sigma < 1e-12 {
+            return (mu - best - self.xi).max(0.0);
+        }
+        let z = (mu - best - self.xi) / sigma;
+        (mu - best - self.xi) * norm_cdf(z) + sigma * norm_pdf(z)
+    }
+}
+
+/// Probability of Improvement.
+#[derive(Clone, Debug)]
+pub struct Pi {
+    /// Exploration jitter `xi`.
+    pub xi: f64,
+}
+
+impl Default for Pi {
+    fn default() -> Self {
+        Self { xi: 0.01 }
+    }
+}
+
+impl<M: Model + ?Sized> AcquiFn<M> for Pi {
+    fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
+        let (mu, var) = model.predict(x);
+        let sigma = var.sqrt().max(1e-12);
+        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
+        norm_cdf((mu - best - self.xi) / sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::SquaredExpArd;
+    use crate::mean::ZeroMean;
+    use crate::model::gp::Gp;
+    use crate::model::Model;
+
+    fn fitted_gp() -> Gp<SquaredExpArd, ZeroMean> {
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.01);
+        gp.fit(&[vec![0.2], vec![0.8]], &[1.0, -1.0]);
+        gp
+    }
+
+    #[test]
+    fn ucb_prefers_uncertain_far_points_with_big_alpha() {
+        let gp = fitted_gp();
+        let ctx = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
+        let explore = Ucb { alpha: 100.0 };
+        // x=0.5 is between data (low sigma); x=5 is far (sigma ~ prior)
+        assert!(explore.eval(&gp, &[5.0], &ctx) > explore.eval(&gp, &[0.5], &ctx));
+        // alpha = 0 reduces to the posterior mean
+        let exploit = Ucb { alpha: 0.0 };
+        let (mu, _) = gp.predict(&[0.3]);
+        assert!((exploit.eval(&gp, &[0.3], &ctx) - mu).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_ucb_beta_grows_with_iteration() {
+        let gp = fitted_gp();
+        let a = GpUcb::default();
+        let early = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
+        let late = AcquiContext { iteration: 1000, best: 1.0, dim: 1 };
+        // at a fixed point, larger t -> larger bonus
+        let x = [3.0];
+        assert!(a.eval(&gp, &x, &late) > a.eval(&gp, &x, &early));
+    }
+
+    #[test]
+    fn ei_zero_when_certain_and_worse() {
+        let gp = fitted_gp();
+        let ei = Ei { xi: 0.0 };
+        let ctx = AcquiContext { iteration: 1, best: 5.0, dim: 1 };
+        // at the observed minimum, mu ~ -1 << best=5, sigma tiny
+        let v = ei.eval(&gp, &[0.8], &ctx);
+        assert!(v >= 0.0 && v < 1e-3, "ei={v}");
+    }
+
+    #[test]
+    fn ei_positive_under_uncertainty() {
+        let gp = fitted_gp();
+        let ei = Ei::default();
+        let ctx = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
+        assert!(ei.eval(&gp, &[10.0], &ctx) > 0.0);
+    }
+
+    #[test]
+    fn pi_bounded_by_one() {
+        let gp = fitted_gp();
+        let pi = Pi::default();
+        let ctx = AcquiContext { iteration: 1, best: -10.0, dim: 1 };
+        let v = pi.eval(&gp, &[0.2], &ctx);
+        assert!(v > 0.9 && v <= 1.0, "pi={v}");
+    }
+}

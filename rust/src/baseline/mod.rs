@@ -1,0 +1,432 @@
+//! The Figure-1 comparator: a BayesOpt-shaped Bayesian optimizer built the
+//! classic object-oriented way.
+//!
+//! The paper's benchmark compares Limbo (policy-based, statically
+//! dispatched) against BayesOpt (Martinez-Cantin 2014), a classic C++
+//! class-hierarchy library, at **equal algorithmic settings** ("Limbo is
+//! configured to reproduce the default parameters of BayesOpt"). We cannot
+//! link the original BayesOpt offline, so this module reproduces its
+//! *design style* faithfully and measurably:
+//!
+//! * every component behind a `Box<dyn ...>` (virtual dispatch on each
+//!   kernel/mean/acquisition call — the cost Driesen & Hölzle quantify and
+//!   the paper's design explicitly avoids),
+//! * the GP re-factors the full Gram matrix on every new sample (O(n^3)
+//!   per iteration instead of the incremental O(n^2) update),
+//! * scratch vectors are allocated per call instead of reused,
+//! * the run loop itself is a method on an abstract base, not
+//!   monomorphized.
+//!
+//! Algorithmic defaults mirror BayesOpt's: LHS(10) initialization,
+//! ARD Matérn-5/2 kernel, Expected Improvement, DIRECT inner optimizer,
+//! and (optionally) ML-II hyper-parameter refits on a fixed schedule.
+//! Accuracy must therefore match the static implementation (pinned by an
+//! integration test); only wall-clock differs — the paper's entire point.
+
+use crate::acqui::{norm_cdf, norm_pdf};
+use crate::bayes_opt::{Best, Evaluator};
+use crate::la::CholeskyFactor;
+use crate::la::Matrix;
+use crate::opt::rprop::{rprop_maximize, RpropParams};
+use crate::opt::{Direct, Objective, Optimizer};
+use crate::rng::{latin_hypercube, Pcg64};
+
+/// Object-safe kernel interface (the OO mirror of [`crate::kernel::Kernel`]).
+pub trait DynKernel: Send + Sync {
+    /// Evaluate `k(a, b)`.
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64;
+    /// Log-hyper-params.
+    fn params(&self) -> Vec<f64>;
+    /// Set log-hyper-params.
+    fn set_params(&mut self, p: &[f64]);
+    /// Gradient w.r.t. log-hyper-params (allocates, OO style).
+    fn grad_params(&self, a: &[f64], b: &[f64]) -> Vec<f64>;
+    /// Signal variance.
+    fn variance(&self) -> f64;
+    /// Clone into a box (OO prototype pattern).
+    fn clone_box(&self) -> Box<dyn DynKernel>;
+}
+
+/// ARD Matérn-5/2, boxed-style (BayesOpt's `kMaternARD5` default).
+#[derive(Clone)]
+pub struct DynMatern52 {
+    log_ls: Vec<f64>,
+    log_sf: f64,
+}
+
+impl DynMatern52 {
+    /// Unit lengthscales/variance.
+    pub fn new(dim: usize) -> Self {
+        Self { log_ls: vec![0.0; dim], log_sf: 0.0 }
+    }
+}
+
+const SQRT5: f64 = 2.2360679774997896;
+
+impl DynKernel for DynMatern52 {
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        // allocates the scaled diff vector each call (OO style)
+        let diffs: Vec<f64> = a
+            .iter()
+            .zip(b)
+            .zip(&self.log_ls)
+            .map(|((&x, &y), &ll)| (x - y) * (-ll).exp())
+            .collect();
+        let r2: f64 = diffs.iter().map(|d| d * d).sum();
+        let r = r2.sqrt();
+        self.variance() * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * (-SQRT5 * r).exp()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.log_ls.clone();
+        p.push(self.log_sf);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        let d = self.log_ls.len();
+        self.log_ls = p[..d].to_vec();
+        self.log_sf = p[d];
+    }
+
+    fn grad_params(&self, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let d = self.log_ls.len();
+        let mut out = vec![0.0; d + 1];
+        let diffs: Vec<f64> = a
+            .iter()
+            .zip(b)
+            .zip(&self.log_ls)
+            .map(|((&x, &y), &ll)| (x - y) * (-ll).exp())
+            .collect();
+        let r2: f64 = diffs.iter().map(|t| t * t).sum();
+        let r = r2.sqrt();
+        let sf2 = self.variance();
+        let coeff = sf2 * (5.0 / 3.0) * (1.0 + SQRT5 * r) * (-SQRT5 * r).exp();
+        for i in 0..d {
+            out[i] = coeff * diffs[i] * diffs[i];
+        }
+        out[d] = 2.0 * sf2 * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * (-SQRT5 * r).exp();
+        out
+    }
+
+    fn variance(&self) -> f64 {
+        (2.0 * self.log_sf).exp()
+    }
+
+    fn clone_box(&self) -> Box<dyn DynKernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Object-safe acquisition interface.
+pub trait DynAcqui: Send + Sync {
+    /// Score a candidate from the posterior and the incumbent.
+    fn eval(&self, mu: f64, var: f64, best: f64) -> f64;
+}
+
+/// Expected Improvement (BayesOpt's `cEI` default criterion).
+pub struct DynEi {
+    /// Exploration jitter.
+    pub xi: f64,
+}
+
+impl DynAcqui for DynEi {
+    fn eval(&self, mu: f64, var: f64, best: f64) -> f64 {
+        let sigma = var.sqrt();
+        let best = if best.is_finite() { best } else { 0.0 };
+        if sigma < 1e-12 {
+            return (mu - best - self.xi).max(0.0);
+        }
+        let z = (mu - best - self.xi) / sigma;
+        (mu - best - self.xi) * norm_cdf(z) + sigma * norm_pdf(z)
+    }
+}
+
+/// The OO Gaussian process: boxed kernel, full refit on every new sample.
+pub struct DynGp {
+    kernel: Box<dyn DynKernel>,
+    noise_var: f64,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    mean: f64,
+    chol: Option<CholeskyFactor>,
+    alpha: Vec<f64>,
+}
+
+impl DynGp {
+    /// New empty GP around a boxed kernel.
+    pub fn new(kernel: Box<dyn DynKernel>, noise: f64) -> Self {
+        Self {
+            kernel,
+            noise_var: noise * noise,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            mean: 0.0,
+            chol: None,
+            alpha: Vec::new(),
+        }
+    }
+
+    /// Add a sample; BayesOpt-style **full** O(n^3) refit.
+    pub fn add_sample(&mut self, x: &[f64], y: f64) {
+        self.xs.push(x.to_vec());
+        self.ys.push(y);
+        self.refit();
+    }
+
+    /// Full Gram rebuild + factorization + alpha.
+    pub fn refit(&mut self) {
+        let n = self.xs.len();
+        if n == 0 {
+            self.chol = None;
+            return;
+        }
+        self.mean = self.ys.iter().sum::<f64>() / n as f64;
+        let mut jitter = 0.0;
+        loop {
+            let mut k = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    // full (not triangular) rebuild — the naive OO loop
+                    k[(i, j)] = self.kernel.eval(&self.xs[i], &self.xs[j]);
+                }
+                k[(i, i)] += self.noise_var + jitter;
+            }
+            match CholeskyFactor::factor(&k) {
+                Ok(ch) => {
+                    let resid: Vec<f64> = self.ys.iter().map(|&y| y - self.mean).collect();
+                    self.alpha = ch.solve(&resid);
+                    self.chol = Some(ch);
+                    return;
+                }
+                Err(_) if jitter < 1e-2 => {
+                    jitter = if jitter == 0.0 { 1e-10 } else { jitter * 10.0 };
+                }
+                Err(e) => panic!("baseline GP singular: {e}"),
+            }
+        }
+    }
+
+    /// Posterior mean/variance (allocates the k* vector each call).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let Some(chol) = &self.chol else {
+            return (self.mean, self.kernel.variance());
+        };
+        let ks: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
+        let mu = self.mean + crate::la::dot(&ks, &self.alpha);
+        let v = chol.solve_lower(&ks);
+        let var = (self.kernel.variance() - crate::la::dot(&v, &v)).max(1e-12);
+        (mu, var)
+    }
+
+    /// Log marginal likelihood.
+    pub fn lml(&self) -> f64 {
+        let Some(chol) = &self.chol else { return 0.0 };
+        let n = self.xs.len() as f64;
+        let resid: Vec<f64> = self.ys.iter().map(|&y| y - self.mean).collect();
+        -0.5 * crate::la::dot(&resid, &self.alpha)
+            - 0.5 * chol.log_det()
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    /// LML gradient w.r.t. kernel log-params (allocating OO loops).
+    pub fn lml_grad(&self) -> Vec<f64> {
+        let n = self.xs.len();
+        let np = self.kernel.params().len();
+        let mut grad = vec![0.0; np];
+        let Some(chol) = &self.chol else { return grad };
+        let mut kinv = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = chol.solve(&e);
+            for i in 0..n {
+                kinv[(i, j)] = col[i];
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let w = self.alpha[i] * self.alpha[j] - kinv[(i, j)];
+                let dk = self.kernel.grad_params(&self.xs[i], &self.xs[j]);
+                for (g, d) in grad.iter_mut().zip(dk) {
+                    *g += 0.5 * w * d;
+                }
+            }
+        }
+        grad
+    }
+
+    /// ML-II refit of the kernel hyper-parameters with Rprop.
+    pub fn optimize_hyperparams(&mut self, iterations: usize) {
+        if self.xs.len() < 2 {
+            return;
+        }
+        let x0 = self.kernel.params();
+        let params = RpropParams { iterations, ..RpropParams::default() };
+        let best = rprop_maximize(
+            |p| {
+                self.kernel.set_params(p);
+                self.refit();
+                (self.lml(), self.lml_grad())
+            },
+            &x0,
+            &params,
+            Some((-6.0, 6.0)),
+        );
+        self.kernel.set_params(&best);
+        self.refit();
+    }
+
+    /// Number of samples.
+    pub fn n_samples(&self) -> usize {
+        self.xs.len()
+    }
+}
+
+/// BayesOpt-default configuration knobs.
+pub struct BayesOptLikeConfig {
+    /// LHS initialization size (BayesOpt `n_init_samples` default 10).
+    pub n_init: usize,
+    /// Model-guided iterations (BayesOpt `n_iterations`).
+    pub iterations: usize,
+    /// DIRECT budget per acquisition maximization.
+    pub inner_evals: usize,
+    /// ML-II hyper-parameter refits: `Some(k)` = every k samples.
+    pub hp_every: Option<usize>,
+    /// Rprop iterations per hyper-parameter refit.
+    pub hp_iters: usize,
+    /// Observation noise std.
+    pub noise: f64,
+}
+
+impl Default for BayesOptLikeConfig {
+    fn default() -> Self {
+        Self {
+            n_init: 10,
+            iterations: 40,
+            inner_evals: 500,
+            hp_every: None,
+            hp_iters: 20,
+            noise: 1e-2,
+        }
+    }
+}
+
+/// The dynamically-dispatched optimizer (the "BayesOpt" column of Fig. 1).
+pub struct BayesOptLike {
+    /// Configuration.
+    pub config: BayesOptLikeConfig,
+    /// RNG.
+    pub rng: Pcg64,
+}
+
+impl BayesOptLike {
+    /// Default configuration with a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { config: BayesOptLikeConfig::default(), rng: Pcg64::seed(seed) }
+    }
+
+    /// Run the OO loop on `f`.
+    pub fn optimize(&mut self, f: &dyn Evaluator) -> Best {
+        let dim = f.dim();
+        let kernel: Box<dyn DynKernel> = Box::new(DynMatern52::new(dim));
+        let mut gp = DynGp::new(kernel, self.config.noise);
+        let acqui: Box<dyn DynAcqui> = Box::new(DynEi { xi: 0.01 });
+        let inner = Direct::new(self.config.inner_evals);
+
+        let mut best = Best { x: vec![0.5; dim], value: f64::NEG_INFINITY, evaluations: 0 };
+        let mut evals = 0usize;
+
+        for x in latin_hypercube(self.config.n_init, dim, &mut self.rng) {
+            let y = f.eval(&x);
+            evals += 1;
+            gp.add_sample(&x, y);
+            if y > best.value {
+                best = Best { x, value: y, evaluations: evals };
+            }
+        }
+        if self.config.hp_every.is_some() && gp.n_samples() >= 2 {
+            gp.optimize_hyperparams(self.config.hp_iters);
+        }
+
+        for it in 0..self.config.iterations {
+            let best_val = best.value;
+            let gp_ref = &gp;
+            let acqui_ref = &*acqui;
+            let objective = move |x: &[f64]| -> f64 {
+                let (mu, var) = gp_ref.predict(x);
+                acqui_ref.eval(mu, var, best_val)
+            };
+            let cand =
+                Optimizer::optimize(&inner, &objective as &dyn Objective, dim, &mut self.rng);
+            let y = f.eval(&cand.x);
+            evals += 1;
+            gp.add_sample(&cand.x, y);
+            if y > best.value {
+                best = Best { x: cand.x, value: y, evaluations: evals };
+            }
+            if let Some(k) = self.config.hp_every {
+                if k > 0 && (it + 1) % k == 0 {
+                    gp.optimize_hyperparams(self.config.hp_iters);
+                }
+            }
+        }
+        best.evaluations = evals;
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayes_opt::FnEval;
+    use crate::benchfns::{Branin, TestFunction};
+
+    #[test]
+    fn dyn_gp_matches_static_gp_predictions() {
+        use crate::kernel::Matern52;
+        use crate::mean::DataMean;
+        use crate::model::{gp::Gp, Model};
+        let mut rng = Pcg64::seed(8);
+        let xs: Vec<Vec<f64>> = (0..12).map(|_| rng.unit_point(2)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (4.0 * x[0]).sin() + x[1]).collect();
+
+        let mut dynamic = DynGp::new(Box::new(DynMatern52::new(2)), 1e-2);
+        for (x, &y) in xs.iter().zip(&ys) {
+            dynamic.add_sample(x, y);
+        }
+        let mut stat = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        stat.fit(&xs, &ys);
+
+        for probe in [[0.1, 0.9], [0.5, 0.5], [0.77, 0.21]] {
+            let (md, vd) = dynamic.predict(&probe);
+            let (ms, vs) = stat.predict(&probe);
+            assert!((md - ms).abs() < 1e-9, "mu {md} vs {ms}");
+            assert!((vd - vs).abs() < 1e-9, "var {vd} vs {vs}");
+        }
+    }
+
+    #[test]
+    fn baseline_solves_branin_coarsely() {
+        let mut opt = BayesOptLike::new(21);
+        opt.config.iterations = 30;
+        let branin = Branin;
+        let best = opt.optimize(&FnEval::new(2, |x: &[f64]| branin.eval(x)));
+        let acc = branin.accuracy(best.value);
+        // 40 evaluations with fixed unit hyper-params is a smoke check,
+        // not the benchmark protocol (Fig. 1 uses more iterations + HPO)
+        assert!(acc < 5.0, "accuracy={acc}");
+        assert_eq!(best.evaluations, 40);
+    }
+
+    #[test]
+    fn hp_refit_path_runs() {
+        let mut opt = BayesOptLike::new(5);
+        opt.config.iterations = 6;
+        opt.config.n_init = 6;
+        opt.config.hp_every = Some(2);
+        opt.config.hp_iters = 5;
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.3).powi(2)));
+        assert!(best.value > -0.05, "best={}", best.value);
+    }
+}

@@ -1,0 +1,538 @@
+//! Standard optimization test functions (the sfu.ca suite the paper's
+//! Figure 1 uses), all exposed as **maximization** problems over the unit
+//! hypercube: inputs in `[0,1]^d` are scaled to each function's native
+//! domain internally, and values are negated.
+//!
+//! `optimum()` returns the best achievable (maximized) value, so the
+//! Figure-1 "accuracy" statistic is `optimum() - best_found` (>= 0).
+
+use std::f64::consts::PI;
+
+/// A benchmark function with known optimum.
+pub trait TestFunction: Send + Sync {
+    /// Canonical name (used in benchmark tables).
+    fn name(&self) -> &'static str;
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+    /// Evaluate at `u` in `[0,1]^dim` (maximization).
+    fn eval(&self, u: &[f64]) -> f64;
+    /// The global maximum value (after negation/scaling).
+    fn optimum(&self) -> f64;
+    /// Accuracy of a result: `optimum - value` (the Figure-1 statistic).
+    fn accuracy(&self, value: f64) -> f64 {
+        self.optimum() - value
+    }
+}
+
+#[inline]
+fn scale(u: f64, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * u
+}
+
+macro_rules! simple_fn {
+    ($(#[$meta:meta])* $name:ident, $str:literal, $dim_field:ident) => {
+        $(#[$meta])*
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            /// Dimensionality.
+            pub $dim_field: usize,
+        }
+        impl $name {
+            /// Construct with dimension `d`.
+            pub fn new(d: usize) -> Self {
+                Self { $dim_field: d }
+            }
+        }
+    };
+}
+
+simple_fn!(
+    /// Sphere: `-sum (x_i - 0.5)^2` on the unit cube (optimum 0 at 0.5·1).
+    Sphere, "sphere", dim
+);
+
+impl TestFunction for Sphere {
+    fn name(&self) -> &'static str {
+        "sphere"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        -u.iter().map(|&v| (v - 0.5) * (v - 0.5)).sum::<f64>()
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Axis-parallel hyper-ellipsoid on [-5.12, 5.12]^d, negated.
+    Ellipsoid, "ellipsoid", dim
+);
+
+impl TestFunction for Ellipsoid {
+    fn name(&self) -> &'static str {
+        "ellipsoid"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        -u.iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let x = scale(v, -5.12, 5.12);
+                (i + 1) as f64 * x * x
+            })
+            .sum::<f64>()
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Rastrigin on [-5.12, 5.12]^d, negated (global max 0 at the center).
+    Rastrigin, "rastrigin", dim
+);
+
+impl TestFunction for Rastrigin {
+    fn name(&self) -> &'static str {
+        "rastrigin"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let a = 10.0;
+        -(a * self.dim as f64
+            + u.iter()
+                .map(|&v| {
+                    let x = scale(v, -5.12, 5.12);
+                    x * x - a * (2.0 * PI * x).cos()
+                })
+                .sum::<f64>())
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Ackley on [-32.768, 32.768]^d, negated (global max 0 at the center).
+    Ackley, "ackley", dim
+);
+
+impl TestFunction for Ackley {
+    fn name(&self) -> &'static str {
+        "ackley"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let d = self.dim as f64;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for &v in u {
+            let x = scale(v, -32.768, 32.768);
+            s1 += x * x;
+            s2 += (2.0 * PI * x).cos();
+        }
+        -(-20.0 * (-0.2 * (s1 / d).sqrt()).exp() - (s2 / d).exp()
+            + 20.0
+            + std::f64::consts::E)
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Rosenbrock on [-2.048, 2.048]^d, negated (max 0 at 1·vec).
+    Rosenbrock, "rosenbrock", dim
+);
+
+impl TestFunction for Rosenbrock {
+    fn name(&self) -> &'static str {
+        "rosenbrock"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let x: Vec<f64> = u.iter().map(|&v| scale(v, -2.048, 2.048)).collect();
+        -(0..self.dim - 1)
+            .map(|i| 100.0 * (x[i + 1] - x[i] * x[i]).powi(2) + (1.0 - x[i]).powi(2))
+            .sum::<f64>()
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Levy on [-10, 10]^d, negated (max 0 at 1·vec).
+    Levy, "levy", dim
+);
+
+impl TestFunction for Levy {
+    fn name(&self) -> &'static str {
+        "levy"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let w: Vec<f64> =
+            u.iter().map(|&v| 1.0 + (scale(v, -10.0, 10.0) - 1.0) / 4.0).collect();
+        let d = self.dim;
+        let mut s = (PI * w[0]).sin().powi(2);
+        for i in 0..d - 1 {
+            s += (w[i] - 1.0).powi(2) * (1.0 + 10.0 * (PI * w[i] + 1.0).sin().powi(2));
+        }
+        s += (w[d - 1] - 1.0).powi(2) * (1.0 + (2.0 * PI * w[d - 1]).sin().powi(2));
+        -s
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+simple_fn!(
+    /// Schwefel on [-500, 500]^d, negated (max 0 at 420.9687·vec).
+    Schwefel, "schwefel", dim
+);
+
+impl TestFunction for Schwefel {
+    fn name(&self) -> &'static str {
+        "schwefel"
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let d = self.dim as f64;
+        -(418.9829 * d
+            - u.iter()
+                .map(|&v| {
+                    let x = scale(v, -500.0, 500.0);
+                    x * x.abs().sqrt().sin()
+                })
+                .sum::<f64>())
+    }
+    fn optimum(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Branin (2-D) on [-5,10]x[0,15], negated (max -0.397887).
+#[derive(Clone, Debug, Default)]
+pub struct Branin;
+
+impl TestFunction for Branin {
+    fn name(&self) -> &'static str {
+        "branin"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let x1 = scale(u[0], -5.0, 10.0);
+        let x2 = scale(u[1], 0.0, 15.0);
+        let a = 1.0;
+        let b = 5.1 / (4.0 * PI * PI);
+        let c = 5.0 / PI;
+        let r = 6.0;
+        let s = 10.0;
+        let t = 1.0 / (8.0 * PI);
+        -(a * (x2 - b * x1 * x1 + c * x1 - r).powi(2) + s * (1.0 - t) * x1.cos() + s)
+    }
+    fn optimum(&self) -> f64 {
+        -0.39788735772973816
+    }
+}
+
+/// Goldstein–Price (2-D) on [-2,2]^2, negated (max -3).
+#[derive(Clone, Debug, Default)]
+pub struct GoldsteinPrice;
+
+impl TestFunction for GoldsteinPrice {
+    fn name(&self) -> &'static str {
+        "goldstein_price"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let x = scale(u[0], -2.0, 2.0);
+        let y = scale(u[1], -2.0, 2.0);
+        let a = 1.0
+            + (x + y + 1.0).powi(2)
+                * (19.0 - 14.0 * x + 3.0 * x * x - 14.0 * y + 6.0 * x * y + 3.0 * y * y);
+        let b = 30.0
+            + (2.0 * x - 3.0 * y).powi(2)
+                * (18.0 - 32.0 * x + 12.0 * x * x + 48.0 * y - 36.0 * x * y + 27.0 * y * y);
+        -(a * b)
+    }
+    fn optimum(&self) -> f64 {
+        -3.0
+    }
+}
+
+/// Six-hump camel (2-D) on [-3,3]x[-2,2], negated (max 1.0316).
+#[derive(Clone, Debug, Default)]
+pub struct SixHumpCamel;
+
+impl TestFunction for SixHumpCamel {
+    fn name(&self) -> &'static str {
+        "six_hump_camel"
+    }
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let x = scale(u[0], -3.0, 3.0);
+        let y = scale(u[1], -2.0, 2.0);
+        let x2 = x * x;
+        let y2 = y * y;
+        -((4.0 - 2.1 * x2 + x2 * x2 / 3.0) * x2 + x * y + (-4.0 + 4.0 * y2) * y2)
+    }
+    fn optimum(&self) -> f64 {
+        1.0316284534898774
+    }
+}
+
+/// Hartmann-3 on [0,1]^3 (max 3.86278).
+#[derive(Clone, Debug, Default)]
+pub struct Hartmann3;
+
+const H3_A: [[f64; 3]; 4] =
+    [[3.0, 10.0, 30.0], [0.1, 10.0, 35.0], [3.0, 10.0, 30.0], [0.1, 10.0, 35.0]];
+const H3_P: [[f64; 3]; 4] = [
+    [0.3689, 0.1170, 0.2673],
+    [0.4699, 0.4387, 0.7470],
+    [0.1091, 0.8732, 0.5547],
+    [0.0382, 0.5743, 0.8828],
+];
+const H_ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+
+impl TestFunction for Hartmann3 {
+    fn name(&self) -> &'static str {
+        "hartmann3"
+    }
+    fn dim(&self) -> usize {
+        3
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let mut outer = 0.0;
+        for i in 0..4 {
+            let mut inner = 0.0;
+            for j in 0..3 {
+                inner += H3_A[i][j] * (u[j] - H3_P[i][j]).powi(2);
+            }
+            outer += H_ALPHA[i] * (-inner).exp();
+        }
+        outer
+    }
+    fn optimum(&self) -> f64 {
+        3.86278214782076
+    }
+}
+
+/// Hartmann-6 on [0,1]^6 (max 3.32237).
+#[derive(Clone, Debug, Default)]
+pub struct Hartmann6;
+
+const H6_A: [[f64; 6]; 4] = [
+    [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+    [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+    [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+    [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+];
+const H6_P: [[f64; 6]; 4] = [
+    [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+    [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+    [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+    [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+];
+
+impl TestFunction for Hartmann6 {
+    fn name(&self) -> &'static str {
+        "hartmann6"
+    }
+    fn dim(&self) -> usize {
+        6
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        let mut outer = 0.0;
+        for i in 0..4 {
+            let mut inner = 0.0;
+            for j in 0..6 {
+                inner += H6_A[i][j] * (u[j] - H6_P[i][j]).powi(2);
+            }
+            outer += H_ALPHA[i] * (-inner).exp();
+        }
+        outer
+    }
+    fn optimum(&self) -> f64 {
+        3.322368011391339
+    }
+}
+
+/// Additive Gaussian observation noise around any test function.
+pub struct Noisy<F: TestFunction> {
+    /// The underlying function.
+    pub inner: F,
+    /// Noise std.
+    pub sigma: f64,
+    rng: std::sync::Mutex<crate::rng::Pcg64>,
+}
+
+impl<F: TestFunction> Noisy<F> {
+    /// Wrap `inner` with observation noise of std `sigma`.
+    pub fn new(inner: F, sigma: f64, seed: u64) -> Self {
+        Self { inner, sigma, rng: std::sync::Mutex::new(crate::rng::Pcg64::seed(seed)) }
+    }
+}
+
+impl<F: TestFunction> TestFunction for Noisy<F> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn eval(&self, u: &[f64]) -> f64 {
+        self.inner.eval(u) + self.sigma * self.rng.lock().unwrap().normal()
+    }
+    fn optimum(&self) -> f64 {
+        self.inner.optimum()
+    }
+}
+
+/// The Figure-1 suite (names and dimensions the paper benchmarks).
+pub fn figure1_suite() -> Vec<Box<dyn TestFunction>> {
+    vec![
+        Box::new(Branin),
+        Box::new(Ackley::new(2)),
+        Box::new(Ellipsoid::new(2)),
+        Box::new(GoldsteinPrice),
+        Box::new(SixHumpCamel),
+        Box::new(Hartmann3),
+        Box::new(Hartmann6),
+        Box::new(Rastrigin::new(2)),
+        Box::new(Sphere::new(2)),
+    ]
+}
+
+/// Look up a suite function by name (CLI entry point).
+pub fn by_name(name: &str, dim: usize) -> Option<Box<dyn TestFunction>> {
+    Some(match name {
+        "sphere" => Box::new(Sphere::new(dim)),
+        "ellipsoid" => Box::new(Ellipsoid::new(dim)),
+        "rastrigin" => Box::new(Rastrigin::new(dim)),
+        "ackley" => Box::new(Ackley::new(dim)),
+        "rosenbrock" => Box::new(Rosenbrock::new(dim.max(2))),
+        "levy" => Box::new(Levy::new(dim)),
+        "schwefel" => Box::new(Schwefel::new(dim)),
+        "branin" => Box::new(Branin),
+        "goldstein_price" => Box::new(GoldsteinPrice),
+        "six_hump_camel" => Box::new(SixHumpCamel),
+        "hartmann3" => Box::new(Hartmann3),
+        "hartmann6" => Box::new(Hartmann6),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every function's claimed optimum must be attained at its known
+    /// argmax (in unit coordinates) to high precision.
+    #[test]
+    fn optima_are_attained() {
+        let unit = |x: f64, lo: f64, hi: f64| (x - lo) / (hi - lo);
+        let cases: Vec<(Box<dyn TestFunction>, Vec<f64>)> = vec![
+            (Box::new(Sphere::new(3)), vec![0.5; 3]),
+            (Box::new(Ellipsoid::new(2)), vec![0.5; 2]),
+            (Box::new(Rastrigin::new(2)), vec![0.5; 2]),
+            (Box::new(Ackley::new(2)), vec![0.5; 2]),
+            (
+                Box::new(Branin),
+                vec![unit(PI, -5.0, 10.0), unit(2.275, 0.0, 15.0)],
+            ),
+            (
+                Box::new(GoldsteinPrice),
+                vec![unit(0.0, -2.0, 2.0), unit(-1.0, -2.0, 2.0)],
+            ),
+            (
+                Box::new(SixHumpCamel),
+                vec![unit(0.0898, -3.0, 3.0), unit(-0.7126, -2.0, 2.0)],
+            ),
+            (
+                Box::new(Hartmann3),
+                vec![0.114614, 0.555649, 0.852547],
+            ),
+            (
+                Box::new(Hartmann6),
+                vec![0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573],
+            ),
+            (
+                Box::new(Rosenbrock::new(2)),
+                vec![unit(1.0, -2.048, 2.048); 2],
+            ),
+            (Box::new(Levy::new(2)), vec![unit(1.0, -10.0, 10.0); 2]),
+            (
+                Box::new(Schwefel::new(2)),
+                vec![unit(420.9687, -500.0, 500.0); 2],
+            ),
+        ];
+        for (f, argmax) in cases {
+            let v = f.eval(&argmax);
+            assert!(
+                (f.optimum() - v).abs() < 1e-3,
+                "{}: optimum {} but f(argmax) = {v}",
+                f.name(),
+                f.optimum()
+            );
+            assert!(f.accuracy(v) < 1e-3);
+        }
+    }
+
+    /// No point in a coarse sweep may beat the claimed optimum.
+    #[test]
+    fn optimum_is_an_upper_bound() {
+        for f in figure1_suite() {
+            let d = f.dim();
+            let mut rng = crate::rng::Pcg64::seed(99);
+            for _ in 0..2000 {
+                let u = rng.unit_point(d);
+                let v = f.eval(&u);
+                assert!(
+                    v <= f.optimum() + 1e-9,
+                    "{} exceeded optimum: {v} > {}",
+                    f.name(),
+                    f.optimum()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_wrapper_perturbs_but_tracks() {
+        let f = Noisy::new(Sphere::new(2), 0.1, 5);
+        let v1 = f.eval(&[0.5, 0.5]);
+        let v2 = f.eval(&[0.5, 0.5]);
+        assert_ne!(v1, v2, "noise should vary");
+        assert!(v1.abs() < 1.0 && v2.abs() < 1.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("branin", 2).is_some());
+        assert_eq!(by_name("hartmann6", 0).unwrap().dim(), 6);
+        assert!(by_name("nope", 2).is_none());
+    }
+}

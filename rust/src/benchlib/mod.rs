@@ -1,0 +1,225 @@
+//! Tiny criterion-like benchmark harness + summary statistics.
+//!
+//! criterion is not available offline, so `cargo bench` targets use this:
+//! `harness = false` benches call [`Bencher::bench`] which warms up, picks
+//! an iteration count for a target sample time, collects wall-clock
+//! samples, and prints a stable `name  median  p10  p90  mean` row.
+//! The same [`Summary`] quantile machinery backs the Figure-1 experiment
+//! tables (median / quartiles / whiskers, matching the paper's box plots).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Quantile summary of a sample set (the paper's box-plot statistics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// Number of samples.
+    pub n: usize,
+    pub min: f64,
+    pub p10: f64,
+    /// First quartile.
+    pub q1: f64,
+    pub median: f64,
+    /// Third quartile.
+    pub q3: f64,
+    pub p90: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Sample standard deviation.
+    pub std: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples (empty input yields NaNs with n = 0).
+    pub fn from(samples: &[f64]) -> Self {
+        let n = samples.len();
+        if n == 0 {
+            let nan = f64::NAN;
+            return Self { n, min: nan, p10: nan, q1: nan, median: nan, q3: nan, p90: nan, max: nan, mean: nan, std: nan };
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            s.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            n,
+            min: s[0],
+            p10: quantile(&s, 0.10),
+            q1: quantile(&s, 0.25),
+            median: quantile(&s, 0.50),
+            q3: quantile(&s, 0.75),
+            p90: quantile(&s, 0.90),
+            max: s[n - 1],
+            mean,
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolation quantile of a **sorted** slice (type-7, the
+/// numpy default).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Bench driver: collects `samples` timing samples of `iters` iterations.
+pub struct Bencher {
+    /// Warm-up duration before measuring.
+    pub warmup: Duration,
+    /// Target time a single sample should take (sets iters/sample).
+    pub sample_time: Duration,
+    /// Number of samples to collect.
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            sample_time: Duration::from_millis(50),
+            samples: 20,
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration seconds summary.
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Per-iteration time statistics, in seconds.
+    pub per_iter: Summary,
+    /// Iterations per sample used.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// One formatted row: name, median, p10, p90, mean (auto-scaled unit).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_time(self.per_iter.median),
+            fmt_time(self.per_iter.p10),
+            fmt_time(self.per_iter.p90),
+            fmt_time(self.per_iter.mean),
+        )
+    }
+}
+
+/// Format seconds with an auto-picked unit.
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".to_string();
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            sample_time: Duration::from_millis(20),
+            samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly; returns per-iteration timing stats.
+    pub fn bench<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        // warm-up & calibration
+        let start = Instant::now();
+        let mut calib_iters = 0usize;
+        while start.elapsed() < self.warmup {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_secs_f64() / per_iter).ceil() as usize).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let res = BenchResult { name: name.to_string(), per_iter: Summary::from(&samples), iters };
+        println!("{}", res.row());
+        res
+    }
+}
+
+/// Print the standard bench table header.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "median", "p10", "p90", "mean"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&s, 0.0), 1.0);
+        assert_eq!(quantile(&s, 1.0), 4.0);
+        assert_eq!(quantile(&s, 0.5), 2.5);
+        assert!((quantile(&s, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_and_empty() {
+        let one = Summary::from(&[5.0]);
+        assert_eq!(one.median, 5.0);
+        assert_eq!(one.std, 0.0);
+        let zero = Summary::from(&[]);
+        assert_eq!(zero.n, 0);
+        assert!(zero.median.is_nan());
+    }
+
+    #[test]
+    fn bencher_runs() {
+        let b = Bencher { warmup: Duration::from_millis(5), sample_time: Duration::from_millis(2), samples: 3 };
+        let r = b.bench("noop", || 1 + 1);
+        assert_eq!(r.per_iter.n, 3);
+        assert!(r.per_iter.median >= 0.0);
+    }
+}

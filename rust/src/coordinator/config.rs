@@ -1,0 +1,126 @@
+//! Tiny `key = value` run-configuration parser (no serde offline).
+//!
+//! Accepted syntax: one `key = value` per line, `#` comments, blank lines
+//! ignored. Typed getters with defaults back the CLI and the experiment
+//! drivers.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed configuration map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected `key = value`, got {raw:?}", lineno + 1));
+            };
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    /// Parse from a file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Build from CLI `key=value` arguments.
+    pub fn from_args(args: &[String]) -> Result<Self, String> {
+        Self::parse(&args.join("\n"))
+    }
+
+    /// Merge `other` over `self` (other wins).
+    pub fn merge(&mut self, other: Config) {
+        self.map.extend(other.map);
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    /// Typed lookup with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed lookup with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed lookup with default.
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            _ => default,
+        }
+    }
+
+    /// Typed lookup with default.
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Is the configuration empty?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_values() {
+        let c = Config::parse(
+            "# comment\nreplicates = 50\nnoise = 0.01\nhpo = true\nfunction = branin\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("replicates", 1), 50);
+        assert_eq!(c.get_f64("noise", 0.0), 0.01);
+        assert!(c.get_bool("hpo", false));
+        assert_eq!(c.get_str("function", "?"), "branin");
+        assert_eq!(c.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn merge_and_args() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::from_args(&["y=3".into(), "z=4".into()]).unwrap();
+        a.merge(b);
+        assert_eq!(a.get_usize("x", 0), 1);
+        assert_eq!(a.get_usize("y", 0), 3);
+        assert_eq!(a.get_usize("z", 0), 4);
+    }
+
+    #[test]
+    fn inline_comments_stripped() {
+        let c = Config::parse("a = 5 # five").unwrap();
+        assert_eq!(c.get_usize("a", 0), 5);
+    }
+}

@@ -1,0 +1,204 @@
+//! Replicated benchmark runner — the machinery behind Figure 1.
+//!
+//! Runs `replicates` seeded optimizations per (function, configuration)
+//! cell in parallel over the thread pool, collects accuracy
+//! (`optimum - best`) and wall-clock samples, and aggregates them into the
+//! paper's box-plot statistics (median / quartiles / whiskers).
+
+use std::time::Instant;
+
+use crate::benchlib::Summary;
+use crate::benchfns::TestFunction;
+use crate::pool::parallel_map;
+
+/// One optimization run's outcome.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// Best value found.
+    pub best_value: f64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// Function evaluations used.
+    pub evaluations: usize,
+}
+
+/// A named, runnable optimizer configuration (one Figure-1 column).
+pub trait BenchConfig: Sync {
+    /// Column label ("limbo", "bayesopt", ...).
+    fn name(&self) -> &str;
+    /// Run once on `f` with the given seed, timing included by the caller.
+    fn run(&self, f: &dyn TestFunction, seed: u64) -> RunOutcome;
+}
+
+/// Aggregated cell of the benchmark table.
+#[derive(Clone, Debug)]
+pub struct ExperimentRow {
+    /// Test-function name.
+    pub function: String,
+    /// Configuration name.
+    pub config: String,
+    /// Accuracy statistics (`optimum - best`, lower = better).
+    pub accuracy: Summary,
+    /// Wall-clock statistics in seconds.
+    pub wall: Summary,
+    /// Replicates run.
+    pub replicates: usize,
+}
+
+/// The replicated experiment driver.
+pub struct ExperimentRunner {
+    /// Replicates per cell (the paper uses 250).
+    pub replicates: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Base seed; replicate `i` uses `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl ExperimentRunner {
+    /// Typical quick settings (30 replicates across all cores).
+    pub fn quick() -> Self {
+        Self { replicates: 30, threads: default_threads(), base_seed: 1000 }
+    }
+
+    /// The paper's full protocol (250 replicates).
+    pub fn full() -> Self {
+        Self { replicates: 250, threads: default_threads(), base_seed: 1000 }
+    }
+
+    /// Run one (function, config) cell.
+    pub fn run_cell(&self, f: &dyn TestFunction, config: &dyn BenchConfig) -> ExperimentRow {
+        let seeds: Vec<u64> = (0..self.replicates).map(|i| self.base_seed + i as u64).collect();
+        let outcomes = parallel_map(seeds, self.threads, |_, seed| {
+            let t0 = Instant::now();
+            let mut out = config.run(f, seed);
+            out.wall_secs = t0.elapsed().as_secs_f64();
+            out
+        });
+        let acc: Vec<f64> = outcomes.iter().map(|o| f.accuracy(o.best_value)).collect();
+        let wall: Vec<f64> = outcomes.iter().map(|o| o.wall_secs).collect();
+        ExperimentRow {
+            function: f.name().to_string(),
+            config: config.name().to_string(),
+            accuracy: Summary::from(&acc),
+            wall: Summary::from(&wall),
+            replicates: self.replicates,
+        }
+    }
+
+    /// Run the full grid (functions × configs).
+    pub fn run_grid(
+        &self,
+        functions: &[Box<dyn TestFunction>],
+        configs: &[&dyn BenchConfig],
+    ) -> Vec<ExperimentRow> {
+        let mut rows = Vec::new();
+        for f in functions {
+            for c in configs {
+                rows.push(self.run_cell(f.as_ref(), *c));
+            }
+        }
+        rows
+    }
+}
+
+/// Pretty-print the Figure-1 style table plus pairwise speed-ups.
+pub fn print_table(rows: &[ExperimentRow]) {
+    println!(
+        "{:<18} {:<16} {:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "function", "config", "reps", "acc.med", "acc.q1", "acc.q3", "time.med", "time.q3"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:<16} {:>9} {:>10.2e} {:>10.2e} {:>10.2e} {:>9.3}s {:>9.3}s",
+            r.function,
+            r.config,
+            r.replicates,
+            r.accuracy.median,
+            r.accuracy.q1,
+            r.accuracy.q3,
+            r.wall.median,
+            r.wall.q3,
+        );
+    }
+}
+
+/// Median speed-up of `fast` over `slow` per function (paper's headline
+/// "Limbo is X times faster" numbers). Returns (function, ratio,
+/// delta-median-accuracy) tuples.
+pub fn speedups(
+    rows: &[ExperimentRow],
+    fast: &str,
+    slow: &str,
+) -> Vec<(String, f64, f64)> {
+    let mut out = Vec::new();
+    let functions: Vec<String> = {
+        let mut v: Vec<String> = Vec::new();
+        for r in rows {
+            if !v.contains(&r.function) {
+                v.push(r.function.clone());
+            }
+        }
+        v
+    };
+    for f in functions {
+        let find = |cfg: &str| rows.iter().find(|r| r.function == f && r.config == cfg);
+        if let (Some(a), Some(b)) = (find(fast), find(slow)) {
+            out.push((
+                f,
+                b.wall.median / a.wall.median,
+                (a.accuracy.median - b.accuracy.median).abs(),
+            ));
+        }
+    }
+    out
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchfns::Sphere;
+
+    struct FakeConfig(&'static str, f64);
+
+    impl BenchConfig for FakeConfig {
+        fn name(&self) -> &str {
+            self.0
+        }
+        fn run(&self, _f: &dyn TestFunction, seed: u64) -> RunOutcome {
+            // deterministic fake: accuracy depends on seed
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            RunOutcome {
+                best_value: -self.1 * (1.0 + (seed % 5) as f64 * 0.1),
+                wall_secs: 0.0,
+                evaluations: 10,
+            }
+        }
+    }
+
+    #[test]
+    fn runs_replicates_and_aggregates() {
+        let runner = ExperimentRunner { replicates: 10, threads: 4, base_seed: 0 };
+        let row = runner.run_cell(&Sphere::new(2), &FakeConfig("fake", 0.5));
+        assert_eq!(row.accuracy.n, 10);
+        assert!(row.accuracy.median > 0.0);
+        assert!(row.wall.median > 0.0);
+    }
+
+    #[test]
+    fn speedups_pair_rows() {
+        let runner = ExperimentRunner { replicates: 4, threads: 2, base_seed: 0 };
+        let f = Sphere::new(2);
+        let rows = vec![
+            runner.run_cell(&f, &FakeConfig("fast", 0.1)),
+            runner.run_cell(&f, &FakeConfig("slow", 0.1)),
+        ];
+        let s = speedups(&rows, "fast", "slow");
+        assert_eq!(s.len(), 1);
+        assert!(s[0].1 > 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordination: everything above a single optimizer run.
+//!
+//! * [`experiment`] — the replicated benchmark runner behind Figure 1
+//!   (replicates × functions × configurations over the thread pool,
+//!   quartile aggregation, speed-up tables);
+//! * [`fig1`] — the two Figure-1 configurations (static limbo vs the
+//!   dyn-dispatch BayesOpt-like baseline, with/without HPO);
+//! * [`xla_model`] — adapter exposing [`crate::runtime::XlaGp`] as a
+//!   [`crate::model::Model`] so the whole component zoo runs on the
+//!   AOT-compiled artifacts;
+//! * [`service`] — ask/tell suggestion server (channel-based, the online
+//!   adaptation deployment mode: the robot asks for a trial, reports the
+//!   outcome, asks again);
+//! * [`batched_opt`] — fused-UCB batched acquisition search (the XLA
+//!   backend's fast inner loop: 64 candidates per artifact execution);
+//! * [`config`] — tiny key=value run-configuration parser for the CLI;
+//! * [`multiobj`] — ParEGO-style scalarized multi-objective support (the
+//!   paper notes "Limbo can support multi-objective optimization").
+
+pub mod batched_opt;
+pub mod config;
+pub mod experiment;
+pub mod fig1;
+pub mod multiobj;
+pub mod service;
+pub mod xla_model;
+
+pub use experiment::{ExperimentRunner, ExperimentRow, RunOutcome};
+pub use service::{AskTellServer, ServerHandle};
+pub use xla_model::XlaGpModel;

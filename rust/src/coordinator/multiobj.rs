@@ -1,0 +1,226 @@
+//! Multi-objective Bayesian optimization via ParEGO-style scalarization
+//! (Knowles 2006) — the paper notes Limbo "can support multi-objective
+//! optimization" through vector-valued functors.
+//!
+//! Each iteration draws a random weight vector, scalarizes the objectives
+//! with the augmented Tchebycheff norm, and runs one acquisition step of a
+//! single-objective GP on the scalarized history. A Pareto [`Archive`]
+//! keeps the non-dominated set.
+
+use crate::acqui::{AcquiContext, AcquiFn, Ucb};
+use crate::kernel::Matern52;
+use crate::mean::DataMean;
+use crate::model::{gp::Gp, Model};
+use crate::opt::{NelderMead, Optimizer, OptimizerExt, RandomPoint};
+use crate::rng::Pcg64;
+
+/// A vector-valued objective (all components maximized).
+pub trait MultiEvaluator: Sync {
+    /// Input dimension.
+    fn dim_in(&self) -> usize;
+    /// Number of objectives.
+    fn dim_out(&self) -> usize;
+    /// Evaluate all objectives.
+    fn eval(&self, x: &[f64]) -> Vec<f64>;
+}
+
+/// Non-dominated archive (maximization in every objective).
+#[derive(Clone, Debug, Default)]
+pub struct Archive {
+    entries: Vec<(Vec<f64>, Vec<f64>)>, // (x, objectives)
+}
+
+impl Archive {
+    /// True if `a` dominates `b` (>= everywhere, > somewhere).
+    pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+        let mut strictly = false;
+        for (&ai, &bi) in a.iter().zip(b) {
+            if ai < bi {
+                return false;
+            }
+            if ai > bi {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    /// Insert a point; keeps the archive non-dominated. Returns true if
+    /// the point entered the front.
+    pub fn insert(&mut self, x: Vec<f64>, objs: Vec<f64>) -> bool {
+        if self.entries.iter().any(|(_, o)| Self::dominates(o, &objs) || o == &objs) {
+            return false;
+        }
+        self.entries.retain(|(_, o)| !Self::dominates(&objs, o));
+        self.entries.push((x, objs));
+        true
+    }
+
+    /// The current Pareto front.
+    pub fn front(&self) -> &[(Vec<f64>, Vec<f64>)] {
+        &self.entries
+    }
+
+    /// 2-D hypervolume against a reference point (objectives maximized,
+    /// `reference` must be dominated by every front point).
+    pub fn hypervolume_2d(&self, reference: &[f64; 2]) -> f64 {
+        // sweep descending in obj0; each front point adds the rectangle
+        // between its obj1 and the best obj1 seen so far
+        let mut pts: Vec<&Vec<f64>> = self.entries.iter().map(|(_, o)| o).collect();
+        pts.sort_by(|a, b| b[0].partial_cmp(&a[0]).unwrap());
+        let mut hv = 0.0;
+        let mut prev_y = reference[1];
+        for p in pts {
+            let width = p[0] - reference[0];
+            let height = p[1] - prev_y;
+            if width > 0.0 && height > 0.0 {
+                hv += width * height;
+                prev_y = p[1];
+            }
+        }
+        hv
+    }
+
+    /// Archive size.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the archive empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Augmented Tchebycheff scalarization (maximization form).
+pub fn tchebycheff(objs: &[f64], weights: &[f64], rho: f64) -> f64 {
+    let weighted: Vec<f64> = objs.iter().zip(weights).map(|(&o, &w)| w * o).collect();
+    let min = weighted.iter().cloned().fold(f64::INFINITY, f64::min);
+    min + rho * weighted.iter().sum::<f64>()
+}
+
+/// ParEGO-style multi-objective optimizer.
+pub struct ParEgo {
+    /// Initial random samples.
+    pub n_init: usize,
+    /// Model-guided iterations.
+    pub iterations: usize,
+    /// Tchebycheff augmentation factor.
+    pub rho: f64,
+    /// RNG.
+    pub rng: Pcg64,
+}
+
+impl ParEgo {
+    /// Defaults: 10 init, 40 iterations, rho 0.05.
+    pub fn new(seed: u64) -> Self {
+        Self { n_init: 10, iterations: 40, rho: 0.05, rng: Pcg64::seed(seed) }
+    }
+
+    /// Run; returns the final Pareto archive.
+    pub fn optimize(&mut self, f: &dyn MultiEvaluator) -> Archive {
+        let dim = f.dim_in();
+        let k = f.dim_out();
+        let mut archive = Archive::default();
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut objs: Vec<Vec<f64>> = Vec::new();
+
+        for _ in 0..self.n_init {
+            let x = self.rng.unit_point(dim);
+            let o = f.eval(&x);
+            archive.insert(x.clone(), o.clone());
+            xs.push(x);
+            objs.push(o);
+        }
+
+        for it in 0..self.iterations {
+            // random weight vector on the simplex
+            let mut w: Vec<f64> = (0..k).map(|_| -self.rng.next_f64().ln()).collect();
+            let sum: f64 = w.iter().sum();
+            for wi in w.iter_mut() {
+                *wi /= sum;
+            }
+            // scalarize history and fit a fresh GP
+            let ys: Vec<f64> = objs.iter().map(|o| tchebycheff(o, &w, self.rho)).collect();
+            let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), 1e-3);
+            gp.fit(&xs, &ys);
+            let best_scalar = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+            let inner = RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2);
+            let ctx = AcquiContext { iteration: it, best: best_scalar, dim };
+            let acq = Ucb::default();
+            let gp_ref = &gp;
+            let objective = move |x: &[f64]| acq.eval(gp_ref, x, &ctx);
+            let cand = inner.optimize(&objective, dim, &mut self.rng);
+
+            let o = f.eval(&cand.x);
+            archive.insert(cand.x.clone(), o.clone());
+            xs.push(cand.x);
+            objs.push(o);
+        }
+        archive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Schaffer;
+
+    impl MultiEvaluator for Schaffer {
+        fn dim_in(&self) -> usize {
+            1
+        }
+        fn dim_out(&self) -> usize {
+            2
+        }
+        fn eval(&self, x: &[f64]) -> Vec<f64> {
+            // maximize (-x^2, -(x-2)^2) on x in [0, 2] (scaled from [0,1])
+            let t = 2.0 * x[0];
+            vec![-(t * t), -((t - 2.0) * (t - 2.0))]
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_partial_order() {
+        assert!(Archive::dominates(&[1.0, 1.0], &[0.0, 0.0]));
+        assert!(Archive::dominates(&[1.0, 0.0], &[0.0, 0.0]));
+        assert!(!Archive::dominates(&[1.0, -1.0], &[0.0, 0.0]));
+        assert!(!Archive::dominates(&[0.0, 0.0], &[0.0, 0.0]));
+    }
+
+    #[test]
+    fn archive_keeps_only_front() {
+        let mut a = Archive::default();
+        assert!(a.insert(vec![0.0], vec![0.0, 1.0]));
+        assert!(a.insert(vec![1.0], vec![1.0, 0.0]));
+        assert!(!a.insert(vec![2.0], vec![-1.0, -1.0]), "dominated point rejected");
+        assert!(a.insert(vec![3.0], vec![2.0, 2.0]), "dominating point accepted");
+        assert_eq!(a.len(), 1, "front collapsed to the dominating point");
+    }
+
+    #[test]
+    fn hypervolume_2d_known() {
+        let mut a = Archive::default();
+        a.insert(vec![0.0], vec![1.0, 2.0]);
+        a.insert(vec![1.0], vec![2.0, 1.0]);
+        // ref (0,0): rect(2x1) + rect(1x1) = 3
+        let hv = a.hypervolume_2d(&[0.0, 0.0]);
+        assert!((hv - 3.0).abs() < 1e-12, "hv={hv}");
+    }
+
+    #[test]
+    fn parego_covers_schaffer_front() {
+        let mut pe = ParEgo::new(3);
+        pe.iterations = 25;
+        let archive = pe.optimize(&Schaffer);
+        assert!(archive.len() >= 3, "front size {}", archive.len());
+        // end points of the front should be approached: obj0 near 0 and
+        // obj1 near 0 both present
+        let best0 = archive.front().iter().map(|(_, o)| o[0]).fold(f64::NEG_INFINITY, f64::max);
+        let best1 = archive.front().iter().map(|(_, o)| o[1]).fold(f64::NEG_INFINITY, f64::max);
+        assert!(best0 > -0.3, "best obj0 {best0}");
+        assert!(best1 > -0.3, "best obj1 {best1}");
+    }
+}

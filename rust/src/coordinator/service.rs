@@ -1,0 +1,208 @@
+//! Ask/tell suggestion server — the online-adaptation deployment mode.
+//!
+//! The Cully et al. (2015) scenario the paper motivates: a robot (the
+//! client) repeatedly asks the optimizer for the next trial, executes it
+//! physically, and reports the observed outcome. The optimizer must answer
+//! fast (it runs on the embedded side), so the server owns the model and
+//! the acquisition maximization, and communicates over `mpsc` channels
+//! from a dedicated thread.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::acqui::{AcquiContext, AcquiFn};
+use crate::model::Model;
+use crate::opt::Optimizer;
+use crate::rng::Pcg64;
+
+/// Requests a client can send.
+enum Request {
+    /// Ask for the next point to try.
+    Ask(mpsc::Sender<Vec<f64>>),
+    /// Report an observation.
+    Tell(Vec<f64>, f64),
+    /// Ask for the incumbent best (x, value).
+    Best(mpsc::Sender<Option<(Vec<f64>, f64)>>),
+    Shutdown,
+}
+
+/// Synchronous ask/tell optimizer state (usable inline, no thread).
+pub struct AskTellServer<M, A, O>
+where
+    M: Model,
+    A: AcquiFn<M>,
+    O: Optimizer,
+{
+    /// Surrogate model.
+    pub model: M,
+    /// Acquisition policy.
+    pub acquisition: A,
+    /// Inner optimizer.
+    pub inner_opt: O,
+    /// RNG.
+    pub rng: Pcg64,
+    dim: usize,
+    iteration: usize,
+    best: Option<(Vec<f64>, f64)>,
+}
+
+impl<M, A, O> AskTellServer<M, A, O>
+where
+    M: Model + 'static,
+    A: AcquiFn<M> + 'static,
+    O: Optimizer + 'static,
+{
+    /// Compose a server.
+    pub fn new(model: M, acquisition: A, inner_opt: O, dim: usize, seed: u64) -> Self {
+        Self {
+            model,
+            acquisition,
+            inner_opt,
+            rng: Pcg64::seed(seed),
+            dim,
+            iteration: 0,
+            best: None,
+        }
+    }
+
+    /// Next suggested trial. Before any data: a random probe.
+    pub fn ask(&mut self) -> Vec<f64> {
+        if self.model.n_samples() == 0 {
+            return self.rng.unit_point(self.dim);
+        }
+        let ctx = AcquiContext {
+            iteration: self.iteration,
+            best: self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY),
+            dim: self.dim,
+        };
+        let model = &self.model;
+        let acq = &self.acquisition;
+        let objective = move |x: &[f64]| acq.eval(model, x, &ctx);
+        self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+    }
+
+    /// Report an observation.
+    pub fn tell(&mut self, x: &[f64], y: f64) {
+        self.model.add_sample(x, y);
+        self.iteration += 1;
+        if self.best.as_ref().map_or(true, |b| y > b.1) {
+            self.best = Some((x.to_vec(), y));
+        }
+    }
+
+    /// Incumbent best.
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.clone()
+    }
+
+    /// Move the server onto its own thread; returns a cloneable handle.
+    pub fn spawn(mut self) -> ServerHandle
+    where
+        M: Send,
+        A: Send,
+        O: Send,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Ask(reply) => {
+                        let _ = reply.send(self.ask());
+                    }
+                    Request::Tell(x, y) => self.tell(&x, y),
+                    Request::Best(reply) => {
+                        let _ = reply.send(self.best());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        });
+        ServerHandle { tx, join: Some(join) }
+    }
+}
+
+/// Client handle to a spawned [`AskTellServer`].
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request the next trial point (blocks for the reply).
+    pub fn ask(&self) -> Vec<f64> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Request::Ask(tx)).expect("server alive");
+        rx.recv().expect("server replied")
+    }
+
+    /// Report an observation (fire and forget).
+    pub fn tell(&self, x: Vec<f64>, y: f64) {
+        self.tx.send(Request::Tell(x, y)).expect("server alive");
+    }
+
+    /// Incumbent best.
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Request::Best(tx)).expect("server alive");
+        rx.recv().expect("server replied")
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acqui::Ucb;
+    use crate::kernel::Matern52;
+    use crate::mean::DataMean;
+    use crate::model::gp::Gp;
+    use crate::opt::{NelderMead, OptimizerExt, RandomPoint};
+
+    fn make_server() -> AskTellServer<
+        Gp<Matern52, DataMean>,
+        Ucb,
+        crate::opt::ParallelRepeater<crate::opt::Chained<RandomPoint, NelderMead>>,
+    > {
+        AskTellServer::new(
+            Gp::new(Matern52::new(1), DataMean::default(), 1e-3),
+            Ucb::default(),
+            RandomPoint::new(64).then(NelderMead::default()).restarts(2, 2),
+            1,
+            9,
+        )
+    }
+
+    #[test]
+    fn inline_ask_tell_converges() {
+        let mut srv = make_server();
+        let f = |x: &[f64]| -(x[0] - 0.6).powi(2);
+        for _ in 0..15 {
+            let x = srv.ask();
+            assert!((0.0..=1.0).contains(&x[0]));
+            let y = f(&x);
+            srv.tell(&x, y);
+        }
+        let (bx, bv) = srv.best().unwrap();
+        assert!(bv > -0.02, "best={bv} at {bx:?}");
+    }
+
+    #[test]
+    fn threaded_server_round_trips() {
+        let handle = make_server().spawn();
+        let f = |x: &[f64]| -(x[0] - 0.25).powi(2);
+        for _ in 0..10 {
+            let x = handle.ask();
+            handle.tell(x.clone(), f(&x));
+        }
+        let best = handle.best().unwrap();
+        assert!(best.1 > -0.05, "best={}", best.1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Adapter: the XLA-artifact GP backend as a [`Model`].
+//!
+//! Keeps the dataset on the Rust side, forwards predictions (batched,
+//! padded into capacity tiers) to [`XlaGp`], and runs ML-II refits through
+//! the AOT `lml` gradient artifact with the same Rprop the native GP uses.
+//! Any kernel/mean/acquisition policy from the zoo composes with it.
+
+use std::sync::Arc;
+
+use crate::model::Model;
+use crate::opt::rprop::{rprop_maximize, RpropParams};
+use crate::runtime::XlaGp;
+
+/// [`Model`] implementation backed by AOT-compiled XLA artifacts.
+pub struct XlaGpModel {
+    backend: Arc<XlaGp>,
+    dim: usize,
+    /// Log-hyper-params `[log l_1..log l_d, log sigma_f, log sigma_n]`.
+    pub loghp: Vec<f64>,
+    /// Whether refits tune the noise entry too.
+    pub learn_noise: bool,
+    /// Rprop iterations per [`optimize_hyperparams`](Model::optimize_hyperparams).
+    pub hp_iters: usize,
+    xs_flat: Vec<f64>,
+    ys: Vec<f64>,
+    best: Option<f64>,
+}
+
+impl XlaGpModel {
+    /// New model for problem dimension `dim` over a backend.
+    /// Initial hyper-params: unit lengthscales, unit signal, noise 1e-2.
+    pub fn new(backend: Arc<XlaGp>, dim: usize) -> Self {
+        assert!(dim <= backend.d_max(), "dim exceeds artifact d_max");
+        let mut loghp = vec![0.0; dim + 2];
+        loghp[dim + 1] = (1e-2f64).ln();
+        Self {
+            backend,
+            dim,
+            loghp,
+            learn_noise: false,
+            hp_iters: 30,
+            xs_flat: Vec::new(),
+            ys: Vec::new(),
+            best: None,
+        }
+    }
+
+    /// The prior-mean value passed to the artifacts (Data mean: average of
+    /// the observations, matching the native default configuration).
+    fn mean0(&self) -> f64 {
+        if self.ys.is_empty() {
+            0.0
+        } else {
+            self.ys.iter().sum::<f64>() / self.ys.len() as f64
+        }
+    }
+
+    /// Fused UCB acquisition on a candidate block (the optimized hot path:
+    /// one artifact call instead of predict + combine).
+    pub fn ucb_batch(&self, xs: &[Vec<f64>], alpha: f64) -> Vec<f64> {
+        let b = self.backend.batch_size();
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(b) {
+            let flat: Vec<f64> = chunk.iter().flat_map(|x| x.iter().copied()).collect();
+            let vals = self
+                .backend
+                .ucb(&self.xs_flat, &self.ys, self.dim, &flat, &self.loghp, self.mean0(), alpha)
+                .expect("xla ucb");
+            out.extend(vals);
+        }
+        out
+    }
+
+    /// Backend batch size (for batching-aware inner optimizers).
+    pub fn batch_size(&self) -> usize {
+        self.backend.batch_size()
+    }
+}
+
+impl Model for XlaGpModel {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        self.xs_flat.clear();
+        for x in xs {
+            assert_eq!(x.len(), self.dim);
+            self.xs_flat.extend_from_slice(x);
+        }
+        self.ys = ys.to_vec();
+        self.best = ys.iter().cloned().fold(None, |b: Option<f64>, v| {
+            Some(b.map_or(v, |b| b.max(v)))
+        });
+    }
+
+    fn add_sample(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.dim);
+        self.xs_flat.extend_from_slice(x);
+        self.ys.push(y);
+        self.best = Some(self.best.map_or(y, |b| b.max(y)));
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        if self.ys.is_empty() {
+            let sf2 = (2.0 * self.loghp[self.dim]).exp();
+            return (0.0, sf2);
+        }
+        let (mu, var) = self
+            .backend
+            .predict(&self.xs_flat, &self.ys, self.dim, x, &self.loghp, self.mean0())
+            .expect("xla predict");
+        (mu[0], var[0])
+    }
+
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        if self.ys.is_empty() {
+            let sf2 = (2.0 * self.loghp[self.dim]).exp();
+            return vec![(0.0, sf2); xs.len()];
+        }
+        let b = self.backend.batch_size();
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(b) {
+            let flat: Vec<f64> = chunk.iter().flat_map(|x| x.iter().copied()).collect();
+            let (mu, var) = self
+                .backend
+                .predict(&self.xs_flat, &self.ys, self.dim, &flat, &self.loghp, self.mean0())
+                .expect("xla predict batch");
+            out.extend(mu.into_iter().zip(var));
+        }
+        out
+    }
+
+    fn n_samples(&self) -> usize {
+        self.ys.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn best_observation(&self) -> Option<f64> {
+        self.best
+    }
+
+    fn optimize_hyperparams(&mut self) {
+        if self.ys.len() < 2 {
+            return;
+        }
+        let backend = self.backend.clone();
+        let (xs, ys, dim, m0) = (self.xs_flat.clone(), self.ys.clone(), self.dim, self.mean0());
+        let learn_noise = self.learn_noise;
+        let params = RpropParams { iterations: self.hp_iters, ..RpropParams::default() };
+        let best = rprop_maximize(
+            |p| {
+                let (lml, mut grad) =
+                    backend.lml_grad(&xs, &ys, dim, p, m0).expect("xla lml");
+                if !learn_noise {
+                    grad[dim + 1] = 0.0;
+                }
+                (lml, grad)
+            },
+            &self.loghp,
+            &params,
+            Some((-6.0, 6.0)),
+        );
+        self.loghp = best;
+    }
+}

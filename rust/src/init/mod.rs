@@ -1,0 +1,100 @@
+//! Initialization strategies — the `limbo::init::*` policy family.
+//! Produce the design points evaluated before the model-guided loop starts.
+
+use crate::rng::{latin_hypercube, Pcg64};
+
+/// An initial-design generator over `[0, 1]^dim`.
+pub trait Initializer: Send + Sync {
+    /// The initial sample locations.
+    fn points(&self, dim: usize, rng: &mut Pcg64) -> Vec<Vec<f64>>;
+}
+
+/// No initialization (model-guided from the first sample).
+#[derive(Clone, Debug, Default)]
+pub struct NoInit;
+
+impl Initializer for NoInit {
+    fn points(&self, _dim: usize, _rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        Vec::new()
+    }
+}
+
+/// `n` i.i.d. uniform points (Limbo's `init::RandomSampling`).
+#[derive(Clone, Debug)]
+pub struct RandomSampling {
+    /// Number of samples.
+    pub n: usize,
+}
+
+impl Initializer for RandomSampling {
+    fn points(&self, dim: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        (0..self.n).map(|_| rng.unit_point(dim)).collect()
+    }
+}
+
+/// Full-factorial grid with `bins` levels per dimension (Limbo's
+/// `init::GridSampling`).
+#[derive(Clone, Debug)]
+pub struct GridSampling {
+    /// Levels per dimension.
+    pub bins: usize,
+}
+
+impl Initializer for GridSampling {
+    fn points(&self, dim: usize, _rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        let bins = self.bins.max(1);
+        let total = (bins as u64).pow(dim as u32) as usize;
+        let mut pts = Vec::with_capacity(total);
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut x = vec![0.0; dim];
+            for d in 0..dim {
+                let b = rem % bins;
+                rem /= bins;
+                x[d] = if bins == 1 { 0.5 } else { b as f64 / (bins - 1) as f64 };
+            }
+            pts.push(x);
+        }
+        pts
+    }
+}
+
+/// Latin-hypercube design (BayesOpt's default initializer).
+#[derive(Clone, Debug)]
+pub struct Lhs {
+    /// Number of samples.
+    pub n: usize,
+}
+
+impl Initializer for Lhs {
+    fn points(&self, dim: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        latin_hypercube(self.n, dim, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_bounds() {
+        let mut rng = Pcg64::seed(1);
+        assert!(NoInit.points(3, &mut rng).is_empty());
+        let r = RandomSampling { n: 7 }.points(2, &mut rng);
+        assert_eq!(r.len(), 7);
+        let l = Lhs { n: 9 }.points(4, &mut rng);
+        assert_eq!(l.len(), 9);
+        for p in r.iter().chain(&l) {
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn grid_covers_corners() {
+        let mut rng = Pcg64::seed(2);
+        let g = GridSampling { bins: 2 }.points(2, &mut rng);
+        assert_eq!(g.len(), 4);
+        assert!(g.contains(&vec![0.0, 0.0]));
+        assert!(g.contains(&vec![1.0, 1.0]));
+    }
+}

@@ -1,0 +1,135 @@
+//! Exponential (Ornstein–Uhlenbeck) kernel — rough, non-differentiable
+//! sample paths; included for the component-zoo completeness the paper
+//! advertises.
+
+use super::{ard_r2, Kernel};
+
+/// ARD exponential kernel: `sigma_f^2 * exp(-r)` with
+/// `r = sqrt(sum_d (a_d-b_d)^2 / l_d^2)`.
+#[derive(Clone, Debug)]
+pub struct Exponential {
+    log_ls: Vec<f64>,
+    log_sf: f64,
+    // hot-loop caches, refreshed by `set_params`
+    inv_ls: Vec<f64>,
+    sf2: f64,
+}
+
+impl Exponential {
+    /// Unit lengthscales and unit signal variance.
+    pub fn new(dim: usize) -> Self {
+        Self { log_ls: vec![0.0; dim], log_sf: 0.0, inv_ls: vec![1.0; dim], sf2: 1.0 }
+    }
+}
+
+impl Kernel for Exponential {
+    fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    fn n_params(&self) -> usize {
+        self.log_ls.len() + 1
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.log_ls.clone();
+        p.push(self.log_sf);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        let d = self.log_ls.len();
+        self.log_ls.copy_from_slice(&p[..d]);
+        self.log_sf = p[d];
+        for (inv, l) in self.inv_ls.iter_mut().zip(&self.log_ls) {
+            *inv = (-l).exp();
+        }
+        self.sf2 = (2.0 * self.log_sf).exp();
+    }
+
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let r = ard_r2(a, b, &self.inv_ls).sqrt();
+        self.sf2 * (-r).exp()
+    }
+
+    fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let d = self.log_ls.len();
+        let r2 = ard_r2(a, b, &self.inv_ls);
+        let r = r2.sqrt().max(1e-12); // gradient singular at r = 0
+        let k = self.sf2 * (-r).exp();
+        for i in 0..d {
+            let t = (a[i] - b[i]) * self.inv_ls[i];
+            // dk/dlog l_i = k * t_i^2 / r
+            out[i] = k * t * t / r;
+        }
+        out[d] = 2.0 * k;
+    }
+
+    fn variance(&self) -> f64 {
+        self.sf2
+    }
+
+    fn kind(&self) -> &'static str {
+        "exponential"
+    }
+
+    fn xla_loghp(&self) -> Vec<f64> {
+        let mut hp = self.log_ls.clone();
+        hp.push(self.log_sf);
+        hp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing;
+
+    #[test]
+    fn basics() {
+        let k = Exponential::new(2);
+        assert!((k.eval(&[0.5, 0.5], &[0.5, 0.5]) - 1.0).abs() < 1e-14);
+        assert!(k.eval(&[0.0, 0.0], &[1.0, 1.0]) < 1.0);
+    }
+
+    #[test]
+    fn grad_matches_fd_away_from_zero() {
+        // avoid r ~ 0 where the OU kernel is non-differentiable
+        testing::check(
+            "exp-grad",
+            0xBEEF,
+            32,
+            |rng: &mut Pcg64| {
+                let mut k = Exponential::new(2);
+                k.set_params(&[rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5), rng.uniform(-0.5, 0.5)]);
+                let a = rng.unit_point(2);
+                let mut b = rng.unit_point(2);
+                // enforce separation
+                if (a[0] - b[0]).abs() + (a[1] - b[1]).abs() < 0.2 {
+                    b[0] += 0.5;
+                }
+                (k, a, b)
+            },
+            |(k, a, b)| {
+                let mut grad = vec![0.0; 3];
+                k.grad_params(a, b, &mut grad);
+                let eps = 1e-6;
+                let p0 = k.params();
+                for i in 0..3 {
+                    let mut kp = k.clone();
+                    let mut p = p0.clone();
+                    p[i] += eps;
+                    kp.set_params(&p);
+                    let up = kp.eval(a, b);
+                    p[i] -= 2.0 * eps;
+                    kp.set_params(&p);
+                    let dn = kp.eval(a, b);
+                    testing::close(grad[i], (up - dn) / (2.0 * eps), 1e-4)?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

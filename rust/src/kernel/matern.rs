@@ -1,0 +1,177 @@
+//! Matérn kernels (nu = 3/2 and 5/2) with ARD lengthscales.
+//!
+//! Matérn-5/2 is the BayesOpt default and the kernel the paper's snippet
+//! swaps in (`limbo::kernel::MaternFiveHalves`).
+
+use super::{ard_r2, Kernel};
+
+const SQRT5: f64 = 2.2360679774997896;
+const SQRT3: f64 = 1.7320508075688772;
+
+macro_rules! matern_impl {
+    ($name:ident, $kind:literal, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            log_ls: Vec<f64>,
+            log_sf: f64,
+            // hot-loop caches, refreshed by `set_params`
+            inv_ls: Vec<f64>,
+            sf2: f64,
+        }
+
+        impl $name {
+            /// Unit lengthscales and unit signal variance.
+            pub fn new(dim: usize) -> Self {
+                Self::with_params(vec![0.0; dim], 0.0)
+            }
+
+            /// From log lengthscales and log signal std.
+            pub fn with_params(log_ls: Vec<f64>, log_sf: f64) -> Self {
+                let inv_ls = log_ls.iter().map(|l: &f64| (-l).exp()).collect();
+                let sf2 = (2.0 * log_sf).exp();
+                Self { log_ls, log_sf, inv_ls, sf2 }
+            }
+        }
+
+        impl Kernel for $name {
+            fn dim(&self) -> usize {
+                self.log_ls.len()
+            }
+
+            fn n_params(&self) -> usize {
+                self.log_ls.len() + 1
+            }
+
+            fn params(&self) -> Vec<f64> {
+                let mut p = self.log_ls.clone();
+                p.push(self.log_sf);
+                p
+            }
+
+            fn set_params(&mut self, p: &[f64]) {
+                assert_eq!(p.len(), self.n_params());
+                let d = self.log_ls.len();
+                self.log_ls.copy_from_slice(&p[..d]);
+                self.log_sf = p[d];
+                for (inv, l) in self.inv_ls.iter_mut().zip(&self.log_ls) {
+                    *inv = (-l).exp();
+                }
+                self.sf2 = (2.0 * self.log_sf).exp();
+            }
+
+            fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+                let r2 = ard_r2(a, b, &self.inv_ls);
+                self.sf2 * $name::shape(r2)
+            }
+
+            fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+                let d = self.log_ls.len();
+                let r2 = ard_r2(a, b, &self.inv_ls);
+                let sf2 = self.sf2;
+                // per-dim: dk/dlog l_i = sf2 * shape_dlog(r2) * t_i^2
+                let coeff = sf2 * $name::shape_dlog(r2);
+                for i in 0..d {
+                    let t = (a[i] - b[i]) * self.inv_ls[i];
+                    out[i] = coeff * t * t;
+                }
+                out[d] = 2.0 * sf2 * $name::shape(r2);
+            }
+
+            fn variance(&self) -> f64 {
+                self.sf2
+            }
+
+            fn kind(&self) -> &'static str {
+                $kind
+            }
+
+            fn xla_loghp(&self) -> Vec<f64> {
+                let mut hp = self.log_ls.clone();
+                hp.push(self.log_sf);
+                hp
+            }
+        }
+    };
+}
+
+matern_impl!(
+    Matern52,
+    "matern52",
+    "ARD Matérn-5/2: `sigma_f^2 (1 + sqrt5 r + 5/3 r^2) exp(-sqrt5 r)`."
+);
+matern_impl!(
+    Matern32,
+    "matern32",
+    "ARD Matérn-3/2: `sigma_f^2 (1 + sqrt3 r) exp(-sqrt3 r)`."
+);
+
+impl Matern52 {
+    #[inline]
+    fn shape(r2: f64) -> f64 {
+        let r = r2.max(0.0).sqrt();
+        (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * (-SQRT5 * r).exp()
+    }
+
+    /// `d shape / d log l_i` divided by `t_i^2` — i.e. the common factor
+    /// `(5/3)(1 + sqrt5 r) exp(-sqrt5 r)` (the `1/r` from the chain rule
+    /// cancels, so this is smooth at `r = 0`).
+    #[inline]
+    fn shape_dlog(r2: f64) -> f64 {
+        let r = r2.max(0.0).sqrt();
+        (5.0 / 3.0) * (1.0 + SQRT5 * r) * (-SQRT5 * r).exp()
+    }
+}
+
+impl Matern32 {
+    #[inline]
+    fn shape(r2: f64) -> f64 {
+        let r = r2.max(0.0).sqrt();
+        (1.0 + SQRT3 * r) * (-SQRT3 * r).exp()
+    }
+
+    /// Common gradient factor `3 exp(-sqrt3 r)` (smooth at `r = 0`).
+    #[inline]
+    fn shape_dlog(r2: f64) -> f64 {
+        let r = r2.max(0.0).sqrt();
+        3.0 * (-SQRT3 * r).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::grad_check;
+
+    #[test]
+    fn matern_basics() {
+        for dim in [1, 3] {
+            let k5 = Matern52::new(dim);
+            let k3 = Matern32::new(dim);
+            let x = vec![0.4; dim];
+            assert!((k5.eval(&x, &x) - 1.0).abs() < 1e-14);
+            assert!((k3.eval(&x, &x) - 1.0).abs() < 1e-14);
+            let y = vec![0.9; dim];
+            assert!(k5.eval(&x, &y) < 1.0);
+            // Matern-5/2 is smoother: higher correlation at same distance
+            assert!(k5.eval(&x, &y) > k3.eval(&x, &y));
+        }
+    }
+
+    #[test]
+    fn matern_grads_match_fd() {
+        grad_check::run(Matern52::new, "matern52-grad");
+        grad_check::run(Matern32::new, "matern32-grad");
+    }
+
+    #[test]
+    fn decays_monotonically() {
+        let k = Matern52::new(1);
+        let mut prev = f64::INFINITY;
+        for step in 0..10 {
+            let v = k.eval(&[0.0], &[step as f64 * 0.3]);
+            assert!(v < prev || step == 0);
+            prev = v;
+        }
+    }
+}

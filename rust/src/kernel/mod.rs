@@ -1,0 +1,109 @@
+//! Covariance (kernel) functions — the `limbo::kernel::*` policy family.
+//!
+//! Every kernel carries its own hyper-parameters in **log space** (the
+//! convention the hyper-parameter optimizer works in) and exposes analytic
+//! gradients `dk/dlog(theta)` for ML-II fits. Gradients are validated
+//! against finite differences by property tests.
+//!
+//! Conventions shared with the Python L1/L2 side: ARD lengthscales
+//! `l_d`, signal std `sigma_f`; `k(x, x) = sigma_f^2` for all stationary
+//! kernels here.
+
+mod exponential;
+mod matern;
+mod squared_exp;
+
+pub use exponential::Exponential;
+pub use matern::{Matern32, Matern52};
+pub use squared_exp::{SquaredExpArd, SquaredExpIso};
+
+/// A positive-definite covariance function with tunable log-hyper-params.
+pub trait Kernel: Clone + Send + Sync + 'static {
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Number of log-hyper-parameters ([`params`](Self::params) length).
+    fn n_params(&self) -> usize;
+
+    /// Current log-hyper-parameters.
+    fn params(&self) -> Vec<f64>;
+
+    /// Replace the log-hyper-parameters.
+    fn set_params(&mut self, p: &[f64]);
+
+    /// Evaluate `k(a, b)`.
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// Gradient `dk(a, b) / dlog(theta)` into `out` (length
+    /// [`n_params`](Self::n_params)).
+    fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]);
+
+    /// Signal variance `k(x, x)`.
+    fn variance(&self) -> f64;
+
+    /// Kernel kind name matching the artifact manifest ("se_ard", ...).
+    fn kind(&self) -> &'static str;
+
+    /// Log-hyper-params in the XLA artifact layout
+    /// `[log l_1 .. log l_d, log sigma_f]` (noise appended by the model).
+    fn xla_loghp(&self) -> Vec<f64>;
+}
+
+/// ARD-scaled squared distance `sum_d (a_d - b_d)^2 / l_d^2` over
+/// *precomputed* inverse lengthscales (shared by all stationary kernels).
+/// Kernels cache `1/l_d` at `set_params` time so the per-pair hot loop is
+/// mul/add only — no transcendental calls (see EXPERIMENTS.md §Perf).
+#[inline]
+pub(crate) fn ard_r2(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
+    let mut r2 = 0.0;
+    for d in 0..a.len() {
+        let t = (a[d] - b[d]) * inv_ls[d];
+        r2 += t * t;
+    }
+    r2
+}
+
+#[cfg(test)]
+pub(crate) mod grad_check {
+    use super::Kernel;
+    use crate::rng::Pcg64;
+    use crate::testing;
+
+    /// Finite-difference validation of `grad_params` for any kernel.
+    pub fn run<K: Kernel + std::fmt::Debug>(make: impl Fn(usize) -> K, name: &str) {
+        testing::check(
+            name,
+            0xC0FFEE,
+            48,
+            |rng: &mut Pcg64| {
+                let dim = 1 + rng.below(4);
+                let mut k = make(dim);
+                let p: Vec<f64> = (0..k.n_params()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                k.set_params(&p);
+                let a = rng.unit_point(dim);
+                let b = rng.unit_point(dim);
+                (k, a, b)
+            },
+            |(k, a, b)| {
+                let mut grad = vec![0.0; k.n_params()];
+                k.grad_params(a, b, &mut grad);
+                let eps = 1e-6;
+                let p0 = k.params();
+                for i in 0..k.n_params() {
+                    let mut kp = k.clone();
+                    let mut p = p0.clone();
+                    p[i] += eps;
+                    kp.set_params(&p);
+                    let up = kp.eval(a, b);
+                    p[i] -= 2.0 * eps;
+                    kp.set_params(&p);
+                    let dn = kp.eval(a, b);
+                    let fd = (up - dn) / (2.0 * eps);
+                    testing::close(grad[i], fd, 1e-4)
+                        .map_err(|e| format!("param {i}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

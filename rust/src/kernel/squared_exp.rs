@@ -1,0 +1,220 @@
+//! Squared-exponential (RBF/Gaussian) kernels, isotropic and ARD.
+
+use super::{ard_r2, Kernel};
+
+/// ARD squared exponential:
+/// `k(a,b) = sigma_f^2 * exp(-0.5 * sum_d (a_d-b_d)^2 / l_d^2)`.
+#[derive(Clone, Debug)]
+pub struct SquaredExpArd {
+    log_ls: Vec<f64>,
+    log_sf: f64,
+    // hot-loop caches, refreshed by `set_params`
+    inv_ls: Vec<f64>,
+    sf2: f64,
+}
+
+impl SquaredExpArd {
+    /// Unit lengthscales and unit signal variance.
+    pub fn new(dim: usize) -> Self {
+        Self::with_params(vec![0.0; dim], 0.0)
+    }
+
+    /// From log lengthscales and log signal std.
+    pub fn with_params(log_ls: Vec<f64>, log_sf: f64) -> Self {
+        let inv_ls = log_ls.iter().map(|l| (-l).exp()).collect();
+        let sf2 = (2.0 * log_sf).exp();
+        Self { log_ls, log_sf, inv_ls, sf2 }
+    }
+
+    /// Set lengthscales (linear scale).
+    pub fn set_lengthscales(&mut self, ls: &[f64]) {
+        assert_eq!(ls.len(), self.log_ls.len());
+        self.log_ls = ls.iter().map(|l| l.ln()).collect();
+        self.inv_ls = ls.iter().map(|l| 1.0 / l).collect();
+    }
+}
+
+impl Kernel for SquaredExpArd {
+    fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    fn n_params(&self) -> usize {
+        self.log_ls.len() + 1
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.log_ls.clone();
+        p.push(self.log_sf);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        let d = self.log_ls.len();
+        self.log_ls.copy_from_slice(&p[..d]);
+        self.log_sf = p[d];
+        for (inv, l) in self.inv_ls.iter_mut().zip(&self.log_ls) {
+            *inv = (-l).exp();
+        }
+        self.sf2 = (2.0 * self.log_sf).exp();
+    }
+
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let r2 = ard_r2(a, b, &self.inv_ls);
+        self.sf2 * (-0.5 * r2).exp()
+    }
+
+    fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let d = self.log_ls.len();
+        let k = self.eval(a, b);
+        for i in 0..d {
+            let t = (a[i] - b[i]) * self.inv_ls[i];
+            // dk/dlog l_i = k * (a_i-b_i)^2 / l_i^2
+            out[i] = k * t * t;
+        }
+        out[d] = 2.0 * k; // dk/dlog sigma_f
+    }
+
+    fn variance(&self) -> f64 {
+        self.sf2
+    }
+
+    fn kind(&self) -> &'static str {
+        "se_ard"
+    }
+
+    fn xla_loghp(&self) -> Vec<f64> {
+        let mut hp = self.log_ls.clone();
+        hp.push(self.log_sf);
+        hp
+    }
+}
+
+/// Isotropic squared exponential: one shared lengthscale.
+#[derive(Clone, Debug)]
+pub struct SquaredExpIso {
+    dim: usize,
+    log_l: f64,
+    log_sf: f64,
+}
+
+impl SquaredExpIso {
+    /// Unit lengthscale, unit signal variance.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, log_l: 0.0, log_sf: 0.0 }
+    }
+}
+
+impl Kernel for SquaredExpIso {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_params(&self) -> usize {
+        2
+    }
+
+    fn params(&self) -> Vec<f64> {
+        vec![self.log_l, self.log_sf]
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), 2);
+        self.log_l = p[0];
+        self.log_sf = p[1];
+    }
+
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let inv_l = (-self.log_l).exp();
+        let r2: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let t = (x - y) * inv_l;
+                t * t
+            })
+            .sum();
+        self.variance() * (-0.5 * r2).exp()
+    }
+
+    fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let inv_l = (-self.log_l).exp();
+        let r2: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let t = (x - y) * inv_l;
+                t * t
+            })
+            .sum();
+        let k = self.variance() * (-0.5 * r2).exp();
+        out[0] = k * r2; // dk/dlog l
+        out[1] = 2.0 * k; // dk/dlog sigma_f
+    }
+
+    fn variance(&self) -> f64 {
+        (2.0 * self.log_sf).exp()
+    }
+
+    fn kind(&self) -> &'static str {
+        "se_ard" // iso is the ARD artifact with tied lengthscales
+    }
+
+    fn xla_loghp(&self) -> Vec<f64> {
+        let mut hp = vec![self.log_l; self.dim];
+        hp.push(self.log_sf);
+        hp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::grad_check;
+
+    #[test]
+    fn se_ard_basics() {
+        let k = SquaredExpArd::new(2);
+        assert_eq!(k.eval(&[0.3, 0.4], &[0.3, 0.4]), 1.0);
+        assert!(k.eval(&[0.0, 0.0], &[1.0, 1.0]) < 1.0);
+        // symmetric
+        let a = [0.1, 0.9];
+        let b = [0.7, 0.2];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn se_ard_lengthscale_effect() {
+        let mut k = SquaredExpArd::new(1);
+        let near = k.eval(&[0.0], &[0.5]);
+        k.set_lengthscales(&[10.0]);
+        let far = k.eval(&[0.0], &[0.5]);
+        assert!(far > near, "longer lengthscale -> higher correlation");
+    }
+
+    #[test]
+    fn se_grad_matches_fd() {
+        grad_check::run(SquaredExpArd::new, "se_ard-grad");
+        grad_check::run(|d| SquaredExpIso::new(d), "se_iso-grad");
+    }
+
+    #[test]
+    fn iso_equals_ard_with_tied_scales() {
+        let mut iso = SquaredExpIso::new(3);
+        iso.set_params(&[0.3, 0.1]);
+        let mut ard = SquaredExpArd::new(3);
+        ard.set_params(&[0.3, 0.3, 0.3, 0.1]);
+        let a = [0.2, 0.5, 0.8];
+        let b = [0.9, 0.1, 0.4];
+        assert!((iso.eval(&a, &b) - ard.eval(&a, &b)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut k = SquaredExpArd::new(2);
+        k.set_params(&[0.5, -0.5, 0.2]);
+        assert_eq!(k.params(), vec![0.5, -0.5, 0.2]);
+        assert_eq!(k.xla_loghp(), vec![0.5, -0.5, 0.2]);
+    }
+}

@@ -1,0 +1,263 @@
+//! Cholesky factorization with incremental rank extension.
+//!
+//! A BO run adds one sample per iteration; refactoring the full `n x n`
+//! Gram matrix each time costs O(n^3). [`CholeskyFactor::extend`] appends
+//! one (or more) rows/columns to an existing factor in O(n^2) — the trick
+//! Limbo's GP uses to stay fast on embedded hardware, and the main L3
+//! hot-path optimization of the native GP here.
+
+use crate::la::{dot, Matrix};
+
+/// Lower-triangular Cholesky factor `L` of an SPD matrix `A = L L^T`.
+#[derive(Clone, Debug)]
+pub struct CholeskyFactor {
+    l: Matrix,
+}
+
+/// Error returned when a matrix is not (numerically) positive definite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    /// Index of the failing pivot.
+    pub pivot: usize,
+    /// Value of the failing pivot (<= 0).
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {} (value {:.3e})", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl CholeskyFactor {
+    /// Factor a full SPD matrix (standard left-looking algorithm, O(n^3)).
+    pub fn factor(a: &Matrix) -> Result<Self, NotPositiveDefinite> {
+        assert_eq!(a.rows(), a.cols(), "cholesky: matrix must be square");
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = A[i,j] - sum_{k<j} L[i,k] L[j,k]
+                let s = a[(i, j)] - dot(&l.row(i)[..j], &l.row(j)[..j]);
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(NotPositiveDefinite { pivot: i, value: s });
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Empty factor (0 x 0), ready for incremental [`extend`](Self::extend).
+    pub fn empty() -> Self {
+        Self { l: Matrix::zeros(0, 0) }
+    }
+
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// The factor `L` (lower triangular).
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Extend the factor of `A` to the factor of `[[A, b], [b^T, c]]`,
+    /// where `b` is the cross-covariance column (`len == dim()`) and `c`
+    /// the new diagonal entry. O(n^2).
+    ///
+    /// Solves `L w = b` (forward substitution), then the new diagonal is
+    /// `sqrt(c - |w|^2)`.
+    pub fn extend(&mut self, b: &[f64], c: f64) -> Result<(), NotPositiveDefinite> {
+        let n = self.dim();
+        assert_eq!(b.len(), n, "extend: column length mismatch");
+        let w = self.solve_lower(b);
+        let d = c - dot(&w, &w);
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotPositiveDefinite { pivot: n, value: d });
+        }
+        // grow the matrix by one row/col
+        let mut l = Matrix::zeros(n + 1, n + 1);
+        for i in 0..n {
+            l.row_mut(i)[..=i].copy_from_slice(&self.l.row(i)[..=i]);
+        }
+        l.row_mut(n)[..n].copy_from_slice(&w);
+        l[(n, n)] = d.sqrt();
+        self.l = l;
+        Ok(())
+    }
+
+    /// Solve `L x = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.dim()];
+        self.solve_lower_into(b, &mut x);
+        x
+    }
+
+    /// Solve `L x = b` into a caller-provided buffer (hot-path variant:
+    /// the GP's predict loop reuses scratch instead of allocating).
+    pub fn solve_lower_into(&self, b: &[f64], x: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(b.len(), n);
+        assert_eq!(x.len(), n);
+        for i in 0..n {
+            let s = b[i] - dot(&self.l.row(i)[..i], &x[..i]);
+            x[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Solve `L^T x = b` (backward substitution).
+    pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        assert_eq!(b.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            // column access: L^T[i, j] = L[j, i] for j > i
+            for j in (i + 1)..n {
+                s -= self.l[(j, i)] * x[j];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A x = b` via the two substitutions.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_lower_t(&self.solve_lower(b))
+    }
+
+    /// `log det A = 2 * sum_i log L[i,i]`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Full inverse `A^{-1} = L^{-T} L^{-1}`.
+    ///
+    /// Triangular inversion (O(n^3)/6 madds) followed by the symmetric
+    /// product (upper triangle computed once, mirrored) — ~3x fewer flops
+    /// than solving against `n` unit vectors. Used by the GP's LML
+    /// gradient (`tr((alpha alpha^T - K^{-1}) dK/dtheta)`).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.dim();
+        // Linv: forward substitution per column j; rows < j are zero.
+        let mut linv = Matrix::zeros(n, n);
+        for j in 0..n {
+            linv[(j, j)] = 1.0 / self.l[(j, j)];
+            for i in (j + 1)..n {
+                // x_i = -(sum_{k=j..i-1} L[i,k] x_k) / L[i,i]
+                let mut s = 0.0;
+                let lrow = self.l.row(i);
+                for k in j..i {
+                    s += lrow[k] * linv[(k, j)];
+                }
+                linv[(i, j)] = -s / self.l[(i, i)];
+            }
+        }
+        // A^{-1}[i][j] = sum_{k >= max(i,j)} Linv[k,i] * Linv[k,j]
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let mut s = 0.0;
+                for k in j..n {
+                    s += linv[(k, i)] * linv[(k, j)];
+                }
+                out[(i, j)] = s;
+                out[(j, i)] = s;
+            }
+        }
+        out
+    }
+
+    /// Reconstruct `A = L L^T` (tests / diagnostics).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.dim();
+        Matrix::from_fn(n, n, |i, j| {
+            let k = i.min(j) + 1;
+            dot(&self.l.row(i)[..k], &self.l.row(j)[..k])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Random SPD matrix A = B B^T + n*I.
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.next_f64() * 2.0 - 1.0);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::seed(7);
+        for n in [1, 2, 3, 8, 17, 33] {
+            let a = random_spd(n, &mut rng);
+            let ch = CholeskyFactor::factor(&a).unwrap();
+            assert!(ch.reconstruct().max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Pcg64::seed(11);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b = a.matvec(&x_true);
+        let ch = CholeskyFactor::factor(&a).unwrap();
+        let x = ch.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn incremental_extend_matches_full_factor() {
+        let mut rng = Pcg64::seed(13);
+        let n = 20;
+        let a = random_spd(n, &mut rng);
+        let mut inc = CholeskyFactor::empty();
+        for k in 0..n {
+            let b: Vec<f64> = (0..k).map(|j| a[(k, j)]).collect();
+            inc.extend(&b, a[(k, k)]).unwrap();
+        }
+        let full = CholeskyFactor::factor(&a).unwrap();
+        assert!(inc.l().max_abs_diff(full.l()) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(CholeskyFactor::factor(&a).is_err());
+    }
+
+    #[test]
+    fn extend_rejects_dependent_column() {
+        let mut ch = CholeskyFactor::factor(&Matrix::eye(2)).unwrap();
+        // b makes the Schur complement zero: c - |w|^2 = 2 - 2 = 0
+        let err = ch.extend(&[1.0, 1.0], 2.0).unwrap_err();
+        assert_eq!(err.pivot, 2);
+    }
+
+    #[test]
+    fn log_det_matches_known() {
+        // diag(4, 9): det = 36, log det = ln 36
+        let a = Matrix::from_rows(2, 2, &[4.0, 0.0, 0.0, 9.0]);
+        let ch = CholeskyFactor::factor(&a).unwrap();
+        assert!((ch.log_det() - 36.0f64.ln()).abs() < 1e-12);
+    }
+}

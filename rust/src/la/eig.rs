@@ -1,0 +1,122 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Only small matrices pass through here (CMA-ES covariance, dim <= ~10),
+//! where Jacobi is simple, robust, and accurate.
+
+use crate::la::Matrix;
+
+/// Eigen-decomposition `A = V diag(w) V^T` of a symmetric matrix.
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns of `V`.
+    pub vectors: Matrix,
+}
+
+/// Jacobi eigenvalue iteration for a symmetric matrix.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert_eq!(a.rows(), a.cols(), "sym_eig: square matrix required");
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+
+    for _sweep in 0..100 {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort ascending by eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let vectors = Matrix::from_fn(n, n, |r, c| v[(r, order[c])]);
+    SymEig { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(3, 3, &[3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3
+        let a = Matrix::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_spd() {
+        let mut rng = Pcg64::seed(55);
+        for n in [2, 4, 7] {
+            let b = Matrix::from_fn(n, n, |_, _| rng.next_f64() * 2.0 - 1.0);
+            let mut a = b.matmul(&b.transpose());
+            for i in 0..n {
+                a[(i, i)] += 0.5;
+            }
+            let e = sym_eig(&a);
+            // A = V diag(w) V^T
+            let vd = Matrix::from_fn(n, n, |i, j| e.vectors[(i, j)] * e.values[j]);
+            let rec = vd.matmul(&e.vectors.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-9, "n={n}");
+            // eigenvalues positive for SPD
+            assert!(e.values.iter().all(|&w| w > 0.0));
+            // V orthogonal
+            let vtv = e.vectors.transpose().matmul(&e.vectors);
+            assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate (the Eigen3 replacement).
+//!
+//! Everything the GP needs, hand-written and unit/property tested:
+//! a row-major [`Matrix`], Cholesky factorization with **incremental
+//! rank-extension** (`CholeskyFactor::extend` — the O(n^2) per-iteration
+//! trick the native GP relies on), forward/backward substitution, SPD
+//! solves, and small vector helpers.
+//!
+//! f64 throughout: the native GP path is the reference for the f32 XLA
+//! artifacts.
+
+pub mod cholesky;
+pub mod eig;
+pub mod matrix;
+pub mod vecops;
+
+pub use cholesky::CholeskyFactor;
+pub use eig::{sym_eig, SymEig};
+pub use matrix::Matrix;
+pub use vecops::{axpy, dot, norm2, scale, sub};

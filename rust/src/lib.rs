@@ -1,0 +1,54 @@
+//! # limbo-rs — fast & flexible Bayesian optimization
+//!
+//! A Rust + JAX + Pallas reproduction of *“Limbo: A Fast and Flexible
+//! Library for Bayesian Optimization”* (Cully, Chatzilygeroudis, Allocati,
+//! Mouret, 2016). See DESIGN.md for the system inventory and the
+//! experiment index, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The paper's point is architectural: every component of a Bayesian
+//! optimizer — initializer, model (kernel + mean), acquisition function,
+//! inner optimizer, hyper-parameter optimizer, stopping criterion, stats —
+//! is a swappable *policy*, composed statically so that flexibility costs
+//! nothing at runtime (no virtual dispatch). The C++ template design maps
+//! onto Rust generics: [`bayes_opt::BOptimizer`] is monomorphized over its
+//! component types, while [`baseline::BayesOptLike`] is the same algorithm
+//! built the classic OO way (trait objects) to reproduce the paper's
+//! Figure-1 comparison against BayesOpt.
+//!
+//! The GP compute hot path additionally has an AOT-compiled XLA backend
+//! ([`runtime::XlaGp`]): JAX/Pallas graphs are lowered to HLO at build
+//! time (`make artifacts`) and executed from Rust via PJRT — Python is
+//! never on the optimization path.
+
+pub mod acqui;
+pub mod baseline;
+pub mod bayes_opt;
+pub mod benchfns;
+pub mod benchlib;
+pub mod coordinator;
+pub mod init;
+pub mod kernel;
+pub mod la;
+pub mod mean;
+pub mod model;
+pub mod opt;
+pub mod pool;
+pub mod rng;
+pub mod runtime;
+pub mod stat;
+pub mod stop;
+pub mod testing;
+
+/// Convenient re-exports for typical use.
+pub mod prelude {
+    pub use crate::acqui::{AcquiContext, AcquiFn, Ei, GpUcb, Pi, Ucb};
+    pub use crate::bayes_opt::{BOptimizer, Best, Evaluator, FnEval};
+    pub use crate::benchfns::TestFunction;
+    pub use crate::init::{Initializer, Lhs, RandomSampling};
+    pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
+    pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
+    pub use crate::model::{gp::Gp, GpState, Model};
+    pub use crate::opt::{Cmaes, Direct, NelderMead, Optimizer, OptimizerExt, RandomPoint};
+    pub use crate::rng::Pcg64;
+    pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
+}

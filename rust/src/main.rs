@@ -1,0 +1,232 @@
+//! `limbo` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `run`    — one BO run on a named test function (`function=branin`,
+//!              `iterations=40`, `hpo=true`, `backend=native|xla`,
+//!              `seed=1`, `out=<dir>` for stat traces);
+//! * `fig1`   — the Figure-1 experiment grid (see `examples/fig1_repro.rs`
+//!              for the full driver; this is the quick CLI front-end);
+//! * `serve`  — interactive ask/tell loop on stdin/stdout
+//!              (`ask` -> point, `tell <y>` -> record, `best`, `quit`);
+//! * `info`   — print artifact registry and build info.
+
+use std::sync::Arc;
+
+use limbo::acqui::Ei;
+use limbo::bayes_opt::{BOptimizer, FnEval, HpSchedule};
+use limbo::benchfns;
+use limbo::coordinator::config::Config;
+use limbo::coordinator::experiment::{print_table, speedups, ExperimentRunner};
+use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
+use limbo::coordinator::xla_model::XlaGpModel;
+use limbo::coordinator::AskTellServer;
+use limbo::init::Lhs;
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::gp::Gp;
+use limbo::opt::{Direct, NelderMead, OptimizerExt, RandomPoint};
+use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
+use limbo::stat::RunLogger;
+use limbo::stop::MaxIterations;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(String::as_str) else {
+        usage();
+        return;
+    };
+    let cfg = Config::from_args(&args[1..]).unwrap_or_else(|e| {
+        eprintln!("bad arguments: {e}");
+        std::process::exit(2);
+    });
+    match cmd {
+        "run" => cmd_run(&cfg),
+        "fig1" => cmd_fig1(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: limbo <run|fig1|serve|info> [key=value ...]\n\
+         \n\
+         run    function=branin dim=2 iterations=40 init=10 hpo=false \\\n\
+         \x20      backend=native|xla seed=1 out=/tmp/run\n\
+         fig1   replicates=30 iterations=40 functions=branin,sphere hpo=both\n\
+         serve  dim=2 seed=1    (stdin protocol: ask / tell <y> / best / quit)\n\
+         info"
+    );
+}
+
+fn cmd_run(cfg: &Config) {
+    let name = cfg.get_str("function", "branin");
+    let dim = cfg.get_usize("dim", 2);
+    let Some(f) = benchfns::by_name(name, dim) else {
+        eprintln!("unknown function {name:?}");
+        std::process::exit(2);
+    };
+    let dim = f.dim();
+    let iterations = cfg.get_usize("iterations", 40);
+    let n_init = cfg.get_usize("init", 10);
+    let seed = cfg.get_usize("seed", 1) as u64;
+    let hpo = cfg.get_bool("hpo", false);
+    let backend = cfg.get_str("backend", "native");
+
+    let eval = FnEval::new(dim, |x: &[f64]| f.eval(x));
+    let best = match backend {
+        "xla" => {
+            let dir = find_artifact_dir().expect("artifacts/ not found; run `make artifacts`");
+            let client = Arc::new(RtClient::cpu().expect("PJRT client"));
+            let gp = Arc::new(XlaGp::new(client, &dir, "matern52").expect("XlaGp"));
+            let model = XlaGpModel::new(gp, dim);
+            let mut opt = BOptimizer::new(
+                model,
+                Ei::default(),
+                Lhs { n: n_init },
+                Direct::new(500),
+                MaxIterations(iterations),
+                seed,
+            );
+            if hpo {
+                opt = opt.with_hp_schedule(HpSchedule::Every(5));
+            }
+            if let Some(dir) = cfg.get("out") {
+                opt = opt.with_stats(RunLogger::create(std::path::Path::new(dir)).unwrap());
+            }
+            opt.optimize(&eval)
+        }
+        _ => {
+            let gp = Gp::new(Matern52::new(dim), DataMean::default(), 1e-2);
+            let mut opt = BOptimizer::new(
+                gp,
+                Ei::default(),
+                Lhs { n: n_init },
+                Direct::new(500),
+                MaxIterations(iterations),
+                seed,
+            );
+            if hpo {
+                opt = opt.with_hp_schedule(HpSchedule::Every(5));
+            }
+            if let Some(dir) = cfg.get("out") {
+                opt = opt.with_stats(RunLogger::create(std::path::Path::new(dir)).unwrap());
+            }
+            opt.optimize(&eval)
+        }
+    };
+    println!(
+        "{name} ({dim}-D, backend={backend}, hpo={hpo}): best={:.6} accuracy={:.3e} evals={} x={:?}",
+        best.value,
+        f.accuracy(best.value),
+        best.evaluations,
+        best.x
+    );
+}
+
+fn cmd_fig1(cfg: &Config) {
+    let replicates = cfg.get_usize("replicates", 30);
+    let iterations = cfg.get_usize("iterations", 40);
+    let hpo_mode = cfg.get_str("hpo", "both");
+    let runner = ExperimentRunner {
+        replicates,
+        threads: cfg.get_usize(
+            "threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        ),
+        base_seed: cfg.get_usize("seed", 1000) as u64,
+    };
+    let functions: Vec<Box<dyn benchfns::TestFunction>> = match cfg.get("functions") {
+        Some(names) => names
+            .split(',')
+            .map(|n| benchfns::by_name(n.trim(), 2).unwrap_or_else(|| panic!("unknown fn {n}")))
+            .collect(),
+        None => benchfns::figure1_suite(),
+    };
+    let base = Fig1Settings { iterations, ..Default::default() };
+    let mut rows = Vec::new();
+    if hpo_mode == "both" || hpo_mode == "false" {
+        let limbo = LimboConfig::new(base);
+        let bayesopt = BaselineConfig::new(base);
+        rows.extend(runner.run_grid(&functions, &[&limbo, &bayesopt]));
+    }
+    if hpo_mode == "both" || hpo_mode == "true" {
+        let limbo = LimboConfig::new(base.with_hpo());
+        let bayesopt = BaselineConfig::new(base.with_hpo());
+        rows.extend(runner.run_grid(&functions, &[&limbo, &bayesopt]));
+    }
+    print_table(&rows);
+    println!("\nspeed-ups (median wall-clock, baseline / limbo):");
+    for (f, ratio, dacc) in speedups(&rows, "limbo", "bayesopt")
+        .into_iter()
+        .chain(speedups(&rows, "limbo+hpo", "bayesopt+hpo"))
+    {
+        println!("  {f:<18} {ratio:>6.2}x   |Δ accuracy median| = {dacc:.2e}");
+    }
+}
+
+fn cmd_serve(cfg: &Config) {
+    let dim = cfg.get_usize("dim", 2);
+    let seed = cfg.get_usize("seed", 1) as u64;
+    let server = AskTellServer::new(
+        Gp::new(Matern52::new(dim), DataMean::default(), 1e-3),
+        limbo::acqui::Ucb::default(),
+        RandomPoint::new(256).then(NelderMead::default()).restarts(4, 2),
+        dim,
+        seed,
+    );
+    let handle = server.spawn();
+    eprintln!("ask/tell server on stdin (dim={dim}): ask | tell <y> | best | quit");
+    let stdin = std::io::stdin();
+    let mut last_x: Option<Vec<f64>> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if stdin.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            ["ask"] => {
+                let x = handle.ask();
+                println!("{}", x.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(" "));
+                last_x = Some(x);
+            }
+            ["tell", y] => match (last_x.take(), y.parse::<f64>()) {
+                (Some(x), Ok(y)) => handle.tell(x, y),
+                _ => eprintln!("tell requires a prior ask and a numeric value"),
+            },
+            ["best"] => match handle.best() {
+                Some((x, v)) => println!("{v:.6} @ {x:?}"),
+                None => println!("no data"),
+            },
+            ["quit"] | ["exit"] => break,
+            _ => eprintln!("unknown command"),
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("limbo-rs {} — Limbo (Cully et al. 2016) reproduction", env!("CARGO_PKG_VERSION"));
+    match find_artifact_dir() {
+        Some(dir) => {
+            let reg = limbo::runtime::Registry::load(&dir).expect("manifest");
+            println!("artifacts: {} ({} entries)", dir.display(), reg.len());
+            for (program, kind) in [
+                ("predict", "se_ard"),
+                ("predict", "matern52"),
+                ("ucb", "matern52"),
+                ("lml", "matern52"),
+            ] {
+                let tiers: Vec<usize> = reg.tiers(program, kind).iter().map(|m| m.n_max).collect();
+                println!("  {program}/{kind}: tiers {tiers:?}");
+            }
+            match RtClient::cpu() {
+                Ok(c) => println!("PJRT: platform={} ok", c.platform_name()),
+                Err(e) => println!("PJRT: unavailable ({e})"),
+            }
+        }
+        None => println!("artifacts: not built (run `make artifacts`)"),
+    }
+}

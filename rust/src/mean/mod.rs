@@ -1,0 +1,88 @@
+//! Prior-mean functions — the `limbo::mean::*` policy family.
+//!
+//! [`DataMean`] (the running mean of the observations, Limbo's
+//! `mean::Data`) is the default; [`MeanFn::update`] is called by the GP on
+//! every refit so data-dependent means stay current.
+
+/// A prior mean function `m(x)` for the GP.
+pub trait MeanFn: Clone + Send + Sync + 'static {
+    /// Evaluate the prior mean at `x`.
+    fn eval(&self, x: &[f64]) -> f64;
+
+    /// Refresh any data-dependent state from the current observations.
+    fn update(&mut self, _ys: &[f64]) {}
+}
+
+/// Zero prior mean.
+#[derive(Clone, Debug, Default)]
+pub struct ZeroMean;
+
+impl MeanFn for ZeroMean {
+    fn eval(&self, _x: &[f64]) -> f64 {
+        0.0
+    }
+}
+
+/// Constant prior mean.
+#[derive(Clone, Debug)]
+pub struct ConstantMean(pub f64);
+
+impl MeanFn for ConstantMean {
+    fn eval(&self, _x: &[f64]) -> f64 {
+        self.0
+    }
+}
+
+/// Mean of the observations (Limbo's `mean::Data`, recomputed on update).
+#[derive(Clone, Debug, Default)]
+pub struct DataMean {
+    value: f64,
+}
+
+impl MeanFn for DataMean {
+    fn eval(&self, _x: &[f64]) -> f64 {
+        self.value
+    }
+
+    fn update(&mut self, ys: &[f64]) {
+        self.value = if ys.is_empty() { 0.0 } else { ys.iter().sum::<f64>() / ys.len() as f64 };
+    }
+}
+
+/// A user-supplied mean function (Limbo's `mean::FunctionARD` analogue,
+/// without the tunable transform).
+#[derive(Clone)]
+pub struct FunctionMean<F: Fn(&[f64]) -> f64 + Clone + Send + Sync + 'static>(pub F);
+
+impl<F: Fn(&[f64]) -> f64 + Clone + Send + Sync + 'static> MeanFn for FunctionMean<F> {
+    fn eval(&self, x: &[f64]) -> f64 {
+        (self.0)(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_constant() {
+        assert_eq!(ZeroMean.eval(&[1.0]), 0.0);
+        assert_eq!(ConstantMean(3.5).eval(&[1.0]), 3.5);
+    }
+
+    #[test]
+    fn data_mean_tracks_observations() {
+        let mut m = DataMean::default();
+        assert_eq!(m.eval(&[0.0]), 0.0);
+        m.update(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.eval(&[0.0]), 2.0);
+        m.update(&[]);
+        assert_eq!(m.eval(&[0.0]), 0.0);
+    }
+
+    #[test]
+    fn function_mean_evaluates() {
+        let m = FunctionMean(|x: &[f64]| x[0] * 2.0);
+        assert_eq!(m.eval(&[1.5]), 3.0);
+    }
+}

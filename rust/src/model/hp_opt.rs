@@ -1,0 +1,137 @@
+//! ML-II hyper-parameter optimization (Limbo's `model::gp::KernelLFOpt`):
+//! maximize the log marginal likelihood over the kernel's log-hyper-params
+//! (+ optionally log-noise) with iRprop⁻ restarts.
+//!
+//! Rprop is what Limbo itself uses: it only needs gradient *signs*, is
+//! robust to the wildly different curvature of lengthscale vs variance
+//! axes, and needs no line search.
+
+use crate::kernel::Kernel;
+use crate::mean::MeanFn;
+use crate::model::gp::Gp;
+use crate::model::Model;
+use crate::opt::rprop::{rprop_maximize, RpropParams};
+use crate::rng::Pcg64;
+
+/// Settings for the likelihood fit.
+#[derive(Clone, Debug)]
+pub struct HpOptConfig {
+    /// Rprop iterations per restart.
+    pub iterations: usize,
+    /// Number of random restarts (first start = current params).
+    pub restarts: usize,
+    /// Uniform width of restart perturbations in log space.
+    pub perturbation: f64,
+    /// Clamp on |log param| to keep the Gram matrix sane.
+    pub bound: f64,
+    /// RNG seed for restart draws (deterministic fits).
+    pub seed: u64,
+}
+
+impl Default for HpOptConfig {
+    fn default() -> Self {
+        Self { iterations: 50, restarts: 3, perturbation: 2.0, bound: 6.0, seed: 0x4C4D4C }
+    }
+}
+
+/// The likelihood optimizer object stored inside [`Gp`].
+#[derive(Clone, Debug, Default)]
+pub struct KernelLFOpt {
+    /// Tunable settings.
+    pub config: HpOptConfig,
+}
+
+impl KernelLFOpt {
+    /// Maximize the GP's LML in place. Keeps the best of all restarts;
+    /// never leaves the GP worse than it started.
+    pub fn run<K: Kernel, M: MeanFn>(&self, gp: &mut Gp<K, M>) {
+        let cfg = &self.config;
+        let start = gp.hp_vector();
+        let nprm = start.len();
+        let mut rng = Pcg64::seed(cfg.seed ^ gp.n_samples() as u64);
+
+        let mut best_p = start.clone();
+        let mut best_lml = gp.log_marginal_likelihood();
+
+        for restart in 0..cfg.restarts.max(1) {
+            let x0: Vec<f64> = if restart == 0 {
+                start.clone()
+            } else {
+                start
+                    .iter()
+                    .map(|&v| {
+                        (v + rng.uniform(-cfg.perturbation, cfg.perturbation))
+                            .clamp(-cfg.bound, cfg.bound)
+                    })
+                    .collect()
+            };
+            let params = RpropParams { iterations: cfg.iterations, ..RpropParams::default() };
+            let bound = cfg.bound;
+            let p = rprop_maximize(
+                |p| {
+                    gp.set_hp_vector(p);
+                    (gp.log_marginal_likelihood(), gp.lml_grad())
+                },
+                &x0,
+                &params,
+                Some((-bound, bound)),
+            );
+            gp.set_hp_vector(&p);
+            let lml = gp.log_marginal_likelihood();
+            if lml > best_lml && lml.is_finite() {
+                best_lml = lml;
+                best_p = p;
+            }
+            let _ = nprm;
+        }
+        gp.set_hp_vector(&best_p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, SquaredExpArd};
+    use crate::mean::ZeroMean;
+    use crate::model::Model;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn hp_opt_improves_lml() {
+        let mut rng = Pcg64::seed(2024);
+        // data drawn from a short-lengthscale function; start the GP with
+        // a badly mis-specified lengthscale
+        let xs: Vec<Vec<f64>> = (0..25).map(|_| rng.unit_point(1)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (12.0 * x[0]).sin()).collect();
+        let mut gp = Gp::new(SquaredExpArd::with_params(vec![2.0], 0.0), ZeroMean, 0.05);
+        gp.fit(&xs, &ys);
+        let before = gp.log_marginal_likelihood();
+        gp.optimize_hyperparams();
+        let after = gp.log_marginal_likelihood();
+        assert!(after > before + 1.0, "LML should improve: {before} -> {after}");
+        // the fitted lengthscale should have shrunk towards the true scale
+        let fitted_l = gp.kernel().params()[0].exp();
+        assert!(fitted_l < 1.0, "fitted lengthscale {fitted_l} should be < start 7.4");
+    }
+
+    #[test]
+    fn hp_opt_never_degrades() {
+        let mut rng = Pcg64::seed(77);
+        let xs: Vec<Vec<f64>> = (0..8).map(|_| rng.unit_point(2)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] + x[1]).collect();
+        let mut gp = Gp::new(SquaredExpArd::new(2), ZeroMean, 0.1);
+        gp.fit(&xs, &ys);
+        let before = gp.log_marginal_likelihood();
+        gp.optimize_hyperparams();
+        assert!(gp.log_marginal_likelihood() >= before - 1e-9);
+    }
+
+    #[test]
+    fn noop_on_tiny_datasets() {
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.1);
+        gp.add_sample(&[0.5], 1.0);
+        let p = gp.hp_vector();
+        gp.optimize_hyperparams();
+        assert_eq!(gp.hp_vector(), p);
+    }
+}

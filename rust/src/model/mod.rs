@@ -1,0 +1,45 @@
+//! Surrogate models — the `limbo::model::*` policy family.
+//!
+//! [`Model`] is the interface the acquisition functions and the
+//! [`crate::bayes_opt::BOptimizer`] loop see; [`gp::Gp`] is the native
+//! (pure-Rust, incremental-Cholesky) implementation and
+//! [`crate::runtime::XlaGp`] backs the same interface with AOT-compiled
+//! XLA artifacts (adapter in [`crate::coordinator`]).
+
+pub mod gp;
+pub mod hp_opt;
+pub mod serde;
+
+pub use gp::Gp;
+pub use serde::GpState;
+pub use hp_opt::{HpOptConfig, KernelLFOpt};
+
+/// A probabilistic surrogate: fit observations, predict mean + variance.
+pub trait Model: Send + Sync {
+    /// Full refit from scratch.
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]);
+
+    /// Add one observation (implementations may do an incremental update).
+    fn add_sample(&mut self, x: &[f64], y: f64);
+
+    /// Posterior `(mean, variance)` of the latent function at `x`.
+    fn predict(&self, x: &[f64]) -> (f64, f64);
+
+    /// Batched prediction (backends may vectorize; default loops).
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Number of fitted observations.
+    fn n_samples(&self) -> usize;
+
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Best (max) observed value so far, if any.
+    fn best_observation(&self) -> Option<f64>;
+
+    /// Re-optimize hyper-parameters from the current data (ML-II).
+    /// Default: no-op (not every model has hyper-parameters).
+    fn optimize_hyperparams(&mut self) {}
+}

@@ -1,0 +1,214 @@
+//! GP state serialization (Limbo's `gp.save<>()` / `gp.load<>()`):
+//! a plain-text format so runs can be checkpointed, resumed, and shipped
+//! between the native and XLA backends (both consume the same fields).
+//!
+//! Format (line-oriented, `#`-comments allowed):
+//! ```text
+//! limbo-gp v1
+//! dim <d>
+//! hp <log-hyper-params ... incl. log-noise>
+//! n <num samples>
+//! x <d floats>      (n lines)
+//! y <float>         (n lines)
+//! ```
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::kernel::Kernel;
+use crate::mean::MeanFn;
+use crate::model::gp::Gp;
+use crate::model::Model;
+
+/// Serializable snapshot of a GP's state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpState {
+    /// Input dimension.
+    pub dim: usize,
+    /// `[kernel log-params..., log sigma_n]`.
+    pub hp: Vec<f64>,
+    /// Training inputs.
+    pub xs: Vec<Vec<f64>>,
+    /// Training observations.
+    pub ys: Vec<f64>,
+}
+
+impl GpState {
+    /// Capture a GP's state.
+    pub fn capture<K: Kernel, M: MeanFn>(gp: &Gp<K, M>) -> Self {
+        Self {
+            dim: gp.dim(),
+            hp: gp.hp_vector(),
+            xs: gp.samples().to_vec(),
+            ys: gp.observations().to_vec(),
+        }
+    }
+
+    /// Apply this state onto a compatible GP (same dim / param count) and
+    /// refit.
+    pub fn restore<K: Kernel, M: MeanFn>(&self, gp: &mut Gp<K, M>) -> Result<(), String> {
+        if gp.dim() != self.dim {
+            return Err(format!("dim mismatch: gp {} vs state {}", gp.dim(), self.dim));
+        }
+        if gp.hp_vector().len() != self.hp.len() {
+            return Err(format!(
+                "hyper-param count mismatch: gp {} vs state {}",
+                gp.hp_vector().len(),
+                self.hp.len()
+            ));
+        }
+        let learn_noise = gp.learn_noise;
+        gp.learn_noise = true; // make set_hp_vector apply the stored noise
+        gp.set_hp_vector(&self.hp);
+        gp.learn_noise = learn_noise;
+        gp.fit(&self.xs, &self.ys);
+        Ok(())
+    }
+
+    /// Serialize to the text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("limbo-gp v1\n");
+        out.push_str(&format!("dim {}\n", self.dim));
+        out.push_str("hp");
+        for v in &self.hp {
+            out.push_str(&format!(" {v:.17e}"));
+        }
+        out.push('\n');
+        out.push_str(&format!("n {}\n", self.ys.len()));
+        for x in &self.xs {
+            out.push('x');
+            for v in x {
+                out.push_str(&format!(" {v:.17e}"));
+            }
+            out.push('\n');
+        }
+        for y in &self.ys {
+            out.push_str(&format!("y {y:.17e}\n"));
+        }
+        out
+    }
+
+    /// Parse from the text format.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().ok_or("empty file")?;
+        if header != "limbo-gp v1" {
+            return Err(format!("bad header {header:?}"));
+        }
+        let mut dim = None;
+        let mut hp = Vec::new();
+        let mut n = None;
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Result<Vec<f64>, _> = parts.map(str::parse::<f64>).collect();
+            let rest = rest.map_err(|e| format!("parse error on {line:?}: {e}"))?;
+            match tag {
+                "dim" => dim = Some(rest[0] as usize),
+                "hp" => hp = rest,
+                "n" => n = Some(rest[0] as usize),
+                "x" => xs.push(rest),
+                "y" => ys.push(rest[0]),
+                _ => return Err(format!("unknown tag {tag:?}")),
+            }
+        }
+        let dim = dim.ok_or("missing dim")?;
+        let n = n.ok_or("missing n")?;
+        if xs.len() != n || ys.len() != n {
+            return Err(format!("expected {n} samples, got {}x/{}y", xs.len(), ys.len()));
+        }
+        if xs.iter().any(|x| x.len() != dim) {
+            return Err("sample with wrong dimension".into());
+        }
+        Ok(Self { dim, hp, xs, ys })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_text().as_bytes())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+impl<K: Kernel, M: MeanFn> Gp<K, M> {
+    /// Save the GP (hyper-params + data) to a text file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        GpState::capture(self).save(path)
+    }
+
+    /// Load state from a text file into this GP (must match dim/params).
+    pub fn load(&mut self, path: &Path) -> Result<(), String> {
+        GpState::load(path)?.restore(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Matern52;
+    use crate::mean::DataMean;
+    use crate::rng::Pcg64;
+
+    fn fitted_gp() -> Gp<Matern52, DataMean> {
+        let mut rng = Pcg64::seed(44);
+        let xs: Vec<Vec<f64>> = (0..12).map(|_| rng.unit_point(3)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] - (4.0 * x[1]).cos()).collect();
+        let mut gp = Gp::new(Matern52::with_params(vec![-0.3, 0.2, 0.0], 0.4), DataMean::default(), 0.03);
+        gp.fit(&xs, &ys);
+        gp
+    }
+
+    #[test]
+    fn text_roundtrip_is_exact() {
+        let gp = fitted_gp();
+        let state = GpState::capture(&gp);
+        let parsed = GpState::from_text(&state.to_text()).unwrap();
+        assert_eq!(state, parsed);
+    }
+
+    #[test]
+    fn save_load_preserves_posterior() {
+        let dir = std::env::temp_dir().join("limbo_gp_serde");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("gp.txt");
+        let gp = fitted_gp();
+        gp.save(&path).unwrap();
+
+        let mut fresh = Gp::new(Matern52::new(3), DataMean::default(), 0.5);
+        fresh.load(&path).unwrap();
+        for probe in [[0.2, 0.8, 0.5], [0.9, 0.1, 0.3]] {
+            let (m1, v1) = gp.predict(&probe);
+            let (m2, v2) = fresh.predict(&probe);
+            assert!((m1 - m2).abs() < 1e-12, "{m1} vs {m2}");
+            assert!((v1 - v2).abs() < 1e-12);
+        }
+        assert!((fresh.noise_var() - gp.noise_var()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rejects_mismatched_dim() {
+        let gp = fitted_gp();
+        let state = GpState::capture(&gp);
+        let mut wrong = Gp::new(Matern52::new(2), DataMean::default(), 0.1);
+        assert!(state.restore(&mut wrong).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_text() {
+        assert!(GpState::from_text("").is_err());
+        assert!(GpState::from_text("limbo-gp v2\ndim 1\n").is_err());
+        assert!(GpState::from_text("limbo-gp v1\ndim 1\nhp 0 0 0\nn 2\nx 0.5\ny 1.0\n").is_err());
+        assert!(GpState::from_text("limbo-gp v1\ndim 1\nhp 0 0 0\nn 1\nx zap\ny 1.0\n").is_err());
+    }
+}

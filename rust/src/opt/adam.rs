@@ -1,0 +1,67 @@
+//! Adam gradient ascent — an alternative hyper-parameter optimizer
+//! (ablation partner for [`crate::opt::rprop`]).
+
+/// Maximize `f` (returning `(value, gradient)`) from `x0` with Adam.
+/// Returns the best iterate seen.
+pub fn adam_maximize(
+    mut f: impl FnMut(&[f64]) -> (f64, Vec<f64>),
+    x0: &[f64],
+    iterations: usize,
+    lr: f64,
+    bounds: Option<(f64, f64)>,
+) -> Vec<f64> {
+    const B1: f64 = 0.9;
+    const B2: f64 = 0.999;
+    const EPS: f64 = 1e-8;
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut m = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let (mut best_x, mut best_val) = (x.clone(), f64::NEG_INFINITY);
+
+    for t in 1..=iterations {
+        let (val, grad) = f(&x);
+        if val.is_finite() && val > best_val {
+            best_val = val;
+            best_x = x.clone();
+        }
+        for i in 0..n {
+            let g = if grad[i].is_finite() { grad[i] } else { 0.0 };
+            m[i] = B1 * m[i] + (1.0 - B1) * g;
+            v[i] = B2 * v[i] + (1.0 - B2) * g * g;
+            let mh = m[i] / (1.0 - B1.powi(t as i32));
+            let vh = v[i] / (1.0 - B2.powi(t as i32));
+            x[i] += lr * mh / (vh.sqrt() + EPS); // ascent
+            if let Some((lo, hi)) = bounds {
+                x[i] = x[i].clamp(lo, hi);
+            }
+        }
+    }
+    let (val, _) = f(&x);
+    if val.is_finite() && val > best_val {
+        best_x = x;
+    }
+    best_x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maximizes_quadratic() {
+        let f = |x: &[f64]| {
+            let v = -(x[0] - 0.7).powi(2);
+            (v, vec![-2.0 * (x[0] - 0.7)])
+        };
+        let best = adam_maximize(f, &[0.0], 500, 0.05, None);
+        assert!((best[0] - 0.7).abs() < 1e-2);
+    }
+
+    #[test]
+    fn bounded_stays_inside() {
+        let f = |x: &[f64]| (x[0], vec![1.0]);
+        let best = adam_maximize(f, &[0.5], 200, 0.1, Some((0.0, 1.0)));
+        assert!((best[0] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,212 @@
+//! CMA-ES (Hansen & Ostermeier 2001) — the covariance-matrix-adaptation
+//! evolution strategy, Limbo's recommended global inner optimizer.
+//!
+//! Full (mu/mu_w, lambda) implementation following Hansen's tutorial:
+//! weighted recombination, cumulative step-size adaptation (CSA), rank-1 +
+//! rank-mu covariance updates. Boundary handling: samples outside the unit
+//! cube are clamped for evaluation (standard repair), while adaptation
+//! uses the unrepaired genotypes.
+
+use super::{Candidate, Objective, Optimizer};
+use crate::la::{sym_eig, Matrix};
+use crate::rng::Pcg64;
+
+/// CMA-ES maximizer on the unit hypercube.
+#[derive(Clone, Debug)]
+pub struct Cmaes {
+    /// Evaluation budget (generations = budget / lambda).
+    pub max_evals: usize,
+    /// Initial step size (sigma) in unit-cube coordinates.
+    pub sigma0: f64,
+    /// Population size override (`None` = 4 + 3 ln d).
+    pub lambda: Option<usize>,
+}
+
+impl Default for Cmaes {
+    fn default() -> Self {
+        Self { max_evals: 500, sigma0: 0.3, lambda: None }
+    }
+}
+
+impl Cmaes {
+    /// Budgeted constructor.
+    pub fn new(max_evals: usize) -> Self {
+        Self { max_evals, ..Self::default() }
+    }
+}
+
+impl Optimizer for Cmaes {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let x0 = rng.unit_point(dim);
+        self.optimize_from(f, &x0, rng)
+    }
+
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        let n = x0.len();
+        let nf = n as f64;
+        let lambda = self.lambda.unwrap_or(4 + (3.0 * nf.ln()).floor() as usize).max(4);
+        let mu = lambda / 2;
+        // log-weights
+        let mut weights: Vec<f64> =
+            (0..mu).map(|i| (mu as f64 + 0.5).ln() - ((i + 1) as f64).ln()).collect();
+        let wsum: f64 = weights.iter().sum();
+        for w in weights.iter_mut() {
+            *w /= wsum;
+        }
+        let mu_eff = 1.0 / weights.iter().map(|w| w * w).sum::<f64>();
+
+        // strategy constants (Hansen's defaults)
+        let cc = (4.0 + mu_eff / nf) / (nf + 4.0 + 2.0 * mu_eff / nf);
+        let cs = (mu_eff + 2.0) / (nf + mu_eff + 5.0);
+        let c1 = 2.0 / ((nf + 1.3).powi(2) + mu_eff);
+        let cmu = (1.0 - c1)
+            .min(2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((nf + 2.0).powi(2) + mu_eff));
+        let damps = 1.0 + 2.0_f64.max(((mu_eff - 1.0) / (nf + 1.0)).sqrt() - 1.0) + cs;
+        let chi_n = nf.sqrt() * (1.0 - 1.0 / (4.0 * nf) + 1.0 / (21.0 * nf * nf));
+
+        let mut mean = x0.to_vec();
+        let mut sigma = self.sigma0;
+        let mut cov = Matrix::eye(n);
+        let mut p_sigma = vec![0.0; n];
+        let mut p_c = vec![0.0; n];
+        let mut best = Candidate::eval(f, {
+            let mut x = mean.clone();
+            super::clamp_unit(&mut x);
+            x
+        });
+        let mut evals = 1usize;
+
+        while evals + lambda <= self.max_evals.max(lambda + 1) {
+            // eigendecomposition for sampling: C = B diag(D^2) B^T
+            let eig = sym_eig(&cov);
+            let d_sqrt: Vec<f64> = eig.values.iter().map(|&w| w.max(1e-20).sqrt()).collect();
+
+            // sample lambda offspring: x = mean + sigma * B D z
+            let mut offspring: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            for _ in 0..lambda {
+                let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                // y = B D z
+                let mut y = vec![0.0; n];
+                for i in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += eig.vectors[(i, k)] * d_sqrt[k] * z[k];
+                    }
+                    y[i] = s;
+                }
+                let x: Vec<f64> = mean.iter().zip(&y).map(|(&m, &yi)| m + sigma * yi).collect();
+                let mut x_eval = x.clone();
+                super::clamp_unit(&mut x_eval);
+                let value = f.eval(&x_eval);
+                evals += 1;
+                if value > best.value {
+                    best = Candidate { x: x_eval.clone(), value };
+                }
+                offspring.push((x, y, value));
+            }
+            // rank by fitness (descending: maximization)
+            offspring.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+
+            // recombination
+            let old_mean = mean.clone();
+            for i in 0..n {
+                mean[i] = (0..mu).map(|k| weights[k] * offspring[k].0[i]).sum();
+            }
+            // mean shift in sigma-normalized coordinates
+            let y_w: Vec<f64> =
+                (0..n).map(|i| (mean[i] - old_mean[i]) / sigma).collect();
+
+            // CSA: p_sigma update needs C^(-1/2) y_w = B D^-1 B^T y_w
+            let mut c_inv_sqrt_y = vec![0.0; n];
+            for i in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    // (B D^-1 B^T)_{i,j} applied to y_w
+                    let mut btyw = 0.0;
+                    for j in 0..n {
+                        btyw += eig.vectors[(j, k)] * y_w[j];
+                    }
+                    s += eig.vectors[(i, k)] / d_sqrt[k] * btyw;
+                }
+                c_inv_sqrt_y[i] = s;
+            }
+            let cs_fac = (cs * (2.0 - cs) * mu_eff).sqrt();
+            for i in 0..n {
+                p_sigma[i] = (1.0 - cs) * p_sigma[i] + cs_fac * c_inv_sqrt_y[i];
+            }
+            let ps_norm = p_sigma.iter().map(|v| v * v).sum::<f64>().sqrt();
+            sigma *= ((cs / damps) * (ps_norm / chi_n - 1.0)).exp();
+            sigma = sigma.clamp(1e-12, 1.0);
+
+            // covariance: rank-1 (p_c) + rank-mu
+            let hsig = if ps_norm
+                / (1.0 - (1.0 - cs).powi(2 * (evals / lambda) as i32)).sqrt()
+                < (1.4 + 2.0 / (nf + 1.0)) * chi_n
+            {
+                1.0
+            } else {
+                0.0
+            };
+            let cc_fac = (cc * (2.0 - cc) * mu_eff).sqrt();
+            for i in 0..n {
+                p_c[i] = (1.0 - cc) * p_c[i] + hsig * cc_fac * y_w[i];
+            }
+            let delta_hsig = (1.0 - hsig) * cc * (2.0 - cc);
+            for i in 0..n {
+                for j in 0..n {
+                    let rank_mu: f64 = (0..mu)
+                        .map(|k| weights[k] * offspring[k].1[i] * offspring[k].1[j])
+                        .sum();
+                    cov[(i, j)] = (1.0 - c1 - cmu + c1 * delta_hsig) * cov[(i, j)]
+                        + c1 * p_c[i] * p_c[j]
+                        + cmu * rank_mu;
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::{neg_sphere, wiggly};
+
+    #[test]
+    fn solves_sphere() {
+        let mut rng = Pcg64::seed(10);
+        let c = Cmaes::new(800).optimize(&neg_sphere, 4, &mut rng);
+        assert!(c.value > -1e-4, "value={}", c.value);
+    }
+
+    #[test]
+    fn solves_rotated_ellipsoid() {
+        // badly conditioned quadratic: needs covariance adaptation
+        let f = |x: &[f64]| {
+            let u = x[0] - 0.4 + (x[1] - 0.6);
+            let v = x[0] - 0.4 - (x[1] - 0.6);
+            -(u * u + 100.0 * v * v)
+        };
+        let mut rng = Pcg64::seed(11);
+        let c = Cmaes::new(1500).optimize(&f, 2, &mut rng);
+        assert!(c.value > -1e-4, "value={}", c.value);
+    }
+
+    #[test]
+    fn handles_multimodal_reasonably() {
+        let mut rng = Pcg64::seed(12);
+        let c = Cmaes::new(600).optimize(&wiggly, 2, &mut rng);
+        // global max per dim = 2.32292 (x* = 0.66842) -> 4.6458 total;
+        // a single un-restarted run may keep one dim on a local optimum
+        // (3.79 = 2.32 + 1.46-boundary), so accept anything above that
+        assert!(c.value > 3.7, "value={}", c.value);
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let mut rng = Pcg64::seed(13);
+        let c = Cmaes::new(300).optimize(&|x: &[f64]| x[0] + x[1], 2, &mut rng);
+        assert!(c.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(c.value > 1.9, "boundary max should be found: {}", c.value);
+    }
+}

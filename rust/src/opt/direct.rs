@@ -1,0 +1,249 @@
+//! DIRECT — DIviding RECTangles (Jones, Perttunen & Stuckman 1993):
+//! Lipschitzian global optimization without the Lipschitz constant.
+//! This is BayesOpt's default acquisition optimizer, so it is also the
+//! inner optimizer of the Figure-1 baseline configuration.
+//!
+//! Implementation notes: hyper-rectangles are tracked by their center,
+//! per-dimension third-level (side length `3^-level`), and value.
+//! Potentially-optimal rectangles are selected with the standard
+//! lower-right convex-hull rule over (diameter, -value) with the
+//! epsilon-improvement filter, then trisected along their longest sides.
+
+use super::{Candidate, Objective, Optimizer};
+use crate::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+struct Rect {
+    center: Vec<f64>,
+    /// Trisection count per dimension (side_d = 3^-levels[d]).
+    levels: Vec<u32>,
+    value: f64,
+}
+
+impl Rect {
+    /// Half-diagonal of the rectangle (the "size" used by DIRECT).
+    fn diameter(&self) -> f64 {
+        self.levels
+            .iter()
+            .map(|&l| {
+                let side = 3.0_f64.powi(-(l as i32));
+                side * side
+            })
+            .sum::<f64>()
+            .sqrt()
+            * 0.5
+    }
+}
+
+/// DIRECT maximizer on the unit hypercube.
+#[derive(Clone, Debug)]
+pub struct Direct {
+    /// Evaluation budget.
+    pub max_evals: usize,
+    /// Epsilon of the potential-optimality test (Jones' 1e-4 default).
+    pub epsilon: f64,
+}
+
+impl Default for Direct {
+    fn default() -> Self {
+        Self { max_evals: 500, epsilon: 1e-4 }
+    }
+}
+
+impl Direct {
+    /// Budgeted constructor.
+    pub fn new(max_evals: usize) -> Self {
+        Self { max_evals, ..Self::default() }
+    }
+
+    /// Indices of potentially-optimal rectangles.
+    ///
+    /// Rectangle `i` (diameter `d_i`, value `v_i`) is potentially optimal
+    /// iff some Lipschitz constant `K > 0` exists with
+    /// `v_i + K d_i >= v_j + K d_j` for all `j` and
+    /// `v_i + K d_i >= best + eps |best|` (Jones et al., Def. 3.1, in
+    /// maximization form). With one candidate per diameter class this is a
+    /// direct O(m^2) feasibility test over the class representatives —
+    /// `m` (distinct diameters) stays small, and the largest rectangle is
+    /// always feasible (`K -> inf`), which preserves global convergence.
+    fn potentially_optimal(&self, rects: &[Rect], best: f64) -> Vec<usize> {
+        // group by diameter: keep the best rectangle per diameter class
+        let mut by_diam: Vec<(f64, usize)> = Vec::new();
+        for (i, r) in rects.iter().enumerate() {
+            let d = r.diameter();
+            match by_diam.iter_mut().find(|(dd, _)| (*dd - d).abs() < 1e-12) {
+                Some((_, idx)) => {
+                    if r.value > rects[*idx].value {
+                        *idx = i;
+                    }
+                }
+                None => by_diam.push((d, i)),
+            }
+        }
+        by_diam.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let m = by_diam.len();
+        let mut out: Vec<usize> = Vec::new();
+        for i in 0..m {
+            let (di, idx_i) = by_diam[i];
+            let vi = rects[idx_i].value;
+            // lower bound on K from smaller rectangles, upper from larger
+            let mut k_lo: f64 = 0.0;
+            let mut k_hi = f64::INFINITY;
+            for (j, &(dj, idx_j)) in by_diam.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let vj = rects[idx_j].value;
+                if dj < di {
+                    k_lo = k_lo.max((vj - vi) / (di - dj));
+                } else {
+                    k_hi = k_hi.min((vj - vi) / (dj - di));
+                }
+            }
+            if k_lo > k_hi {
+                continue;
+            }
+            // epsilon rule with the most optimistic feasible K
+            let bound = if k_hi.is_finite() { vi + k_hi * di } else { f64::INFINITY };
+            if bound >= best + self.epsilon * best.abs().max(1e-8) {
+                out.push(idx_i);
+            }
+        }
+        if out.is_empty() {
+            // always divide at least the largest rectangle
+            if let Some(&(_, idx)) = by_diam.last() {
+                out.push(idx);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+impl Optimizer for Direct {
+    fn optimize(&self, f: &dyn Objective, dim: usize, _rng: &mut Pcg64) -> Candidate {
+        let mut rects = vec![Rect {
+            center: vec![0.5; dim],
+            levels: vec![0; dim],
+            value: f.eval(&vec![0.5; dim]),
+        }];
+        let mut evals = 1usize;
+        let mut best = Candidate { x: rects[0].center.clone(), value: rects[0].value };
+
+        while evals < self.max_evals {
+            let selected = self.potentially_optimal(&rects, best.value);
+            let mut any_divided = false;
+            for &si in selected.iter().rev() {
+                if evals >= self.max_evals {
+                    break;
+                }
+                let rect = rects[si].clone();
+                // longest sides = minimal level
+                let min_level = *rect.levels.iter().min().unwrap();
+                let long_dims: Vec<usize> = (0..dim)
+                    .filter(|&d| rect.levels[d] == min_level)
+                    .collect();
+                let delta = 3.0_f64.powi(-(min_level as i32 + 1));
+
+                // sample center +/- delta along each long dimension
+                let mut trials: Vec<(usize, Rect, Rect)> = Vec::new();
+                for &d in &long_dims {
+                    if evals + 2 > self.max_evals {
+                        break;
+                    }
+                    let mut lo = rect.center.clone();
+                    lo[d] -= delta;
+                    let mut hi = rect.center.clone();
+                    hi[d] += delta;
+                    let vlo = f.eval(&lo);
+                    let vhi = f.eval(&hi);
+                    evals += 2;
+                    if vlo > best.value {
+                        best = Candidate { x: lo.clone(), value: vlo };
+                    }
+                    if vhi > best.value {
+                        best = Candidate { x: hi.clone(), value: vhi };
+                    }
+                    trials.push((
+                        d,
+                        Rect { center: lo, levels: rect.levels.clone(), value: vlo },
+                        Rect { center: hi, levels: rect.levels.clone(), value: vhi },
+                    ));
+                }
+                if trials.is_empty() {
+                    continue;
+                }
+                any_divided = true;
+                // divide in order of best child value (Jones' rule):
+                // dimensions with better children get the larger pieces
+                trials.sort_by(|a, b| {
+                    let wa = a.1.value.max(a.2.value);
+                    let wb = b.1.value.max(b.2.value);
+                    wb.partial_cmp(&wa).unwrap()
+                });
+                let mut parent = rect;
+                let mut new_rects = Vec::with_capacity(trials.len() * 2);
+                for (d, mut lo, mut hi) in trials {
+                    parent.levels[d] += 1;
+                    lo.levels = parent.levels.clone();
+                    hi.levels = parent.levels.clone();
+                    new_rects.push(lo);
+                    new_rects.push(hi);
+                }
+                rects[si] = parent;
+                rects.extend(new_rects);
+            }
+            if !any_divided {
+                break; // resolution exhausted within budget
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::{neg_sphere, wiggly};
+
+    #[test]
+    fn solves_sphere() {
+        let mut rng = Pcg64::seed(0);
+        let c = Direct::new(600).optimize(&neg_sphere, 2, &mut rng);
+        assert!(c.value > -1e-3, "value={}", c.value);
+    }
+
+    #[test]
+    fn finds_global_optimum_of_multimodal() {
+        let mut rng = Pcg64::seed(0);
+        let c = Direct::new(800).optimize(&wiggly, 1, &mut rng);
+        // global max of sin(12x)+2x on [0,1]: x* = 0.66842, f* = 2.32292
+        // (critical points at cos(12x) = -1/6; boundary f(1) = 1.4634)
+        assert!(c.value > 2.322, "value={}", c.value);
+        assert!((c.x[0] - 0.66842).abs() < 0.01, "x={}", c.x[0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut r1 = Pcg64::seed(1);
+        let mut r2 = Pcg64::seed(2);
+        let c1 = Direct::new(300).optimize(&neg_sphere, 3, &mut r1);
+        let c2 = Direct::new(300).optimize(&neg_sphere, 3, &mut r2);
+        assert_eq!(c1.x, c2.x, "DIRECT ignores the RNG");
+    }
+
+    #[test]
+    fn respects_budget() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let f = |x: &[f64]| {
+            count.fetch_add(1, Ordering::Relaxed);
+            neg_sphere(x)
+        };
+        let mut rng = Pcg64::seed(0);
+        let _ = Direct::new(100).optimize(&f, 4, &mut rng);
+        assert!(count.load(Ordering::Relaxed) <= 101);
+    }
+}

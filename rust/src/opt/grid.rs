@@ -1,0 +1,80 @@
+//! Exhaustive grid search (Limbo's `opt::GridSearch`).
+
+use super::{Candidate, Objective, Optimizer};
+use crate::rng::Pcg64;
+
+/// Full-factorial grid with `bins` points per dimension (cell centers are
+/// offset half a step from the boundary so corners are not over-sampled).
+#[derive(Clone, Debug)]
+pub struct GridSearch {
+    /// Grid resolution per dimension.
+    pub bins: usize,
+    /// Hard cap on total evaluations (guards the `bins^dim` blow-up).
+    pub max_evals: usize,
+}
+
+impl GridSearch {
+    /// `bins` per dimension, default eval cap of 1e6.
+    pub fn new(bins: usize) -> Self {
+        Self { bins: bins.max(1), max_evals: 1_000_000 }
+    }
+}
+
+impl Optimizer for GridSearch {
+    fn optimize(&self, f: &dyn Objective, dim: usize, _rng: &mut Pcg64) -> Candidate {
+        let mut bins = self.bins;
+        // shrink resolution until the grid fits the eval budget
+        while bins > 1 && (bins as f64).powi(dim as i32) > self.max_evals as f64 {
+            bins -= 1;
+        }
+        let total = (bins as u64).pow(dim as u32) as usize;
+        let mut best: Option<Candidate> = None;
+        let mut x = vec![0.0; dim];
+        for idx in 0..total {
+            let mut rem = idx;
+            for d in 0..dim {
+                let b = rem % bins;
+                rem /= bins;
+                x[d] = (b as f64 + 0.5) / bins as f64;
+            }
+            let cand = Candidate::eval(f, x.clone());
+            best = Some(match best {
+                Some(b) => b.max(cand),
+                None => cand,
+            });
+        }
+        best.expect("grid has at least one point")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::neg_sphere;
+
+    #[test]
+    fn finds_peak_cell() {
+        let mut rng = Pcg64::seed(0);
+        let c = GridSearch::new(21).optimize(&neg_sphere, 2, &mut rng);
+        for &v in &c.x {
+            assert!((v - 0.3).abs() < 0.05, "x={v}");
+        }
+    }
+
+    #[test]
+    fn respects_eval_cap() {
+        let mut rng = Pcg64::seed(0);
+        let mut g = GridSearch::new(100);
+        g.max_evals = 1000;
+        // 6-D grid of 100^6 would be 1e12; the cap shrinks bins to 3
+        let c = g.optimize(&neg_sphere, 6, &mut rng);
+        assert!(c.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn single_bin_evaluates_center() {
+        let mut rng = Pcg64::seed(0);
+        let c = GridSearch::new(1).optimize(&neg_sphere, 2, &mut rng);
+        assert_eq!(c.x, vec![0.5, 0.5]);
+    }
+}

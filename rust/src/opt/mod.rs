@@ -1,0 +1,203 @@
+//! Inner optimizers — the `limbo::opt::*` policy family (the NLOpt
+//! replacement).
+//!
+//! Two roles in a Bayesian optimizer:
+//! * maximizing the **acquisition function** over the unit hypercube
+//!   (derivative-free, multimodal): [`RandomPoint`], [`GridSearch`],
+//!   [`NelderMead`], [`Cmaes`], [`Direct`], composed with
+//!   [`ParallelRepeater`] (parallel restarts) and [`Chained`]
+//!   (global-then-local, Limbo's "chained" optimizers);
+//! * maximizing the **log marginal likelihood** over log-hyper-params
+//!   (gradient available): [`rprop`] / [`adam`].
+//!
+//! All domain-bounded optimizers work on `[0, 1]^dim`; callers scale to
+//! native domains ([`crate::benchfns`] does this for the test suite).
+
+pub mod adam;
+pub mod cmaes;
+pub mod direct;
+pub mod grid;
+pub mod nelder_mead;
+pub mod random;
+pub mod rprop;
+
+pub use adam::adam_maximize;
+pub use cmaes::Cmaes;
+pub use direct::Direct;
+pub use grid::GridSearch;
+pub use nelder_mead::NelderMead;
+pub use random::RandomPoint;
+pub use rprop::{rprop_maximize, RpropParams};
+
+use crate::pool;
+use crate::rng::Pcg64;
+
+/// A point and its objective value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    /// Location in `[0, 1]^dim`.
+    pub x: Vec<f64>,
+    /// Objective value (maximization).
+    pub value: f64,
+}
+
+impl Candidate {
+    /// Evaluate `f` at `x` and wrap.
+    pub fn eval(f: &dyn Objective, x: Vec<f64>) -> Self {
+        let value = f.eval(&x);
+        Self { x, value }
+    }
+
+    /// The better (higher-value) of two candidates.
+    pub fn max(self, other: Candidate) -> Candidate {
+        if other.value > self.value {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+/// A maximization objective over `[0, 1]^dim`.
+pub trait Objective: Sync {
+    /// Evaluate at `x`.
+    fn eval(&self, x: &[f64]) -> f64;
+}
+
+impl<F: Fn(&[f64]) -> f64 + Sync> Objective for F {
+    fn eval(&self, x: &[f64]) -> f64 {
+        self(x)
+    }
+}
+
+/// A derivative-free maximizer over the unit hypercube.
+pub trait Optimizer: Send + Sync {
+    /// Maximize `f` over `[0, 1]^dim`.
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate;
+
+    /// Maximize starting from `x0` (local methods refine it; global
+    /// methods may ignore it — default delegates to [`optimize`](Self::optimize)).
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        self.optimize(f, x0.len(), rng)
+    }
+}
+
+/// Combinator helpers on any optimizer (the paper's "several restarts in
+/// parallel" and "several internal optimizations chained").
+pub trait OptimizerExt: Optimizer + Sized {
+    /// Restart `n` times (in parallel over `threads`), keep the best.
+    fn restarts(self, n: usize, threads: usize) -> ParallelRepeater<Self> {
+        ParallelRepeater { inner: self, n, threads }
+    }
+
+    /// Follow with `next`, seeded at this optimizer's result.
+    fn then<B: Optimizer>(self, next: B) -> Chained<Self, B> {
+        Chained { first: self, second: next }
+    }
+}
+
+impl<O: Optimizer + Sized> OptimizerExt for O {}
+
+/// Run the inner optimizer `n` times with forked RNG streams (optionally
+/// in parallel) and keep the best result.
+pub struct ParallelRepeater<O: Optimizer> {
+    /// The restarted optimizer.
+    pub inner: O,
+    /// Number of restarts.
+    pub n: usize,
+    /// Worker threads (1 = sequential).
+    pub threads: usize,
+}
+
+impl<O: Optimizer> Optimizer for ParallelRepeater<O> {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let rngs: Vec<Pcg64> = (0..self.n.max(1)).map(|i| rng.fork(i as u64)).collect();
+        let inner = &self.inner;
+        let results = pool::parallel_map(rngs, self.threads, |_, mut r| {
+            inner.optimize(f, dim, &mut r)
+        });
+        results
+            .into_iter()
+            .reduce(Candidate::max)
+            .expect("at least one restart")
+    }
+}
+
+/// Run `first`, then `second` seeded at the result (global -> local).
+pub struct Chained<A: Optimizer, B: Optimizer> {
+    /// Global stage.
+    pub first: A,
+    /// Local refinement stage.
+    pub second: B,
+}
+
+impl<A: Optimizer, B: Optimizer> Optimizer for Chained<A, B> {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let c1 = self.first.optimize(f, dim, rng);
+        let c2 = self.second.optimize_from(f, &c1.x, rng);
+        c1.max(c2)
+    }
+
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        let c1 = self.first.optimize_from(f, x0, rng);
+        let c2 = self.second.optimize_from(f, &c1.x, rng);
+        c1.max(c2)
+    }
+}
+
+/// Clamp a point into the unit hypercube.
+#[inline]
+pub(crate) fn clamp_unit(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_objectives {
+    //! Shared objectives for optimizer tests (all maximization on [0,1]^d).
+
+    /// Smooth unimodal: peak 0 at x = 0.3·1.
+    pub fn neg_sphere(x: &[f64]) -> f64 {
+        -x.iter().map(|&v| (v - 0.3) * (v - 0.3)).sum::<f64>()
+    }
+
+    /// Multimodal; per-dim global max 2.32292 at x = 0.66842.
+    pub fn wiggly(x: &[f64]) -> f64 {
+        x.iter().map(|&v| (12.0 * v).sin() + 2.0 * v).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_objectives::*;
+    use super::*;
+
+    #[test]
+    fn restarts_beat_single_run_on_multimodal() {
+        let mut rng = Pcg64::seed(5);
+        let single = NelderMead::default().optimize(&wiggly, 2, &mut rng);
+        let mut rng = Pcg64::seed(5);
+        let multi = NelderMead::default().restarts(16, 4).optimize(&wiggly, 2, &mut rng);
+        assert!(multi.value >= single.value - 1e-12);
+    }
+
+    #[test]
+    fn chained_refines_global_result() {
+        let mut rng = Pcg64::seed(6);
+        let global = RandomPoint::new(64).optimize(&neg_sphere, 3, &mut rng);
+        let mut rng = Pcg64::seed(6);
+        let chained = RandomPoint::new(64)
+            .then(NelderMead::default())
+            .optimize(&neg_sphere, 3, &mut rng);
+        assert!(chained.value >= global.value);
+        assert!(chained.value > -1e-3, "local stage should nearly reach the peak");
+    }
+
+    #[test]
+    fn candidate_max_picks_higher() {
+        let a = Candidate { x: vec![0.0], value: 1.0 };
+        let b = Candidate { x: vec![1.0], value: 2.0 };
+        assert_eq!(a.clone().max(b.clone()), b);
+    }
+}

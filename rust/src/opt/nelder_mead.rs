@@ -1,0 +1,133 @@
+//! Nelder–Mead downhill simplex (bounded to the unit cube by clamping),
+//! the standard local refinement stage for chained inner optimizers.
+
+use super::{clamp_unit, Candidate, Objective, Optimizer};
+use crate::rng::Pcg64;
+
+/// Nelder–Mead simplex maximizer.
+#[derive(Clone, Debug)]
+pub struct NelderMead {
+    /// Maximum simplex iterations.
+    pub max_iters: usize,
+    /// Initial simplex edge length.
+    pub step: f64,
+    /// Convergence tolerance on the value spread.
+    pub tol: f64,
+}
+
+impl Default for NelderMead {
+    fn default() -> Self {
+        Self { max_iters: 200, step: 0.1, tol: 1e-9 }
+    }
+}
+
+const ALPHA: f64 = 1.0; // reflection
+const GAMMA: f64 = 2.0; // expansion
+const RHO: f64 = 0.5; // contraction
+const SIGMA: f64 = 0.5; // shrink
+
+impl Optimizer for NelderMead {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let x0 = rng.unit_point(dim);
+        self.optimize_from(f, &x0, rng)
+    }
+
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], _rng: &mut Pcg64) -> Candidate {
+        let dim = x0.len();
+        // initial simplex: x0 plus one step along each axis
+        let mut simplex: Vec<Candidate> = Vec::with_capacity(dim + 1);
+        simplex.push(Candidate::eval(f, x0.to_vec()));
+        for d in 0..dim {
+            let mut x = x0.to_vec();
+            x[d] = if x[d] + self.step <= 1.0 { x[d] + self.step } else { x[d] - self.step };
+            simplex.push(Candidate::eval(f, x));
+        }
+
+        for _ in 0..self.max_iters {
+            // sort descending by value (we maximize)
+            simplex.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+            let spread = simplex[0].value - simplex[dim].value;
+            if spread.abs() < self.tol {
+                break;
+            }
+            // centroid of all but the worst
+            let mut centroid = vec![0.0; dim];
+            for c in &simplex[..dim] {
+                for (cd, &xd) in centroid.iter_mut().zip(&c.x) {
+                    *cd += xd / dim as f64;
+                }
+            }
+            let worst = simplex[dim].clone();
+            let point = |t: f64| -> Vec<f64> {
+                let mut x: Vec<f64> = centroid
+                    .iter()
+                    .zip(&worst.x)
+                    .map(|(&c, &w)| c + t * (c - w))
+                    .collect();
+                clamp_unit(&mut x);
+                x
+            };
+
+            let reflected = Candidate::eval(f, point(ALPHA));
+            if reflected.value > simplex[0].value {
+                // try to expand
+                let expanded = Candidate::eval(f, point(GAMMA));
+                simplex[dim] = if expanded.value > reflected.value { expanded } else { reflected };
+            } else if reflected.value > simplex[dim - 1].value {
+                simplex[dim] = reflected;
+            } else {
+                // contract towards the centroid
+                let contracted = Candidate::eval(f, point(-RHO));
+                if contracted.value > worst.value {
+                    simplex[dim] = contracted;
+                } else {
+                    // shrink everything towards the best vertex
+                    let best = simplex[0].x.clone();
+                    for c in simplex[1..].iter_mut() {
+                        let x: Vec<f64> = best
+                            .iter()
+                            .zip(&c.x)
+                            .map(|(&b, &xi)| b + SIGMA * (xi - b))
+                            .collect();
+                        *c = Candidate::eval(f, x);
+                    }
+                }
+            }
+        }
+        simplex.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+        simplex.swap_remove(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::{neg_sphere, wiggly};
+
+    #[test]
+    fn converges_on_smooth_bowl() {
+        let mut rng = Pcg64::seed(3);
+        let c = NelderMead::default().optimize_from(&neg_sphere, &[0.9, 0.9, 0.9], &mut rng);
+        assert!(c.value > -1e-6, "value={}", c.value);
+        for &v in &c.x {
+            assert!((v - 0.3).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn stays_in_bounds_on_boundary_peak() {
+        // peak of `wiggly` slices is near the upper boundary
+        let mut rng = Pcg64::seed(4);
+        let c = NelderMead::default().optimize_from(&wiggly, &[0.95], &mut rng);
+        assert!((0.0..=1.0).contains(&c.x[0]));
+        assert!(c.value >= wiggly(&[0.95]));
+    }
+
+    #[test]
+    fn improves_over_start_point() {
+        let mut rng = Pcg64::seed(5);
+        let start = [0.7, 0.1];
+        let c = NelderMead::default().optimize_from(&neg_sphere, &start, &mut rng);
+        assert!(c.value > neg_sphere(&start));
+    }
+}

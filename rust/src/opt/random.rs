@@ -1,0 +1,58 @@
+//! Pure random search (Limbo's `opt::RandomPoint` generalized to a
+//! best-of-n sampler; `n = 1` reproduces Limbo's single random point).
+
+use super::{Candidate, Objective, Optimizer};
+use crate::rng::Pcg64;
+
+/// Evaluate `n` uniform random points, return the best.
+#[derive(Clone, Debug)]
+pub struct RandomPoint {
+    /// Number of samples.
+    pub n: usize,
+}
+
+impl RandomPoint {
+    /// Best of `n` uniform draws.
+    pub fn new(n: usize) -> Self {
+        Self { n: n.max(1) }
+    }
+}
+
+impl Optimizer for RandomPoint {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let mut best = Candidate::eval(f, rng.unit_point(dim));
+        for _ in 1..self.n {
+            best = best.max(Candidate::eval(f, rng.unit_point(dim)));
+        }
+        best
+    }
+
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        // include the seed point in the pool
+        Candidate::eval(f, x0.to_vec()).max(self.optimize(f, x0.len(), rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::neg_sphere;
+
+    #[test]
+    fn stays_in_bounds_and_improves_with_budget() {
+        let mut rng = Pcg64::seed(1);
+        let small = RandomPoint::new(4).optimize(&neg_sphere, 2, &mut rng);
+        assert!(small.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mut rng = Pcg64::seed(1);
+        let big = RandomPoint::new(4096).optimize(&neg_sphere, 2, &mut rng);
+        assert!(big.value >= small.value);
+        assert!(big.value > -0.02);
+    }
+
+    #[test]
+    fn from_keeps_good_seed_point() {
+        let mut rng = Pcg64::seed(2);
+        let c = RandomPoint::new(2).optimize_from(&neg_sphere, &[0.3, 0.3], &mut rng);
+        assert_eq!(c.value, 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! iRprop⁻ gradient ascent (Igel & Hüsken 2000) — the hyper-parameter
+//! optimizer Limbo itself uses for GP likelihood fits.
+//!
+//! Rprop adapts a per-coordinate step size from gradient *signs* only,
+//! which makes it immune to the poor scaling of the LML landscape
+//! (lengthscale axes vs variance axes differ by orders of magnitude).
+
+/// Rprop hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct RpropParams {
+    /// Iterations.
+    pub iterations: usize,
+    /// Step-size increase factor (eta+).
+    pub eta_plus: f64,
+    /// Step-size decrease factor (eta-).
+    pub eta_minus: f64,
+    /// Initial step size.
+    pub delta0: f64,
+    /// Step-size bounds.
+    pub delta_min: f64,
+    /// Maximum step size.
+    pub delta_max: f64,
+}
+
+impl Default for RpropParams {
+    fn default() -> Self {
+        Self {
+            iterations: 100,
+            eta_plus: 1.2,
+            eta_minus: 0.5,
+            delta0: 0.1,
+            delta_min: 1e-6,
+            delta_max: 1.0,
+        }
+    }
+}
+
+/// Maximize `f` (returning `(value, gradient)`) from `x0` with iRprop⁻.
+/// `bounds = Some((lo, hi))` clamps every coordinate. Returns the best
+/// iterate seen (not necessarily the last).
+pub fn rprop_maximize(
+    mut f: impl FnMut(&[f64]) -> (f64, Vec<f64>),
+    x0: &[f64],
+    params: &RpropParams,
+    bounds: Option<(f64, f64)>,
+) -> Vec<f64> {
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut delta = vec![params.delta0; n];
+    let mut prev_grad = vec![0.0; n];
+    let (mut best_x, mut best_val) = (x.clone(), f64::NEG_INFINITY);
+
+    for _ in 0..params.iterations {
+        let (val, grad) = f(&x);
+        if val.is_finite() && val > best_val {
+            best_val = val;
+            best_x = x.clone();
+        }
+        for i in 0..n {
+            let g = grad[i];
+            if !g.is_finite() {
+                prev_grad[i] = 0.0;
+                continue;
+            }
+            let sign_change = prev_grad[i] * g;
+            if sign_change > 0.0 {
+                delta[i] = (delta[i] * params.eta_plus).min(params.delta_max);
+            } else if sign_change < 0.0 {
+                delta[i] = (delta[i] * params.eta_minus).max(params.delta_min);
+                // iRprop-: forget the gradient after a sign flip
+                prev_grad[i] = 0.0;
+                continue;
+            }
+            // ascent: move along the gradient sign
+            x[i] += g.signum() * delta[i];
+            if let Some((lo, hi)) = bounds {
+                x[i] = x[i].clamp(lo, hi);
+            }
+            prev_grad[i] = g;
+        }
+    }
+    // final evaluation to catch the last iterate
+    let (val, _) = f(&x);
+    if val.is_finite() && val > best_val {
+        best_x = x;
+    }
+    best_x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maximizes_quadratic() {
+        // f(x) = -(x0-1)^2 - 10 (x1+2)^2  (badly scaled on purpose)
+        let f = |x: &[f64]| {
+            let v = -(x[0] - 1.0).powi(2) - 10.0 * (x[1] + 2.0).powi(2);
+            let g = vec![-2.0 * (x[0] - 1.0), -20.0 * (x[1] + 2.0)];
+            (v, g)
+        };
+        let best = rprop_maximize(f, &[0.0, 0.0], &RpropParams::default(), None);
+        assert!((best[0] - 1.0).abs() < 1e-2, "x0={}", best[0]);
+        assert!((best[1] + 2.0).abs() < 1e-2, "x1={}", best[1]);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let f = |x: &[f64]| (x[0], vec![1.0]); // push up forever
+        let best = rprop_maximize(f, &[0.0], &RpropParams::default(), Some((-1.0, 2.0)));
+        assert!(best[0] <= 2.0 + 1e-12);
+        assert!((best[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn survives_nan_gradients() {
+        let f = |x: &[f64]| {
+            if x[0] > 0.5 {
+                (f64::NAN, vec![f64::NAN])
+            } else {
+                (-(x[0] - 0.4).powi(2), vec![-2.0 * (x[0] - 0.4)])
+            }
+        };
+        let best = rprop_maximize(f, &[0.0], &RpropParams::default(), Some((0.0, 1.0)));
+        assert!((best[0] - 0.4).abs() < 0.05, "x={}", best[0]);
+    }
+
+    #[test]
+    fn returns_best_not_last() {
+        // value oscillates if steps overshoot; best-seen must win
+        let f = |x: &[f64]| (-(x[0]).powi(2), vec![-2.0 * x[0]]);
+        let best = rprop_maximize(f, &[3.0], &RpropParams::default(), None);
+        assert!(best[0].abs() < 0.1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal fixed-size thread pool (the TBB/tokio replacement).
+//!
+//! Two entry points:
+//! * [`ThreadPool`] — long-lived pool with a job queue (used by the
+//!   coordinator's experiment runner and the ask/tell service),
+//! * [`parallel_map`] — scoped fork-join helper used for parallel
+//!   restarts of the inner optimizers (Limbo's "several restarts ...
+//!   performed in parallel").
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool with a shared queue.
+pub struct ThreadPool {
+    sender: mpsc::Sender<Message>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (>= 1 enforced).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (sender, receiver) = mpsc::channel::<Message>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..threads)
+            .map(|_| {
+                let receiver = Arc::clone(&receiver);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let msg = { receiver.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            let (lock, cvar) = &*pending;
+                            let mut n = lock.lock().unwrap();
+                            *n -= 1;
+                            if *n == 0 {
+                                cvar.notify_all();
+                            }
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { sender, workers, pending }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.sender.send(Message::Run(Box::new(job))).expect("pool shut down");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fork-join parallel map over `items`, preserving order, using scoped
+/// threads (`threads` capped by item count; `threads == 1` runs inline).
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = Mutex::new(work);
+    let results = Mutex::new(&mut slots);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(i, t);
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let out = parallel_map(items, 4, |_, x| x * 2);
+        assert_eq!(out, (0..57).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_inline() {
+        let out = parallel_map(vec![1, 2, 3], 1, |i, x| i + x);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+}

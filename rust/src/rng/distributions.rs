@@ -1,0 +1,76 @@
+//! Distribution helpers on top of [`Pcg64`].
+
+use super::Pcg64;
+
+/// A pair of independent standard-normal draws (Box–Muller).
+pub fn normal_pair(rng: &mut Pcg64) -> (f64, f64) {
+    // avoid log(0)
+    let u1 = loop {
+        let u = rng.next_f64();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    let u2 = rng.next_f64();
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * std::f64::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Multivariate normal draw `mean + L z` given a Cholesky factor `L` of the
+/// covariance (used by CMA-ES and GP posterior sampling).
+pub fn mvn_sample(
+    mean: &[f64],
+    chol_l: &crate::la::Matrix,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    let n = mean.len();
+    assert_eq!(chol_l.rows(), n);
+    let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut out = mean.to_vec();
+    for i in 0..n {
+        out[i] += crate::la::dot(&chol_l.row(i)[..=i], &z[..=i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::Matrix;
+
+    #[test]
+    fn normal_pair_is_standard() {
+        let mut rng = Pcg64::seed(17);
+        let n = 30_000;
+        let (mut s, mut s2, mut cross) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let (a, b) = normal_pair(&mut rng);
+            s += a + b;
+            s2 += a * a + b * b;
+            cross += a * b;
+        }
+        let mean = s / (2 * n) as f64;
+        let var = s2 / (2 * n) as f64 - mean * mean;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.05);
+        assert!((cross / n as f64).abs() < 0.03, "pairs should be independent");
+    }
+
+    #[test]
+    fn mvn_covariance_matches() {
+        let mut rng = Pcg64::seed(23);
+        // cov = [[1, 0.8], [0.8, 1]]
+        let l = Matrix::from_rows(2, 2, &[1.0, 0.0, 0.8, 0.6]);
+        let n = 40_000;
+        let (mut sxy, mut sx, mut sy) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let v = mvn_sample(&[0.0, 0.0], &l, &mut rng);
+            sx += v[0];
+            sy += v[1];
+            sxy += v[0] * v[1];
+        }
+        let cov = sxy / n as f64 - (sx / n as f64) * (sy / n as f64);
+        assert!((cov - 0.8).abs() < 0.05, "cov={cov}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Random-number substrate (no external crates): PCG-XSH-RR 64/32
+//! generator, standard distributions, and the low-discrepancy samplers the
+//! initializers use (Latin hypercube, Halton).
+
+pub mod distributions;
+pub mod pcg;
+pub mod quasi;
+
+pub use distributions::normal_pair;
+pub use pcg::Pcg64;
+pub use quasi::{halton_point, latin_hypercube};

@@ -1,0 +1,90 @@
+//! Low-discrepancy sampling: Latin hypercube (the BayesOpt-default
+//! initializer) and the Halton sequence (space-filling inner-optimizer
+//! seeding).
+
+use super::Pcg64;
+
+/// `n` points in `[0,1]^dim` by Latin hypercube sampling: each dimension is
+/// split into `n` strata, each stratum used exactly once (permuted), with
+/// uniform jitter inside the stratum.
+pub fn latin_hypercube(n: usize, dim: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    let mut points = vec![vec![0.0; dim]; n];
+    for d in 0..dim {
+        let mut strata: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut strata);
+        for (i, &s) in strata.iter().enumerate() {
+            points[i][d] = (s as f64 + rng.next_f64()) / n as f64;
+        }
+    }
+    points
+}
+
+const PRIMES: [u64; 16] = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53];
+
+/// `index`-th point of the Halton sequence in `[0,1)^dim` (dim <= 16).
+pub fn halton_point(index: usize, dim: usize) -> Vec<f64> {
+    assert!(dim <= PRIMES.len(), "halton: dim > {}", PRIMES.len());
+    (0..dim).map(|d| radical_inverse(index as u64 + 1, PRIMES[d])).collect()
+}
+
+fn radical_inverse(mut i: u64, base: u64) -> f64 {
+    let mut inv = 0.0;
+    let mut frac = 1.0 / base as f64;
+    while i > 0 {
+        inv += (i % base) as f64 * frac;
+        i /= base;
+        frac /= base as f64;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lhs_stratification_holds() {
+        let mut rng = Pcg64::seed(31);
+        let n = 16;
+        let pts = latin_hypercube(n, 3, &mut rng);
+        for d in 0..3 {
+            let mut strata: Vec<usize> =
+                pts.iter().map(|p| (p[d] * n as f64).floor() as usize).collect();
+            strata.sort_unstable();
+            assert_eq!(strata, (0..n).collect::<Vec<_>>(), "dim {d} not stratified");
+        }
+    }
+
+    #[test]
+    fn lhs_in_unit_cube() {
+        let mut rng = Pcg64::seed(32);
+        for p in latin_hypercube(20, 5, &mut rng) {
+            assert!(p.iter().all(|&v| (0.0..1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn halton_base2_prefix() {
+        // base-2 radical inverse of 1,2,3,4... = 0.5, 0.25, 0.75, 0.125...
+        assert!((halton_point(0, 1)[0] - 0.5).abs() < 1e-12);
+        assert!((halton_point(1, 1)[0] - 0.25).abs() < 1e-12);
+        assert!((halton_point(2, 1)[0] - 0.75).abs() < 1e-12);
+        assert!((halton_point(3, 1)[0] - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halton_covers_space() {
+        let n = 256;
+        let mut mins = [1.0f64; 2];
+        let mut maxs = [0.0f64; 2];
+        for i in 0..n {
+            let p = halton_point(i, 2);
+            for d in 0..2 {
+                mins[d] = mins[d].min(p[d]);
+                maxs[d] = maxs[d].max(p[d]);
+            }
+        }
+        assert!(mins.iter().all(|&v| v < 0.05));
+        assert!(maxs.iter().all(|&v| v > 0.95));
+    }
+}

@@ -1,0 +1,94 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! The Rust hot path never touches Python: `make artifacts` lowers the L2
+//! JAX graphs once to HLO *text* (see `python/compile/aot.py` for why text,
+//! not serialized protos), and this module loads + compiles + executes them.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Global serialization lock for every call into the `xla` crate.
+///
+/// SAFETY rationale for the `unsafe impl Send/Sync` below: the crate's
+/// wrappers hold `Rc` handles and raw PJRT pointers, so they are not
+/// thread-safe by construction. We never hand those handles out; every
+/// entry point in this module takes `XLA_LOCK` for the full duration of
+/// the FFI call (compile/execute/transfer), so no two threads ever touch
+/// the non-atomic refcounts or the PJRT objects concurrently. The PJRT
+/// CPU runtime itself is re-entrant, but we do not rely on that.
+static XLA_LOCK: Mutex<()> = Mutex::new(());
+
+/// A PJRT client plus compilation helpers. One per process is plenty; it is
+/// cheap to share behind an `Arc`. All calls are serialized on a global
+/// lock (see [`XLA_LOCK`]).
+pub struct RtClient {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: see XLA_LOCK — all access to the inner Rc-based handle is
+// serialized by the module's global mutex.
+unsafe impl Send for RtClient {}
+unsafe impl Sync for RtClient {}
+
+impl RtClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let _g = XLA_LOCK.lock().unwrap();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name as reported by PJRT (e.g. "Host").
+    pub fn platform_name(&self) -> String {
+        let _g = XLA_LOCK.lock().unwrap();
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let _g = XLA_LOCK.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled artifact. All L2 programs return a tuple (lowered with
+/// `return_tuple=True`), so the result is always decomposed into parts.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: see XLA_LOCK — execution is fully serialized.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with f32 literals and return the tuple elements as f32 vecs.
+    pub fn run_f32(&self, args: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let _g = XLA_LOCK.lock().unwrap();
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().context("result element to f32 vec"))
+            .collect()
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(dims)?)
+}

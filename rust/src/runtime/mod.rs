@@ -1,0 +1,39 @@
+//! XLA/PJRT runtime: loads the AOT-compiled L2 GP graphs and serves them to
+//! the coordinator as a drop-in [`crate::model::Model`] backend.
+//!
+//! Pipeline: `python/compile/aot.py` (build time, once) emits
+//! `artifacts/*.hlo.txt` + `manifest.txt`; [`registry::Registry`] indexes
+//! them; [`client::RtClient`] compiles them on the PJRT CPU client;
+//! [`xla_gp::XlaGp`] pads live datasets into capacity tiers and executes.
+
+pub mod client;
+pub mod registry;
+pub mod xla_gp;
+
+pub use client::{literal_f32, Executable, RtClient};
+pub use registry::{ArtifactMeta, Registry};
+pub use xla_gp::XlaGp;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$LIMBO_ARTIFACTS` if set, else walk up
+/// from the current directory looking for `artifacts/manifest.txt`.
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("LIMBO_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

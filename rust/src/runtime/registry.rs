@@ -1,0 +1,144 @@
+//! Artifact registry: parses `artifacts/manifest.txt` written by
+//! `python/compile/aot.py` and resolves (program, kernel, capacity) lookups.
+//!
+//! Manifest line format (space separated):
+//! `name program kind n_max d_max b hp_dim path`
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT-compiled HLO artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Unique artifact name, e.g. `predict_se_ard_n32`.
+    pub name: String,
+    /// Program kind: `predict`, `ucb` or `lml`.
+    pub program: String,
+    /// GP kernel kind: `se_ard` or `matern52`.
+    pub kind: String,
+    /// Capacity tier (max training points, padded).
+    pub n_max: usize,
+    /// Padded feature dimension (D_MAX).
+    pub d_max: usize,
+    /// Candidate batch size (B).
+    pub b: usize,
+    /// Hyper-parameter vector length (D_MAX + 2).
+    pub hp_dim: usize,
+    /// Path to the HLO text file (absolute after load).
+    pub path: PathBuf,
+}
+
+/// All artifacts found in a directory, indexed by (program, kind).
+#[derive(Debug, Default)]
+pub struct Registry {
+    by_key: HashMap<(String, String), Vec<ArtifactMeta>>,
+}
+
+impl Registry {
+    /// Parse `<dir>/manifest.txt`. Tier lists are sorted ascending.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut reg = Registry::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 8 {
+                bail!("manifest line {}: expected 8 fields, got {}", lineno + 1, f.len());
+            }
+            let meta = ArtifactMeta {
+                name: f[0].to_string(),
+                program: f[1].to_string(),
+                kind: f[2].to_string(),
+                n_max: f[3].parse().context("n_max")?,
+                d_max: f[4].parse().context("d_max")?,
+                b: f[5].parse().context("b")?,
+                hp_dim: f[6].parse().context("hp_dim")?,
+                path: dir.join(f[7]),
+            };
+            reg.by_key
+                .entry((meta.program.clone(), meta.kind.clone()))
+                .or_default()
+                .push(meta);
+        }
+        for tiers in reg.by_key.values_mut() {
+            tiers.sort_by_key(|m| m.n_max);
+        }
+        Ok(reg)
+    }
+
+    /// All tiers for a (program, kind), ascending by capacity.
+    pub fn tiers(&self, program: &str, kind: &str) -> &[ArtifactMeta] {
+        self.by_key
+            .get(&(program.to_string(), kind.to_string()))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Smallest tier with capacity >= `n` (None if `n` exceeds all tiers).
+    pub fn tier_for(&self, program: &str, kind: &str, n: usize) -> Option<&ArtifactMeta> {
+        self.tiers(program, kind).iter().find(|m| m.n_max >= n)
+    }
+
+    /// Number of artifacts in the registry.
+    pub fn len(&self) -> usize {
+        self.by_key.values().map(Vec::len).sum()
+    }
+
+    /// True when no artifacts were found.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_sorts_tiers() {
+        let dir = std::env::temp_dir().join("limbo_registry_test1");
+        write_manifest(
+            &dir,
+            "predict_se_ard_n64 predict se_ard 64 8 64 10 b.hlo.txt\n\
+             predict_se_ard_n32 predict se_ard 32 8 64 10 a.hlo.txt\n",
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 2);
+        let tiers = reg.tiers("predict", "se_ard");
+        assert_eq!(tiers[0].n_max, 32);
+        assert_eq!(tiers[1].n_max, 64);
+        assert_eq!(reg.tier_for("predict", "se_ard", 33).unwrap().n_max, 64);
+        assert_eq!(reg.tier_for("predict", "se_ard", 32).unwrap().n_max, 32);
+        assert!(reg.tier_for("predict", "se_ard", 65).is_none());
+        assert!(reg.tier_for("ucb", "se_ard", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("limbo_registry_test2");
+        write_manifest(&dir, "only three fields\n");
+        assert!(Registry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("limbo_registry_test3");
+        write_manifest(
+            &dir,
+            "# comment\n\nucb_se_ard_n32 ucb se_ard 32 8 64 10 u.hlo.txt\n",
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! `XlaGp`: the XLA-artifact GP backend.
+//!
+//! Wraps the tiered `predict` / `ucb` / `lml` artifacts for one kernel kind
+//! and presents padded, batched execution over live (growing) datasets:
+//!
+//! * training data is padded to the smallest capacity tier `n_max >= n`
+//!   with a 0/1 mask (exact — see DESIGN.md "Static shapes"),
+//! * features are padded to `d_max` zero columns,
+//! * candidate batches are padded to `b` rows (extra rows are discarded).
+//!
+//! Executables are compiled lazily per tier and cached, so a BO run only
+//! pays compilation for the tiers it actually grows through.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{literal_f32, Executable, RtClient};
+use super::registry::{ArtifactMeta, Registry};
+
+/// Tiered, lazily-compiled XLA GP backend for one kernel kind.
+pub struct XlaGp {
+    client: Arc<RtClient>,
+    registry: Arc<Registry>,
+    kind: String,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl XlaGp {
+    /// Create a backend for `kind` ("se_ard" or "matern52") over the
+    /// artifacts in `dir`.
+    pub fn new(client: Arc<RtClient>, dir: &Path, kind: &str) -> Result<Self> {
+        let registry = Arc::new(Registry::load(dir)?);
+        Self::with_registry(client, registry, kind)
+    }
+
+    /// Create a backend over an already-loaded registry.
+    pub fn with_registry(
+        client: Arc<RtClient>,
+        registry: Arc<Registry>,
+        kind: &str,
+    ) -> Result<Self> {
+        if registry.tiers("predict", kind).is_empty() {
+            bail!("no predict artifacts for kernel kind {kind:?}");
+        }
+        Ok(Self { client, registry, kind: kind.to_string(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Largest usable dataset size (capacity of the biggest tier).
+    pub fn max_points(&self) -> usize {
+        self.registry.tiers("predict", &self.kind).last().map(|m| m.n_max).unwrap_or(0)
+    }
+
+    /// Candidate batch size the artifacts were compiled for.
+    pub fn batch_size(&self) -> usize {
+        self.registry.tiers("predict", &self.kind).first().map(|m| m.b).unwrap_or(0)
+    }
+
+    /// Padded feature dimension.
+    pub fn d_max(&self) -> usize {
+        self.registry.tiers("predict", &self.kind).first().map(|m| m.d_max).unwrap_or(0)
+    }
+
+    /// Hyper-parameter vector length (d_max + 2).
+    pub fn hp_dim(&self) -> usize {
+        self.registry.tiers("predict", &self.kind).first().map(|m| m.hp_dim).unwrap_or(0)
+    }
+
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let exe = Arc::new(self.client.load_hlo_text(&meta.path)?);
+        cache.insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn tier(&self, program: &str, n: usize) -> Result<&ArtifactMeta> {
+        self.registry.tier_for(program, &self.kind, n).with_context(|| {
+            format!("dataset of {n} points exceeds all {program}/{} tiers", self.kind)
+        })
+    }
+
+    /// Pad `(x, y)` (row-major `x`, `d` features) into tier-shaped literals.
+    fn padded_data(
+        &self,
+        meta: &ArtifactMeta,
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+    ) -> Result<[xla::Literal; 3]> {
+        let n = y.len();
+        assert_eq!(x.len(), n * d, "x must be n*d row-major");
+        assert!(d <= meta.d_max, "dim {d} exceeds artifact d_max {}", meta.d_max);
+        let mut xp = vec![0f32; meta.n_max * meta.d_max];
+        for i in 0..n {
+            for j in 0..d {
+                xp[i * meta.d_max + j] = x[i * d + j] as f32;
+            }
+        }
+        let mut yp = vec![0f32; meta.n_max];
+        let mut mp = vec![0f32; meta.n_max];
+        for i in 0..n {
+            yp[i] = y[i] as f32;
+            mp[i] = 1.0;
+        }
+        Ok([
+            literal_f32(&xp, &[meta.n_max as i64, meta.d_max as i64])?,
+            literal_f32(&yp, &[meta.n_max as i64])?,
+            literal_f32(&mp, &[meta.n_max as i64])?,
+        ])
+    }
+
+    /// Pad a candidate block (`<= b` rows) into a `[b, d_max]` literal.
+    fn padded_cands(&self, meta: &ArtifactMeta, xs: &[f64], d: usize) -> Result<xla::Literal> {
+        let rows = xs.len() / d;
+        assert!(rows <= meta.b, "candidate block {rows} exceeds batch {}", meta.b);
+        let mut cp = vec![0f32; meta.b * meta.d_max];
+        for i in 0..rows {
+            for j in 0..d {
+                cp[i * meta.d_max + j] = xs[i * d + j] as f32;
+            }
+        }
+        literal_f32(&cp, &[meta.b as i64, meta.d_max as i64])
+    }
+
+    fn padded_hp(&self, meta: &ArtifactMeta, loghp: &[f64], d: usize) -> Result<xla::Literal> {
+        // loghp comes in as [log l_1..log l_d, log sigma_f, log sigma_n];
+        // pad the lengthscale block out to d_max (padded dims are zero
+        // features, so their lengthscale value is irrelevant; use 0.0).
+        assert_eq!(loghp.len(), d + 2);
+        let mut hp = vec![0f32; meta.hp_dim];
+        for j in 0..d {
+            hp[j] = loghp[j] as f32;
+        }
+        hp[meta.hp_dim - 2] = loghp[d] as f32;
+        hp[meta.hp_dim - 1] = loghp[d + 1] as f32;
+        literal_f32(&hp, &[meta.hp_dim as i64])
+    }
+
+    /// Posterior mean/variance for up to `b` candidates.
+    ///
+    /// `x`: row-major `[n, d]`, `y`: `[n]`, `xs`: row-major `[rows, d]`
+    /// with `rows <= b`. Returns `(mu, var)` truncated to `rows`.
+    pub fn predict(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        xs: &[f64],
+        loghp: &[f64],
+        mean0: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let meta = self.tier("predict", y.len())?;
+        let exe = self.executable(meta)?;
+        let [xl, yl, ml] = self.padded_data(meta, x, y, d)?;
+        let args = [
+            xl,
+            yl,
+            ml,
+            self.padded_cands(meta, xs, d)?,
+            self.padded_hp(meta, loghp, d)?,
+            literal_f32(&[mean0 as f32], &[1])?,
+        ];
+        let out = exe.run_f32(&args)?;
+        let rows = xs.len() / d;
+        let mu = out[0][..rows].iter().map(|&v| v as f64).collect();
+        let var = out[1][..rows].iter().map(|&v| v as f64).collect();
+        Ok((mu, var))
+    }
+
+    /// Fused UCB acquisition `mu + alpha * sqrt(var)` for up to `b` candidates.
+    pub fn ucb(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        xs: &[f64],
+        loghp: &[f64],
+        mean0: f64,
+        alpha: f64,
+    ) -> Result<Vec<f64>> {
+        let meta = self.tier("ucb", y.len())?;
+        let exe = self.executable(meta)?;
+        let [xl, yl, ml] = self.padded_data(meta, x, y, d)?;
+        let args = [
+            xl,
+            yl,
+            ml,
+            self.padded_cands(meta, xs, d)?,
+            self.padded_hp(meta, loghp, d)?,
+            literal_f32(&[mean0 as f32], &[1])?,
+            literal_f32(&[alpha as f32], &[1])?,
+        ];
+        let out = exe.run_f32(&args)?;
+        let rows = xs.len() / d;
+        Ok(out[0][..rows].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Log marginal likelihood + gradient w.r.t. `loghp` (length `d + 2`:
+    /// the padded lengthscale gradient entries are dropped).
+    pub fn lml_grad(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        d: usize,
+        loghp: &[f64],
+        mean0: f64,
+    ) -> Result<(f64, Vec<f64>)> {
+        let meta = self.tier("lml", y.len())?;
+        let exe = self.executable(meta)?;
+        let [xl, yl, ml] = self.padded_data(meta, x, y, d)?;
+        let args = [
+            xl,
+            yl,
+            ml,
+            self.padded_hp(meta, loghp, d)?,
+            literal_f32(&[mean0 as f32], &[1])?,
+        ];
+        let out = exe.run_f32(&args)?;
+        let lml = out[0][0] as f64;
+        let mut grad = Vec::with_capacity(d + 2);
+        for j in 0..d {
+            grad.push(out[1][j] as f64);
+        }
+        grad.push(out[1][meta.hp_dim - 2] as f64);
+        grad.push(out[1][meta.hp_dim - 1] as f64);
+        Ok((lml, grad))
+    }
+}

@@ -1,0 +1,89 @@
+//! Run statistics writers — the `limbo::stat::*` policy family.
+//!
+//! [`RunLogger`] writes the standard Limbo run files into a run directory:
+//! `samples.dat` (evaluated points), `observations.dat`, `best.dat`
+//! (best-so-far trace), and `meta.dat` (dimension, wall time). All files
+//! are plain TSV so downstream plotting needs no extra tooling.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// TSV run logger; every write goes through buffered files flushed on drop.
+pub struct RunLogger {
+    dir: PathBuf,
+    samples: BufWriter<File>,
+    observations: BufWriter<File>,
+    best: BufWriter<File>,
+    start: Instant,
+}
+
+impl RunLogger {
+    /// Create (or truncate) the run files inside `dir`.
+    pub fn create(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let open = |name: &str| -> std::io::Result<BufWriter<File>> {
+            Ok(BufWriter::new(File::create(dir.join(name))?))
+        };
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            samples: open("samples.dat")?,
+            observations: open("observations.dat")?,
+            best: open("best.dat")?,
+            start: Instant::now(),
+        })
+    }
+
+    /// Record one evaluation.
+    pub fn log_sample(&mut self, iteration: usize, x: &[f64], y: f64, best: f64) {
+        let xs: Vec<String> = x.iter().map(|v| format!("{v:.10e}")).collect();
+        let _ = writeln!(self.samples, "{iteration}\t{}", xs.join("\t"));
+        let _ = writeln!(self.observations, "{iteration}\t{y:.10e}");
+        let _ = writeln!(
+            self.best,
+            "{iteration}\t{best:.10e}\t{:.6}",
+            self.start.elapsed().as_secs_f64()
+        );
+    }
+
+    /// Write the run footer (`meta.dat`) and flush everything.
+    pub fn finish(&mut self, dim: usize, total_evals: usize) {
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let _ = std::fs::write(
+            self.dir.join("meta.dat"),
+            format!("dim\t{dim}\nevaluations\t{total_evals}\nwall_seconds\t{elapsed:.6}\n"),
+        );
+        let _ = self.samples.flush();
+        let _ = self.observations.flush();
+        let _ = self.best.flush();
+    }
+
+    /// The run directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_all_files() {
+        let dir = std::env::temp_dir().join("limbo_stat_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut log = RunLogger::create(&dir).unwrap();
+        log.log_sample(0, &[0.1, 0.2], 1.5, 1.5);
+        log.log_sample(1, &[0.3, 0.4], 0.5, 1.5);
+        log.finish(2, 2);
+        for f in ["samples.dat", "observations.dat", "best.dat", "meta.dat"] {
+            let content = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(!content.is_empty(), "{f} should not be empty");
+        }
+        let best = std::fs::read_to_string(dir.join("best.dat")).unwrap();
+        assert_eq!(best.lines().count(), 2);
+        let samples = std::fs::read_to_string(dir.join("samples.dat")).unwrap();
+        assert!(samples.lines().next().unwrap().starts_with("0\t"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Stopping criteria — the `limbo::stop::*` policy family.
+
+/// Snapshot of the run the criteria inspect each iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct StopContext {
+    /// Iterations completed (excluding initialization).
+    pub iteration: usize,
+    /// Total evaluations (including initialization).
+    pub evaluations: usize,
+    /// Incumbent best value.
+    pub best: f64,
+}
+
+/// A stop rule; the loop ends when any active criterion fires.
+pub trait StopCriterion: Send + Sync {
+    /// Should the run stop now?
+    fn stop(&self, ctx: &StopContext) -> bool;
+}
+
+/// Stop after a fixed number of iterations (Limbo's `stop::MaxIterations`).
+#[derive(Clone, Debug)]
+pub struct MaxIterations(pub usize);
+
+impl StopCriterion for MaxIterations {
+    fn stop(&self, ctx: &StopContext) -> bool {
+        ctx.iteration >= self.0
+    }
+}
+
+/// Stop once the best value reaches a target (Limbo's
+/// `stop::MaxPredictedValue` analogue on observations).
+#[derive(Clone, Debug)]
+pub struct TargetReached(pub f64);
+
+impl StopCriterion for TargetReached {
+    fn stop(&self, ctx: &StopContext) -> bool {
+        ctx.best >= self.0
+    }
+}
+
+/// Stop after a total evaluation budget (init + iterations).
+#[derive(Clone, Debug)]
+pub struct MaxEvaluations(pub usize);
+
+impl StopCriterion for MaxEvaluations {
+    fn stop(&self, ctx: &StopContext) -> bool {
+        ctx.evaluations >= self.0
+    }
+}
+
+/// Fire when *any* of the inner criteria fires.
+pub struct AnyOf(pub Vec<Box<dyn StopCriterion>>);
+
+impl StopCriterion for AnyOf {
+    fn stop(&self, ctx: &StopContext) -> bool {
+        self.0.iter().any(|c| c.stop(ctx))
+    }
+}
+
+impl<A: StopCriterion, B: StopCriterion> StopCriterion for (A, B) {
+    fn stop(&self, ctx: &StopContext) -> bool {
+        self.0.stop(ctx) || self.1.stop(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(iteration: usize, best: f64) -> StopContext {
+        StopContext { iteration, evaluations: iteration + 10, best }
+    }
+
+    #[test]
+    fn max_iterations_fires_at_limit() {
+        let s = MaxIterations(5);
+        assert!(!s.stop(&ctx(4, 0.0)));
+        assert!(s.stop(&ctx(5, 0.0)));
+    }
+
+    #[test]
+    fn target_reached() {
+        let s = TargetReached(1.0);
+        assert!(!s.stop(&ctx(0, 0.5)));
+        assert!(s.stop(&ctx(0, 1.0)));
+    }
+
+    #[test]
+    fn tuple_composition_is_or() {
+        let s = (MaxIterations(5), TargetReached(1.0));
+        assert!(s.stop(&ctx(2, 2.0)));
+        assert!(s.stop(&ctx(7, 0.0)));
+        assert!(!s.stop(&ctx(2, 0.0)));
+    }
+
+    #[test]
+    fn any_of_dynamic() {
+        let s = AnyOf(vec![Box::new(MaxIterations(3)), Box::new(MaxEvaluations(100))]);
+        assert!(s.stop(&ctx(3, 0.0)));
+        assert!(!s.stop(&ctx(1, 0.0)));
+    }
+}

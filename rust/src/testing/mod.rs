@@ -1,0 +1,78 @@
+//! Mini property-testing driver (proptest is not available offline).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! seeded [`Pcg64`]; on failure it reports the case index and seed so the
+//! exact input is reproducible. No shrinking — inputs are kept small by
+//! construction instead.
+
+use crate::rng::Pcg64;
+
+/// Number of cases property tests run by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` generated inputs. `gen` builds an input from the
+/// per-case RNG; `prop` returns `Err(reason)` to fail.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg64::seed(seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed}): {reason}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two floats are close with a relative-or-absolute tol.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Convenience: assert all pairs in two slices are close.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", 1, 32, |rng| (rng.next_f64(), rng.next_f64()), |&(a, b)| {
+            close(a + b, b + a, 1e-15)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failure() {
+        check("always-fails", 2, 4, |rng| rng.next_f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_and_all_close() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 2.0, 1e-9).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-12).is_err());
+    }
+}

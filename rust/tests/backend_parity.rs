@@ -1,0 +1,143 @@
+//! Native-vs-XLA backend parity across dataset sizes, kernels and tiers —
+//! the contract that lets the two GP backends be swapped freely. Skips
+//! cleanly when `artifacts/` is absent.
+
+use std::sync::Arc;
+
+use limbo::coordinator::xla_model::XlaGpModel;
+use limbo::kernel::{Kernel, Matern52, SquaredExpArd};
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::rng::Pcg64;
+use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
+
+fn dataset(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Pcg64::seed(seed);
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+    let ys: Vec<f64> =
+        xs.iter().map(|x| (5.0 * x[0]).sin() + x.iter().sum::<f64>() * 0.3).collect();
+    (xs, ys)
+}
+
+fn check_parity<K: Kernel>(kernel: K, kind: &str, n: usize, dim: usize) {
+    let Some(dir) = find_artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().expect("client"));
+    let backend = match XlaGp::new(client, &dir, kind) {
+        Ok(b) => Arc::new(b),
+        Err(e) => {
+            eprintln!("skipping {kind}: {e}");
+            return;
+        }
+    };
+    let (xs, ys) = dataset(n, dim, 77);
+    let mut native = Gp::new(kernel, DataMean::default(), 1e-2);
+    native.fit(&xs, &ys);
+    let mut xla = XlaGpModel::new(backend, dim);
+    xla.loghp = native.xla_loghp();
+    xla.fit(&xs, &ys);
+
+    let mut rng = Pcg64::seed(5);
+    for _ in 0..25 {
+        let p = rng.unit_point(dim);
+        let (mn, vn) = native.predict(&p);
+        let (mx, vx) = xla.predict(&p);
+        assert!(
+            (mn - mx).abs() < 2e-3 * (1.0 + mn.abs()),
+            "{kind} n={n} dim={dim}: mu {mn} vs {mx}"
+        );
+        assert!(
+            (vn - vx).abs() < 2e-3 * (1.0 + vn.abs()),
+            "{kind} n={n} dim={dim}: var {vn} vs {vx}"
+        );
+    }
+}
+
+#[test]
+fn parity_matern52_across_tiers() {
+    // crosses the 32 and 64 tier boundaries
+    for n in [5, 31, 33, 63, 70] {
+        check_parity(Matern52::new(2), "matern52", n, 2);
+    }
+}
+
+#[test]
+fn parity_se_ard() {
+    for n in [10, 40] {
+        check_parity(SquaredExpArd::new(2), "se_ard", n, 2);
+    }
+}
+
+#[test]
+fn parity_high_dim() {
+    // d = 6 exercises feature padding to d_max = 8
+    check_parity(Matern52::new(6), "matern52", 25, 6);
+}
+
+#[test]
+fn parity_with_anisotropic_lengthscales() {
+    let Some(_) = find_artifact_dir() else {
+        return;
+    };
+    let mut k = Matern52::new(2);
+    k.set_params(&[-0.7, 0.4, 0.2]); // distinct lengthscales + amplitude
+    check_parity(k, "matern52", 20, 2);
+}
+
+#[test]
+fn xla_lml_close_to_native() {
+    let Some(dir) = find_artifact_dir() else {
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().expect("client"));
+    let backend = Arc::new(XlaGp::new(client, &dir, "se_ard").expect("backend"));
+    let (xs, ys) = dataset(18, 2, 9);
+    let mut native = Gp::new(SquaredExpArd::new(2), DataMean::default(), 1e-2);
+    native.learn_noise = true;
+    native.fit(&xs, &ys);
+
+    let flat: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let mean0 = ys.iter().sum::<f64>() / ys.len() as f64;
+    let loghp = native.xla_loghp();
+    let (lml_xla, grad_xla) = backend.lml_grad(&flat, &ys, 2, &loghp, mean0).expect("lml");
+    let lml_native = native.log_marginal_likelihood();
+    assert!(
+        (lml_xla - lml_native).abs() < 1e-2 * (1.0 + lml_native.abs()),
+        "lml {lml_xla} vs {lml_native}"
+    );
+    let grad_native = native.lml_grad();
+    // layouts match: [log l1, log l2, log sf, log sn]
+    for i in 0..4 {
+        assert!(
+            (grad_xla[i] - grad_native[i]).abs() < 5e-2 * (1.0 + grad_native[i].abs()),
+            "grad[{i}]: {} vs {}",
+            grad_xla[i],
+            grad_native[i]
+        );
+    }
+}
+
+#[test]
+fn xla_hp_opt_improves_lml() {
+    let Some(dir) = find_artifact_dir() else {
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().expect("client"));
+    let backend = Arc::new(XlaGp::new(client, &dir, "se_ard").expect("backend"));
+    let mut rng = Pcg64::seed(31);
+    let xs: Vec<Vec<f64>> = (0..25).map(|_| rng.unit_point(1)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| (10.0 * x[0]).sin()).collect();
+
+    let mut model = XlaGpModel::new(backend.clone(), 1);
+    model.loghp = vec![1.5, 0.0, (0.05f64).ln()]; // badly mis-specified lengthscale
+    model.fit(&xs, &ys);
+    let flat: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let m0 = ys.iter().sum::<f64>() / ys.len() as f64;
+    let (before, _) = backend.lml_grad(&flat, &ys, 1, &model.loghp, m0).unwrap();
+    model.optimize_hyperparams();
+    let (after, _) = backend.lml_grad(&flat, &ys, 1, &model.loghp, m0).unwrap();
+    assert!(after > before + 1.0, "XLA HPO should improve LML: {before} -> {after}");
+    assert!(model.loghp[0] < 1.5, "lengthscale should shrink: {}", model.loghp[0]);
+}

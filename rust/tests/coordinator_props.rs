@@ -1,0 +1,288 @@
+//! Property tests on coordinator invariants: tier routing, candidate
+//! batching, mask-padding exactness (fuzzed from the Rust side), ask/tell
+//! state, config round-trips, and experiment aggregation. Uses the
+//! in-crate randomized `testing::check` driver (proptest is unavailable
+//! offline); XLA-dependent properties skip when artifacts are absent.
+
+use std::sync::Arc;
+
+use limbo::benchlib::Summary;
+use limbo::coordinator::config::Config;
+use limbo::coordinator::multiobj::Archive;
+use limbo::coordinator::xla_model::XlaGpModel;
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::rng::Pcg64;
+use limbo::runtime::{find_artifact_dir, Registry, RtClient, XlaGp};
+use limbo::testing;
+
+#[test]
+fn tier_routing_picks_minimal_sufficient_tier() {
+    let Some(dir) = find_artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let reg = Registry::load(&dir).unwrap();
+    testing::check(
+        "tier-routing",
+        0x7162,
+        128,
+        |rng: &mut Pcg64| 1 + rng.below(300),
+        |&n| {
+            let tiers = reg.tiers("predict", "matern52");
+            let chosen = reg.tier_for("predict", "matern52", n);
+            match chosen {
+                Some(meta) => {
+                    if meta.n_max < n {
+                        return Err(format!("tier {} cannot hold {n}", meta.n_max));
+                    }
+                    // minimality: no smaller tier also fits
+                    for t in tiers {
+                        if t.n_max >= n && t.n_max < meta.n_max {
+                            return Err(format!(
+                                "tier {} chosen but {} suffices",
+                                meta.n_max, t.n_max
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+                None => {
+                    let max = tiers.iter().map(|t| t.n_max).max().unwrap_or(0);
+                    if n <= max {
+                        Err(format!("no tier for {n} but max is {max}"))
+                    } else {
+                        Ok(())
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn batching_is_chunk_invariant() {
+    // predictions must not depend on how candidates are split into blocks
+    let Some(dir) = find_artifact_dir() else {
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().unwrap());
+    let backend = Arc::new(XlaGp::new(client, &dir, "matern52").unwrap());
+    let mut rng = Pcg64::seed(0xBA7C);
+    let xs: Vec<Vec<f64>> = (0..15).map(|_| rng.unit_point(2)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[0] * x[1]).collect();
+    let mut model = XlaGpModel::new(backend, 2);
+    model.fit(&xs, &ys);
+
+    // 100 candidates -> chunks of 64 + 36; compare against per-point
+    let cands: Vec<Vec<f64>> = (0..100).map(|_| rng.unit_point(2)).collect();
+    let batched = model.predict_batch(&cands);
+    for (i, c) in cands.iter().enumerate() {
+        let (mu, var) = model.predict(c);
+        testing::close(batched[i].0, mu, 1e-5)
+            .map_err(|e| format!("mu[{i}]: {e}"))
+            .unwrap();
+        testing::close(batched[i].1, var, 1e-5)
+            .map_err(|e| format!("var[{i}]: {e}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn padding_is_exact_across_random_dataset_sizes() {
+    // fuzz the mask-padding contract: XLA result must track the native GP
+    // (same hyper-params) for any dataset size within the top tier
+    let Some(dir) = find_artifact_dir() else {
+        return;
+    };
+    let client = Arc::new(RtClient::cpu().unwrap());
+    let backend = Arc::new(XlaGp::new(client, &dir, "matern52").unwrap());
+    testing::check(
+        "padding-exactness",
+        0xBEE5,
+        12,
+        |rng: &mut Pcg64| {
+            let n = 2 + rng.below(70);
+            let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
+            let ys: Vec<f64> = xs.iter().map(|x| (3.0 * x[0]).sin() - x[1]).collect();
+            let probe = rng.unit_point(2);
+            (xs, ys, probe)
+        },
+        |(xs, ys, probe)| {
+            let mut native = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+            native.fit(xs, ys);
+            let mut xla = XlaGpModel::new(backend.clone(), 2);
+            xla.loghp = native.xla_loghp();
+            xla.fit(xs, ys);
+            let (mn, vn) = native.predict(probe);
+            let (mx, vx) = xla.predict(probe);
+            testing::close(mn, mx, 5e-3)?;
+            testing::close(vn, vx, 5e-3)
+        },
+    );
+}
+
+#[test]
+fn ask_tell_state_is_consistent() {
+    use limbo::acqui::Ucb;
+    use limbo::coordinator::AskTellServer;
+    use limbo::opt::RandomPoint;
+    testing::check(
+        "ask-tell-state",
+        0xA5C,
+        16,
+        |rng: &mut Pcg64| (1 + rng.below(3), 3 + rng.below(10), rng.next_u64()),
+        |&(dim, steps, seed)| {
+            let mut srv = AskTellServer::new(
+                Gp::new(Matern52::new(dim), DataMean::default(), 1e-3),
+                Ucb::default(),
+                RandomPoint::new(32),
+                dim,
+                seed,
+            );
+            let mut true_best = f64::NEG_INFINITY;
+            for i in 0..steps {
+                let x = srv.ask();
+                if x.len() != dim || x.iter().any(|&v| !(0.0..=1.0).contains(&v)) {
+                    return Err(format!("ask returned invalid point {x:?}"));
+                }
+                let y = -(i as f64 - 3.0).abs(); // deterministic outcomes
+                srv.tell(&x, y);
+                true_best = true_best.max(y);
+            }
+            match srv.best() {
+                Some((_, v)) if (v - true_best).abs() < 1e-15 => Ok(()),
+                other => Err(format!("best {:?} != {true_best}", other.map(|b| b.1))),
+            }
+        },
+    );
+}
+
+#[test]
+fn summary_quantiles_are_order_statistics() {
+    testing::check(
+        "summary-props",
+        0x5A11,
+        64,
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(40);
+            (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect::<Vec<f64>>()
+        },
+        |samples| {
+            let s = Summary::from(samples);
+            if !(s.min <= s.q1 && s.q1 <= s.median && s.median <= s.q3 && s.q3 <= s.max) {
+                return Err(format!("quantiles out of order: {s:?}"));
+            }
+            if s.min < samples.iter().cloned().fold(f64::INFINITY, f64::min) - 1e-12 {
+                return Err("min below sample min".into());
+            }
+            if s.std < 0.0 {
+                return Err("negative std".into());
+            }
+            // median is permutation invariant
+            let mut rev = samples.clone();
+            rev.reverse();
+            testing::close(Summary::from(&rev).median, s.median, 1e-12)
+        },
+    );
+}
+
+#[test]
+fn config_roundtrip_fuzz() {
+    testing::check(
+        "config-roundtrip",
+        0xC0F,
+        64,
+        |rng: &mut Pcg64| {
+            let n = rng.below(6);
+            (0..n)
+                .map(|i| (format!("key{i}"), rng.below(1000)))
+                .collect::<Vec<(String, usize)>>()
+        },
+        |pairs| {
+            let text: String =
+                pairs.iter().map(|(k, v)| format!("{k} = {v}\n")).collect();
+            let cfg = Config::parse(&text).map_err(|e| e)?;
+            for (k, v) in pairs {
+                if cfg.get_usize(k, usize::MAX) != *v {
+                    return Err(format!("lost {k}={v}"));
+                }
+            }
+            if cfg.len() != pairs.len() {
+                return Err("length mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pareto_archive_is_always_nondominated() {
+    testing::check(
+        "pareto-invariant",
+        0xFA12,
+        32,
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(30);
+            (0..n)
+                .map(|_| vec![rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)])
+                .collect::<Vec<Vec<f64>>>()
+        },
+        |points| {
+            let mut archive = Archive::default();
+            for (i, p) in points.iter().enumerate() {
+                archive.insert(vec![i as f64], p.clone());
+            }
+            let front = archive.front();
+            // pairwise non-domination
+            for (i, (_, a)) in front.iter().enumerate() {
+                for (j, (_, b)) in front.iter().enumerate() {
+                    if i != j && Archive::dominates(a, b) {
+                        return Err(format!("front contains dominated pair {a:?} > {b:?}"));
+                    }
+                }
+            }
+            // every input is dominated-by-or-equal-to something on the front
+            for p in points {
+                let covered = front
+                    .iter()
+                    .any(|(_, f)| f == p || Archive::dominates(f, p));
+                if !covered {
+                    return Err(format!("point {p:?} missing from front closure"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gp_state_roundtrip_fuzz() {
+    use limbo::model::GpState;
+    testing::check(
+        "gp-state-roundtrip",
+        0x5E12DE,
+        24,
+        |rng: &mut Pcg64| {
+            let dim = 1 + rng.below(4);
+            let n = 1 + rng.below(12);
+            let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+            let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (dim, xs, ys)
+        },
+        |(dim, xs, ys)| {
+            let mut gp = Gp::new(Matern52::new(*dim), DataMean::default(), 0.05);
+            gp.fit(xs, ys);
+            let text = GpState::capture(&gp).to_text();
+            let state = GpState::from_text(&text).map_err(|e| e)?;
+            let mut gp2 = Gp::new(Matern52::new(*dim), DataMean::default(), 0.2);
+            state.restore(&mut gp2)?;
+            let probe = vec![0.4; *dim];
+            let (m1, v1) = gp.predict(&probe);
+            let (m2, v2) = gp2.predict(&probe);
+            testing::close(m1, m2, 1e-10)?;
+            testing::close(v1, v2, 1e-10)
+        },
+    );
+}

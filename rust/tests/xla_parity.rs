@@ -1,0 +1,116 @@
+//! Integration test: the AOT HLO artifacts produce the same numbers from
+//! Rust (via PJRT) as the JAX graphs produced in Python.
+//!
+//! `python/compile/aot.py` dumps golden test vectors (inputs + expected
+//! predict/ucb/lml outputs) into `artifacts/golden/`; here we replay them
+//! through `runtime::XlaGp` and compare.  Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use limbo::runtime::{RtClient, XlaGp};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn load_vec(dir: &PathBuf, name: &str) -> Vec<f64> {
+    let path = dir.join("golden").join(format!("{name}.txt"));
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+        .split_whitespace()
+        .map(|t| t.parse::<f64>().unwrap())
+        .collect()
+}
+
+/// Golden inputs use 7 real points in 2 real dims, padded by python.
+/// Reconstruct the *unpadded* views the Rust API expects.
+struct Golden {
+    x: Vec<f64>,    // [7 * 2]
+    y: Vec<f64>,    // [7]
+    xs: Vec<f64>,   // [64 * 2]
+    loghp: Vec<f64>, // [4] = 2 lengthscales + sigma_f + sigma_n
+    mean0: f64,
+    alpha: f64,
+}
+
+fn load_golden(dir: &PathBuf) -> Golden {
+    const N: usize = 7;
+    const D: usize = 2;
+    const D_MAX: usize = 8;
+    const B: usize = 64;
+    let xp = load_vec(dir, "x");
+    let mut x = Vec::with_capacity(N * D);
+    for i in 0..N {
+        for j in 0..D {
+            x.push(xp[i * D_MAX + j]);
+        }
+    }
+    let xsp = load_vec(dir, "xs");
+    let mut xs = Vec::with_capacity(B * D);
+    for i in 0..B {
+        for j in 0..D {
+            xs.push(xsp[i * D_MAX + j]);
+        }
+    }
+    let hp = load_vec(dir, "loghp");
+    let loghp = vec![hp[0], hp[1], hp[D_MAX], hp[D_MAX + 1]];
+    Golden {
+        x,
+        y: load_vec(dir, "y")[..N].to_vec(),
+        xs,
+        loghp,
+        mean0: load_vec(dir, "mean0")[0],
+        alpha: load_vec(dir, "alpha_ucb")[0],
+    }
+}
+
+fn assert_close(actual: &[f64], expected: &[f64], tol: f64, what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: length mismatch");
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        let scale = 1.0_f64.max(e.abs());
+        assert!(
+            (a - e).abs() <= tol * scale,
+            "{what}[{i}]: got {a}, want {e} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn xla_artifacts_match_python_golden() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let golden = load_golden(&dir);
+    let client = Arc::new(RtClient::cpu().expect("PJRT CPU client"));
+
+    for kind in ["se_ard", "matern52"] {
+        let gp = match XlaGp::new(client.clone(), &dir, kind) {
+            Ok(gp) => gp,
+            Err(e) => {
+                eprintln!("skipping kind {kind}: {e}");
+                continue;
+            }
+        };
+        let (mu, var) = gp
+            .predict(&golden.x, &golden.y, 2, &golden.xs, &golden.loghp, golden.mean0)
+            .expect("predict");
+        assert_close(&mu, &load_vec(&dir, &format!("{kind}_mu")), 1e-3, "mu");
+        assert_close(&var, &load_vec(&dir, &format!("{kind}_var")), 1e-3, "var");
+
+        let acq = gp
+            .ucb(&golden.x, &golden.y, 2, &golden.xs, &golden.loghp, golden.mean0, golden.alpha)
+            .expect("ucb");
+        assert_close(&acq, &load_vec(&dir, &format!("{kind}_acq")), 1e-3, "acq");
+
+        let (lml, grad) = gp
+            .lml_grad(&golden.x, &golden.y, 2, &golden.loghp, golden.mean0)
+            .expect("lml");
+        assert_close(&[lml], &load_vec(&dir, &format!("{kind}_lml")), 1e-3, "lml");
+        let gg = load_vec(&dir, &format!("{kind}_grad"));
+        let expected_grad = vec![gg[0], gg[1], gg[8], gg[9]];
+        assert_close(&grad, &expected_grad, 2e-2, "grad");
+    }
+}
