@@ -1,0 +1,70 @@
+//! Sparse GP — a 2 000-evaluation ask/tell run on the [`AdaptiveModel`]
+//! surrogate.
+//!
+//! The dense GP is exact but pays O(n²) per prediction and O(n³) per
+//! refit; at a 2 000-sample budget that dominates the loop. The
+//! `AdaptiveModel` starts dense (exact, cheap while small) and migrates
+//! to the FITC sparse GP (`model/sgp`) once the observation count crosses
+//! its threshold, after which per-iteration cost is governed by the
+//! m = 128 inducing points rather than by n.
+//!
+//! Run: `cargo run --release --example sparse_gp`
+
+use std::time::Instant;
+
+use limbo::coordinator::AskTellServer;
+use limbo::prelude::*;
+
+fn main() {
+    let dim = 2;
+    let budget = 2_000usize;
+    // multimodal synthetic target on [0,1]^2: one dominant bump near
+    // (0.2, 0.7) plus an oscillating field of local optima
+    let f = |x: &[f64]| {
+        let a = (x[0] - 0.2) * 3.0;
+        let b = (x[1] - 0.7) * 3.0;
+        (-(a * a + b * b)).exp() + 0.3 * (8.0 * x[0]).sin() * (7.0 * x[1]).cos()
+    };
+
+    let model = AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-3)
+        .with_threshold(256)
+        .with_sparse_config(SgpConfig { max_inducing: 128, ..SgpConfig::default() });
+    let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42);
+
+    let t0 = Instant::now();
+    let mut switched_at = None;
+    for i in 1..=budget {
+        let x = srv.ask();
+        let y = f(&x);
+        srv.tell(&x, y);
+        if switched_at.is_none() && srv.model.is_sparse() {
+            switched_at = Some(i);
+        }
+        if i % 250 == 0 {
+            let (bx, bv) = srv.best().expect("observations recorded");
+            println!(
+                "eval {i:>5}  t={:>8.2?}  model={:<6}  best={bv:.4} at ({:.3}, {:.3})",
+                t0.elapsed(),
+                if srv.model.is_sparse() { "sparse" } else { "dense" },
+                bx[0],
+                bx[1],
+            );
+        }
+    }
+
+    let (bx, bv) = srv.best().expect("observations recorded");
+    println!("\ntotal       : {:.2?} for {budget} evaluations", t0.elapsed());
+    println!(
+        "migration   : dense -> sparse at eval {} (threshold {})",
+        switched_at.map_or_else(|| "never".to_string(), |i| i.to_string()),
+        srv.model.threshold(),
+    );
+    if let Some(sgp) = srv.model.as_sparse() {
+        println!(
+            "sparse model: n={} observations summarized by m={} inducing points",
+            sgp.n_samples(),
+            sgp.inducing_points().len(),
+        );
+    }
+    println!("best value  : {bv:.6} at ({:.4}, {:.4})", bx[0], bx[1]);
+}

@@ -1,14 +1,23 @@
 //! GP scaling bench: per-iteration cost of adding a sample + predicting,
-//! incremental Cholesky vs full refit, as N grows.
+//! incremental Cholesky vs full refit, as N grows — plus the dense-vs-
+//! sparse sweep that motivates the `model/sgp` subsystem.
 //!
 //! Expected shape: incremental `add_sample` grows ~O(n^2) while the full
-//! refit grows ~O(n^3) — the reason Limbo stays usable on embedded
-//! hardware as the dataset grows.
+//! refit grows ~O(n^3); the sparse GP's fit grows ~O(n·m^2) and its
+//! predict is n-independent, so the dense/sparse gap widens without bound.
+//!
+//! The sweep section prints one machine-readable JSON row per
+//! (model, n, m) config so runs can be diffed across commits:
+//! `{"bench":"gp_scaling","model":"sparse","n":4096,"m":128,...}`.
+//!
+//! Set `LIMBO_GP_SCALING_QUICK=1` to cap the sweep at n=1024 (smoke runs).
+
+use std::time::Instant;
 
 use limbo::benchlib::{header, Bencher};
 use limbo::kernel::Matern52;
 use limbo::mean::DataMean;
-use limbo::model::{gp::Gp, Model};
+use limbo::model::{gp::Gp, Model, SgpConfig, SparseGp};
 use limbo::rng::Pcg64;
 
 fn dataset(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
@@ -18,7 +27,22 @@ fn dataset(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
     (xs, ys)
 }
 
-fn main() {
+/// Median wall-clock seconds of `reps` runs of `f` (coarse timer for the
+/// expensive large-n configs where the calibrating [`Bencher`] would take
+/// minutes).
+fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn small_n_section() {
     let b = Bencher::default();
     header("GP scaling (dim=2): add-sample (incremental) vs full refit vs predict");
     for n in [16, 32, 64, 128, 256] {
@@ -47,4 +71,70 @@ fn main() {
         let probe = [0.31, 0.77];
         b.bench(&format!("predict/n={n}"), || gp.predict(&probe));
     }
+}
+
+fn json_row(model: &str, n: usize, m: usize, fit_s: f64, predict_s: f64, speedup: f64) {
+    println!(
+        "{{\"bench\":\"gp_scaling\",\"model\":\"{model}\",\"n\":{n},\"m\":{m},\
+         \"fit_s\":{fit_s:.6},\"predict_s\":{predict_s:.9},\
+         \"fit_plus_predict_s\":{:.6},\"speedup_vs_dense\":{speedup:.2}}}",
+        fit_s + predict_s
+    );
+}
+
+fn sweep_section(quick: bool) {
+    header("dense vs sparse sweep (dim=2; JSON row per config)");
+    let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
+    let probes: Vec<Vec<f64>> = {
+        let mut rng = Pcg64::seed(7);
+        (0..64).map(|_| rng.unit_point(2)).collect()
+    };
+    for &n in ns {
+        let (xs, ys) = dataset(n, 2, 42);
+        let reps = match n {
+            0..=256 => 5,
+            257..=1024 => 3,
+            _ => 1,
+        };
+
+        // dense reference
+        let mut dense = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        let dense_fit = time_median(reps, || {
+            let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+            gp.fit(&xs, &ys);
+            dense = gp;
+        });
+        let dense_pred = time_median(reps, || {
+            for p in &probes {
+                std::hint::black_box(dense.predict(p));
+            }
+        }) / probes.len() as f64;
+        let dense_total = dense_fit + dense_pred;
+        json_row("dense", n, 0, dense_fit, dense_pred, 1.0);
+
+        for &m in &[32usize, 64, 128] {
+            let cfg = SgpConfig { max_inducing: m, ..SgpConfig::default() };
+            let mut sparse =
+                SparseGp::with_config(Matern52::new(2), DataMean::default(), 1e-2, cfg.clone());
+            let sparse_fit = time_median(reps, || {
+                let mut sgp =
+                    SparseGp::with_config(Matern52::new(2), DataMean::default(), 1e-2, cfg.clone());
+                sgp.fit(&xs, &ys);
+                sparse = sgp;
+            });
+            let sparse_pred = time_median(reps, || {
+                for p in &probes {
+                    std::hint::black_box(sparse.predict(p));
+                }
+            }) / probes.len() as f64;
+            let speedup = dense_total / (sparse_fit + sparse_pred);
+            json_row("sparse", n, m, sparse_fit, sparse_pred, speedup);
+        }
+    }
+}
+
+fn main() {
+    let quick = matches!(std::env::var("LIMBO_GP_SCALING_QUICK").as_deref(), Ok("1"));
+    small_n_section();
+    sweep_section(quick);
 }

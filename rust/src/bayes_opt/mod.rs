@@ -19,7 +19,7 @@ use crate::acqui::{AcquiContext, AcquiFn, Ucb};
 use crate::init::{Initializer, RandomSampling};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
-use crate::model::{gp::Gp, Model};
+use crate::model::{gp::Gp, AdaptiveModel, Model};
 use crate::opt::{NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
 use crate::rng::Pcg64;
 use crate::stat::RunLogger;
@@ -126,6 +126,36 @@ impl DefaultBOptimizer {
             initializer: RandomSampling { n: 10 },
             inner_opt: RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
             stop: MaxIterations(40),
+            hp_schedule: HpSchedule::Never,
+            rng: Pcg64::seed(seed),
+            stats: None,
+        }
+    }
+}
+
+/// The large-budget configuration: same policies as
+/// [`DefaultBOptimizer`], but the surrogate is an
+/// [`AdaptiveModel`] that migrates from the exact dense GP to the sparse
+/// inducing-point GP once the evaluation count outgrows the dense regime.
+pub type AdaptiveBOptimizer = BOptimizer<
+    AdaptiveModel<Matern52, DataMean>,
+    Ucb,
+    RandomSampling,
+    ParallelRepeater<crate::opt::Chained<RandomPoint, NelderMead>>,
+    MaxIterations,
+>;
+
+impl AdaptiveBOptimizer {
+    /// Defaults for runs whose budget exceeds a few hundred evaluations
+    /// (`iterations` sets the stop rule; the model switches to sparse on
+    /// its own past [`crate::model::sgp::DEFAULT_SPARSE_THRESHOLD`]).
+    pub fn with_adaptive_defaults(dim: usize, seed: u64, iterations: usize) -> Self {
+        BOptimizer {
+            model: AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-4),
+            acquisition: Ucb::default(),
+            initializer: RandomSampling { n: 10 },
+            inner_opt: RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
+            stop: MaxIterations(iterations),
             hp_schedule: HpSchedule::Never,
             rng: Pcg64::seed(seed),
             stats: None,
@@ -277,6 +307,23 @@ mod tests {
             -(x[0] - 0.73).powi(2)
         }));
         assert!((best.x[0] - 0.73).abs() < 0.05, "x={:?}", best.x);
+    }
+
+    #[test]
+    fn adaptive_optimizer_goes_sparse_and_still_converges() {
+        let mut opt = AdaptiveBOptimizer::with_adaptive_defaults(1, 13, 30);
+        // force an early dense→sparse migration so the sparse path drives
+        // most of the run (keeps the test fast)
+        opt.model = AdaptiveModel::new(Matern52::new(1), DataMean::default(), 1e-4)
+            .with_threshold(15)
+            .with_sparse_config(crate::model::SgpConfig {
+                max_inducing: 24,
+                ..Default::default()
+            });
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.37).powi(2)));
+        assert!(opt.model.is_sparse(), "model should have migrated");
+        assert!(best.value > -0.01, "best={}", best.value);
+        assert_eq!(best.evaluations, 40); // 10 init + 30 iterations
     }
 
     #[test]

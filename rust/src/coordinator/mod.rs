@@ -26,5 +26,5 @@ pub mod service;
 pub mod xla_model;
 
 pub use experiment::{ExperimentRunner, ExperimentRow, RunOutcome};
-pub use service::{AskTellServer, ServerHandle};
+pub use service::{AskTellServer, DefaultAskTellServer, ServerHandle};
 pub use xla_model::XlaGpModel;

@@ -10,9 +10,11 @@
 use std::sync::mpsc;
 use std::thread;
 
-use crate::acqui::{AcquiContext, AcquiFn};
-use crate::model::Model;
-use crate::opt::Optimizer;
+use crate::acqui::{AcquiContext, AcquiFn, Ucb};
+use crate::kernel::Matern52;
+use crate::mean::DataMean;
+use crate::model::{AdaptiveModel, Model};
+use crate::opt::{Chained, NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
 use crate::rng::Pcg64;
 
 /// Requests a client can send.
@@ -44,6 +46,29 @@ where
     dim: usize,
     iteration: usize,
     best: Option<(Vec<f64>, f64)>,
+}
+
+/// The default service configuration: an [`AdaptiveModel`] surrogate
+/// (dense while small, sparse past its threshold — an always-on ask/tell
+/// server accumulates observations indefinitely, so the model must not
+/// degrade to O(n³) refits), UCB, random+Nelder-Mead restarts.
+pub type DefaultAskTellServer = AskTellServer<
+    AdaptiveModel<Matern52, DataMean>,
+    Ucb,
+    ParallelRepeater<Chained<RandomPoint, NelderMead>>,
+>;
+
+impl DefaultAskTellServer {
+    /// Service defaults for a `dim`-dimensional problem.
+    pub fn with_defaults(dim: usize, seed: u64) -> Self {
+        AskTellServer::new(
+            AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-3),
+            Ucb::default(),
+            RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
+            dim,
+            seed,
+        )
+    }
 }
 
 impl<M, A, O> AskTellServer<M, A, O>
@@ -192,6 +217,21 @@ mod tests {
         }
         let (bx, bv) = srv.best().unwrap();
         assert!(bv > -0.02, "best={bv} at {bx:?}");
+    }
+
+    #[test]
+    fn default_server_uses_adaptive_model_and_converges() {
+        let mut srv = DefaultAskTellServer::with_defaults(1, 17);
+        assert!(!srv.model.is_sparse());
+        let f = |x: &[f64]| -(x[0] - 0.8).powi(2);
+        for _ in 0..15 {
+            let x = srv.ask();
+            let y = f(&x);
+            srv.tell(&x, y);
+        }
+        let (_, bv) = srv.best().unwrap();
+        assert!(bv > -0.02, "best={bv}");
+        assert_eq!(srv.model.n_samples(), 15);
     }
 
     #[test]

@@ -11,10 +11,12 @@
 
 pub mod cholesky;
 pub mod eig;
+pub mod lowrank;
 pub mod matrix;
 pub mod vecops;
 
 pub use cholesky::CholeskyFactor;
 pub use eig::{sym_eig, SymEig};
+pub use lowrank::{rank1_update, spd_factor_jittered, weighted_normal_eqs};
 pub use matrix::Matrix;
 pub use vecops::{axpy, dot, norm2, scale, sub};

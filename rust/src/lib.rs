@@ -47,7 +47,7 @@ pub mod prelude {
     pub use crate::init::{Initializer, Lhs, RandomSampling};
     pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
     pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
-    pub use crate::model::{gp::Gp, GpState, Model};
+    pub use crate::model::{gp::Gp, AdaptiveModel, GpState, Model, SgpConfig, SgpState, SparseGp};
     pub use crate::opt::{Cmaes, Direct, NelderMead, Optimizer, OptimizerExt, RandomPoint};
     pub use crate::rng::Pcg64;
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};

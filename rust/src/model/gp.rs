@@ -68,6 +68,11 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
         &self.kernel
     }
 
+    /// Borrow the prior mean.
+    pub fn mean(&self) -> &M {
+        &self.mean
+    }
+
     /// Replace kernel hyper-parameters (log space) and refit.
     pub fn set_kernel_params(&mut self, p: &[f64]) {
         self.kernel.set_params(p);

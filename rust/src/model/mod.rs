@@ -2,17 +2,21 @@
 //!
 //! [`Model`] is the interface the acquisition functions and the
 //! [`crate::bayes_opt::BOptimizer`] loop see; [`gp::Gp`] is the native
-//! (pure-Rust, incremental-Cholesky) implementation and
+//! (pure-Rust, incremental-Cholesky) implementation,
+//! [`sgp::SparseGp`] the inducing-point approximation for large budgets
+//! (with [`sgp::AdaptiveModel`] switching between the two), and
 //! [`crate::runtime::XlaGp`] backs the same interface with AOT-compiled
 //! XLA artifacts (adapter in [`crate::coordinator`]).
 
 pub mod gp;
 pub mod hp_opt;
 pub mod serde;
+pub mod sgp;
 
 pub use gp::Gp;
-pub use serde::GpState;
+pub use serde::{GpState, SgpState};
 pub use hp_opt::{HpOptConfig, KernelLFOpt};
+pub use sgp::{AdaptiveModel, SgpConfig, SparseGp};
 
 /// A probabilistic surrogate: fit observations, predict mean + variance.
 pub trait Model: Send + Sync {

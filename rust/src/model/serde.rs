@@ -11,6 +11,11 @@
 //! x <d floats>      (n lines)
 //! y <float>         (n lines)
 //! ```
+//!
+//! [`SgpState`] extends the same layout for the sparse GP (header
+//! `limbo-sgp v1`, plus one `z <d floats>` line per inducing point), so a
+//! checkpoint restores the exact online-evolved inducing set rather than
+//! re-running the greedy selection.
 
 use std::io::Write;
 use std::path::Path;
@@ -18,7 +23,69 @@ use std::path::Path;
 use crate::kernel::Kernel;
 use crate::mean::MeanFn;
 use crate::model::gp::Gp;
+use crate::model::sgp::SparseGp;
 use crate::model::Model;
+
+/// Fields shared by the dense and sparse text formats.
+struct ParsedBody {
+    dim: usize,
+    hp: Vec<f64>,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    zs: Vec<Vec<f64>>,
+}
+
+/// Shared line-oriented parser behind [`GpState::from_text`] and
+/// [`SgpState::from_text`]: same tags, different header, the sparse
+/// format additionally accepts `z` (inducing-point) lines.
+fn parse_body(text: &str, expect_header: &str, allow_z: bool) -> Result<ParsedBody, String> {
+    let mut lines = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'));
+    let header = lines.next().ok_or("empty file")?;
+    if header != expect_header {
+        return Err(format!("bad header {header:?}"));
+    }
+    let mut dim = None;
+    let mut hp = Vec::new();
+    let mut n = None;
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut zs: Vec<Vec<f64>> = Vec::new();
+    for line in lines {
+        let mut parts = line.split_whitespace();
+        let tag = parts.next().unwrap();
+        let rest: Result<Vec<f64>, _> = parts.map(str::parse::<f64>).collect();
+        let rest = rest.map_err(|e| format!("parse error on {line:?}: {e}"))?;
+        let first = rest.first().copied();
+        match tag {
+            "dim" => {
+                dim = Some(first.ok_or_else(|| format!("missing value on {line:?}"))? as usize);
+            }
+            "hp" => hp = rest,
+            "n" => {
+                n = Some(first.ok_or_else(|| format!("missing value on {line:?}"))? as usize);
+            }
+            "x" => xs.push(rest),
+            "y" => ys.push(first.ok_or_else(|| format!("missing value on {line:?}"))?),
+            "z" if allow_z => zs.push(rest),
+            _ => return Err(format!("unknown tag {tag:?}")),
+        }
+    }
+    let dim = dim.ok_or("missing dim")?;
+    let n = n.ok_or("missing n")?;
+    if xs.len() != n || ys.len() != n {
+        return Err(format!("expected {n} samples, got {}x/{}y", xs.len(), ys.len()));
+    }
+    if xs.iter().any(|x| x.len() != dim) {
+        return Err("sample with wrong dimension".into());
+    }
+    if zs.iter().any(|z| z.len() != dim) {
+        return Err("inducing point with wrong dimension".into());
+    }
+    Ok(ParsedBody { dim, hp, xs, ys, zs })
+}
 
 /// Serializable snapshot of a GP's state.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,42 +157,8 @@ impl GpState {
 
     /// Parse from the text format.
     pub fn from_text(text: &str) -> Result<Self, String> {
-        let mut lines = text
-            .lines()
-            .map(str::trim)
-            .filter(|l| !l.is_empty() && !l.starts_with('#'));
-        let header = lines.next().ok_or("empty file")?;
-        if header != "limbo-gp v1" {
-            return Err(format!("bad header {header:?}"));
-        }
-        let mut dim = None;
-        let mut hp = Vec::new();
-        let mut n = None;
-        let mut xs: Vec<Vec<f64>> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        for line in lines {
-            let mut parts = line.split_whitespace();
-            let tag = parts.next().unwrap();
-            let rest: Result<Vec<f64>, _> = parts.map(str::parse::<f64>).collect();
-            let rest = rest.map_err(|e| format!("parse error on {line:?}: {e}"))?;
-            match tag {
-                "dim" => dim = Some(rest[0] as usize),
-                "hp" => hp = rest,
-                "n" => n = Some(rest[0] as usize),
-                "x" => xs.push(rest),
-                "y" => ys.push(rest[0]),
-                _ => return Err(format!("unknown tag {tag:?}")),
-            }
-        }
-        let dim = dim.ok_or("missing dim")?;
-        let n = n.ok_or("missing n")?;
-        if xs.len() != n || ys.len() != n {
-            return Err(format!("expected {n} samples, got {}x/{}y", xs.len(), ys.len()));
-        }
-        if xs.iter().any(|x| x.len() != dim) {
-            return Err("sample with wrong dimension".into());
-        }
-        Ok(Self { dim, hp, xs, ys })
+        let body = parse_body(text, "limbo-gp v1", false)?;
+        Ok(Self { dim: body.dim, hp: body.hp, xs: body.xs, ys: body.ys })
     }
 
     /// Write to a file.
@@ -150,6 +183,126 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
     /// Load state from a text file into this GP (must match dim/params).
     pub fn load(&mut self, path: &Path) -> Result<(), String> {
         GpState::load(path)?.restore(self)
+    }
+}
+
+/// Serializable snapshot of a [`SparseGp`]: the dense fields plus the
+/// inducing set (factors are recomputed on restore — they are a pure
+/// function of data, hyper-params, and inducing locations).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SgpState {
+    /// Input dimension.
+    pub dim: usize,
+    /// `[kernel log-params..., log sigma_n]`.
+    pub hp: Vec<f64>,
+    /// Training inputs.
+    pub xs: Vec<Vec<f64>>,
+    /// Training observations.
+    pub ys: Vec<f64>,
+    /// Inducing-point locations.
+    pub zs: Vec<Vec<f64>>,
+}
+
+impl SgpState {
+    /// Capture a sparse GP's state.
+    pub fn capture<K: Kernel, M: MeanFn>(sgp: &SparseGp<K, M>) -> Self {
+        Self {
+            dim: sgp.dim(),
+            hp: sgp.hp_vector(),
+            xs: sgp.samples().to_vec(),
+            ys: sgp.observations().to_vec(),
+            zs: sgp.inducing_points().to_vec(),
+        }
+    }
+
+    /// Apply this state onto a compatible sparse GP (same dim / param
+    /// count) and refit with the stored inducing set.
+    pub fn restore<K: Kernel, M: MeanFn>(&self, sgp: &mut SparseGp<K, M>) -> Result<(), String> {
+        if sgp.dim() != self.dim {
+            return Err(format!("dim mismatch: sgp {} vs state {}", sgp.dim(), self.dim));
+        }
+        if sgp.hp_vector().len() != self.hp.len() {
+            return Err(format!(
+                "hyper-param count mismatch: sgp {} vs state {}",
+                sgp.hp_vector().len(),
+                self.hp.len()
+            ));
+        }
+        if self.zs.iter().any(|z| z.len() != self.dim) {
+            return Err("inducing point with wrong dimension".into());
+        }
+        // hyper-params first (no intermediate refit against stale data) —
+        // fit_with_inducing performs the single full refit
+        sgp.set_hp_vector_no_refit(&self.hp, true);
+        sgp.fit_with_inducing(&self.xs, &self.ys, self.zs.clone());
+        Ok(())
+    }
+
+    /// Serialize to the text format (`limbo-sgp v1`).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("limbo-sgp v1\n");
+        out.push_str(&format!("dim {}\n", self.dim));
+        out.push_str("hp");
+        for v in &self.hp {
+            out.push_str(&format!(" {v:.17e}"));
+        }
+        out.push('\n');
+        out.push_str(&format!("n {}\n", self.ys.len()));
+        for x in &self.xs {
+            out.push('x');
+            for v in x {
+                out.push_str(&format!(" {v:.17e}"));
+            }
+            out.push('\n');
+        }
+        for y in &self.ys {
+            out.push_str(&format!("y {y:.17e}\n"));
+        }
+        for z in &self.zs {
+            out.push('z');
+            for v in z {
+                out.push_str(&format!(" {v:.17e}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse from the text format.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let body = parse_body(text, "limbo-sgp v1", true)?;
+        if body.zs.is_empty() && !body.ys.is_empty() {
+            return Err("sparse state with data but no inducing points".into());
+        }
+        if !body.zs.is_empty() && body.ys.is_empty() {
+            return Err("sparse state with inducing points but no data".into());
+        }
+        Ok(Self { dim: body.dim, hp: body.hp, xs: body.xs, ys: body.ys, zs: body.zs })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_text().as_bytes())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
+    /// Save the sparse GP (hyper-params + data + inducing set) to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        SgpState::capture(self).save(path)
+    }
+
+    /// Load state from a text file into this sparse GP (must match
+    /// dim/params).
+    pub fn load(&mut self, path: &Path) -> Result<(), String> {
+        SgpState::load(path)?.restore(self)
     }
 }
 
@@ -210,5 +363,69 @@ mod tests {
         assert!(GpState::from_text("limbo-gp v2\ndim 1\n").is_err());
         assert!(GpState::from_text("limbo-gp v1\ndim 1\nhp 0 0 0\nn 2\nx 0.5\ny 1.0\n").is_err());
         assert!(GpState::from_text("limbo-gp v1\ndim 1\nhp 0 0 0\nn 1\nx zap\ny 1.0\n").is_err());
+    }
+
+    fn fitted_sgp() -> SparseGp<Matern52, DataMean> {
+        let mut rng = Pcg64::seed(45);
+        let mut sgp = SparseGp::with_config(
+            Matern52::with_params(vec![-0.2, 0.1, 0.3], 0.2),
+            DataMean::default(),
+            0.02,
+            crate::model::SgpConfig { max_inducing: 12, ..Default::default() },
+        );
+        // grow online so the inducing set is the evolved one, not greedy
+        for _ in 0..40 {
+            let x = rng.unit_point(3);
+            let y = x[0] - (4.0 * x[1]).cos() + 0.5 * x[2];
+            sgp.add_sample(&x, y);
+        }
+        sgp
+    }
+
+    #[test]
+    fn sgp_text_roundtrip_is_exact() {
+        let sgp = fitted_sgp();
+        let state = SgpState::capture(&sgp);
+        assert_eq!(state.zs.len(), 12);
+        let parsed = SgpState::from_text(&state.to_text()).unwrap();
+        assert_eq!(state, parsed);
+    }
+
+    #[test]
+    fn sgp_save_load_preserves_posterior_and_inducing_set() {
+        let dir = std::env::temp_dir().join("limbo_sgp_serde");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("sgp.txt");
+        let sgp = fitted_sgp();
+        sgp.save(&path).unwrap();
+
+        let mut fresh = SparseGp::new(Matern52::new(3), DataMean::default(), 0.7);
+        fresh.load(&path).unwrap();
+        assert_eq!(fresh.inducing_points(), sgp.inducing_points());
+        assert_eq!(fresh.n_samples(), sgp.n_samples());
+        assert!((fresh.noise_var() - sgp.noise_var()).abs() < 1e-15);
+        for probe in [[0.2, 0.8, 0.5], [0.9, 0.1, 0.3], [0.5, 0.5, 0.5]] {
+            let (m1, v1) = sgp.predict(&probe);
+            let (m2, v2) = fresh.predict(&probe);
+            assert!((m1 - m2).abs() < 1e-8, "{m1} vs {m2}");
+            assert!((v1 - v2).abs() < 1e-8, "{v1} vs {v2}");
+        }
+    }
+
+    #[test]
+    fn sgp_rejects_mismatch_and_corrupt_text() {
+        let sgp = fitted_sgp();
+        let state = SgpState::capture(&sgp);
+        let mut wrong = SparseGp::new(Matern52::new(2), DataMean::default(), 0.1);
+        assert!(state.restore(&mut wrong).is_err());
+
+        assert!(SgpState::from_text("limbo-gp v1\ndim 1\n").is_err());
+        // data but no inducing points
+        assert!(SgpState::from_text("limbo-sgp v1\ndim 1\nhp 0 0 0\nn 1\nx 0.5\ny 1.0\n").is_err());
+        // inducing points but no data
+        assert!(SgpState::from_text("limbo-sgp v1\ndim 1\nhp 0 0 0\nn 0\nz 0.5\n").is_err());
+        // bare tag lines must error, not panic
+        assert!(SgpState::from_text("limbo-sgp v1\ndim\n").is_err());
+        assert!(GpState::from_text("limbo-gp v1\ndim 1\nhp 0\nn\n").is_err());
     }
 }

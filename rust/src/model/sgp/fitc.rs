@@ -1,0 +1,539 @@
+//! FITC sparse GP regression (Subset-of-Regressors mean, FITC variance).
+//!
+//! See the module docs in [`crate::model::sgp`] for the equations and the
+//! complexity table. Implementation outline, with `n` observations and
+//! `m` inducing points (`m << n`):
+//!
+//! * batch fit: one `m x m` Cholesky of `K_mm`, one streaming pass over
+//!   the `n` cross-covariance rows ([`crate::la::weighted_normal_eqs`])
+//!   to form `A = K_mm + K_mn Λ⁻¹ K_nm` and `b = K_mn Λ⁻¹ r`, one
+//!   `m x m` Cholesky of `A` — O(n·m²) total;
+//! * incremental `add_sample` (inducing set unchanged): rank-1 update of
+//!   `A`, O(n·m) right-hand-side refresh, O(m³) refactor — independent of
+//!   the O(n·m²) batch path and `m/1`-ish cheaper than it;
+//! * predict: O(m) mean (cached `alpha`), O(m²) variance (two triangular
+//!   solves).
+
+use crate::kernel::Kernel;
+use crate::la::{axpy, dot, rank1_update, spd_factor_jittered, weighted_normal_eqs};
+use crate::la::{CholeskyFactor, Matrix};
+use crate::mean::MeanFn;
+use crate::model::gp::Gp;
+use crate::model::sgp::inducing::{InducingSet, InducingUpdate};
+use crate::model::Model;
+
+/// Tunables for [`SparseGp`].
+#[derive(Clone, Debug)]
+pub struct SgpConfig {
+    /// Inducing-point budget `m`.
+    pub max_inducing: usize,
+    /// Maximum diagonal jitter tried when `K_mm` / `A` are numerically
+    /// semi-definite (clustered inducing points).
+    pub max_jitter: f64,
+    /// Row-block size for the normal-equation pass (0 = library default).
+    pub block: usize,
+    /// Cap on the data subset used by the dense hyper-parameter proxy fit
+    /// in `optimize_hyperparams` (ML-II on the full set would be O(n³)).
+    pub hp_subset: usize,
+}
+
+impl Default for SgpConfig {
+    fn default() -> Self {
+        Self { max_inducing: 128, max_jitter: 1e-2, block: 0, hp_subset: 256 }
+    }
+}
+
+/// Sparse (inducing-point) Gaussian process with kernel `K`, prior mean `M`.
+#[derive(Clone)]
+pub struct SparseGp<K: Kernel, M: MeanFn> {
+    kernel: K,
+    mean: M,
+    /// log sigma_n (observation noise std).
+    log_noise: f64,
+    /// Whether `optimize_hyperparams` also tunes the noise.
+    pub learn_noise: bool,
+    /// Tunables.
+    pub config: SgpConfig,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    best: Option<f64>,
+    inducing: InducingSet,
+    /// chol(K_mm + jitter I)
+    l_mm: CholeskyFactor,
+    /// A = K_mm + jitter I + sum_i w_i k_i k_i^T (kept raw for rank-1 adds)
+    a_raw: Matrix,
+    /// chol(A + possible extra jitter)
+    l_a: CholeskyFactor,
+    /// Cross-covariance rows K_nm, row-major n x m.
+    rows: Vec<f64>,
+    /// Per-observation FITC weights w_i = 1 / lambda_i.
+    w: Vec<f64>,
+    /// alpha = A^{-1} b; posterior mean is m(x) + k_*^T alpha.
+    alpha: Vec<f64>,
+}
+
+impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
+    /// New empty sparse GP with the default [`SgpConfig`]. `noise` is the
+    /// observation noise std `sigma_n`.
+    pub fn new(kernel: K, mean: M, noise: f64) -> Self {
+        Self::with_config(kernel, mean, noise, SgpConfig::default())
+    }
+
+    /// New empty sparse GP with an explicit configuration.
+    pub fn with_config(kernel: K, mean: M, noise: f64, config: SgpConfig) -> Self {
+        assert!(noise > 0.0, "noise std must be positive");
+        assert!(config.max_inducing > 0, "max_inducing must be positive");
+        let inducing = InducingSet::new(config.max_inducing);
+        Self {
+            kernel,
+            mean,
+            log_noise: noise.ln(),
+            learn_noise: false,
+            config,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            best: None,
+            inducing,
+            l_mm: CholeskyFactor::empty(),
+            a_raw: Matrix::zeros(0, 0),
+            l_a: CholeskyFactor::empty(),
+            rows: Vec::new(),
+            w: Vec::new(),
+            alpha: Vec::new(),
+        }
+    }
+
+    /// Build a sparse GP from a fitted dense GP (same kernel/mean state,
+    /// current hyper-parameters), refitting on its data.
+    pub fn from_dense(gp: &Gp<K, M>, config: SgpConfig) -> Self {
+        let (kernel, mean) = (gp.kernel().clone(), gp.mean().clone());
+        let mut sgp = Self::with_config(kernel, mean, gp.noise_var().sqrt(), config);
+        sgp.learn_noise = gp.learn_noise;
+        sgp.fit(gp.samples(), gp.observations());
+        sgp
+    }
+
+    /// Observation noise variance `sigma_n^2`.
+    pub fn noise_var(&self) -> f64 {
+        (2.0 * self.log_noise).exp()
+    }
+
+    /// Borrow the kernel.
+    pub fn kernel(&self) -> &K {
+        &self.kernel
+    }
+
+    /// Borrow the prior mean.
+    pub fn mean(&self) -> &M {
+        &self.mean
+    }
+
+    /// Training inputs.
+    pub fn samples(&self) -> &[Vec<f64>] {
+        &self.xs
+    }
+
+    /// Training observations.
+    pub fn observations(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// Current inducing-point locations.
+    pub fn inducing_points(&self) -> &[Vec<f64>] {
+        self.inducing.points()
+    }
+
+    /// Current log-hyper-params `[kernel..., log sigma_n]`.
+    pub fn hp_vector(&self) -> Vec<f64> {
+        let mut p = self.kernel.params();
+        p.push(self.log_noise);
+        p
+    }
+
+    /// Set `[kernel..., log sigma_n]` and refit, keeping the current
+    /// inducing set (noise entry only applied when `learn_noise` is on —
+    /// pass `force_noise` to override, e.g. on checkpoint restore).
+    pub fn set_hp_vector(&mut self, p: &[f64], force_noise: bool) {
+        self.set_hp_vector_no_refit(p, force_noise);
+        self.refit_keep_inducing();
+    }
+
+    /// Hyper-param write without the refit, for callers that refit
+    /// immediately afterwards anyway (checkpoint restore).
+    pub(crate) fn set_hp_vector_no_refit(&mut self, p: &[f64], force_noise: bool) {
+        let np = self.kernel.n_params();
+        self.kernel.set_params(&p[..np]);
+        if self.learn_noise || force_noise {
+            self.log_noise = p[np];
+        }
+    }
+
+    /// Fit with an explicitly chosen inducing set (checkpoint restore /
+    /// expert use); skips the greedy selection.
+    pub fn fit_with_inducing(&mut self, xs: &[Vec<f64>], ys: &[f64], zs: Vec<Vec<f64>>) {
+        assert_eq!(xs.len(), ys.len());
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.best =
+            ys.iter().cloned().fold(None, |b: Option<f64>, v| Some(b.map_or(v, |b| b.max(v))));
+        self.inducing.set_points(zs);
+        self.refit_keep_inducing();
+    }
+
+    /// Refit all factors from the current data, keeping the inducing set.
+    pub fn refit_keep_inducing(&mut self) {
+        self.refit_inner(false);
+    }
+
+    /// Full refit including greedy re-selection of the inducing set.
+    pub fn refit(&mut self) {
+        self.refit_inner(true);
+    }
+
+    fn clear_factors(&mut self) {
+        self.l_mm = CholeskyFactor::empty();
+        self.a_raw = Matrix::zeros(0, 0);
+        self.l_a = CholeskyFactor::empty();
+        self.rows.clear();
+        self.w.clear();
+        self.alpha.clear();
+    }
+
+    fn refit_inner(&mut self, rebuild_inducing: bool) {
+        self.mean.update(&self.ys);
+        let n = self.xs.len();
+        if n == 0 {
+            // invariant: a non-empty inducing set implies fitted factors
+            // (predict branches on m > 0), so it must go too
+            self.inducing.clear();
+            self.clear_factors();
+            return;
+        }
+        if rebuild_inducing || self.inducing.is_empty() {
+            self.inducing.rebuild(&self.xs);
+        }
+        let m = self.inducing.len();
+        let noise = self.noise_var();
+        let max_jitter = self.config.max_jitter;
+
+        // K_mm (+ jitter escalated until SPD)
+        let zs = self.inducing.points();
+        let mut kmm = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in 0..=i {
+                let v = self.kernel.eval(&zs[i], &zs[j]);
+                kmm[(i, j)] = v;
+                kmm[(j, i)] = v;
+            }
+        }
+        let (l_mm, jitter) = spd_factor_jittered(&kmm, max_jitter)
+            .expect("sparse GP: K_mm irrecoverably singular");
+        if jitter > 0.0 {
+            for i in 0..m {
+                kmm[(i, i)] += jitter;
+            }
+        }
+
+        // cross-covariance rows, FITC weights, residuals
+        let mut rows = Vec::with_capacity(n * m);
+        let mut w = Vec::with_capacity(n);
+        let mut resid = Vec::with_capacity(n);
+        let mut scratch = vec![0.0; m];
+        for (x, &y) in self.xs.iter().zip(&self.ys) {
+            let start = rows.len();
+            for z in zs {
+                rows.push(self.kernel.eval(x, z));
+            }
+            l_mm.solve_lower_into(&rows[start..start + m], &mut scratch);
+            let q = dot(&scratch, &scratch);
+            let lambda = (self.kernel.eval(x, x) - q).max(0.0) + noise;
+            w.push(1.0 / lambda);
+            resid.push(y - self.mean.eval(x));
+        }
+
+        // A = K_mm + sum_i w_i k_i k_i^T ; b = sum_i w_i r_i k_i
+        let (mut a_raw, b) = weighted_normal_eqs(&rows, m, &w, &resid, self.config.block);
+        for (a, &k) in a_raw.data_mut().iter_mut().zip(kmm.data()) {
+            *a += k;
+        }
+        let (l_a, _) = spd_factor_jittered(&a_raw, max_jitter)
+            .expect("sparse GP: normal-equation matrix irrecoverably singular");
+        let alpha = l_a.solve(&b);
+
+        self.l_mm = l_mm;
+        self.a_raw = a_raw;
+        self.l_a = l_a;
+        self.rows = rows;
+        self.w = w;
+        self.alpha = alpha;
+    }
+
+    /// Recompute `b` from stored rows/weights and current residuals, then
+    /// `alpha = A^{-1} b`. O(n·m + m³). Exact for any [`MeanFn`].
+    fn recompute_alpha(&mut self) {
+        let m = self.inducing.len();
+        let mut b = vec![0.0; m];
+        for (i, x) in self.xs.iter().enumerate() {
+            let c = self.w[i] * (self.ys[i] - self.mean.eval(x));
+            if c != 0.0 {
+                axpy(c, &self.rows[i * m..(i + 1) * m], &mut b);
+            }
+        }
+        let (l_a, _) = spd_factor_jittered(&self.a_raw, self.config.max_jitter)
+            .expect("sparse GP: normal-equation matrix irrecoverably singular");
+        self.alpha = l_a.solve(&b);
+        self.l_a = l_a;
+    }
+}
+
+impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.best =
+            ys.iter().cloned().fold(None, |b: Option<f64>, v| Some(b.map_or(v, |b| b.max(v))));
+        self.refit_inner(true);
+    }
+
+    fn add_sample(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.kernel.dim(), "sample dim mismatch");
+        self.xs.push(x.to_vec());
+        self.ys.push(y);
+        self.best = Some(self.best.map_or(y, |b| b.max(y)));
+
+        if !self.inducing.is_full() {
+            // growth phase: every novel location becomes an inducing point
+            // (FITC with Z == X is the exact GP), factors rebuilt in
+            // O(n·m²) at most `m` times over the whole run
+            self.inducing.offer(x);
+            self.refit_keep_inducing();
+            return;
+        }
+        match self.inducing.offer(x) {
+            InducingUpdate::Added | InducingUpdate::Swapped(_) => {
+                // the set changed: cross-covariances against the evicted
+                // point are stale, rebuild the factors
+                self.refit_keep_inducing();
+            }
+            InducingUpdate::Unchanged => {
+                // incremental path: rank-1 A update + O(n·m) rhs refresh
+                let m = self.inducing.len();
+                let zs = self.inducing.points();
+                let mut k_new = Vec::with_capacity(m);
+                for z in zs {
+                    k_new.push(self.kernel.eval(x, z));
+                }
+                let mut v = vec![0.0; m];
+                self.l_mm.solve_lower_into(&k_new, &mut v);
+                let q = dot(&v, &v);
+                let lambda = (self.kernel.eval(x, x) - q).max(0.0) + self.noise_var();
+                let w_new = 1.0 / lambda;
+                rank1_update(&mut self.a_raw, w_new, &k_new);
+                self.rows.extend_from_slice(&k_new);
+                self.w.push(w_new);
+                self.mean.update(&self.ys);
+                self.recompute_alpha();
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let prior = self.mean.eval(x);
+        let m = self.inducing.len();
+        if m == 0 {
+            return (prior, self.kernel.variance());
+        }
+        // thread-local scratch: the acquisition optimizer calls predict
+        // hundreds of times per iteration (same rationale as the dense GP)
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
+        SCRATCH.with(|cell| {
+            let (ks, v) = &mut *cell.borrow_mut();
+            ks.clear();
+            ks.extend(self.inducing.points().iter().map(|z| self.kernel.eval(z, x)));
+            let mu = prior + dot(ks, &self.alpha);
+            v.resize(m, 0.0);
+            // q_** = k_*^T K_mm^{-1} k_*
+            self.l_mm.solve_lower_into(ks, v);
+            let q_star = dot(v, v);
+            // correction k_*^T A^{-1} k_*
+            self.l_a.solve_lower_into(ks, v);
+            let corr = dot(v, v);
+            let var = (self.kernel.eval(x, x) - q_star + corr).max(1e-12);
+            (mu, var)
+        })
+    }
+
+    fn n_samples(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.kernel.dim()
+    }
+
+    fn best_observation(&self) -> Option<f64> {
+        self.best
+    }
+
+    /// ML-II via a dense proxy GP on a strided data subset (capped at
+    /// `config.hp_subset`): optimizing the exact FITC likelihood would
+    /// need bespoke gradients, while the subset proxy reuses the dense
+    /// machinery and is the standard practical compromise.
+    fn optimize_hyperparams(&mut self) {
+        let n = self.xs.len();
+        if n < 2 {
+            return;
+        }
+        let cap = self.config.hp_subset.max(8);
+        let stride = n.div_ceil(cap);
+        let sx: Vec<Vec<f64>> = self.xs.iter().step_by(stride).cloned().collect();
+        let sy: Vec<f64> = self.ys.iter().step_by(stride).cloned().collect();
+        let mut proxy = Gp::new(self.kernel.clone(), self.mean.clone(), self.noise_var().sqrt());
+        proxy.learn_noise = self.learn_noise;
+        proxy.fit(&sx, &sy);
+        proxy.optimize_hyperparams();
+        self.kernel.set_params(&proxy.kernel().params());
+        if self.learn_noise {
+            self.log_noise = 0.5 * proxy.noise_var().ln();
+        }
+        self.refit_keep_inducing();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Matern52, SquaredExpArd};
+    use crate::mean::{DataMean, ZeroMean};
+    use crate::rng::Pcg64;
+
+    fn smooth_data(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::seed(seed);
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| (3.0 * x[0]).sin() + x.iter().sum::<f64>() * 0.5).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn exact_when_inducing_covers_data() {
+        // m >= n: FITC with Z == X must reproduce the dense GP closely
+        let (xs, ys) = smooth_data(24, 2, 1);
+        let mut dense = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+        dense.fit(&xs, &ys);
+        let mut sparse = SparseGp::with_config(
+            Matern52::new(2),
+            DataMean::default(),
+            1e-2,
+            SgpConfig { max_inducing: 64, ..SgpConfig::default() },
+        );
+        sparse.fit(&xs, &ys);
+        assert_eq!(sparse.inducing_points().len(), 24);
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..20 {
+            let p = rng.unit_point(2);
+            let (md, vd) = dense.predict(&p);
+            let (ms, vs) = sparse.predict(&p);
+            assert!((md - ms).abs() < 1e-4, "mean {md} vs {ms}");
+            assert!((vd - vs).abs() < 1e-4, "var {vd} vs {vs}");
+        }
+    }
+
+    #[test]
+    fn approximates_dense_with_few_inducing_points() {
+        let (xs, ys) = smooth_data(200, 2, 3);
+        let mut dense = Gp::new(SquaredExpArd::new(2), ZeroMean, 0.05);
+        dense.fit(&xs, &ys);
+        let mut sparse = SparseGp::with_config(
+            SquaredExpArd::new(2),
+            ZeroMean,
+            0.05,
+            SgpConfig { max_inducing: 40, ..SgpConfig::default() },
+        );
+        sparse.fit(&xs, &ys);
+        let mut rng = Pcg64::seed(4);
+        let mut se = 0.0;
+        let probes = 100;
+        for _ in 0..probes {
+            let p = rng.unit_point(2);
+            let (md, _) = dense.predict(&p);
+            let (ms, vs) = sparse.predict(&p);
+            se += (md - ms) * (md - ms);
+            assert!(vs.is_finite() && vs > 0.0);
+        }
+        let rmse = (se / probes as f64).sqrt();
+        assert!(rmse < 0.05, "sparse-vs-dense rmse {rmse}");
+    }
+
+    #[test]
+    fn incremental_add_matches_refit() {
+        let (xs, ys) = smooth_data(80, 2, 7);
+        let cfg = SgpConfig { max_inducing: 16, ..SgpConfig::default() };
+        let mut inc = SparseGp::with_config(Matern52::new(2), DataMean::default(), 0.05, cfg);
+        for (x, &y) in xs.iter().zip(&ys) {
+            inc.add_sample(x, y);
+        }
+        // same data + same inducing set, factors rebuilt from scratch
+        let mut batch = inc.clone();
+        batch.refit_keep_inducing();
+        let mut rng = Pcg64::seed(8);
+        for _ in 0..20 {
+            let p = rng.unit_point(2);
+            let (mi, vi) = inc.predict(&p);
+            let (mb, vb) = batch.predict(&p);
+            assert!((mi - mb).abs() < 1e-7, "mean {mi} vs {mb}");
+            assert!((vi - vb).abs() < 1e-7, "var {vi} vs {vb}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_states() {
+        let sgp = SparseGp::new(Matern52::new(2), ZeroMean, 0.01);
+        let (mu, var) = sgp.predict(&[0.4, 0.4]);
+        assert_eq!(mu, 0.0);
+        assert!((var - 1.0).abs() < 1e-12);
+        assert!(sgp.best_observation().is_none());
+
+        let mut sgp = SparseGp::new(Matern52::new(1), ZeroMean, 0.01);
+        sgp.add_sample(&[0.5], 2.0);
+        let (mu, var) = sgp.predict(&[0.5]);
+        assert!((mu - 2.0).abs() < 0.1, "mu={mu}");
+        assert!(var < 0.1);
+        assert_eq!(sgp.best_observation(), Some(2.0));
+    }
+
+    #[test]
+    fn best_observation_tracks_max_and_duplicates_survive() {
+        let mut sgp = SparseGp::new(SquaredExpArd::new(1), ZeroMean, 1e-3);
+        sgp.add_sample(&[0.1], 1.0);
+        sgp.add_sample(&[0.2], 3.0);
+        sgp.add_sample(&[0.2], 2.9); // duplicate input
+        assert_eq!(sgp.best_observation(), Some(3.0));
+        let (mu, _) = sgp.predict(&[0.2]);
+        assert!((mu - 2.95).abs() < 0.2, "mu={mu}");
+    }
+
+    #[test]
+    fn hyperparam_proxy_improves_fit() {
+        let mut rng = Pcg64::seed(2024);
+        let xs: Vec<Vec<f64>> = (0..60).map(|_| rng.unit_point(1)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (12.0 * x[0]).sin()).collect();
+        let mut sgp = SparseGp::with_config(
+            SquaredExpArd::with_params(vec![2.0], 0.0),
+            ZeroMean,
+            0.05,
+            SgpConfig { max_inducing: 30, ..SgpConfig::default() },
+        );
+        sgp.fit(&xs, &ys);
+        sgp.optimize_hyperparams();
+        let fitted_l = sgp.kernel().params()[0].exp();
+        assert!(fitted_l < 1.0, "fitted lengthscale {fitted_l} should shrink");
+        // posterior should now track the fast oscillation
+        let (mu, _) = sgp.predict(&[0.13]);
+        assert!((mu - (12.0f64 * 0.13).sin()).abs() < 0.3, "mu={mu}");
+    }
+}

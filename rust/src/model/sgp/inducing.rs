@@ -1,0 +1,248 @@
+//! Inducing-point selection for the sparse GP.
+//!
+//! Two entry points, matching the two phases of a BO run:
+//! * [`InducingSet::rebuild`] — greedy max-min (farthest-point traversal)
+//!   selection from a full observation set, used by batch fits. O(n·m)
+//!   distance evaluations, deterministic (starts from index 0).
+//! * [`InducingSet::offer`] — fixed-budget online update used by
+//!   `add_sample`: while under budget every novel point is admitted; at
+//!   budget the candidate replaces its *nearest* inducing point iff doing
+//!   so increases the set's spread (the candidate is farther from the rest
+//!   of the set than the point it evicts). O(m) per offer.
+
+/// Squared Euclidean distance.
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Result of [`InducingSet::offer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InducingUpdate {
+    /// The candidate was appended (set was under budget).
+    Added,
+    /// The candidate replaced the inducing point at this index.
+    Swapped(usize),
+    /// The set is unchanged (candidate duplicates or does not improve it).
+    Unchanged,
+}
+
+/// A budgeted set of inducing-point locations.
+#[derive(Clone, Debug)]
+pub struct InducingSet {
+    budget: usize,
+    points: Vec<Vec<f64>>,
+}
+
+impl InducingSet {
+    /// Empty set with a fixed budget `m`.
+    pub fn new(budget: usize) -> Self {
+        assert!(budget > 0, "inducing budget must be positive");
+        Self { budget, points: Vec::new() }
+    }
+
+    /// Maximum number of inducing points.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Current number of inducing points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Is the set empty?
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Has the set reached its budget?
+    pub fn is_full(&self) -> bool {
+        self.points.len() >= self.budget
+    }
+
+    /// The inducing locations.
+    pub fn points(&self) -> &[Vec<f64>] {
+        &self.points
+    }
+
+    /// Remove every inducing point (budget unchanged).
+    pub fn clear(&mut self) {
+        self.points.clear();
+    }
+
+    /// Replace the set wholesale (checkpoint restore); grows the budget if
+    /// the given set exceeds it.
+    pub fn set_points(&mut self, points: Vec<Vec<f64>>) {
+        self.budget = self.budget.max(points.len());
+        self.points = points;
+    }
+
+    /// Greedy max-min selection of `min(budget, n)` points from `xs`:
+    /// start at `xs[0]`, then repeatedly take the observation farthest
+    /// from the current set. Stops early if only duplicates remain.
+    pub fn rebuild(&mut self, xs: &[Vec<f64>]) {
+        self.points.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let m = self.budget.min(xs.len());
+        self.points.push(xs[0].clone());
+        // min squared distance from each observation to the chosen set
+        let mut mind: Vec<f64> = xs.iter().map(|x| dist2(x, &xs[0])).collect();
+        while self.points.len() < m {
+            let (mut best_i, mut best_d) = (0usize, 0.0f64);
+            for (i, &d) in mind.iter().enumerate() {
+                if d > best_d {
+                    best_d = d;
+                    best_i = i;
+                }
+            }
+            if best_d <= 0.0 {
+                break; // everything left coincides with a chosen point
+            }
+            self.points.push(xs[best_i].clone());
+            for (d, x) in mind.iter_mut().zip(xs) {
+                let nd = dist2(x, &xs[best_i]);
+                if nd < *d {
+                    *d = nd;
+                }
+            }
+        }
+    }
+
+    /// Offer a new observation location to the set (online update).
+    pub fn offer(&mut self, x: &[f64]) -> InducingUpdate {
+        if self.points.is_empty() {
+            self.points.push(x.to_vec());
+            return InducingUpdate::Added;
+        }
+        // nearest inducing point to the candidate
+        let (mut j, mut d_xj) = (0usize, f64::INFINITY);
+        for (k, z) in self.points.iter().enumerate() {
+            let d = dist2(x, z);
+            if d < d_xj {
+                d_xj = d;
+                j = k;
+            }
+        }
+        if d_xj <= 0.0 {
+            return InducingUpdate::Unchanged; // exact duplicate
+        }
+        if !self.is_full() {
+            self.points.push(x.to_vec());
+            return InducingUpdate::Added;
+        }
+        if self.points.len() < 2 {
+            return InducingUpdate::Unchanged; // budget 1: keep the seed
+        }
+        // replace-nearest rule: evict z_j iff the candidate is farther
+        // from the rest of the set than z_j is (spread strictly improves)
+        let mut d_x_rest = f64::INFINITY;
+        let mut d_j_rest = f64::INFINITY;
+        for (k, z) in self.points.iter().enumerate() {
+            if k == j {
+                continue;
+            }
+            d_x_rest = d_x_rest.min(dist2(x, z));
+            d_j_rest = d_j_rest.min(dist2(&self.points[j], z));
+        }
+        if d_x_rest > d_j_rest {
+            self.points[j] = x.to_vec();
+            InducingUpdate::Swapped(j)
+        } else {
+            InducingUpdate::Unchanged
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn min_gap(points: &[Vec<f64>]) -> f64 {
+        let mut g = f64::INFINITY;
+        for i in 0..points.len() {
+            for j in (i + 1)..points.len() {
+                g = g.min(dist2(&points[i], &points[j]));
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn rebuild_picks_spread_points_on_a_line() {
+        let xs: Vec<Vec<f64>> = (0..11).map(|i| vec![i as f64 / 10.0]).collect();
+        let mut set = InducingSet::new(3);
+        set.rebuild(&xs);
+        assert_eq!(set.len(), 3);
+        // farthest-point from x=0 picks both endpoints then the middle
+        let mut got: Vec<f64> = set.points().iter().map(|p| p[0]).collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn rebuild_respects_budget_and_duplicates() {
+        let xs = vec![vec![0.3, 0.3]; 7];
+        let mut set = InducingSet::new(4);
+        set.rebuild(&xs);
+        assert_eq!(set.len(), 1, "identical points collapse to one");
+
+        let mut rng = Pcg64::seed(5);
+        let xs: Vec<Vec<f64>> = (0..50).map(|_| rng.unit_point(3)).collect();
+        set.rebuild(&xs);
+        assert_eq!(set.len(), 4);
+    }
+
+    #[test]
+    fn offer_grows_until_budget_then_swaps_to_improve_spread() {
+        let mut set = InducingSet::new(3);
+        assert_eq!(set.offer(&[0.0]), InducingUpdate::Added);
+        assert_eq!(set.offer(&[0.1]), InducingUpdate::Added);
+        assert_eq!(set.offer(&[0.2]), InducingUpdate::Added);
+        assert!(set.is_full());
+        let before = min_gap(set.points());
+        // 1.0 is far from everything: must evict its nearest point (0.2)
+        assert_eq!(set.offer(&[1.0]), InducingUpdate::Swapped(2));
+        assert!(min_gap(set.points()) >= before);
+        // a point crammed between two existing ones does not help
+        assert_eq!(set.offer(&[0.05]), InducingUpdate::Unchanged);
+        // duplicates never enter
+        assert_eq!(set.offer(&[1.0]), InducingUpdate::Unchanged);
+    }
+
+    #[test]
+    fn offer_sequence_keeps_spread_nondecreasing() {
+        let mut rng = Pcg64::seed(0x5e7);
+        let mut set = InducingSet::new(8);
+        for _ in 0..16 {
+            set.offer(&rng.unit_point(2));
+        }
+        assert!(set.is_full());
+        let mut gap = min_gap(set.points());
+        for _ in 0..200 {
+            let x = rng.unit_point(2);
+            if let InducingUpdate::Swapped(_) = set.offer(&x) {
+                let ng = min_gap(set.points());
+                assert!(ng >= gap - 1e-15, "swap reduced spread: {gap} -> {ng}");
+                gap = ng;
+            }
+        }
+    }
+
+    #[test]
+    fn set_points_overrides_budget() {
+        let mut set = InducingSet::new(2);
+        set.set_points(vec![vec![0.0], vec![0.5], vec![1.0]]);
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.budget(), 3);
+    }
+}

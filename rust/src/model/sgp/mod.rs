@@ -1,0 +1,248 @@
+//! Sparse (inducing-point) Gaussian processes — the large-budget surrogate
+//! subsystem.
+//!
+//! The dense [`crate::model::gp::Gp`] pays O(n²) per prediction and O(n³)
+//! per hyper-parameter refit, which caps BO runs at a few thousand
+//! observations. This module trades a controlled approximation for
+//! n-independent prediction cost, behind the same [`crate::model::Model`]
+//! trait, so it drops into [`crate::bayes_opt::BOptimizer`], the
+//! [`crate::baseline`] comparator, and the ask/tell
+//! [`crate::coordinator::AskTellServer`] unchanged.
+//!
+//! # Method
+//!
+//! Pick `m << n` inducing locations `Z` (greedy max-min from the data,
+//! [`inducing::InducingSet`]). With `K_mm = k(Z, Z)`, `K_nm = k(X, Z)` and
+//! the FITC (Snelson & Ghahramani, 2006) heteroscedastic correction
+//!
+//! ```text
+//! lambda_i = k(x_i, x_i) - k_i^T K_mm^{-1} k_i + sigma_n^2,
+//! Lambda   = diag(lambda_1 .. lambda_n),
+//! A        = K_mm + K_mn Lambda^{-1} K_nm,
+//! alpha    = A^{-1} K_mn Lambda^{-1} (y - m(X)),
+//! ```
+//!
+//! the posterior at a test point `x*` with `k* = k(Z, x*)` is
+//!
+//! ```text
+//! mu(x*)     = m(x*) + k*^T alpha                      (SoR mean)
+//! sigma²(x*) = k(x*,x*) - k*^T K_mm^{-1} k* + k*^T A^{-1} k*   (FITC)
+//! ```
+//!
+//! Both m×m systems are solved through Cholesky factors; the n-row
+//! reduction building `A` streams through blocked low-rank kernels in
+//! [`crate::la::lowrank`].
+//!
+//! # Complexity
+//!
+//! | operation                    | dense `Gp`      | [`SparseGp`]          |
+//! |------------------------------|-----------------|-----------------------|
+//! | batch `fit`                  | O(n³)           | O(n·m²)               |
+//! | `add_sample` (amortized)     | O(n²)           | O(n·m + m³)           |
+//! | `predict` mean               | O(n)            | O(m)                  |
+//! | `predict` variance           | O(n²)           | O(m²)                 |
+//! | `optimize_hyperparams`       | O(n³) per step  | O(s³) proxy, s ≤ cap  |
+//! | memory                       | O(n²)           | O(n·m + m²)           |
+//!
+//! # Choosing a model
+//!
+//! [`AdaptiveModel`] starts dense (exact, best for the small-n regime
+//! every BO run begins in) and migrates to [`SparseGp`] once the
+//! observation count crosses a configurable threshold — the default
+//! surrogate for the long-running service path.
+
+pub mod fitc;
+pub mod inducing;
+
+pub use fitc::{SgpConfig, SparseGp};
+pub use inducing::{InducingSet, InducingUpdate};
+
+use crate::kernel::Kernel;
+use crate::mean::MeanFn;
+use crate::model::gp::Gp;
+use crate::model::Model;
+
+/// Default observation count at which [`AdaptiveModel`] goes sparse.
+pub const DEFAULT_SPARSE_THRESHOLD: usize = 256;
+
+#[derive(Clone)]
+enum AdaptiveInner<K: Kernel, M: MeanFn> {
+    Dense(Gp<K, M>),
+    Sparse(SparseGp<K, M>),
+}
+
+/// A surrogate that is exact while small and sparse once large: wraps a
+/// dense [`Gp`] and migrates to a [`SparseGp`] (carrying over data and
+/// current hyper-parameters) when `n` crosses the threshold.
+#[derive(Clone)]
+pub struct AdaptiveModel<K: Kernel, M: MeanFn> {
+    inner: AdaptiveInner<K, M>,
+    threshold: usize,
+    config: SgpConfig,
+}
+
+impl<K: Kernel, M: MeanFn> AdaptiveModel<K, M> {
+    /// Start dense with the default threshold
+    /// ([`DEFAULT_SPARSE_THRESHOLD`]) and sparse config.
+    pub fn new(kernel: K, mean: M, noise: f64) -> Self {
+        Self {
+            inner: AdaptiveInner::Dense(Gp::new(kernel, mean, noise)),
+            threshold: DEFAULT_SPARSE_THRESHOLD,
+            config: SgpConfig::default(),
+        }
+    }
+
+    /// Override the dense→sparse switch-over observation count.
+    pub fn with_threshold(mut self, threshold: usize) -> Self {
+        self.threshold = threshold.max(1);
+        self
+    }
+
+    /// Override the sparse-side configuration.
+    pub fn with_sparse_config(mut self, config: SgpConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// The switch-over threshold.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Has the model migrated to the sparse representation?
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.inner, AdaptiveInner::Sparse(_))
+    }
+
+    /// Borrow the sparse model, if migrated.
+    pub fn as_sparse(&self) -> Option<&SparseGp<K, M>> {
+        match &self.inner {
+            AdaptiveInner::Sparse(s) => Some(s),
+            AdaptiveInner::Dense(_) => None,
+        }
+    }
+
+    /// Borrow the dense model, if not yet migrated.
+    pub fn as_dense(&self) -> Option<&Gp<K, M>> {
+        match &self.inner {
+            AdaptiveInner::Dense(g) => Some(g),
+            AdaptiveInner::Sparse(_) => None,
+        }
+    }
+
+    fn migrate_if_due(&mut self) {
+        let replacement = match &self.inner {
+            AdaptiveInner::Dense(gp) if gp.n_samples() > self.threshold => {
+                Some(SparseGp::from_dense(gp, self.config.clone()))
+            }
+            _ => None,
+        };
+        if let Some(sgp) = replacement {
+            self.inner = AdaptiveInner::Sparse(sgp);
+        }
+    }
+}
+
+impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        match &mut self.inner {
+            AdaptiveInner::Dense(gp) => gp.fit(xs, ys),
+            AdaptiveInner::Sparse(sgp) => sgp.fit(xs, ys),
+        }
+        self.migrate_if_due();
+    }
+
+    fn add_sample(&mut self, x: &[f64], y: f64) {
+        match &mut self.inner {
+            AdaptiveInner::Dense(gp) => gp.add_sample(x, y),
+            AdaptiveInner::Sparse(sgp) => sgp.add_sample(x, y),
+        }
+        self.migrate_if_due();
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.predict(x),
+            AdaptiveInner::Sparse(sgp) => sgp.predict(x),
+        }
+    }
+
+    fn n_samples(&self) -> usize {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.n_samples(),
+            AdaptiveInner::Sparse(sgp) => sgp.n_samples(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.dim(),
+            AdaptiveInner::Sparse(sgp) => sgp.dim(),
+        }
+    }
+
+    fn best_observation(&self) -> Option<f64> {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.best_observation(),
+            AdaptiveInner::Sparse(sgp) => sgp.best_observation(),
+        }
+    }
+
+    fn optimize_hyperparams(&mut self) {
+        match &mut self.inner {
+            AdaptiveInner::Dense(gp) => gp.optimize_hyperparams(),
+            AdaptiveInner::Sparse(sgp) => sgp.optimize_hyperparams(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Matern52;
+    use crate::mean::DataMean;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn migrates_past_threshold_and_stays_consistent() {
+        let mut model = AdaptiveModel::new(Matern52::new(2), DataMean::default(), 0.01)
+            .with_threshold(30)
+            .with_sparse_config(SgpConfig { max_inducing: 32, ..SgpConfig::default() });
+        let mut rng = Pcg64::seed(21);
+        let f = |x: &[f64]| (3.0 * x[0]).sin() + x[1];
+        let mut last_dense_pred = None;
+        for i in 0..40 {
+            let x = rng.unit_point(2);
+            model.add_sample(&x, f(&x));
+            if i == 29 {
+                assert!(!model.is_sparse(), "still dense at the threshold");
+                last_dense_pred = Some(model.predict(&[0.4, 0.6]));
+            }
+        }
+        assert!(model.is_sparse(), "migrated past the threshold");
+        assert_eq!(model.n_samples(), 40);
+        assert!(model.best_observation().is_some());
+        // the sparse posterior stays close to the last dense one
+        let (md, _) = last_dense_pred.unwrap();
+        let (ms, vs) = model.predict(&[0.4, 0.6]);
+        assert!(vs > 0.0 && vs.is_finite());
+        assert!((md - ms).abs() < 0.3, "dense {md} vs sparse {ms}");
+    }
+
+    #[test]
+    fn fit_chooses_representation_by_size() {
+        let mut rng = Pcg64::seed(3);
+        let xs: Vec<Vec<f64>> = (0..20).map(|_| rng.unit_point(1)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+        let mut model =
+            AdaptiveModel::new(Matern52::new(1), DataMean::default(), 0.01).with_threshold(10);
+        model.fit(&xs, &ys);
+        assert!(model.is_sparse());
+
+        let mut small =
+            AdaptiveModel::new(Matern52::new(1), DataMean::default(), 0.01).with_threshold(100);
+        small.fit(&xs, &ys);
+        assert!(!small.is_sparse());
+        assert!(small.as_dense().is_some());
+    }
+}

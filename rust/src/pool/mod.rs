@@ -7,6 +7,8 @@
 //!   restarts of the inner optimizers (Limbo's "several restarts ...
 //!   performed in parallel").
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -18,11 +20,24 @@ enum Message {
     Shutdown,
 }
 
+/// Lock a mutex, recovering the guard even if another thread poisoned it
+/// (a panicking job must never be able to wedge the pool's bookkeeping).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Fixed-size thread pool with a shared queue.
+///
+/// Panic-safe: a job that panics is caught on the worker, counted in
+/// [`panicked_jobs`](Self::panicked_jobs), and the pending count is still
+/// decremented — [`wait_idle`](Self::wait_idle) can never hang on a
+/// poisoned pending-count mutex, and the worker survives to run the next
+/// job.
 pub struct ThreadPool {
     sender: mpsc::Sender<Message>,
     workers: Vec<thread::JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -32,17 +47,21 @@ impl ThreadPool {
         let (sender, receiver) = mpsc::channel::<Message>();
         let receiver = Arc::new(Mutex::new(receiver));
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..threads)
             .map(|_| {
                 let receiver = Arc::clone(&receiver);
                 let pending = Arc::clone(&pending);
+                let panicked = Arc::clone(&panicked);
                 thread::spawn(move || loop {
-                    let msg = { receiver.lock().unwrap().recv() };
+                    let msg = { lock_unpoisoned(&receiver).recv() };
                     match msg {
                         Ok(Message::Run(job)) => {
-                            job();
+                            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panicked.fetch_add(1, Ordering::SeqCst);
+                            }
                             let (lock, cvar) = &*pending;
-                            let mut n = lock.lock().unwrap();
+                            let mut n = lock_unpoisoned(lock);
                             *n -= 1;
                             if *n == 0 {
                                 cvar.notify_all();
@@ -53,7 +72,7 @@ impl ThreadPool {
                 })
             })
             .collect();
-        Self { sender, workers, pending }
+        Self { sender, workers, pending, panicked }
     }
 
     /// Pool sized to the machine (`available_parallelism`).
@@ -71,18 +90,24 @@ impl ThreadPool {
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock_unpoisoned(lock) += 1;
         }
         self.sender.send(Message::Run(Box::new(job))).expect("pool shut down");
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished (including jobs that
+    /// panicked — see [`panicked_jobs`](Self::panicked_jobs)).
     pub fn wait_idle(&self) {
         let (lock, cvar) = &*self.pending;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock_unpoisoned(lock);
         while *n > 0 {
-            n = cvar.wait(n).unwrap();
+            n = cvar.wait(n).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
+    }
+
+    /// Number of jobs that have panicked since the pool was created.
+    pub fn panicked_jobs(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
     }
 }
 
@@ -99,6 +124,11 @@ impl Drop for ThreadPool {
 
 /// Fork-join parallel map over `items`, preserving order, using scoped
 /// threads (`threads` capped by item count; `threads == 1` runs inline).
+///
+/// Panic-safe: a panicking `f` is caught on its worker, the remaining
+/// items are still processed, no shared mutex is ever poisoned, and the
+/// first panic payload is re-raised on the calling thread once every
+/// worker has finished — the caller sees the panic, never a hang.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -114,21 +144,31 @@ where
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
     let queue = Mutex::new(work);
     let results = Mutex::new(&mut slots);
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let item = queue.lock().unwrap().pop();
+                let item = lock_unpoisoned(&queue).pop();
                 match item {
-                    Some((i, t)) => {
-                        let r = f(i, t);
-                        results.lock().unwrap()[i] = Some(r);
-                    }
+                    Some((i, t)) => match catch_unwind(AssertUnwindSafe(|| f(i, t))) {
+                        Ok(r) => lock_unpoisoned(&results)[i] = Some(r),
+                        Err(p) => {
+                            let mut slot = lock_unpoisoned(&panic_payload);
+                            if slot.is_none() {
+                                *slot = Some(p);
+                            }
+                        }
+                    },
                     None => break,
                 }
             });
         }
     });
-    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+    if let Some(p) = panic_payload.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner)
+    {
+        std::panic::resume_unwind(p);
+    }
+    slots.into_iter().map(|s| s.expect("slot filled by worker")).collect()
 }
 
 #[cfg(test)]
@@ -173,5 +213,53 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..30 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 5 == 0 {
+                    panic!("job {i} exploded");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // regression: this used to hang forever — a panicking job died
+        // before decrementing the pending count
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 24);
+        assert_eq!(pool.panicked_jobs(), 6);
+        // the pool is still fully usable afterwards
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    fn parallel_map_propagates_panic_after_draining() {
+        let completed = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&completed);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map((0..40).collect::<Vec<usize>>(), 4, |_, x| {
+                if x == 7 {
+                    panic!("item {x} exploded");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        let payload = result.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("item 7 exploded"), "got {msg:?}");
+        // every non-panicking item still ran (no early abort, no hang)
+        assert_eq!(completed.load(Ordering::SeqCst), 39);
     }
 }

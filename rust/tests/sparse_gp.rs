@@ -1,0 +1,116 @@
+//! Integration tests for the `model/sgp` subsystem: parity of the FITC
+//! sparse GP with the dense GP on the Branin benchmark (the subsystem's
+//! acceptance bar), and end-to-end behavior of the adaptive surrogate.
+
+use limbo::benchfns::{Branin, TestFunction};
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, AdaptiveModel, Model, SgpConfig, SparseGp};
+use limbo::rng::Pcg64;
+
+/// Standardized Branin training set (scale-free 1e-2 RMSE bar).
+fn branin_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let f = Branin;
+    let mut rng = Pcg64::seed(seed);
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
+    let raw: Vec<f64> = xs.iter().map(|x| f.eval(x)).collect();
+    let mean = raw.iter().sum::<f64>() / n as f64;
+    let var = raw.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / n as f64;
+    let std = var.sqrt().max(1e-12);
+    let ys: Vec<f64> = raw.iter().map(|y| (y - mean) / std).collect();
+    (xs, ys)
+}
+
+#[test]
+fn sparse_matches_dense_on_branin_512_m128() {
+    let (xs, ys) = branin_data(512, 0xB7A);
+
+    let mut dense = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+    dense.fit(&xs, &ys);
+
+    let mut sparse = SparseGp::with_config(
+        Matern52::new(2),
+        DataMean::default(),
+        1e-2,
+        SgpConfig { max_inducing: 128, ..SgpConfig::default() },
+    );
+    sparse.fit(&xs, &ys);
+    assert_eq!(sparse.inducing_points().len(), 128);
+
+    let mut rng = Pcg64::seed(0xCAFE);
+    let probes = 256;
+    let mut se = 0.0;
+    for _ in 0..probes {
+        let p = rng.unit_point(2);
+        let (md, vd) = dense.predict(&p);
+        let (ms, vs) = sparse.predict(&p);
+        se += (md - ms) * (md - ms);
+        assert!(vs.is_finite() && vs > 0.0);
+        assert!(vd.is_finite() && vd > 0.0);
+    }
+    let rmse = (se / probes as f64).sqrt();
+    assert!(rmse < 1e-2, "sparse vs dense prediction RMSE {rmse} exceeds the 1e-2 bar");
+}
+
+#[test]
+fn sparse_posterior_actually_fits_branin() {
+    // not just agreement with dense: the sparse posterior mean must track
+    // the (standardized) function at held-out locations
+    let (xs, ys) = branin_data(512, 0x5eed);
+    let f = Branin;
+    // recover the standardization used by branin_data
+    let raw: Vec<f64> = xs.iter().map(|x| f.eval(x)).collect();
+    let mean = raw.iter().sum::<f64>() / raw.len() as f64;
+    let var = raw.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / raw.len() as f64;
+    let std = var.sqrt();
+
+    let mut sparse = SparseGp::with_config(
+        Matern52::new(2),
+        DataMean::default(),
+        1e-2,
+        SgpConfig { max_inducing: 128, ..SgpConfig::default() },
+    );
+    sparse.fit(&xs, &ys);
+
+    let mut rng = Pcg64::seed(0xF00);
+    let mut se = 0.0;
+    let probes = 128;
+    for _ in 0..probes {
+        let p = rng.unit_point(2);
+        let truth = (f.eval(&p) - mean) / std;
+        let (mu, _) = sparse.predict(&p);
+        se += (mu - truth) * (mu - truth);
+    }
+    let rmse = (se / probes as f64).sqrt();
+    assert!(rmse < 0.2, "sparse posterior vs Branin RMSE {rmse}");
+}
+
+#[test]
+fn adaptive_model_scales_through_migration() {
+    // stream 400 Branin observations through an AdaptiveModel; it must
+    // migrate at the threshold and keep a bounded inducing set while the
+    // posterior stays usable
+    let (xs, ys) = branin_data(400, 0xAD);
+    let mut model = AdaptiveModel::new(Matern52::new(2), DataMean::default(), 1e-2)
+        .with_threshold(128)
+        .with_sparse_config(SgpConfig { max_inducing: 96, ..SgpConfig::default() });
+    for (x, &y) in xs.iter().zip(&ys) {
+        model.add_sample(x, y);
+    }
+    assert!(model.is_sparse());
+    assert_eq!(model.n_samples(), 400);
+    let sgp = model.as_sparse().expect("migrated");
+    assert!(sgp.inducing_points().len() <= 96);
+
+    // prediction agrees with a dense GP fit on the same data to the same
+    // loose tolerance the BO loop cares about
+    let mut dense = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+    dense.fit(&xs, &ys);
+    let mut rng = Pcg64::seed(1);
+    for _ in 0..64 {
+        let p = rng.unit_point(2);
+        let (md, _) = dense.predict(&p);
+        let (ms, _) = model.predict(&p);
+        assert!((md - ms).abs() < 0.15, "dense {md} vs adaptive-sparse {ms}");
+    }
+}
