@@ -1,0 +1,76 @@
+//! q-batch ask/tell: one suggestion server feeding 4 parallel workers.
+//!
+//! The scenario the batched pipeline opens up (ROADMAP): instead of one
+//! robot trying one trial at a time, a farm of evaluators runs q trials
+//! concurrently. Each round the server proposes `q = 4` diverse points
+//! via the constant-liar heuristic ([`AskTellServer::ask_batch`]), the
+//! workers evaluate them in parallel threads (here: a noisy synthetic
+//! objective standing in for 4 physical robots), and every outcome is
+//! told back before the next round.
+//!
+//! Run with: `cargo run --release --example batch_ask`
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use limbo::coordinator::DefaultAskTellServer;
+
+/// The simulated experiment each worker runs (maximum 0 at (0.7, 0.3));
+/// the sleep stands in for the physical trial the paper's robots execute.
+fn run_trial(x: &[f64]) -> f64 {
+    thread::sleep(Duration::from_millis(5));
+    -(x[0] - 0.7).powi(2) - (x[1] - 0.3).powi(2)
+}
+
+fn main() {
+    const Q: usize = 4;
+    const ROUNDS: usize = 8;
+
+    let server = DefaultAskTellServer::with_defaults(2, 42).spawn();
+    let t0 = Instant::now();
+
+    for round in 0..ROUNDS {
+        // one q-point proposal: tell-the-lie, re-maximize, rollback
+        let batch = server.ask_batch(Q);
+
+        // dispatch the q trials to q parallel workers
+        let outcomes: Vec<(Vec<f64>, f64)> = thread::scope(|scope| {
+            let workers: Vec<_> = batch
+                .into_iter()
+                .map(|x| {
+                    scope.spawn(move || {
+                        let y = run_trial(&x);
+                        (x, y)
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|w| w.join().expect("worker finished")).collect()
+        });
+
+        let trials: Vec<String> = outcomes
+            .iter()
+            .map(|(x, y)| format!("({:.3}, {:.3}) -> {y:.4}", x[0], x[1]))
+            .collect();
+        for (x, y) in outcomes {
+            server.tell(x, y);
+        }
+        let best = server.best().expect("observations recorded");
+        println!(
+            "round {round}: trials [{}], incumbent {:.5} at ({:.3}, {:.3})",
+            trials.join(", "),
+            best.1,
+            best.0[0],
+            best.0[1]
+        );
+    }
+
+    let best = server.best().expect("observations recorded");
+    println!(
+        "\n{} evaluations across {Q} parallel workers in {:.2}s -> best {:.5} at ({:.3}, {:.3})",
+        ROUNDS * Q,
+        t0.elapsed().as_secs_f64(),
+        best.1,
+        best.0[0],
+        best.0[1]
+    );
+}

@@ -1,7 +1,15 @@
 //! Inner-optimizer ablation: time + quality of each acquisition maximizer
 //! on a realistic acquisition landscape (UCB over a fitted GP), the design
 //! choice DESIGN.md calls out (DIRECT vs CMA-ES vs restarted local search
-//! vs random).
+//! vs random), plus the batched-posterior sweep: point-wise vs batched
+//! UCB scoring at batch sizes B ∈ {1, 16, 64, 256}, emitting one JSON row
+//! per batch size for the CI bench trajectory.
+//!
+//! `cargo bench --bench acqui_opt -- --smoke` runs a fast CI-sized variant
+//! of the sweep only (smaller GP, fewer samples).
+
+use std::io::Write as _;
+use std::time::Duration;
 
 use limbo::acqui::{AcquiContext, AcquiFn, Ucb};
 use limbo::benchlib::{header, Bencher};
@@ -23,12 +31,12 @@ fn fitted_gp(dim: usize, n: usize) -> Gp<Matern52, DataMean> {
     gp
 }
 
-fn main() {
+fn optimizer_ablation() {
     let b = Bencher::quick();
     for (dim, n) in [(2usize, 30usize), (6, 60)] {
         header(&format!("acquisition maximization (UCB over {n}-point GP, dim={dim})"));
         let gp = fitted_gp(dim, n);
-        let ctx = AcquiContext { iteration: n, best: 1.0, dim };
+        let ctx = AcquiContext::new(n, 1.0, dim);
         let acq = Ucb { alpha: 0.5 };
         let gp_ref = &gp;
         let objective = move |x: &[f64]| acq.eval(gp_ref, x, &ctx);
@@ -63,4 +71,79 @@ fn main() {
             );
         }
     }
+}
+
+/// Point-wise vs batched UCB scoring over a large training set: the
+/// batched path pays one cross-covariance block + one multi-RHS solve per
+/// batch, the point-wise path re-walks the Cholesky factor per candidate.
+/// Emits one JSON row per batch size (candidates/sec both ways) to
+/// `target/acqui_opt_batch.json` for the CI artifact.
+fn batch_sweep(smoke: bool) {
+    let n = if smoke { 128 } else { 512 };
+    let dim = 4;
+    header(&format!(
+        "batched posterior sweep (UCB over {n}-sample GP, dim={dim}, B in 1/16/64/256)"
+    ));
+    let gp = fitted_gp(dim, n);
+    let ctx = AcquiContext::new(n, 1.0, dim);
+    let acq = Ucb { alpha: 0.5 };
+    let mut rng = Pcg64::seed(23);
+    let pool: Vec<Vec<f64>> = (0..256).map(|_| rng.unit_point(dim)).collect();
+    let bench = if smoke {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            sample_time: Duration::from_millis(10),
+            samples: 5,
+        }
+    } else {
+        Bencher::quick()
+    };
+
+    let mut json_rows: Vec<String> = Vec::new();
+    for bsize in [1usize, 16, 64, 256] {
+        let cands = &pool[..bsize];
+        let point = bench.bench(&format!("pointwise/n={n}/B={bsize}"), || {
+            let mut acc = 0.0;
+            for c in cands {
+                acc += acq.eval(&gp, c, &ctx);
+            }
+            acc
+        });
+        let batched =
+            bench.bench(&format!("batched/n={n}/B={bsize}"), || acq.eval_batch(&gp, cands, &ctx));
+        let point_cps = bsize as f64 / point.per_iter.median;
+        let batch_cps = bsize as f64 / batched.per_iter.median;
+        let speedup = batch_cps / point_cps;
+        println!(
+            "    -> B={bsize}: {point_cps:.0} vs {batch_cps:.0} candidates/sec ({speedup:.2}x)"
+        );
+        json_rows.push(format!(
+            "{{\"bench\":\"acqui_batch\",\"smoke\":{smoke},\"n\":{n},\"dim\":{dim},\
+             \"batch\":{bsize},\"pointwise_cps\":{point_cps:.1},\
+             \"batched_cps\":{batch_cps:.1},\"speedup\":{speedup:.3}}}"
+        ));
+    }
+
+    let path = std::path::Path::new("target").join("acqui_opt_batch.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &json_rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    for row in &json_rows {
+        println!("{row}");
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    if !smoke {
+        optimizer_ablation();
+    }
+    batch_sweep(smoke);
 }

@@ -10,22 +10,55 @@ mod math;
 pub use math::{norm_cdf, norm_pdf};
 
 use crate::model::Model;
+use crate::opt::Objective;
 
 /// Run context the optimizer passes to the acquisition at each iteration.
+///
+/// Built once per iteration via [`AcquiContext::new`], which precomputes
+/// the iteration-dependent part of the GP-UCB β schedule — the inner
+/// optimizer scores hundreds of candidates per iteration, so per-candidate
+/// `ln`/`powf` calls in [`GpUcb::eval`] were pure overhead.
 #[derive(Clone, Copy, Debug)]
 pub struct AcquiContext {
-    /// Current BO iteration (number of non-init samples so far).
-    pub iteration: usize,
-    /// Incumbent best observation (max), `-inf` before any data.
-    pub best: f64,
-    /// Problem dimensionality.
-    pub dim: usize,
+    // All fields are read-only (construct a fresh context per iteration
+    // via `new`): `gp_ucb_beta2` is derived from `iteration`/`dim`, so
+    // field mutation could silently desync the cached schedule.
+    iteration: usize,
+    best: f64,
+    dim: usize,
+    /// δ-independent part of the GP-UCB β² schedule,
+    /// `2 ln(t^(d/2+2) π² / 3)`; [`GpUcb`] adds its own `-2 ln δ`.
+    gp_ucb_beta2: f64,
 }
 
 impl AcquiContext {
+    /// Context for iteration `iteration` with incumbent `best`.
+    pub fn new(iteration: usize, best: f64, dim: usize) -> Self {
+        let t = (iteration + 1) as f64;
+        let d = dim as f64;
+        let gp_ucb_beta2 = 2.0
+            * ((d / 2.0 + 2.0) * t.ln() + (std::f64::consts::PI.powi(2) / 3.0).ln());
+        Self { iteration, best, dim, gp_ucb_beta2 }
+    }
+
     /// Context for a fresh run.
     pub fn start(dim: usize) -> Self {
-        Self { iteration: 0, best: f64::NEG_INFINITY, dim }
+        Self::new(0, f64::NEG_INFINITY, dim)
+    }
+
+    /// Current BO iteration (number of non-init samples so far).
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Incumbent best observation (max), `-inf` before any data.
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+
+    /// Problem dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
     }
 }
 
@@ -33,6 +66,42 @@ impl AcquiContext {
 pub trait AcquiFn<M: Model + ?Sized>: Send + Sync {
     /// Score candidate `x` (higher = more promising).
     fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64;
+
+    /// Score a whole candidate slice through the model's batched
+    /// posterior ([`Model::predict_batch`]). Per-batch constants (GP-UCB's
+    /// β, the incumbent threshold) are computed once per batch instead of
+    /// once per candidate. Default loops over [`eval`](Self::eval).
+    fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
+        xs.iter().map(|x| self.eval(model, x, ctx)).collect()
+    }
+}
+
+/// An acquisition bound to a model and context as a maximization
+/// [`Objective`] for the inner optimizers, with `eval_many` routed through
+/// [`AcquiFn::eval_batch`] — the glue that lets population-based inner
+/// optimizers ([`crate::opt::RandomPoint`], [`crate::opt::Cmaes`],
+/// [`crate::opt::PopulationSearch`], ...) hit the batched posterior path.
+pub struct AcquiObjective<'a, M: Model + ?Sized, A: AcquiFn<M>> {
+    model: &'a M,
+    acqui: &'a A,
+    ctx: AcquiContext,
+}
+
+impl<'a, M: Model + ?Sized, A: AcquiFn<M>> AcquiObjective<'a, M, A> {
+    /// Bind `acqui` over `model` for one iteration.
+    pub fn new(model: &'a M, acqui: &'a A, ctx: AcquiContext) -> Self {
+        Self { model, acqui, ctx }
+    }
+}
+
+impl<M: Model + ?Sized, A: AcquiFn<M>> Objective for AcquiObjective<'_, M, A> {
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.acqui.eval(self.model, x, &self.ctx)
+    }
+
+    fn eval_many(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.acqui.eval_batch(self.model, xs, &self.ctx)
+    }
 }
 
 /// Upper Confidence Bound: `mu + alpha * sigma` (Limbo's `acqui::UCB`).
@@ -53,6 +122,14 @@ impl<M: Model + ?Sized> AcquiFn<M> for Ucb {
         let (mu, var) = model.predict(x);
         mu + self.alpha * var.sqrt()
     }
+
+    fn eval_batch(&self, model: &M, xs: &[Vec<f64>], _ctx: &AcquiContext) -> Vec<f64> {
+        model
+            .predict_batch(xs)
+            .into_iter()
+            .map(|(mu, var)| mu + self.alpha * var.sqrt())
+            .collect()
+    }
 }
 
 /// GP-UCB (Srinivas et al. 2010) with the theoretical beta schedule
@@ -70,15 +147,29 @@ impl Default for GpUcb {
     }
 }
 
+impl GpUcb {
+    /// β for the current iteration: the `t`/`d` part comes precomputed
+    /// from [`AcquiContext::new`], only `-2 ln δ` is added here — no
+    /// `powf` and no per-candidate schedule recomputation.
+    fn beta(&self, ctx: &AcquiContext) -> f64 {
+        (ctx.gp_ucb_beta2 - 2.0 * self.delta.ln()).max(0.0).sqrt()
+    }
+}
+
 impl<M: Model + ?Sized> AcquiFn<M> for GpUcb {
     fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
-        let t = (ctx.iteration + 1) as f64;
-        let d = ctx.dim as f64;
-        let beta2 = 2.0
-            * (t.powf(d / 2.0 + 2.0) * std::f64::consts::PI.powi(2) / (3.0 * self.delta))
-                .ln();
+        let beta = self.beta(ctx);
         let (mu, var) = model.predict(x);
-        mu + beta2.max(0.0).sqrt() * var.sqrt()
+        mu + beta * var.sqrt()
+    }
+
+    fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
+        let beta = self.beta(ctx); // once per batch, not per candidate
+        model
+            .predict_batch(xs)
+            .into_iter()
+            .map(|(mu, var)| mu + beta * var.sqrt())
+            .collect()
     }
 }
 
@@ -95,16 +186,34 @@ impl Default for Ei {
     }
 }
 
+impl Ei {
+    #[inline]
+    fn score(&self, mu: f64, var: f64, threshold: f64) -> f64 {
+        let sigma = var.sqrt();
+        let gain = mu - threshold;
+        if sigma < 1e-12 {
+            return gain.max(0.0);
+        }
+        let z = gain / sigma;
+        gain * norm_cdf(z) + sigma * norm_pdf(z)
+    }
+}
+
 impl<M: Model + ?Sized> AcquiFn<M> for Ei {
     fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
-        let (mu, var) = model.predict(x);
-        let sigma = var.sqrt();
         let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
-        if sigma < 1e-12 {
-            return (mu - best - self.xi).max(0.0);
-        }
-        let z = (mu - best - self.xi) / sigma;
-        (mu - best - self.xi) * norm_cdf(z) + sigma * norm_pdf(z)
+        let (mu, var) = model.predict(x);
+        self.score(mu, var, best + self.xi)
+    }
+
+    fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
+        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
+        let threshold = best + self.xi;
+        model
+            .predict_batch(xs)
+            .into_iter()
+            .map(|(mu, var)| self.score(mu, var, threshold))
+            .collect()
     }
 }
 
@@ -128,6 +237,16 @@ impl<M: Model + ?Sized> AcquiFn<M> for Pi {
         let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
         norm_cdf((mu - best - self.xi) / sigma)
     }
+
+    fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
+        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
+        let threshold = best + self.xi;
+        model
+            .predict_batch(xs)
+            .into_iter()
+            .map(|(mu, var)| norm_cdf((mu - threshold) / var.sqrt().max(1e-12)))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -147,7 +266,7 @@ mod tests {
     #[test]
     fn ucb_prefers_uncertain_far_points_with_big_alpha() {
         let gp = fitted_gp();
-        let ctx = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
+        let ctx = AcquiContext::new(1, 1.0, 1);
         let explore = Ucb { alpha: 100.0 };
         // x=0.5 is between data (low sigma); x=5 is far (sigma ~ prior)
         assert!(explore.eval(&gp, &[5.0], &ctx) > explore.eval(&gp, &[0.5], &ctx));
@@ -161,8 +280,8 @@ mod tests {
     fn gp_ucb_beta_grows_with_iteration() {
         let gp = fitted_gp();
         let a = GpUcb::default();
-        let early = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
-        let late = AcquiContext { iteration: 1000, best: 1.0, dim: 1 };
+        let early = AcquiContext::new(1, 1.0, 1);
+        let late = AcquiContext::new(1000, 1.0, 1);
         // at a fixed point, larger t -> larger bonus
         let x = [3.0];
         assert!(a.eval(&gp, &x, &late) > a.eval(&gp, &x, &early));
@@ -172,7 +291,7 @@ mod tests {
     fn ei_zero_when_certain_and_worse() {
         let gp = fitted_gp();
         let ei = Ei { xi: 0.0 };
-        let ctx = AcquiContext { iteration: 1, best: 5.0, dim: 1 };
+        let ctx = AcquiContext::new(1, 5.0, 1);
         // at the observed minimum, mu ~ -1 << best=5, sigma tiny
         let v = ei.eval(&gp, &[0.8], &ctx);
         assert!(v >= 0.0 && v < 1e-3, "ei={v}");
@@ -182,7 +301,7 @@ mod tests {
     fn ei_positive_under_uncertainty() {
         let gp = fitted_gp();
         let ei = Ei::default();
-        let ctx = AcquiContext { iteration: 1, best: 1.0, dim: 1 };
+        let ctx = AcquiContext::new(1, 1.0, 1);
         assert!(ei.eval(&gp, &[10.0], &ctx) > 0.0);
     }
 
@@ -190,8 +309,58 @@ mod tests {
     fn pi_bounded_by_one() {
         let gp = fitted_gp();
         let pi = Pi::default();
-        let ctx = AcquiContext { iteration: 1, best: -10.0, dim: 1 };
+        let ctx = AcquiContext::new(1, -10.0, 1);
         let v = pi.eval(&gp, &[0.2], &ctx);
         assert!(v > 0.9 && v <= 1.0, "pi={v}");
+    }
+
+    #[test]
+    fn eval_batch_matches_pointwise_for_all_acquisitions() {
+        let gp = fitted_gp();
+        let ctx = AcquiContext::new(3, 0.5, 1);
+        let cands: Vec<Vec<f64>> =
+            (0..9).map(|i| vec![i as f64 / 8.0]).collect();
+        let acquis: Vec<Box<dyn AcquiFn<Gp<SquaredExpArd, ZeroMean>>>> = vec![
+            Box::new(Ucb::default()),
+            Box::new(GpUcb::default()),
+            Box::new(Ei::default()),
+            Box::new(Pi::default()),
+        ];
+        for a in &acquis {
+            let batch = a.eval_batch(&gp, &cands, &ctx);
+            assert_eq!(batch.len(), cands.len());
+            for (j, c) in cands.iter().enumerate() {
+                let v = a.eval(&gp, c, &ctx);
+                assert!((batch[j] - v).abs() < 1e-10, "batch[{j}]={} vs {v}", batch[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn acqui_objective_routes_eval_many_through_batch() {
+        let gp = fitted_gp();
+        let acq = Ucb::default();
+        let obj = AcquiObjective::new(&gp, &acq, AcquiContext::new(0, 1.0, 1));
+        let cands = vec![vec![0.1], vec![0.9]];
+        let many = obj.eval_many(&cands);
+        assert!((many[0] - obj.eval(&cands[0])).abs() < 1e-12);
+        assert!((many[1] - obj.eval(&cands[1])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_ucb_beta_matches_direct_formula() {
+        // the precomputed split must reproduce the textbook schedule
+        let a = GpUcb { delta: 0.17 };
+        for (it, dim) in [(0usize, 1usize), (4, 2), (99, 6)] {
+            let ctx = AcquiContext::new(it, 0.0, dim);
+            let t = (it + 1) as f64;
+            let d = dim as f64;
+            let direct = (2.0
+                * (t.powf(d / 2.0 + 2.0) * std::f64::consts::PI.powi(2) / (3.0 * 0.17))
+                    .ln())
+            .max(0.0)
+            .sqrt();
+            assert!((a.beta(&ctx) - direct).abs() < 1e-9, "it={it} dim={dim}");
+        }
     }
 }

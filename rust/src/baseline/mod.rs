@@ -350,6 +350,10 @@ impl BayesOptLike {
         }
 
         for it in 0..self.config.iterations {
+            // deliberate wiring: the closure objective gets `eval_many`
+            // from the blanket Fn impl — a per-point loop, so the
+            // population-refactored inner optimizers still drive the
+            // baseline at its unbatched Fig-1 cost profile
             let best_val = best.value;
             let gp_ref = &gp;
             let acqui_ref = &*acqui;

@@ -15,7 +15,7 @@
 //! println!("best {:?} -> {}", best.x, best.value);
 //! ```
 
-use crate::acqui::{AcquiContext, AcquiFn, Ucb};
+use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ucb};
 use crate::init::{Initializer, RandomSampling};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
@@ -234,11 +234,11 @@ where
             if self.stop.stop(&ctx) {
                 break;
             }
-            let actx = AcquiContext { iteration, best: best.value, dim };
-            let model = &self.model;
-            let acquisition = &self.acquisition;
-            let objective =
-                move |x: &[f64]| -> f64 { acquisition.eval(model, x, &actx) };
+            // batched acquisition objective: population-based inner
+            // optimizers score whole generations through eval_many →
+            // predict_batch instead of per-point predicts
+            let actx = AcquiContext::new(iteration, best.value, dim);
+            let objective = AcquiObjective::new(&self.model, &self.acquisition, actx);
             let cand = self.inner_opt.optimize(&objective, dim, &mut self.rng);
 
             let y = f.eval(&cand.x);

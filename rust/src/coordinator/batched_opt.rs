@@ -1,15 +1,38 @@
 //! Batch-aware acquisition maximization for the XLA backend.
 //!
-//! The generic inner optimizers call `Model::predict` point by point; on
-//! the XLA backend every call executes a full artifact (Gram + Cholesky +
-//! solves), so a 500-evaluation DIRECT pass costs 500 executions. The
-//! fused `ucb` artifact scores **64 candidates per execution**, so a
-//! batched sampler gets 64x more acquisition evaluations per unit of
-//! runtime work — the runtime-layer half of the §Perf story.
+//! Historically this module carried a bespoke sampler because only the
+//! XLA backend had a batched posterior. The batch-first refactor moved
+//! that machinery into the generic [`PopulationSearch`] inner optimizer
+//! (rounds of Halton/uniform populations + a final local round, scored
+//! through [`crate::opt::Objective::eval_many`]); [`BatchedUcbSearch`] is
+//! now a thin adapter that binds the fused-UCB artifact
+//! ([`XlaGpModel::ucb_batch`]) as a batched [`Objective`] and sizes the
+//! population to the artifact batch capacity — every round still costs
+//! ~1 fused artifact execution per capacity tile, but the sampler itself
+//! is shared with the native backends.
 
 use crate::coordinator::xla_model::XlaGpModel;
-use crate::opt::Candidate;
-use crate::rng::{halton_point, Pcg64};
+use crate::opt::{Candidate, Objective, Optimizer, PopulationSearch};
+use crate::rng::Pcg64;
+
+/// The fused `ucb` artifact as a maximization [`Objective`]: `eval_many`
+/// scores a whole population in one artifact execution per capacity tile
+/// (predict + mu + alpha*sigma combine fused on the backend).
+struct FusedUcbObjective<'a> {
+    model: &'a XlaGpModel,
+    alpha: f64,
+}
+
+impl Objective for FusedUcbObjective<'_> {
+    fn eval(&self, x: &[f64]) -> f64 {
+        let one = [x.to_vec()];
+        self.model.ucb_batch(&one, self.alpha)[0]
+    }
+
+    fn eval_many(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.model.ucb_batch(xs, self.alpha)
+    }
+}
 
 /// Batched UCB maximizer over an [`XlaGpModel`].
 pub struct BatchedUcbSearch {
@@ -30,45 +53,17 @@ impl Default for BatchedUcbSearch {
 }
 
 impl BatchedUcbSearch {
-    /// Maximize the fused UCB acquisition; returns the best candidate and
-    /// its acquisition value.
+    /// Maximize the fused UCB acquisition through the generic population
+    /// machinery (populations sized to the artifact batch capacity);
+    /// returns the best candidate and its acquisition value.
     pub fn optimize(&self, model: &XlaGpModel, dim: usize, rng: &mut Pcg64) -> Candidate {
-        let b = model.batch_size().max(1);
-        let mut best = Candidate { x: vec![0.5; dim], value: f64::NEG_INFINITY };
-        let mut halton_idx = rng.below(1 << 16); // decorrelate across calls
-
-        for round in 0..self.rounds.max(1) {
-            let mut cands: Vec<Vec<f64>> = Vec::with_capacity(b);
-            let local = round + 1 == self.rounds && best.value.is_finite();
-            if local {
-                // last round: shrink around the incumbent
-                let w = 0.1;
-                for _ in 0..b {
-                    let x: Vec<f64> = best
-                        .x
-                        .iter()
-                        .map(|&v| (v + rng.uniform(-w, w)).clamp(0.0, 1.0))
-                        .collect();
-                    cands.push(x);
-                }
-            } else {
-                let n_halton = (b as f64 * self.halton_fraction) as usize;
-                for _ in 0..n_halton {
-                    cands.push(halton_point(halton_idx, dim));
-                    halton_idx += 1;
-                }
-                while cands.len() < b {
-                    cands.push(rng.unit_point(dim));
-                }
-            }
-            let vals = model.ucb_batch(&cands, self.alpha);
-            for (x, value) in cands.into_iter().zip(vals) {
-                if value > best.value {
-                    best = Candidate { x, value };
-                }
-            }
-        }
-        best
+        let search = PopulationSearch {
+            rounds: self.rounds,
+            batch: model.batch_size().max(1),
+            halton_fraction: self.halton_fraction,
+        };
+        let objective = FusedUcbObjective { model, alpha: self.alpha };
+        search.optimize(&objective, dim, rng)
     }
 }
 

@@ -9,17 +9,33 @@ use std::time::Instant;
 
 use crate::benchlib::Summary;
 use crate::benchfns::TestFunction;
-use crate::pool::parallel_map;
+use crate::pool::parallel_map_catch;
 
 /// One optimization run's outcome.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
-    /// Best value found.
+    /// Best value found (`NaN` for a failed replicate).
     pub best_value: f64,
     /// Wall-clock seconds for the whole run.
     pub wall_secs: f64,
     /// Function evaluations used.
     pub evaluations: usize,
+    /// Panic message if the replicate crashed (filled by the runner; a
+    /// failed replicate is excluded from the aggregate statistics and
+    /// counted in [`ExperimentRow::failures`]).
+    pub failure: Option<String>,
+}
+
+impl RunOutcome {
+    /// Successful run (wall-clock filled in by the runner).
+    pub fn ok(best_value: f64, evaluations: usize) -> Self {
+        Self { best_value, wall_secs: 0.0, evaluations, failure: None }
+    }
+
+    /// A replicate whose job panicked.
+    pub fn failed(message: String) -> Self {
+        Self { best_value: f64::NAN, wall_secs: 0.0, evaluations: 0, failure: Some(message) }
+    }
 }
 
 /// A named, runnable optimizer configuration (one Figure-1 column).
@@ -37,12 +53,16 @@ pub struct ExperimentRow {
     pub function: String,
     /// Configuration name.
     pub config: String,
-    /// Accuracy statistics (`optimum - best`, lower = better).
+    /// Accuracy statistics (`optimum - best`, lower = better) over the
+    /// successful replicates.
     pub accuracy: Summary,
-    /// Wall-clock statistics in seconds.
+    /// Wall-clock statistics in seconds over the successful replicates.
     pub wall: Summary,
     /// Replicates run.
     pub replicates: usize,
+    /// Replicates whose job panicked (surfaced per-job via
+    /// [`RunOutcome::failure`], no longer a silent pool counter).
+    pub failures: usize,
 }
 
 /// The replicated experiment driver.
@@ -66,23 +86,40 @@ impl ExperimentRunner {
         Self { replicates: 250, threads: default_threads(), base_seed: 1000 }
     }
 
-    /// Run one (function, config) cell.
+    /// Run one (function, config) cell. A replicate that panics becomes a
+    /// failed [`RunOutcome`] (message preserved) instead of aborting the
+    /// cell; statistics aggregate over the survivors.
     pub fn run_cell(&self, f: &dyn TestFunction, config: &dyn BenchConfig) -> ExperimentRow {
         let seeds: Vec<u64> = (0..self.replicates).map(|i| self.base_seed + i as u64).collect();
-        let outcomes = parallel_map(seeds, self.threads, |_, seed| {
+        let outcomes: Vec<RunOutcome> = parallel_map_catch(seeds, self.threads, |_, seed| {
             let t0 = Instant::now();
             let mut out = config.run(f, seed);
             out.wall_secs = t0.elapsed().as_secs_f64();
             out
-        });
-        let acc: Vec<f64> = outcomes.iter().map(|o| f.accuracy(o.best_value)).collect();
-        let wall: Vec<f64> = outcomes.iter().map(|o| o.wall_secs).collect();
+        })
+        .into_iter()
+        .map(|r| r.unwrap_or_else(RunOutcome::failed))
+        .collect();
+        let ok: Vec<&RunOutcome> = outcomes.iter().filter(|o| o.failure.is_none()).collect();
+        let failures = outcomes.len() - ok.len();
+        for o in &outcomes {
+            if let Some(msg) = &o.failure {
+                eprintln!(
+                    "[experiment] {}/{} replicate failed: {msg}",
+                    f.name(),
+                    config.name()
+                );
+            }
+        }
+        let acc: Vec<f64> = ok.iter().map(|o| f.accuracy(o.best_value)).collect();
+        let wall: Vec<f64> = ok.iter().map(|o| o.wall_secs).collect();
         ExperimentRow {
             function: f.name().to_string(),
             config: config.name().to_string(),
             accuracy: Summary::from(&acc),
             wall: Summary::from(&wall),
             replicates: self.replicates,
+            failures,
         }
     }
 
@@ -105,15 +142,17 @@ impl ExperimentRunner {
 /// Pretty-print the Figure-1 style table plus pairwise speed-ups.
 pub fn print_table(rows: &[ExperimentRow]) {
     println!(
-        "{:<18} {:<16} {:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
-        "function", "config", "reps", "acc.med", "acc.q1", "acc.q3", "time.med", "time.q3"
+        "{:<18} {:<16} {:>9} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "function", "config", "reps", "fail", "acc.med", "acc.q1", "acc.q3", "time.med",
+        "time.q3"
     );
     for r in rows {
         println!(
-            "{:<18} {:<16} {:>9} {:>10.2e} {:>10.2e} {:>10.2e} {:>9.3}s {:>9.3}s",
+            "{:<18} {:<16} {:>9} {:>6} {:>10.2e} {:>10.2e} {:>10.2e} {:>9.3}s {:>9.3}s",
             r.function,
             r.config,
             r.replicates,
+            r.failures,
             r.accuracy.median,
             r.accuracy.q1,
             r.accuracy.q3,
@@ -172,11 +211,7 @@ mod tests {
         fn run(&self, _f: &dyn TestFunction, seed: u64) -> RunOutcome {
             // deterministic fake: accuracy depends on seed
             std::thread::sleep(std::time::Duration::from_micros(200));
-            RunOutcome {
-                best_value: -self.1 * (1.0 + (seed % 5) as f64 * 0.1),
-                wall_secs: 0.0,
-                evaluations: 10,
-            }
+            RunOutcome::ok(-self.1 * (1.0 + (seed % 5) as f64 * 0.1), 10)
         }
     }
 
@@ -185,8 +220,34 @@ mod tests {
         let runner = ExperimentRunner { replicates: 10, threads: 4, base_seed: 0 };
         let row = runner.run_cell(&Sphere::new(2), &FakeConfig("fake", 0.5));
         assert_eq!(row.accuracy.n, 10);
+        assert_eq!(row.failures, 0);
         assert!(row.accuracy.median > 0.0);
         assert!(row.wall.median > 0.0);
+    }
+
+    struct PanickyConfig;
+
+    impl BenchConfig for PanickyConfig {
+        fn name(&self) -> &str {
+            "panicky"
+        }
+        fn run(&self, _f: &dyn TestFunction, seed: u64) -> RunOutcome {
+            if seed % 3 == 0 {
+                panic!("replicate {seed} exploded");
+            }
+            RunOutcome::ok(-0.25, 5)
+        }
+    }
+
+    #[test]
+    fn panicking_replicates_become_failures_not_aborts() {
+        let runner = ExperimentRunner { replicates: 9, threads: 3, base_seed: 0 };
+        // seeds 0..9: 0, 3, 6 panic -> 3 failures, 6 survivors
+        let row = runner.run_cell(&Sphere::new(2), &PanickyConfig);
+        assert_eq!(row.failures, 3);
+        assert_eq!(row.replicates, 9);
+        assert_eq!(row.accuracy.n, 6, "stats aggregate over survivors only");
+        assert!(row.accuracy.median.is_finite());
     }
 
     #[test]

@@ -91,7 +91,7 @@ impl BenchConfig for LimboConfig {
             opt = opt.with_hp_schedule(HpSchedule::Every(k));
         }
         let best = opt.optimize(&FnEval::new(dim, |x: &[f64]| f.eval(x)));
-        RunOutcome { best_value: best.value, wall_secs: 0.0, evaluations: best.evaluations }
+        RunOutcome::ok(best.value, best.evaluations)
     }
 }
 
@@ -128,7 +128,7 @@ impl BenchConfig for BaselineConfig {
             noise: s.noise,
         };
         let best = opt.optimize(&FnEval::new(f.dim(), |x: &[f64]| f.eval(x)));
-        RunOutcome { best_value: best.value, wall_secs: 0.0, evaluations: best.evaluations }
+        RunOutcome::ok(best.value, best.evaluations)
     }
 }
 

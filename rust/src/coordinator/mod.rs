@@ -11,8 +11,10 @@
 //! * [`service`] — ask/tell suggestion server (channel-based, the online
 //!   adaptation deployment mode: the robot asks for a trial, reports the
 //!   outcome, asks again);
-//! * [`batched_opt`] — fused-UCB batched acquisition search (the XLA
-//!   backend's fast inner loop: 64 candidates per artifact execution);
+//! * [`batched_opt`] — batched UCB acquisition search for the XLA
+//!   backend, now a thin adapter over the generic
+//!   [`crate::opt::PopulationSearch`] + `eval_many` machinery (still ~64
+//!   candidates per artifact execution);
 //! * [`config`] — tiny key=value run-configuration parser for the CLI;
 //! * [`multiobj`] — ParEGO-style scalarized multi-objective support (the
 //!   paper notes "Limbo can support multi-objective optimization").

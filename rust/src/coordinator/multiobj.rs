@@ -7,7 +7,7 @@
 //! single-objective GP on the scalarized history. A Pareto [`Archive`]
 //! keeps the non-dominated set.
 
-use crate::acqui::{AcquiContext, AcquiFn, Ucb};
+use crate::acqui::{AcquiContext, AcquiObjective, Ucb};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{gp::Gp, Model};
@@ -147,10 +147,9 @@ impl ParEgo {
             let best_scalar = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
 
             let inner = RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2);
-            let ctx = AcquiContext { iteration: it, best: best_scalar, dim };
+            let ctx = AcquiContext::new(it, best_scalar, dim);
             let acq = Ucb::default();
-            let gp_ref = &gp;
-            let objective = move |x: &[f64]| acq.eval(gp_ref, x, &ctx);
+            let objective = AcquiObjective::new(&gp, &acq, ctx);
             let cand = inner.optimize(&objective, dim, &mut self.rng);
 
             let o = f.eval(&cand.x);

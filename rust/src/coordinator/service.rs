@@ -6,11 +6,16 @@
 //! fast (it runs on the embedded side), so the server owns the model and
 //! the acquisition maximization, and communicates over `mpsc` channels
 //! from a dedicated thread.
+//!
+//! [`AskTellServer::ask_batch`] extends the protocol to q-point proposals
+//! (constant-liar heuristic), so the server can drive a fleet of parallel
+//! evaluators — robot farms, cluster workers — instead of one trial at a
+//! time.
 
 use std::sync::mpsc;
 use std::thread;
 
-use crate::acqui::{AcquiContext, AcquiFn, Ucb};
+use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ucb};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{AdaptiveModel, Model};
@@ -21,6 +26,8 @@ use crate::rng::Pcg64;
 enum Request {
     /// Ask for the next point to try.
     Ask(mpsc::Sender<Vec<f64>>),
+    /// Ask for `q` diverse points to try in parallel.
+    AskBatch(usize, mpsc::Sender<Vec<Vec<f64>>>),
     /// Report an observation.
     Tell(Vec<f64>, f64),
     /// Ask for the incumbent best (x, value).
@@ -95,15 +102,55 @@ where
         if self.model.n_samples() == 0 {
             return self.rng.unit_point(self.dim);
         }
-        let ctx = AcquiContext {
-            iteration: self.iteration,
-            best: self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY),
-            dim: self.dim,
-        };
-        let model = &self.model;
-        let acq = &self.acquisition;
-        let objective = move |x: &[f64]| acq.eval(model, x, &ctx);
+        let ctx = AcquiContext::new(
+            self.iteration,
+            self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY),
+            self.dim,
+        );
+        let objective = AcquiObjective::new(&self.model, &self.acquisition, ctx);
         self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+    }
+
+    /// Propose `q` diverse trials to run in parallel, via the constant-
+    /// liar heuristic: after each maximization the model is *told its own
+    /// posterior mean* at the proposed point (the "lie"), the acquisition
+    /// is re-maximized on the lied model, and all lies are rolled back at
+    /// the end (the lies go into a scratch clone; `self.model` only ever
+    /// sees real [`tell`](Self::tell) observations). Lying flattens the
+    /// posterior variance around already-proposed points, steering the
+    /// next maximization elsewhere — q distinct, informative trials.
+    ///
+    /// Before any data: `q` random probes.
+    pub fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>>
+    where
+        M: Clone,
+    {
+        let q = q.max(1);
+        if self.model.n_samples() == 0 {
+            return (0..q).map(|_| self.rng.unit_point(self.dim)).collect();
+        }
+        let mut liar = self.model.clone();
+        let mut lied_best = self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY);
+        let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
+        for k in 0..q {
+            let ctx = AcquiContext::new(self.iteration + k, lied_best, self.dim);
+            let x = {
+                let objective = AcquiObjective::new(&liar, &self.acquisition, ctx);
+                self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+            };
+            // degenerate acquisition landscapes can re-propose an earlier
+            // point despite the lie; fall back to a random probe so the
+            // batch stays diverse (1e-8 squared distance ~ 1e-4 per axis)
+            let duplicate = batch.iter().any(|p| {
+                p.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() < 1e-8
+            });
+            let x = if duplicate { self.rng.unit_point(self.dim) } else { x };
+            let (lie, _) = liar.predict(&x);
+            liar.add_sample(&x, lie);
+            lied_best = lied_best.max(lie);
+            batch.push(x);
+        }
+        batch
     }
 
     /// Report an observation.
@@ -121,9 +168,12 @@ where
     }
 
     /// Move the server onto its own thread; returns a cloneable handle.
+    /// (`M: Clone` backs the handle's q-batch
+    /// [`ask_batch`](ServerHandle::ask_batch) — the constant liar needs a
+    /// scratch copy of the model to lie to.)
     pub fn spawn(mut self) -> ServerHandle
     where
-        M: Send,
+        M: Send + Clone,
         A: Send,
         O: Send,
     {
@@ -133,6 +183,9 @@ where
                 match req {
                     Request::Ask(reply) => {
                         let _ = reply.send(self.ask());
+                    }
+                    Request::AskBatch(q, reply) => {
+                        let _ = reply.send(self.ask_batch(q));
                     }
                     Request::Tell(x, y) => self.tell(&x, y),
                     Request::Best(reply) => {
@@ -157,6 +210,14 @@ impl ServerHandle {
     pub fn ask(&self) -> Vec<f64> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Request::Ask(tx)).expect("server alive");
+        rx.recv().expect("server replied")
+    }
+
+    /// Request `q` diverse trial points for parallel evaluation (blocks
+    /// for the reply; see [`AskTellServer::ask_batch`]).
+    pub fn ask_batch(&self, q: usize) -> Vec<Vec<f64>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Request::AskBatch(q, tx)).expect("server alive");
         rx.recv().expect("server replied")
     }
 
@@ -244,5 +305,52 @@ mod tests {
         }
         let best = handle.best().unwrap();
         assert!(best.1 > -0.05, "best={}", best.1);
+    }
+
+    #[test]
+    fn ask_batch_proposes_distinct_points_and_rolls_back_lies() {
+        let mut srv = make_server();
+        let f = |x: &[f64]| -(x[0] - 0.4).powi(2);
+        // cold start: q random probes
+        assert_eq!(srv.ask_batch(3).len(), 3);
+        for x in [[0.1], [0.5], [0.9]] {
+            srv.tell(&x, f(&x));
+        }
+        let n_before = srv.model.n_samples();
+        let batch = srv.ask_batch(4);
+        assert_eq!(batch.len(), 4);
+        // the constant-liar lies must not leak into the real model
+        assert_eq!(srv.model.n_samples(), n_before);
+        for (i, a) in batch.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&a[0]));
+            for b in batch.iter().skip(i + 1) {
+                let d2: f64 = a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum();
+                assert!(d2 > 1e-10, "batch points {a:?} and {b:?} coincide");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_ask_tell_converges_like_sequential() {
+        let f = |x: &[f64]| -(x[0] - 0.6).powi(2);
+        // sequential: 16 ask/tell rounds
+        let mut seq = make_server();
+        for _ in 0..16 {
+            let x = seq.ask();
+            let y = f(&x);
+            seq.tell(&x, y);
+        }
+        // batched: 4 rounds of q=4 (same total budget) over the handle
+        let handle = make_server().spawn();
+        for _ in 0..4 {
+            for x in handle.ask_batch(4) {
+                let y = f(&x);
+                handle.tell(x, y);
+            }
+        }
+        let (_, sv) = seq.best().unwrap();
+        let (_, bv) = handle.best().unwrap();
+        assert!(sv > -0.02, "sequential best={sv}");
+        assert!(bv > -0.02, "batched best={bv} should match sequential parity");
     }
 }

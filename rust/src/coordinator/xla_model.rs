@@ -12,6 +12,9 @@ use crate::opt::rprop::{rprop_maximize, RpropParams};
 use crate::runtime::XlaGp;
 
 /// [`Model`] implementation backed by AOT-compiled XLA artifacts.
+/// (`Clone` shares the backend via `Arc` and copies the dataset — cheap
+/// enough for the ask/tell constant-liar scratch copy.)
+#[derive(Clone)]
 pub struct XlaGpModel {
     backend: Arc<XlaGp>,
     dim: usize,

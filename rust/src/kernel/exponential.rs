@@ -2,7 +2,8 @@
 //! sample paths; included for the component-zoo completeness the paper
 //! advertises.
 
-use super::{ard_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, Kernel};
+use crate::la::Matrix;
 
 /// ARD exponential kernel: `sigma_f^2 * exp(-r)` with
 /// `r = sqrt(sum_d (a_d-b_d)^2 / l_d^2)`.
@@ -51,6 +52,14 @@ impl Kernel for Exponential {
     fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
         let r = ard_r2(a, b, &self.inv_ls).sqrt();
         self.sf2 * (-r).exp()
+    }
+
+    fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
+        let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
+        for v in out.data_mut() {
+            *v = self.sf2 * (-v.sqrt()).exp();
+        }
+        out
     }
 
     fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

@@ -3,7 +3,8 @@
 //! Matérn-5/2 is the BayesOpt default and the kernel the paper's snippet
 //! swaps in (`limbo::kernel::MaternFiveHalves`).
 
-use super::{ard_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, Kernel};
+use crate::la::Matrix;
 
 const SQRT5: f64 = 2.2360679774997896;
 const SQRT3: f64 = 1.7320508075688772;
@@ -63,6 +64,14 @@ macro_rules! matern_impl {
             fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
                 let r2 = ard_r2(a, b, &self.inv_ls);
                 self.sf2 * $name::shape(r2)
+            }
+
+            fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
+                let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
+                for v in out.data_mut() {
+                    *v = self.sf2 * $name::shape(*v);
+                }
+                out
             }
 
             fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

@@ -17,6 +17,8 @@ pub use exponential::Exponential;
 pub use matern::{Matern32, Matern52};
 pub use squared_exp::{SquaredExpArd, SquaredExpIso};
 
+use crate::la::Matrix;
+
 /// A positive-definite covariance function with tunable log-hyper-params.
 pub trait Kernel: Clone + Send + Sync + 'static {
     /// Input dimensionality.
@@ -33,6 +35,20 @@ pub trait Kernel: Clone + Send + Sync + 'static {
 
     /// Evaluate `k(a, b)`.
     fn eval(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// Cross-covariance Gram block `K[i, j] = k(xs[i], cands[j])`
+    /// (shape `xs.len() x cands.len()`).
+    ///
+    /// This is the batched-posterior entry point: `Model::predict_batch`
+    /// builds one cross-covariance block per candidate batch instead of
+    /// re-walking the training set per point. The default loops over
+    /// [`eval`](Self::eval); the stationary kernels override it with a
+    /// cache-friendly version that scales both point sets by the inverse
+    /// lengthscales once and reuses squared-norm accumulators
+    /// (`r^2 = |a'|^2 + |b'|^2 - 2 a'.b'`).
+    fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
+        Matrix::from_fn(xs.len(), cands.len(), |i, j| self.eval(&xs[i], &cands[j]))
+    }
 
     /// Gradient `dk(a, b) / dlog(theta)` into `out` (length
     /// [`n_params`](Self::n_params)).
@@ -61,6 +77,97 @@ pub(crate) fn ard_r2(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
         r2 += t * t;
     }
     r2
+}
+
+/// Scale a point set by precomputed inverse lengthscales, returning the
+/// flattened scaled coordinates and the per-point squared norms — the two
+/// reusable accumulators of the batched cross-covariance.
+fn scale_points(pts: &[Vec<f64>], inv_ls: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let d = inv_ls.len();
+    let mut flat = Vec::with_capacity(pts.len() * d);
+    let mut norms = Vec::with_capacity(pts.len());
+    for p in pts {
+        let mut s = 0.0;
+        for (&v, &il) in p.iter().zip(inv_ls) {
+            let t = v * il;
+            flat.push(t);
+            s += t * t;
+        }
+        norms.push(s);
+    }
+    (flat, norms)
+}
+
+/// ARD-scaled squared distances for every `(xs[i], cands[j])` pair, as an
+/// `xs.len() x cands.len()` matrix. Both point sets are scaled by the
+/// inverse lengthscales **once**, then each pair costs one dot product via
+/// `r^2 = |a'|^2 + |b'|^2 - 2 a'.b'` (clamped at 0 against cancellation).
+/// Shared by the stationary kernels' `cross_cov` specializations.
+pub(crate) fn scaled_cross_r2(xs: &[Vec<f64>], cands: &[Vec<f64>], inv_ls: &[f64]) -> Matrix {
+    let d = inv_ls.len();
+    let (a, a_norms) = scale_points(xs, inv_ls);
+    let (b, b_norms) = scale_points(cands, inv_ls);
+    let mut out = Matrix::zeros(xs.len(), cands.len());
+    for i in 0..xs.len() {
+        let ai = &a[i * d..(i + 1) * d];
+        let an = a_norms[i];
+        let row = out.row_mut(i);
+        for (j, o) in row.iter_mut().enumerate() {
+            let bj = &b[j * d..(j + 1) * d];
+            *o = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing;
+
+    /// `cross_cov` (specialized or default) must agree with pairwise
+    /// `eval` — the contract every `predict_batch` relies on.
+    fn check_cross_cov<K: Kernel + std::fmt::Debug>(make: impl Fn(usize) -> K, name: &str) {
+        testing::check(
+            name,
+            0x5EED,
+            32,
+            |rng: &mut Pcg64| {
+                let dim = 1 + rng.below(4);
+                let mut k = make(dim);
+                let p: Vec<f64> = (0..k.n_params()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                k.set_params(&p);
+                let n = rng.below(8); // includes the empty set
+                let b = rng.below(9);
+                let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+                let cs: Vec<Vec<f64>> = (0..b).map(|_| rng.unit_point(dim)).collect();
+                (k, xs, cs)
+            },
+            |(k, xs, cs)| {
+                let gram = k.cross_cov(xs, cs);
+                if (gram.rows(), gram.cols()) != (xs.len(), cs.len()) {
+                    return Err(format!("shape {}x{}", gram.rows(), gram.cols()));
+                }
+                for (i, x) in xs.iter().enumerate() {
+                    for (j, c) in cs.iter().enumerate() {
+                        testing::close(gram[(i, j)], k.eval(x, c), 1e-12)
+                            .map_err(|e| format!("({i},{j}): {e}"))?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cross_cov_matches_pairwise_eval() {
+        check_cross_cov(SquaredExpArd::new, "se_ard-cross-cov");
+        check_cross_cov(|d| SquaredExpIso::new(d), "se_iso-cross-cov");
+        check_cross_cov(Matern52::new, "matern52-cross-cov");
+        check_cross_cov(Matern32::new, "matern32-cross-cov");
+        check_cross_cov(Exponential::new, "exponential-cross-cov");
+    }
 }
 
 #[cfg(test)]

@@ -1,6 +1,7 @@
 //! Squared-exponential (RBF/Gaussian) kernels, isotropic and ARD.
 
-use super::{ard_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, Kernel};
+use crate::la::Matrix;
 
 /// ARD squared exponential:
 /// `k(a,b) = sigma_f^2 * exp(-0.5 * sum_d (a_d-b_d)^2 / l_d^2)`.
@@ -63,6 +64,14 @@ impl Kernel for SquaredExpArd {
     fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
         let r2 = ard_r2(a, b, &self.inv_ls);
         self.sf2 * (-0.5 * r2).exp()
+    }
+
+    fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
+        let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
+        for v in out.data_mut() {
+            *v = self.sf2 * (-0.5 * *v).exp();
+        }
+        out
     }
 
     fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

@@ -8,6 +8,10 @@
 
 use crate::la::{dot, Matrix};
 
+/// Column-block width of [`CholeskyFactor::solve_lower_multi`] (a block of
+/// RHS columns plus one factor row stay cache-resident while `L` streams).
+const SOLVE_COL_BLOCK: usize = 64;
+
 /// Lower-triangular Cholesky factor `L` of an SPD matrix `A = L L^T`.
 #[derive(Clone, Debug)]
 pub struct CholeskyFactor {
@@ -111,6 +115,47 @@ impl CholeskyFactor {
             let s = b[i] - dot(&self.l.row(i)[..i], &x[..i]);
             x[i] = s / self.l[(i, i)];
         }
+    }
+
+    /// Solve `L X = B` for a block of right-hand sides (B is `n x m`,
+    /// one RHS per column). Column-blocked forward substitution: each
+    /// factor row `L[i, ..i]` is streamed once per column block instead of
+    /// once per RHS, so solving m right-hand sides costs one pass over `L`
+    /// per block of [`SOLVE_COL_BLOCK`] columns — the hot kernel of the
+    /// batched GP posterior (`predict_batch`).
+    pub fn solve_lower_multi(&self, b: &Matrix) -> Matrix {
+        let n = self.dim();
+        assert_eq!(b.rows(), n, "solve_lower_multi: RHS row mismatch");
+        let m = b.cols();
+        let mut x = Matrix::zeros(n, m);
+        let mut c0 = 0;
+        while c0 < m {
+            let c1 = (c0 + SOLVE_COL_BLOCK).min(m);
+            let data = x.data_mut();
+            for i in 0..n {
+                let lrow = self.l.row(i);
+                // split the flat storage so row i is writable while rows
+                // k < i stay readable (forward substitution dependency)
+                let (prev, cur) = data.split_at_mut(i * m);
+                let xi = &mut cur[c0..c1];
+                xi.copy_from_slice(&b.row(i)[c0..c1]);
+                for (k, &lik) in lrow[..i].iter().enumerate() {
+                    if lik == 0.0 {
+                        continue;
+                    }
+                    let xk = &prev[k * m + c0..k * m + c1];
+                    for (o, &v) in xi.iter_mut().zip(xk) {
+                        *o -= lik * v;
+                    }
+                }
+                let inv = 1.0 / lrow[i];
+                for o in xi.iter_mut() {
+                    *o *= inv;
+                }
+            }
+            c0 = c1;
+        }
+        x
     }
 
     /// Solve `L^T x = b` (backward substitution).
@@ -237,6 +282,31 @@ mod tests {
         }
         let full = CholeskyFactor::factor(&a).unwrap();
         assert!(inc.l().max_abs_diff(full.l()) < 1e-9);
+    }
+
+    #[test]
+    fn multi_rhs_solve_matches_per_column() {
+        let mut rng = Pcg64::seed(0xBA7C4);
+        // spans sizes below, at, and above the column-block width
+        for (n, m) in [(1usize, 1usize), (7, 3), (12, 64), (20, 130)] {
+            let a = random_spd(n, &mut rng);
+            let ch = CholeskyFactor::factor(&a).unwrap();
+            let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+            let x = ch.solve_lower_multi(&b);
+            assert_eq!((x.rows(), x.cols()), (n, m));
+            for j in 0..m {
+                let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+                let xj = ch.solve_lower(&col);
+                for i in 0..n {
+                    assert!(
+                        (x[(i, j)] - xj[i]).abs() < 1e-12,
+                        "n={n} m={m} entry ({i},{j}): {} vs {}",
+                        x[(i, j)],
+                        xj[i]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -97,8 +97,30 @@ impl Matrix {
 
     /// Matrix product `A B`.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul: dim mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_accum(other, &mut out);
+        out
+    }
+
+    /// Gemm-style product `out = A B` into a caller-provided matrix, for
+    /// callers forming repeated products that want to reuse the output
+    /// allocation. `out` is overwritten and must already have shape
+    /// `self.rows x other.cols`.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        out.data.fill(0.0);
+        self.matmul_accum(other, out);
+    }
+
+    /// `out += A B` over an already-initialized accumulator (shared core
+    /// of [`matmul`](Self::matmul) / [`matmul_into`](Self::matmul_into);
+    /// `matmul` skips the redundant zero-fill on its fresh buffer).
+    fn matmul_accum(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul: dim mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, other.cols),
+            "matmul: output shape mismatch"
+        );
         // ikj loop order: stream through `other` rows contiguously
         for i in 0..self.rows {
             for k in 0..self.cols {
@@ -111,6 +133,19 @@ impl Matrix {
                 for (o, &b) in out_row.iter_mut().zip(orow) {
                     *o += a * b;
                 }
+            }
+        }
+    }
+
+    /// Squared Euclidean norm of every column: `out[j] = sum_i A[i,j]^2`.
+    /// One streaming pass over the row-major data — the batched GP
+    /// variance reduction (`sigma^2_j = k(x,x) - |V[:,j]|^2` after a
+    /// multi-RHS triangular solve) uses this instead of B column walks.
+    pub fn col_squared_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v * v;
             }
         }
         out
@@ -190,6 +225,25 @@ mod tests {
         let b = Matrix::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
         let c = a.matmul(&b);
         assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i + j) as f64);
+        let b = Matrix::from_fn(4, 2, |i, j| (i as f64) - (j as f64));
+        let mut out = Matrix::from_fn(3, 2, |_, _| 99.0); // stale contents
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+    }
+
+    #[test]
+    fn col_squared_norms_match_naive() {
+        let a = Matrix::from_fn(5, 3, |i, j| (i as f64 * 0.7 - j as f64).sin());
+        let sq = a.col_squared_norms();
+        for j in 0..3 {
+            let naive: f64 = (0..5).map(|i| a[(i, j)] * a[(i, j)]).sum();
+            assert!((sq[j] - naive).abs() < 1e-14);
+        }
     }
 
     #[test]

@@ -41,14 +41,17 @@ pub mod testing;
 
 /// Convenient re-exports for typical use.
 pub mod prelude {
-    pub use crate::acqui::{AcquiContext, AcquiFn, Ei, GpUcb, Pi, Ucb};
+    pub use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ei, GpUcb, Pi, Ucb};
     pub use crate::bayes_opt::{BOptimizer, Best, Evaluator, FnEval};
     pub use crate::benchfns::TestFunction;
     pub use crate::init::{Initializer, Lhs, RandomSampling};
     pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
     pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
     pub use crate::model::{gp::Gp, AdaptiveModel, GpState, Model, SgpConfig, SgpState, SparseGp};
-    pub use crate::opt::{Cmaes, Direct, NelderMead, Optimizer, OptimizerExt, RandomPoint};
+    pub use crate::opt::{
+        Cmaes, Direct, NelderMead, Objective, Optimizer, OptimizerExt, PopulationSearch,
+        RandomPoint,
+    };
     pub use crate::rng::Pcg64;
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
 }

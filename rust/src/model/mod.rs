@@ -29,7 +29,17 @@ pub trait Model: Send + Sync {
     /// Posterior `(mean, variance)` of the latent function at `x`.
     fn predict(&self, x: &[f64]) -> (f64, f64);
 
-    /// Batched prediction (backends may vectorize; default loops).
+    /// Posterior `(mean, variance)` for a whole candidate batch.
+    ///
+    /// This is the hot entry point of the acquisition-maximization loop:
+    /// population-based inner optimizers route entire candidate
+    /// generations through it (via `Objective::eval_many` →
+    /// `AcquiFn::eval_batch`). The default loops over
+    /// [`predict`](Self::predict); real implementations amortize the
+    /// per-candidate work — [`gp::Gp`] builds one cross-covariance Gram
+    /// block and runs one multi-RHS triangular solve, [`sgp::SparseGp`]
+    /// solves a single `m x B` feature block, and the XLA adapter
+    /// delegates to its fused batched artifact.
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
         xs.iter().map(|x| self.predict(x)).collect()
     }

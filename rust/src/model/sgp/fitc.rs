@@ -367,6 +367,34 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
         })
     }
 
+    /// Batched posterior: one `m x B` cross-covariance feature block and
+    /// two multi-RHS `m x m` triangular solves for the whole candidate
+    /// set (vs. `2B` independent solves point-wise) — the sparse half of
+    /// the batch-first pipeline.
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let m = self.inducing.len();
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        if m == 0 {
+            return xs.iter().map(|x| (self.mean.eval(x), self.kernel.variance())).collect();
+        }
+        // K_* : m x B feature block against the inducing set
+        let ks = self.kernel.cross_cov(self.inducing.points(), xs);
+        let mus = ks.matvec_t(&self.alpha);
+        // q_** = k_*^T K_mm^{-1} k_* and the A^{-1} correction, batched
+        let q_star = self.l_mm.solve_lower_multi(&ks).col_squared_norms();
+        let corr = self.l_a.solve_lower_multi(&ks).col_squared_norms();
+        xs.iter()
+            .enumerate()
+            .map(|(j, x)| {
+                let mu = self.mean.eval(x) + mus[j];
+                let var = (self.kernel.eval(x, x) - q_star[j] + corr[j]).max(1e-12);
+                (mu, var)
+            })
+            .collect()
+    }
+
     fn n_samples(&self) -> usize {
         self.xs.len()
     }
@@ -488,6 +516,29 @@ mod tests {
             assert!((mi - mb).abs() < 1e-7, "mean {mi} vs {mb}");
             assert!((vi - vb).abs() < 1e-7, "var {vi} vs {vb}");
         }
+    }
+
+    #[test]
+    fn predict_batch_matches_pointwise() {
+        let (xs, ys) = smooth_data(120, 2, 11);
+        let mut sgp = SparseGp::with_config(
+            Matern52::new(2),
+            DataMean::default(),
+            0.05,
+            SgpConfig { max_inducing: 24, ..SgpConfig::default() },
+        );
+        sgp.fit(&xs, &ys);
+        let mut rng = Pcg64::seed(12);
+        let cands: Vec<Vec<f64>> = (0..37).map(|_| rng.unit_point(2)).collect();
+        let batch = sgp.predict_batch(&cands);
+        for (j, c) in cands.iter().enumerate() {
+            let (mu, var) = sgp.predict(c);
+            assert!((batch[j].0 - mu).abs() < 1e-10, "mu[{j}]: {} vs {mu}", batch[j].0);
+            assert!((batch[j].1 - var).abs() < 1e-10, "var[{j}]: {} vs {var}", batch[j].1);
+        }
+        // empty model falls back to the prior
+        let fresh = SparseGp::new(Matern52::new(2), ZeroMean, 0.05);
+        assert_eq!(fresh.predict_batch(&cands)[0], fresh.predict(&cands[0]));
     }
 
     #[test]

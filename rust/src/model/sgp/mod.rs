@@ -167,6 +167,13 @@ impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
         }
     }
 
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.predict_batch(xs),
+            AdaptiveInner::Sparse(sgp) => sgp.predict_batch(xs),
+        }
+    }
+
     fn n_samples(&self) -> usize {
         match &self.inner {
             AdaptiveInner::Dense(gp) => gp.n_samples(),

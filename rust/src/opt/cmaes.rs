@@ -81,8 +81,11 @@ impl Optimizer for Cmaes {
             let eig = sym_eig(&cov);
             let d_sqrt: Vec<f64> = eig.values.iter().map(|&w| w.max(1e-20).sqrt()).collect();
 
-            // sample lambda offspring: x = mean + sigma * B D z
-            let mut offspring: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            // sample lambda offspring: x = mean + sigma * B D z; the whole
+            // generation is scored in one eval_many call (the population
+            // shape batched acquisition objectives exploit)
+            let mut genotypes: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(lambda);
+            let mut population: Vec<Vec<f64>> = Vec::with_capacity(lambda);
             for _ in 0..lambda {
                 let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
                 // y = B D z
@@ -97,10 +100,17 @@ impl Optimizer for Cmaes {
                 let x: Vec<f64> = mean.iter().zip(&y).map(|(&m, &yi)| m + sigma * yi).collect();
                 let mut x_eval = x.clone();
                 super::clamp_unit(&mut x_eval);
-                let value = f.eval(&x_eval);
-                evals += 1;
+                population.push(x_eval);
+                genotypes.push((x, y));
+            }
+            let values = f.eval_many(&population);
+            evals += lambda;
+            let mut offspring: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            for (((x, y), x_eval), value) in
+                genotypes.into_iter().zip(population).zip(values)
+            {
                 if value > best.value {
-                    best = Candidate { x: x_eval.clone(), value };
+                    best = Candidate { x: x_eval, value };
                 }
                 offspring.push((x, y, value));
             }

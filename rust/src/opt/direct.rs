@@ -147,8 +147,11 @@ impl Optimizer for Direct {
                     .collect();
                 let delta = 3.0_f64.powi(-(min_level as i32 + 1));
 
-                // sample center +/- delta along each long dimension
-                let mut trials: Vec<(usize, Rect, Rect)> = Vec::new();
+                // sample center +/- delta along each long dimension; the
+                // whole rect-center sweep goes through eval_many as one
+                // batch (2 probes per affordable dimension)
+                let mut dims_used: Vec<usize> = Vec::new();
+                let mut probes: Vec<Vec<f64>> = Vec::new();
                 for &d in &long_dims {
                     if evals + 2 > self.max_evals {
                         break;
@@ -157,9 +160,21 @@ impl Optimizer for Direct {
                     lo[d] -= delta;
                     let mut hi = rect.center.clone();
                     hi[d] += delta;
-                    let vlo = f.eval(&lo);
-                    let vhi = f.eval(&hi);
+                    probes.push(lo);
+                    probes.push(hi);
                     evals += 2;
+                    dims_used.push(d);
+                }
+                if dims_used.is_empty() {
+                    continue;
+                }
+                let values = f.eval_many(&probes);
+                let mut trials: Vec<(usize, Rect, Rect)> =
+                    Vec::with_capacity(dims_used.len());
+                let mut probe_iter = probes.into_iter().zip(values);
+                for &d in &dims_used {
+                    let (lo, vlo) = probe_iter.next().expect("paired lo probe");
+                    let (hi, vhi) = probe_iter.next().expect("paired hi probe");
                     if vlo > best.value {
                         best = Candidate { x: lo.clone(), value: vlo };
                     }
@@ -171,9 +186,6 @@ impl Optimizer for Direct {
                         Rect { center: lo, levels: rect.levels.clone(), value: vlo },
                         Rect { center: hi, levels: rect.levels.clone(), value: vhi },
                     ));
-                }
-                if trials.is_empty() {
-                    continue;
                 }
                 any_divided = true;
                 // divide in order of best child value (Jones' rule):

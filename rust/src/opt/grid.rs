@@ -1,7 +1,14 @@
-//! Exhaustive grid search (Limbo's `opt::GridSearch`).
+//! Exhaustive grid search (Limbo's `opt::GridSearch`), evaluated in
+//! population chunks through [`Objective::eval_many`] so batched
+//! objectives amortize the posterior work without materializing the whole
+//! `bins^dim` grid at once.
 
-use super::{Candidate, Objective, Optimizer};
+use super::{best_of_population, Candidate, Objective, Optimizer};
 use crate::rng::Pcg64;
+
+/// Grid cells scored per `eval_many` call (bounds peak memory while still
+/// amortizing the batched posterior).
+const GRID_CHUNK: usize = 4096;
 
 /// Full-factorial grid with `bins` points per dimension (cell centers are
 /// offset half a step from the boundary so corners are not over-sampled).
@@ -29,19 +36,27 @@ impl Optimizer for GridSearch {
         }
         let total = (bins as u64).pow(dim as u32) as usize;
         let mut best: Option<Candidate> = None;
-        let mut x = vec![0.0; dim];
-        for idx in 0..total {
-            let mut rem = idx;
-            for d in 0..dim {
-                let b = rem % bins;
-                rem /= bins;
-                x[d] = (b as f64 + 0.5) / bins as f64;
+        let mut start = 0usize;
+        while start < total {
+            let end = (start + GRID_CHUNK).min(total);
+            let mut chunk: Vec<Vec<f64>> = Vec::with_capacity(end - start);
+            for idx in start..end {
+                let mut rem = idx;
+                let mut x = vec![0.0; dim];
+                for xd in x.iter_mut() {
+                    let b = rem % bins;
+                    rem /= bins;
+                    *xd = (b as f64 + 0.5) / bins as f64;
+                }
+                chunk.push(x);
             }
-            let cand = Candidate::eval(f, x.clone());
-            best = Some(match best {
-                Some(b) => b.max(cand),
-                None => cand,
-            });
+            if let Some(cand) = best_of_population(f, chunk) {
+                best = Some(match best {
+                    Some(b) => b.max(cand),
+                    None => cand,
+                });
+            }
+            start = end;
         }
         best.expect("grid has at least one point")
     }

@@ -18,6 +18,7 @@ pub mod cmaes;
 pub mod direct;
 pub mod grid;
 pub mod nelder_mead;
+pub mod population;
 pub mod random;
 pub mod rprop;
 
@@ -26,6 +27,7 @@ pub use cmaes::Cmaes;
 pub use direct::Direct;
 pub use grid::GridSearch;
 pub use nelder_mead::NelderMead;
+pub use population::PopulationSearch;
 pub use random::RandomPoint;
 pub use rprop::{rprop_maximize, RpropParams};
 
@@ -62,12 +64,37 @@ impl Candidate {
 pub trait Objective: Sync {
     /// Evaluate at `x`.
     fn eval(&self, x: &[f64]) -> f64;
+
+    /// Evaluate a whole population at once. The default loops over
+    /// [`eval`](Self::eval); batched backends override it — an
+    /// acquisition objective ([`crate::acqui::AcquiObjective`]) routes
+    /// this through `AcquiFn::eval_batch` → `Model::predict_batch`, so a
+    /// population-based optimizer pays one cross-covariance block and one
+    /// multi-RHS solve per generation instead of per candidate.
+    fn eval_many(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.eval(x)).collect()
+    }
 }
 
 impl<F: Fn(&[f64]) -> f64 + Sync> Objective for F {
     fn eval(&self, x: &[f64]) -> f64 {
         self(x)
     }
+}
+
+/// Evaluate a population through [`Objective::eval_many`] and keep the
+/// best candidate (earliest wins ties, matching a sequential
+/// [`Candidate::max`] fold). `None` only for an empty population.
+pub fn best_of_population(f: &dyn Objective, pts: Vec<Vec<f64>>) -> Option<Candidate> {
+    let values = f.eval_many(&pts);
+    assert_eq!(values.len(), pts.len(), "eval_many: value count mismatch");
+    let mut best: Option<Candidate> = None;
+    for (x, value) in pts.into_iter().zip(values) {
+        if best.as_ref().map_or(true, |b| value > b.value) {
+            best = Some(Candidate { x, value });
+        }
+    }
+    best
 }
 
 /// A derivative-free maximizer over the unit hypercube.

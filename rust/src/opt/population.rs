@@ -1,0 +1,150 @@
+//! Round-based population search over [`Objective::eval_many`].
+//!
+//! The generic batch-first global maximizer: each round proposes a
+//! population (a Halton space-filling fraction plus uniform random
+//! candidates; the final round samples a shrinking box around the
+//! incumbent for cheap local refinement) and scores it in **one**
+//! `eval_many` call. Over a batched acquisition objective
+//! ([`crate::acqui::AcquiObjective`]) every round costs a single
+//! batched-posterior evaluation — one cross-covariance block + one
+//! multi-RHS solve on the native GP, or one fused artifact execution per
+//! capacity tile on the XLA backend. This subsumes the XLA coordinator's
+//! former bespoke `BatchedUcbSearch` sampler
+//! ([`crate::coordinator::batched_opt`] is now a thin adapter over it).
+
+use super::{best_of_population, Candidate, Objective, Optimizer};
+use crate::rng::{halton_point, Pcg64};
+
+/// Batched global sampler: `rounds` populations of `batch` candidates.
+#[derive(Clone, Debug)]
+pub struct PopulationSearch {
+    /// Rounds of candidate batches (total evals = rounds * batch).
+    pub rounds: usize,
+    /// Population size per round (match the backend's natural batch size —
+    /// e.g. the XLA artifact capacity, or the multi-RHS column block).
+    pub batch: usize,
+    /// Fraction of each batch drawn from a Halton sequence (space filling)
+    /// vs uniform random.
+    pub halton_fraction: f64,
+}
+
+impl Default for PopulationSearch {
+    fn default() -> Self {
+        Self { rounds: 8, batch: 64, halton_fraction: 0.5 }
+    }
+}
+
+impl PopulationSearch {
+    /// Budgeted constructor (`rounds * batch` total evaluations).
+    pub fn new(rounds: usize, batch: usize) -> Self {
+        Self { rounds, batch, ..Self::default() }
+    }
+
+    fn run(
+        &self,
+        f: &dyn Objective,
+        dim: usize,
+        rng: &mut Pcg64,
+        seed: Option<&[f64]>,
+    ) -> Candidate {
+        let batch = self.batch.max(1);
+        let rounds = self.rounds.max(1);
+        let mut best = Candidate { x: vec![0.5; dim], value: f64::NEG_INFINITY };
+        let mut halton_idx = rng.below(1 << 16); // decorrelate across calls
+
+        for round in 0..rounds {
+            let mut cands: Vec<Vec<f64>> = Vec::with_capacity(batch);
+            if round == 0 {
+                // seed point joins the first population — still exactly
+                // one eval_many per round, no lone point-wise eval
+                if let Some(x0) = seed {
+                    cands.push(x0.to_vec());
+                }
+            }
+            let local = round + 1 == rounds && best.value.is_finite();
+            if local {
+                // last round: shrink around the incumbent
+                let w = 0.1;
+                for _ in 0..batch {
+                    let x: Vec<f64> = best
+                        .x
+                        .iter()
+                        .map(|&v| (v + rng.uniform(-w, w)).clamp(0.0, 1.0))
+                        .collect();
+                    cands.push(x);
+                }
+            } else {
+                let n_halton = (batch as f64 * self.halton_fraction) as usize;
+                for _ in 0..n_halton {
+                    cands.push(halton_point(halton_idx, dim));
+                    halton_idx += 1;
+                }
+                while cands.len() < batch {
+                    cands.push(rng.unit_point(dim));
+                }
+            }
+            if let Some(cand) = best_of_population(f, cands) {
+                best = best.max(cand);
+            }
+        }
+        best
+    }
+}
+
+impl Optimizer for PopulationSearch {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        self.run(f, dim, rng, None)
+    }
+
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        self.run(f, x0.len(), rng, Some(x0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::{neg_sphere, wiggly};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn solves_sphere_and_stays_in_bounds() {
+        let mut rng = Pcg64::seed(3);
+        let c = PopulationSearch::new(8, 128).optimize(&neg_sphere, 2, &mut rng);
+        assert!(c.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(c.value > -0.01, "value={}", c.value);
+    }
+
+    #[test]
+    fn handles_multimodal_reasonably() {
+        let mut rng = Pcg64::seed(4);
+        let c = PopulationSearch::new(8, 128).optimize(&wiggly, 2, &mut rng);
+        assert!(c.value > 4.0, "value={}", c.value);
+    }
+
+    #[test]
+    fn evaluates_whole_populations_per_round() {
+        struct Counting(AtomicUsize);
+        impl Objective for Counting {
+            fn eval(&self, x: &[f64]) -> f64 {
+                neg_sphere(x)
+            }
+            fn eval_many(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                xs.iter().map(|x| self.eval(x)).collect()
+            }
+        }
+        let f = Counting(AtomicUsize::new(0));
+        let mut rng = Pcg64::seed(5);
+        let _ = PopulationSearch::new(6, 32).optimize(&f, 3, &mut rng);
+        // exactly one eval_many call per round — never per candidate
+        assert_eq!(f.0.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn from_keeps_good_seed_point() {
+        let mut rng = Pcg64::seed(6);
+        let c = PopulationSearch::new(2, 8).optimize_from(&neg_sphere, &[0.3, 0.3], &mut rng);
+        assert_eq!(c.value, 0.0);
+    }
+}

@@ -1,10 +1,14 @@
 //! Pure random search (Limbo's `opt::RandomPoint` generalized to a
 //! best-of-n sampler; `n = 1` reproduces Limbo's single random point).
+//!
+//! The whole pool is scored in one [`Objective::eval_many`] call, so a
+//! batched acquisition objective evaluates it through the model's batched
+//! posterior instead of n independent predicts.
 
-use super::{Candidate, Objective, Optimizer};
+use super::{best_of_population, Candidate, Objective, Optimizer};
 use crate::rng::Pcg64;
 
-/// Evaluate `n` uniform random points, return the best.
+/// Evaluate `n` uniform random points as one population, return the best.
 #[derive(Clone, Debug)]
 pub struct RandomPoint {
     /// Number of samples.
@@ -20,16 +24,16 @@ impl RandomPoint {
 
 impl Optimizer for RandomPoint {
     fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
-        let mut best = Candidate::eval(f, rng.unit_point(dim));
-        for _ in 1..self.n {
-            best = best.max(Candidate::eval(f, rng.unit_point(dim)));
-        }
-        best
+        let pool: Vec<Vec<f64>> = (0..self.n).map(|_| rng.unit_point(dim)).collect();
+        best_of_population(f, pool).expect("n >= 1 samples")
     }
 
     fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
         // include the seed point in the pool
-        Candidate::eval(f, x0.to_vec()).max(self.optimize(f, x0.len(), rng))
+        let mut pool: Vec<Vec<f64>> = Vec::with_capacity(self.n + 1);
+        pool.push(x0.to_vec());
+        pool.extend((0..self.n).map(|_| rng.unit_point(x0.len())));
+        best_of_population(f, pool).expect("non-empty pool")
     }
 }
 

@@ -122,14 +122,26 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Fork-join parallel map over `items`, preserving order, using scoped
-/// threads (`threads` capped by item count; `threads == 1` runs inline).
-///
-/// Panic-safe: a panicking `f` is caught on its worker, the remaining
-/// items are still processed, no shared mutex is ever poisoned, and the
-/// first panic payload is re-raised on the calling thread once every
-/// worker has finished — the caller sees the panic, never a hang.
-pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+/// A caught panic payload, as `catch_unwind` hands it back.
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+/// Render a caught panic payload as a human-readable message (`panic!`
+/// with a literal or formatted string covers virtually every payload).
+fn panic_message(payload: PanicPayload) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked (non-string payload)".to_string()
+    }
+}
+
+/// Shared fork-join core of [`parallel_map`]/[`parallel_map_catch`]:
+/// every item is processed (scoped workers, or inline for one thread),
+/// per-item panics are caught into the item's own result slot, and no
+/// shared mutex is ever poisoned.
+fn parallel_map_core<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<Result<R, PanicPayload>>
 where
     T: Send,
     R: Send,
@@ -137,38 +149,82 @@ where
 {
     let threads = threads.max(1).min(items.len().max(1));
     if threads <= 1 {
-        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| catch_unwind(AssertUnwindSafe(|| f(i, t))))
+            .collect();
     }
     let n = items.len();
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<Result<R, PanicPayload>>> = (0..n).map(|_| None).collect();
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
     let queue = Mutex::new(work);
     let results = Mutex::new(&mut slots);
-    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let item = lock_unpoisoned(&queue).pop();
                 match item {
-                    Some((i, t)) => match catch_unwind(AssertUnwindSafe(|| f(i, t))) {
-                        Ok(r) => lock_unpoisoned(&results)[i] = Some(r),
-                        Err(p) => {
-                            let mut slot = lock_unpoisoned(&panic_payload);
-                            if slot.is_none() {
-                                *slot = Some(p);
-                            }
-                        }
-                    },
+                    Some((i, t)) => {
+                        let r = catch_unwind(AssertUnwindSafe(|| f(i, t)));
+                        lock_unpoisoned(&results)[i] = Some(r);
+                    }
                     None => break,
                 }
             });
         }
     });
-    if let Some(p) = panic_payload.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner)
-    {
+    slots.into_iter().map(|s| s.expect("slot filled by worker")).collect()
+}
+
+/// Like [`parallel_map`], but a panicking item yields `Err(message)` in
+/// its slot instead of re-raising after the drain — callers that own a
+/// replicate loop (the coordinator's experiment runner) surface these as
+/// per-job failures rather than aborting the whole cell.
+pub fn parallel_map_catch<T, R, F>(
+    items: Vec<T>,
+    threads: usize,
+    f: F,
+) -> Vec<Result<R, String>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    parallel_map_core(items, threads, f).into_iter().map(|r| r.map_err(panic_message)).collect()
+}
+
+/// Fork-join parallel map over `items`, preserving order, using scoped
+/// threads (`threads` capped by item count; `threads == 1` runs inline).
+///
+/// Panic-safe: a panicking `f` is caught on its worker, the remaining
+/// items are still processed, no shared mutex is ever poisoned, and the
+/// first (lowest-index) panic payload is re-raised on the calling thread
+/// once every item has been processed — the caller sees the panic, never
+/// a hang. To observe per-item failures instead, use
+/// [`parallel_map_catch`].
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let mut out = Vec::with_capacity(items.len());
+    let mut first_panic: Option<PanicPayload> = None;
+    for r in parallel_map_core(items, threads, f) {
+        match r {
+            Ok(v) => out.push(v),
+            Err(p) => {
+                if first_panic.is_none() {
+                    first_panic = Some(p);
+                }
+            }
+        }
+    }
+    if let Some(p) = first_panic {
         std::panic::resume_unwind(p);
     }
-    slots.into_iter().map(|s| s.expect("slot filled by worker")).collect()
+    out
 }
 
 #[cfg(test)]
@@ -240,6 +296,34 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    fn parallel_map_catch_surfaces_failures_in_place() {
+        let out = parallel_map_catch((0..20).collect::<Vec<usize>>(), 4, |_, x| {
+            if x % 7 == 3 {
+                panic!("item {x} exploded");
+            }
+            x * 10
+        });
+        assert_eq!(out.len(), 20);
+        for (i, r) in out.iter().enumerate() {
+            if i % 7 == 3 {
+                let msg = r.as_ref().unwrap_err();
+                assert!(msg.contains("exploded"), "got {msg:?}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10);
+            }
+        }
+        // inline (single-thread) path behaves identically
+        let inline = parallel_map_catch(vec![1usize, 3], 1, |_, x| {
+            if x == 3 {
+                panic!("three");
+            }
+            x
+        });
+        assert_eq!(*inline[0].as_ref().unwrap(), 1);
+        assert!(inline[1].is_err());
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Property tests for the batch-first posterior pipeline:
+//! `predict_batch` must be indistinguishable (≤ 1e-10) from per-point
+//! `predict` for the dense, sparse, and adaptive model families across
+//! random batch sizes, and the q-batch ask/tell path must propose
+//! distinct points while converging like the sequential loop.
+
+use limbo::coordinator::DefaultAskTellServer;
+use limbo::kernel::{Exponential, Kernel, Matern52, SquaredExpArd};
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, AdaptiveModel, Model, SgpConfig, SparseGp};
+use limbo::rng::Pcg64;
+
+const TOL: f64 = 1e-10;
+
+fn random_data(rng: &mut Pcg64, n: usize, dim: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+    let ys: Vec<f64> = xs
+        .iter()
+        .map(|x| (4.0 * x[0]).sin() + x.iter().sum::<f64>() * 0.3)
+        .collect();
+    (xs, ys)
+}
+
+/// Compare a model's batched posterior against its point-wise posterior
+/// on `b` random candidates (includes off-data and near-data points).
+fn assert_batch_matches<M: Model>(model: &M, rng: &mut Pcg64, b: usize, label: &str) {
+    let dim = model.dim();
+    let mut cands: Vec<Vec<f64>> = (0..b).map(|_| rng.unit_point(dim)).collect();
+    if b > 2 {
+        // out-of-hull candidate stresses the variance clamp
+        cands[0] = vec![3.0; dim];
+    }
+    let batch = model.predict_batch(&cands);
+    assert_eq!(batch.len(), cands.len(), "{label}: batch length");
+    for (j, c) in cands.iter().enumerate() {
+        let (mu, var) = model.predict(c);
+        let scale = 1.0_f64.max(mu.abs());
+        assert!(
+            (batch[j].0 - mu).abs() <= TOL * scale,
+            "{label}: mu[{j}] {} vs {mu}",
+            batch[j].0
+        );
+        assert!(
+            (batch[j].1 - var).abs() <= TOL * 1.0_f64.max(var.abs()),
+            "{label}: var[{j}] {} vs {var}",
+            batch[j].1
+        );
+    }
+}
+
+#[test]
+fn dense_gp_predict_batch_equivalence() {
+    for case in 0..24u64 {
+        let mut rng = Pcg64::seed(0xD0_0000 + case);
+        let dim = 1 + rng.below(3);
+        let n = 1 + rng.below(48);
+        let b = rng.below(40);
+        let (xs, ys) = random_data(&mut rng, n, dim);
+        // rotate kernels so every cross_cov specialization is exercised
+        match case % 3 {
+            0 => {
+                let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), 0.05);
+                gp.fit(&xs, &ys);
+                assert_batch_matches(&gp, &mut rng, b, "dense/matern52");
+            }
+            1 => {
+                let mut gp = Gp::new(SquaredExpArd::new(dim), DataMean::default(), 0.05);
+                gp.fit(&xs, &ys);
+                assert_batch_matches(&gp, &mut rng, b, "dense/se_ard");
+            }
+            _ => {
+                let mut gp = Gp::new(Exponential::new(dim), DataMean::default(), 0.05);
+                gp.fit(&xs, &ys);
+                assert_batch_matches(&gp, &mut rng, b, "dense/exponential");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_gp_batch_with_tuned_lengthscales() {
+    // non-unit hyper-parameters stress the hoisted inverse lengthscales
+    let mut rng = Pcg64::seed(0xD1);
+    let (xs, ys) = random_data(&mut rng, 32, 2);
+    let mut k = SquaredExpArd::new(2);
+    k.set_params(&[-0.7, 0.4, 0.2]);
+    let mut gp = Gp::new(k, DataMean::default(), 0.02);
+    gp.fit(&xs, &ys);
+    assert_batch_matches(&gp, &mut rng, 25, "dense/se_ard-tuned");
+}
+
+#[test]
+fn sparse_gp_predict_batch_equivalence() {
+    for case in 0..12u64 {
+        let mut rng = Pcg64::seed(0x5CA0 + case);
+        let dim = 1 + rng.below(3);
+        let n = 30 + rng.below(90);
+        let b = rng.below(40);
+        let m = 8 + rng.below(24);
+        let (xs, ys) = random_data(&mut rng, n, dim);
+        let mut sgp = SparseGp::with_config(
+            Matern52::new(dim),
+            DataMean::default(),
+            0.05,
+            SgpConfig { max_inducing: m, ..SgpConfig::default() },
+        );
+        sgp.fit(&xs, &ys);
+        assert_batch_matches(&sgp, &mut rng, b, "sparse/matern52");
+    }
+}
+
+#[test]
+fn adaptive_model_predict_batch_equivalence_both_regimes() {
+    for case in 0..8u64 {
+        let mut rng = Pcg64::seed(0xADA0 + case);
+        let dim = 1 + rng.below(2);
+        let b = 1 + rng.below(30);
+        let (xs, ys) = random_data(&mut rng, 60, dim);
+
+        // dense regime (threshold above the data size)
+        let mut dense = AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 0.05)
+            .with_threshold(1000);
+        dense.fit(&xs, &ys);
+        assert!(!dense.is_sparse());
+        assert_batch_matches(&dense, &mut rng, b, "adaptive/dense");
+
+        // sparse regime (migrated)
+        let mut sparse = AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 0.05)
+            .with_threshold(20)
+            .with_sparse_config(SgpConfig { max_inducing: 16, ..SgpConfig::default() });
+        sparse.fit(&xs, &ys);
+        assert!(sparse.is_sparse());
+        assert_batch_matches(&sparse, &mut rng, b, "adaptive/sparse");
+    }
+}
+
+#[test]
+fn empty_and_unfitted_models_batch_like_pointwise() {
+    let mut rng = Pcg64::seed(0xE);
+    let gp = Gp::new(Matern52::new(2), DataMean::default(), 0.05);
+    assert_batch_matches(&gp, &mut rng, 5, "dense/empty");
+    let sgp = SparseGp::new(Matern52::new(2), DataMean::default(), 0.05);
+    assert_batch_matches(&sgp, &mut rng, 5, "sparse/empty");
+    assert!(gp.predict_batch(&[]).is_empty());
+    assert!(sgp.predict_batch(&[]).is_empty());
+}
+
+#[test]
+fn ask_batch_q_distinct_and_convergence_parity() {
+    let f = |x: &[f64]| -(x[0] - 0.55).powi(2) - (x[1] - 0.35).powi(2);
+    let q = 4;
+
+    // batched: 6 rounds of q=4 proposals
+    let mut batched = DefaultAskTellServer::with_defaults(2, 31);
+    for _ in 0..6 {
+        let batch = batched.ask_batch(q);
+        assert_eq!(batch.len(), q);
+        for (i, a) in batch.iter().enumerate() {
+            assert!(a.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            for b in batch.iter().skip(i + 1) {
+                let d2: f64 = a.iter().zip(b).map(|(p, r)| (p - r) * (p - r)).sum();
+                assert!(d2 > 1e-10, "coincident proposals {a:?} / {b:?}");
+            }
+        }
+        for x in batch {
+            let y = f(&x);
+            batched.tell(&x, y);
+        }
+    }
+
+    // sequential: same total budget, one point at a time
+    let mut seq = DefaultAskTellServer::with_defaults(2, 31);
+    for _ in 0..(6 * q) {
+        let x = seq.ask();
+        let y = f(&x);
+        seq.tell(&x, y);
+    }
+
+    let (_, bv) = batched.best().unwrap();
+    let (_, sv) = seq.best().unwrap();
+    assert!(sv > -0.02, "sequential best={sv}");
+    assert!(bv > -0.02, "batched best={bv} (parity with sequential)");
+    assert!((bv - sv).abs() < 0.05, "parity gap: batched {bv} vs sequential {sv}");
+}
