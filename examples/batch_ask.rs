@@ -24,12 +24,13 @@ fn run_trial(x: &[f64]) -> f64 {
 
 fn main() {
     const Q: usize = 4;
-    const ROUNDS: usize = 8;
+    let rounds: usize =
+        if matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1")) { 4 } else { 8 };
 
     let server = DefaultAskTellServer::with_defaults(2, 42).spawn();
     let t0 = Instant::now();
 
-    for round in 0..ROUNDS {
+    for round in 0..rounds {
         // one q-point proposal: tell-the-lie, re-maximize, rollback
         let batch = server.ask_batch(Q);
 
@@ -67,7 +68,7 @@ fn main() {
     let best = server.best().expect("observations recorded");
     println!(
         "\n{} evaluations across {Q} parallel workers in {:.2}s -> best {:.5} at ({:.3}, {:.3})",
-        ROUNDS * Q,
+        rounds * Q,
         t0.elapsed().as_secs_f64(),
         best.1,
         best.0[0],

@@ -9,6 +9,8 @@
 //! m = 128 inducing points rather than by n.
 //!
 //! Run: `cargo run --release --example sparse_gp`
+//! (`LIMBO_SMOKE=1` shrinks the budget to a CI-sized run that still
+//! crosses the dense→sparse migration and one sparse FITC hyper-refit.)
 
 use std::time::Instant;
 
@@ -16,8 +18,9 @@ use limbo::coordinator::AskTellServer;
 use limbo::prelude::*;
 
 fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
     let dim = 2;
-    let budget = 2_000usize;
+    let budget = if smoke { 320 } else { 2_000usize };
     // multimodal synthetic target on [0,1]^2: one dominant bump near
     // (0.2, 0.7) plus an oscillating field of local optima
     let f = |x: &[f64]| {
@@ -29,7 +32,12 @@ fn main() {
     let model = AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-3)
         .with_threshold(256)
         .with_sparse_config(SgpConfig { max_inducing: 128, ..SgpConfig::default() });
-    let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42);
+    // doubling-schedule ML-II refits: dense while small, the exact FITC
+    // marginal likelihood once the model has migrated
+    // (refit points 40, 80, 160, 320, ... land one refit past the
+    // migration threshold even in the smoke run)
+    let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42)
+        .with_hp_refits(40);
 
     let t0 = Instant::now();
     let mut switched_at = None;

@@ -8,10 +8,15 @@
 //!
 //! The sweep section prints one machine-readable JSON row per
 //! (model, n, m) config so runs can be diffed across commits:
-//! `{"bench":"gp_scaling","model":"sparse","n":4096,"m":128,...}`.
+//! `{"bench":"gp_scaling","model":"sparse","n":4096,"m":128,...}` — the
+//! rows are also written to `target/gp_scaling.json`, which CI merges
+//! into `BENCH_PR.json` for the bench-trajectory gate
+//! (`scripts/bench_compare.py` vs `benches/baseline.json`).
 //!
-//! Set `LIMBO_GP_SCALING_QUICK=1` to cap the sweep at n=1024 (smoke runs).
+//! Pass `--smoke` (or set `LIMBO_GP_SCALING_QUICK=1`) to cap the sweep at
+//! n=1024 — the CI-sized variant.
 
+use std::io::Write as _;
 use std::time::Instant;
 
 use limbo::benchlib::{header, Bencher};
@@ -73,17 +78,28 @@ fn small_n_section() {
     }
 }
 
-fn json_row(model: &str, n: usize, m: usize, fit_s: f64, predict_s: f64, speedup: f64) {
-    println!(
+fn json_row(
+    rows: &mut Vec<String>,
+    model: &str,
+    n: usize,
+    m: usize,
+    fit_s: f64,
+    predict_s: f64,
+    speedup: f64,
+) {
+    let row = format!(
         "{{\"bench\":\"gp_scaling\",\"model\":\"{model}\",\"n\":{n},\"m\":{m},\
          \"fit_s\":{fit_s:.6},\"predict_s\":{predict_s:.9},\
          \"fit_plus_predict_s\":{:.6},\"speedup_vs_dense\":{speedup:.2}}}",
         fit_s + predict_s
     );
+    println!("{row}");
+    rows.push(row);
 }
 
-fn sweep_section(quick: bool) {
+fn sweep_section(quick: bool) -> Vec<String> {
     header("dense vs sparse sweep (dim=2; JSON row per config)");
+    let mut rows: Vec<String> = Vec::new();
     let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
     let probes: Vec<Vec<f64>> = {
         let mut rng = Pcg64::seed(7);
@@ -110,7 +126,7 @@ fn sweep_section(quick: bool) {
             }
         }) / probes.len() as f64;
         let dense_total = dense_fit + dense_pred;
-        json_row("dense", n, 0, dense_fit, dense_pred, 1.0);
+        json_row(&mut rows, "dense", n, 0, dense_fit, dense_pred, 1.0);
 
         for &m in &[32usize, 64, 128] {
             let cfg = SgpConfig { max_inducing: m, ..SgpConfig::default() };
@@ -128,13 +144,29 @@ fn sweep_section(quick: bool) {
                 }
             }) / probes.len() as f64;
             let speedup = dense_total / (sparse_fit + sparse_pred);
-            json_row("sparse", n, m, sparse_fit, sparse_pred, speedup);
+            json_row(&mut rows, "sparse", n, m, sparse_fit, sparse_pred, speedup);
         }
     }
+    rows
 }
 
 fn main() {
-    let quick = matches!(std::env::var("LIMBO_GP_SCALING_QUICK").as_deref(), Ok("1"));
-    small_n_section();
-    sweep_section(quick);
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let quick = smoke || matches!(std::env::var("LIMBO_GP_SCALING_QUICK").as_deref(), Ok("1"));
+    if !smoke {
+        small_n_section();
+    }
+    let rows = sweep_section(quick);
+
+    let path = std::path::Path::new("target").join("gp_scaling.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

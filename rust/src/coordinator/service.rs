@@ -53,6 +53,9 @@ where
     dim: usize,
     iteration: usize,
     best: Option<(Vec<f64>, f64)>,
+    /// Next observation count at which the model re-optimizes its
+    /// hyper-parameters (`None` = never). Doubles after each refit.
+    next_hp_refit: Option<usize>,
 }
 
 /// The default service configuration: an [`AdaptiveModel`] surrogate
@@ -75,6 +78,7 @@ impl DefaultAskTellServer {
             dim,
             seed,
         )
+        .with_hp_refits(16)
     }
 }
 
@@ -94,7 +98,20 @@ where
             dim,
             iteration: 0,
             best: None,
+            next_hp_refit: None,
         }
+    }
+
+    /// Enable ML-II hyper-parameter refits on a doubling schedule: the
+    /// model re-optimizes when the observation count first reaches
+    /// `first`, then at 2·`first`, 4·`first`, ... — O(log n) refits over
+    /// an unbounded run. Once the [`AdaptiveModel`] has gone sparse each
+    /// refit maximizes the **exact FITC marginal likelihood** (O(n·m²)
+    /// per iRprop⁻ step), so the always-on service fits the objective it
+    /// actually serves rather than a dense-subset proxy.
+    pub fn with_hp_refits(mut self, first: usize) -> Self {
+        self.next_hp_refit = Some(first.max(2));
+        self
     }
 
     /// Next suggested trial. Before any data: a random probe.
@@ -153,12 +170,19 @@ where
         batch
     }
 
-    /// Report an observation.
+    /// Report an observation. May trigger a scheduled hyper-parameter
+    /// refit (see [`with_hp_refits`](Self::with_hp_refits)).
     pub fn tell(&mut self, x: &[f64], y: f64) {
         self.model.add_sample(x, y);
         self.iteration += 1;
         if self.best.as_ref().map_or(true, |b| y > b.1) {
             self.best = Some((x.to_vec(), y));
+        }
+        if let Some(next) = self.next_hp_refit {
+            if self.model.n_samples() >= next {
+                self.model.optimize_hyperparams();
+                self.next_hp_refit = Some(next.saturating_mul(2));
+            }
         }
     }
 
@@ -328,6 +352,30 @@ mod tests {
                 assert!(d2 > 1e-10, "batch points {a:?} and {b:?} coincide");
             }
         }
+    }
+
+    #[test]
+    fn hp_refit_schedule_fires_on_doubling_counts() {
+        let mut rng = crate::rng::Pcg64::seed(31);
+        let mut srv = AskTellServer::new(
+            Gp::new(Matern52::new(1), DataMean::default(), 0.05),
+            Ucb::default(),
+            RandomPoint::new(32),
+            1,
+            7,
+        )
+        .with_hp_refits(8);
+        srv.model.hp_opt.config.restarts = 1;
+        srv.model.hp_opt.config.iterations = 10;
+        let start_hp = srv.model.hp_vector();
+        // short-lengthscale data: ML-II must move the kernel params
+        for _ in 0..17 {
+            let x = rng.unit_point(1);
+            srv.tell(&x, (11.0 * x[0]).sin());
+        }
+        // refits fired at n = 8 and n = 16 (doubling schedule)
+        assert_eq!(srv.model.hp_opt.refits(), 2);
+        assert_ne!(srv.model.hp_vector(), start_hp, "refit should move hyper-params");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! sample paths; included for the component-zoo completeness the paper
 //! advertises.
 
-use super::{ard_r2, scaled_cross_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 /// ARD exponential kernel: `sigma_f^2 * exp(-r)` with
@@ -73,6 +73,22 @@ impl Kernel for Exponential {
             out[i] = k * t * t / r;
         }
         out[d] = 2.0 * k;
+    }
+
+    fn grad_params_block(
+        &self,
+        xs: &[Vec<f64>],
+        cands: &[Vec<f64>],
+        weights: &Matrix,
+        out: &mut [f64],
+    ) {
+        let shape = |r2: f64| (-r2.max(0.0).sqrt()).exp();
+        // dk/dlog l_d = k·t_d²/r (clamped at r = 0 like `grad_params`)
+        let shape_dlog = |r2: f64| {
+            let r = r2.max(0.0).sqrt();
+            (-r).exp() / r.max(1e-12)
+        };
+        scaled_grad_block(xs, cands, &self.inv_ls, self.sf2, shape, shape_dlog, weights, out);
     }
 
     fn variance(&self) -> f64 {

@@ -3,7 +3,7 @@
 //! Matérn-5/2 is the BayesOpt default and the kernel the paper's snippet
 //! swaps in (`limbo::kernel::MaternFiveHalves`).
 
-use super::{ard_r2, scaled_cross_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 const SQRT5: f64 = 2.2360679774997896;
@@ -85,6 +85,25 @@ macro_rules! matern_impl {
                     out[i] = coeff * t * t;
                 }
                 out[d] = 2.0 * sf2 * $name::shape(r2);
+            }
+
+            fn grad_params_block(
+                &self,
+                xs: &[Vec<f64>],
+                cands: &[Vec<f64>],
+                weights: &Matrix,
+                out: &mut [f64],
+            ) {
+                scaled_grad_block(
+                    xs,
+                    cands,
+                    &self.inv_ls,
+                    self.sf2,
+                    $name::shape,
+                    $name::shape_dlog,
+                    weights,
+                    out,
+                );
             }
 
             fn variance(&self) -> f64 {

@@ -54,6 +54,46 @@ pub trait Kernel: Clone + Send + Sync + 'static {
     /// [`n_params`](Self::n_params)).
     fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]);
 
+    /// Weighted Gram-block gradient accumulation:
+    /// `out[p] += Σ_{i,j} weights[(i, j)] · dk(xs[i], cands[j]) / dθ_p`
+    /// (`weights` has shape `xs.len() × cands.len()`; `out` has length
+    /// [`n_params`](Self::n_params) and is accumulated into, not reset).
+    ///
+    /// This is the batched entry point of the exact FITC marginal-
+    /// likelihood gradient: the n×m cross block and the m×m inducing
+    /// block each contract a precomputed trace-weight matrix against the
+    /// kernel's parameter gradients in one pass. The default loops over
+    /// [`grad_params`](Self::grad_params); the stationary kernels override
+    /// it with the scaled-norm accumulators of
+    /// [`cross_cov`](Self::cross_cov) (both point sets scaled by `1/l_d`
+    /// once, one dot product per pair, no transcendental calls in the
+    /// per-dimension loop).
+    fn grad_params_block(
+        &self,
+        xs: &[Vec<f64>],
+        cands: &[Vec<f64>],
+        weights: &Matrix,
+        out: &mut [f64],
+    ) {
+        assert_eq!(weights.rows(), xs.len(), "weight rows mismatch");
+        assert_eq!(weights.cols(), cands.len(), "weight cols mismatch");
+        assert_eq!(out.len(), self.n_params(), "gradient length mismatch");
+        let mut dk = vec![0.0; self.n_params()];
+        for (i, x) in xs.iter().enumerate() {
+            let wrow = weights.row(i);
+            for (j, c) in cands.iter().enumerate() {
+                let w = wrow[j];
+                if w == 0.0 {
+                    continue;
+                }
+                self.grad_params(x, c, &mut dk);
+                for (o, &d) in out.iter_mut().zip(&dk) {
+                    *o += w * d;
+                }
+            }
+        }
+    }
+
     /// Signal variance `k(x, x)`.
     fn variance(&self) -> f64;
 
@@ -96,6 +136,54 @@ fn scale_points(pts: &[Vec<f64>], inv_ls: &[f64]) -> (Vec<f64>, Vec<f64>) {
         norms.push(s);
     }
     (flat, norms)
+}
+
+/// Shared `grad_params_block` core for the ARD stationary kernels, whose
+/// parameter gradients all factor as
+/// `dk/dlog l_d = sf² · shape_dlog(r²) · t_d²` and
+/// `dk/dlog σ_f = 2 sf² · shape(r²)` over the scaled difference
+/// `t = (a − b)/l`. Both point sets are scaled by the inverse
+/// lengthscales **once** (the same accumulators as [`scaled_cross_r2`]),
+/// then each weighted pair costs one dot product, two shape evaluations,
+/// and a mul/add-only per-dimension loop.
+///
+/// `out` layout: `[d lengthscale grads..., signal grad]` — accumulated
+/// into, matching the [`Kernel::grad_params_block`] contract.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scaled_grad_block(
+    xs: &[Vec<f64>],
+    cands: &[Vec<f64>],
+    inv_ls: &[f64],
+    sf2: f64,
+    shape: impl Fn(f64) -> f64,
+    shape_dlog: impl Fn(f64) -> f64,
+    weights: &Matrix,
+    out: &mut [f64],
+) {
+    assert_eq!(weights.rows(), xs.len(), "weight rows mismatch");
+    assert_eq!(weights.cols(), cands.len(), "weight cols mismatch");
+    let d = inv_ls.len();
+    assert_eq!(out.len(), d + 1, "gradient length mismatch");
+    let (a, a_norms) = scale_points(xs, inv_ls);
+    let (b, b_norms) = scale_points(cands, inv_ls);
+    for i in 0..xs.len() {
+        let ai = &a[i * d..(i + 1) * d];
+        let an = a_norms[i];
+        let wrow = weights.row(i);
+        for (j, &w) in wrow.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let bj = &b[j * d..(j + 1) * d];
+            let r2 = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
+            let coeff = w * sf2 * shape_dlog(r2);
+            for (o, (&av, &bv)) in out[..d].iter_mut().zip(ai.iter().zip(bj)) {
+                let t = av - bv;
+                *o += coeff * t * t;
+            }
+            out[d] += w * 2.0 * sf2 * shape(r2);
+        }
+    }
 }
 
 /// ARD-scaled squared distances for every `(xs[i], cands[j])` pair, as an
@@ -167,6 +255,56 @@ mod tests {
         check_cross_cov(Matern52::new, "matern52-cross-cov");
         check_cross_cov(Matern32::new, "matern32-cross-cov");
         check_cross_cov(Exponential::new, "exponential-cross-cov");
+    }
+
+    /// `grad_params_block` (specialized or default) must agree with the
+    /// naive weighted pairwise `grad_params` accumulation — the contract
+    /// the FITC marginal-likelihood gradient relies on.
+    fn check_grad_block<K: Kernel + std::fmt::Debug>(make: impl Fn(usize) -> K, name: &str) {
+        testing::check(
+            name,
+            0x6B10C,
+            32,
+            |rng: &mut Pcg64| {
+                let dim = 1 + rng.below(3);
+                let mut k = make(dim);
+                let p: Vec<f64> = (0..k.n_params()).map(|_| rng.uniform(-0.8, 0.8)).collect();
+                k.set_params(&p);
+                let n = rng.below(7);
+                let b = rng.below(6);
+                let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
+                let cs: Vec<Vec<f64>> = (0..b).map(|_| rng.unit_point(dim)).collect();
+                let w = Matrix::from_fn(n, b, |_, _| rng.uniform(-2.0, 2.0));
+                (k, xs, cs, w)
+            },
+            |(k, xs, cs, w)| {
+                let mut got = vec![0.25; k.n_params()]; // nonzero: must accumulate
+                k.grad_params_block(xs, cs, w, &mut got);
+                let mut want = vec![0.25; k.n_params()];
+                let mut dk = vec![0.0; k.n_params()];
+                for (i, x) in xs.iter().enumerate() {
+                    for (j, c) in cs.iter().enumerate() {
+                        k.grad_params(x, c, &mut dk);
+                        for (o, &d) in want.iter_mut().zip(&dk) {
+                            *o += w[(i, j)] * d;
+                        }
+                    }
+                }
+                for (p, (&g, &t)) in got.iter().zip(&want).enumerate() {
+                    testing::close(g, t, 1e-9).map_err(|e| format!("param {p}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grad_params_block_matches_pairwise() {
+        check_grad_block(SquaredExpArd::new, "se_ard-grad-block");
+        check_grad_block(|d| SquaredExpIso::new(d), "se_iso-grad-block");
+        check_grad_block(Matern52::new, "matern52-grad-block");
+        check_grad_block(Matern32::new, "matern32-grad-block");
+        check_grad_block(Exponential::new, "exponential-grad-block");
     }
 }
 

@@ -1,6 +1,6 @@
 //! Squared-exponential (RBF/Gaussian) kernels, isotropic and ARD.
 
-use super::{ard_r2, scaled_cross_r2, Kernel};
+use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 /// ARD squared exponential:
@@ -83,6 +83,18 @@ impl Kernel for SquaredExpArd {
             out[i] = k * t * t;
         }
         out[d] = 2.0 * k; // dk/dlog sigma_f
+    }
+
+    fn grad_params_block(
+        &self,
+        xs: &[Vec<f64>],
+        cands: &[Vec<f64>],
+        weights: &Matrix,
+        out: &mut [f64],
+    ) {
+        // shape = exp(-r²/2); dk/dlog l_d = k·t_d², so shape_dlog = shape
+        let shape = |r2: f64| (-0.5 * r2).exp();
+        scaled_grad_block(xs, cands, &self.inv_ls, self.sf2, shape, shape, weights, out);
     }
 
     fn variance(&self) -> f64 {

@@ -158,6 +158,53 @@ impl CholeskyFactor {
         x
     }
 
+    /// Solve `L^T X = B` for a block of right-hand sides (column-blocked
+    /// backward substitution, mirroring
+    /// [`solve_lower_multi`](Self::solve_lower_multi)): row `i` of the
+    /// result needs rows `k > i`, so the sweep runs bottom-up with the
+    /// factor accessed by columns (`L^T[i, k] = L[k, i]`).
+    pub fn solve_lower_t_multi(&self, b: &Matrix) -> Matrix {
+        let n = self.dim();
+        assert_eq!(b.rows(), n, "solve_lower_t_multi: RHS row mismatch");
+        let m = b.cols();
+        let mut x = Matrix::zeros(n, m);
+        let mut c0 = 0;
+        while c0 < m {
+            let c1 = (c0 + SOLVE_COL_BLOCK).min(m);
+            let data = x.data_mut();
+            for i in (0..n).rev() {
+                // split the flat storage so row i is writable while rows
+                // k > i stay readable (backward substitution dependency)
+                let (cur, next) = data.split_at_mut((i + 1) * m);
+                let xi = &mut cur[i * m + c0..i * m + c1];
+                xi.copy_from_slice(&b.row(i)[c0..c1]);
+                for k in (i + 1)..n {
+                    let lki = self.l[(k, i)];
+                    if lki == 0.0 {
+                        continue;
+                    }
+                    let xk = &next[(k - i - 1) * m + c0..(k - i - 1) * m + c1];
+                    for (o, &v) in xi.iter_mut().zip(xk) {
+                        *o -= lki * v;
+                    }
+                }
+                let inv = 1.0 / self.l[(i, i)];
+                for o in xi.iter_mut() {
+                    *o *= inv;
+                }
+            }
+            c0 = c1;
+        }
+        x
+    }
+
+    /// Solve `A X = B` for a block of right-hand sides via the two
+    /// triangular multi-solves — the Woodbury-factor workhorse of the
+    /// FITC marginal-likelihood gradient (`A^{-1} K_mn`, `K_mm^{-1} K_mn`).
+    pub fn solve_multi(&self, b: &Matrix) -> Matrix {
+        self.solve_lower_t_multi(&self.solve_lower_multi(b))
+    }
+
     /// Solve `L^T x = b` (backward substitution).
     pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
         let n = self.dim();
@@ -297,6 +344,30 @@ mod tests {
             for j in 0..m {
                 let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
                 let xj = ch.solve_lower(&col);
+                for i in 0..n {
+                    assert!(
+                        (x[(i, j)] - xj[i]).abs() < 1e-12,
+                        "n={n} m={m} entry ({i},{j}): {} vs {}",
+                        x[(i, j)],
+                        xj[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_multi_solve_matches_per_column() {
+        let mut rng = Pcg64::seed(0xF17C);
+        for (n, m) in [(1usize, 2usize), (6, 4), (13, 70)] {
+            let a = random_spd(n, &mut rng);
+            let ch = CholeskyFactor::factor(&a).unwrap();
+            let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+            let x = ch.solve_multi(&b);
+            assert_eq!((x.rows(), x.cols()), (n, m));
+            for j in 0..m {
+                let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+                let xj = ch.solve(&col);
                 for i in 0..n {
                     assert!(
                         (x[(i, j)] - xj[i]).abs() < 1e-12,

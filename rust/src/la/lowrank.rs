@@ -70,6 +70,31 @@ pub fn weighted_normal_eqs(
     (a, b)
 }
 
+/// Compute only the weighted Gram reduction `A = Rᵀ diag(w) R` (no
+/// right-hand side) over a row-major n×m `rows` buffer. Unlike
+/// [`weighted_normal_eqs`] the weights may be negative — the FITC
+/// marginal-likelihood gradient reduces the diagonal-correction
+/// derivatives `Σ_i W_ii s_i s_iᵀ` through this with the (sign-indefinite)
+/// trace weights `W_ii = μ_i² − Σ⁻¹_ii`.
+pub fn weighted_gram(rows: &[f64], m: usize, w: &[f64], block: usize) -> Matrix {
+    let zeros = vec![0.0; w.len()];
+    weighted_normal_eqs(rows, m, w, &zeros, block).0
+}
+
+/// Symmetric sandwich solve `K⁻¹ N K⁻¹` through a Cholesky factor of `K`
+/// (two full multi-solves; `N` symmetric ⇒ the result is symmetric up to
+/// round-off, which is good enough for the trace accumulations it feeds).
+///
+/// This is the `tr(A⁻¹ dA)`-through-Woodbury helper: the FITC gradient
+/// needs `K_mm⁻¹ (Kᵀ diag(v) K) K_mm⁻¹` for the diagonal-correction
+/// derivatives, and `K⁻¹ N K⁻¹` contracted against `dK` is exactly
+/// `tr(K⁻¹ N K⁻¹ dK)`.
+pub fn sandwich_solve(chol: &CholeskyFactor, n_mat: &Matrix) -> Matrix {
+    // K⁻¹ N, then (K⁻¹ N) K⁻¹ = (K⁻¹ (K⁻¹ N)ᵀ)ᵀ
+    let left = chol.solve_multi(n_mat);
+    chol.solve_multi(&left.transpose()).transpose()
+}
+
 /// Rank-1 symmetric update `A += c · r rᵀ` (both triangles).
 pub fn rank1_update(a: &mut Matrix, c: f64, r: &[f64]) {
     let m = a.rows();
@@ -165,6 +190,44 @@ mod tests {
         let (a_full, _) = weighted_normal_eqs(&rows, m, &w, &v, 0);
         assert!(a.max_abs_diff(&a_full) < 1e-12);
         assert!(a.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn weighted_gram_accepts_negative_weights() {
+        let mut rng = Pcg64::seed(0x9e9);
+        let (n, m) = (20usize, 5usize);
+        let rows: Vec<f64> = (0..n * m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let a = weighted_gram(&rows, m, &w, 7);
+        let zeros = vec![0.0; n];
+        let (a0, _) = naive(&rows, m, &w, &zeros);
+        assert!(a.max_abs_diff(&a0) < 1e-10);
+    }
+
+    #[test]
+    fn sandwich_solve_matches_explicit_inverse() {
+        let mut rng = Pcg64::seed(0x5a17);
+        let m = 6;
+        // SPD K and a symmetric N
+        let b = Matrix::from_fn(m, m, |_, _| rng.uniform(-1.0, 1.0));
+        let mut k = b.matmul(&b.transpose());
+        for i in 0..m {
+            k[(i, i)] += m as f64;
+        }
+        let mut n_mat = Matrix::from_fn(m, m, |_, _| rng.uniform(-1.0, 1.0));
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let s = 0.5 * (n_mat[(i, j)] + n_mat[(j, i)]);
+                n_mat[(i, j)] = s;
+                n_mat[(j, i)] = s;
+            }
+        }
+        let ch = CholeskyFactor::factor(&k).unwrap();
+        let got = sandwich_solve(&ch, &n_mat);
+        let kinv = ch.inverse();
+        let want = kinv.matmul(&n_mat).matmul(&kinv);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+        assert!(got.is_symmetric(1e-9));
     }
 
     #[test]

@@ -17,6 +17,8 @@ pub mod vecops;
 
 pub use cholesky::CholeskyFactor;
 pub use eig::{sym_eig, SymEig};
-pub use lowrank::{rank1_update, spd_factor_jittered, weighted_normal_eqs};
+pub use lowrank::{
+    rank1_update, sandwich_solve, spd_factor_jittered, weighted_gram, weighted_normal_eqs,
+};
 pub use matrix::Matrix;
 pub use vecops::{axpy, dot, norm2, scale, sub};

@@ -11,7 +11,7 @@
 use crate::kernel::Kernel;
 use crate::la::{dot, CholeskyFactor, Matrix};
 use crate::mean::MeanFn;
-use crate::model::hp_opt::KernelLFOpt;
+use crate::model::hp_opt::{KernelLFOpt, LmlModel};
 use crate::model::Model;
 
 /// Gaussian process with kernel `K`, prior mean `M`.
@@ -323,8 +323,34 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
         if self.xs.len() < 2 {
             return;
         }
-        let opt = self.hp_opt.clone();
+        // take the optimizer out so its refit counter survives the run
+        // (a clone would discard the increment and replay restart draws)
+        let mut opt = std::mem::take(&mut self.hp_opt);
         opt.run(self);
+        self.hp_opt = opt;
+    }
+}
+
+/// The dense GP fits its exact O(n³) marginal likelihood.
+impl<K: Kernel, M: MeanFn> LmlModel for Gp<K, M> {
+    fn hp_vector(&self) -> Vec<f64> {
+        Gp::hp_vector(self)
+    }
+
+    fn apply_hp_vector(&mut self, p: &[f64]) {
+        self.set_hp_vector(p);
+    }
+
+    fn lml(&self) -> f64 {
+        self.log_marginal_likelihood()
+    }
+
+    fn lml_grad(&self) -> Vec<f64> {
+        Gp::lml_grad(self)
+    }
+
+    fn n_samples(&self) -> usize {
+        self.xs.len()
     }
 }
 

@@ -1,17 +1,43 @@
 //! ML-II hyper-parameter optimization (Limbo's `model::gp::KernelLFOpt`):
-//! maximize the log marginal likelihood over the kernel's log-hyper-params
+//! maximize the log marginal likelihood over the model's log-hyper-params
 //! (+ optionally log-noise) with iRprop⁻ restarts.
 //!
 //! Rprop is what Limbo itself uses: it only needs gradient *signs*, is
 //! robust to the wildly different curvature of lengthscale vs variance
 //! axes, and needs no line search.
+//!
+//! The optimizer is generic over [`LmlModel`] — any surrogate exposing an
+//! exact `(lml, lml_grad)` pair. The dense [`Gp`](crate::model::gp::Gp)
+//! fits its O(n³) marginal likelihood; the sparse
+//! [`SparseGp`](crate::model::sgp::SparseGp) fits the exact FITC marginal
+//! likelihood in O(n·m²) per step (no dense-subset proxy). Restarts fan
+//! out over [`crate::pool::parallel_map_catch`], each on its own clone of
+//! the model, so a panicking restart costs only that restart.
 
-use crate::kernel::Kernel;
-use crate::mean::MeanFn;
-use crate::model::gp::Gp;
-use crate::model::Model;
 use crate::opt::rprop::{rprop_maximize, RpropParams};
+use crate::pool::parallel_map_catch;
 use crate::rng::Pcg64;
+
+/// A surrogate whose log marginal likelihood and analytic gradient are
+/// available for ML-II fitting. The hyper vector convention is
+/// `[kernel log-params..., log sigma_n]` throughout.
+pub trait LmlModel: Clone + Send + Sync {
+    /// Current log-hyper vector.
+    fn hp_vector(&self) -> Vec<f64>;
+
+    /// Apply a log-hyper vector and refit whatever factors the marginal
+    /// likelihood depends on.
+    fn apply_hp_vector(&mut self, p: &[f64]);
+
+    /// Log marginal likelihood of the current fit.
+    fn lml(&self) -> f64;
+
+    /// Gradient of the LML w.r.t. the hyper vector.
+    fn lml_grad(&self) -> Vec<f64>;
+
+    /// Number of fitted observations (mixed into the restart seed).
+    fn n_samples(&self) -> usize;
+}
 
 /// Settings for the likelihood fit.
 #[derive(Clone, Debug)]
@@ -26,65 +52,113 @@ pub struct HpOptConfig {
     pub bound: f64,
     /// RNG seed for restart draws (deterministic fits).
     pub seed: u64,
+    /// Worker threads for the restart fan-out (0 = one per restart).
+    pub threads: usize,
 }
 
 impl Default for HpOptConfig {
     fn default() -> Self {
-        Self { iterations: 50, restarts: 3, perturbation: 2.0, bound: 6.0, seed: 0x4C4D4C }
+        Self {
+            iterations: 50,
+            restarts: 3,
+            perturbation: 2.0,
+            bound: 6.0,
+            seed: 0x4C4D4C,
+            threads: 0,
+        }
     }
 }
 
-/// The likelihood optimizer object stored inside [`Gp`].
+/// splitmix64-style avalanche so nearby inputs land on unrelated streams.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Restart-stream seed for refit number `refit` on an `n`-sample dataset.
+///
+/// The old scheme (`seed ^ n`) replayed identical perturbations whenever
+/// a service refit ran on an equal-sized dataset — every refit explored
+/// the same (possibly unlucky) starting points. Mixing the refit counter
+/// through an avalanche makes every `(n, refit)` pair an independent
+/// stream.
+pub(crate) fn restart_seed(seed: u64, n: u64, refit: u64) -> u64 {
+    splitmix(seed ^ splitmix(n ^ splitmix(refit)))
+}
+
+/// The likelihood optimizer stored inside [`Gp`](crate::model::gp::Gp)
+/// and [`SparseGp`](crate::model::sgp::SparseGp).
 #[derive(Clone, Debug, Default)]
 pub struct KernelLFOpt {
     /// Tunable settings.
     pub config: HpOptConfig,
+    /// Completed [`run`](Self::run) calls, mixed into the restart seed so
+    /// repeated refits on equal-sized datasets draw fresh perturbations.
+    refits: u64,
 }
 
 impl KernelLFOpt {
-    /// Maximize the GP's LML in place. Keeps the best of all restarts;
-    /// never leaves the GP worse than it started.
-    pub fn run<K: Kernel, M: MeanFn>(&self, gp: &mut Gp<K, M>) {
+    /// Number of completed fits (the refit counter mixed into the seed).
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// Maximize the model's LML in place. Restarts run in parallel on
+    /// clones of the model (each a full rprop trajectory); the best of
+    /// all restarts — never worse than the starting point — is applied.
+    pub fn run<T: LmlModel>(&mut self, model: &mut T) {
+        let start = model.hp_vector();
+        let seed = restart_seed(self.config.seed, model.n_samples() as u64, self.refits);
+        self.refits += 1;
         let cfg = &self.config;
-        let start = gp.hp_vector();
-        let nprm = start.len();
-        let mut rng = Pcg64::seed(cfg.seed ^ gp.n_samples() as u64);
+        let mut rng = Pcg64::seed(seed);
 
-        let mut best_p = start.clone();
-        let mut best_lml = gp.log_marginal_likelihood();
+        let x0s: Vec<Vec<f64>> = (0..cfg.restarts.max(1))
+            .map(|restart| {
+                if restart == 0 {
+                    start.clone()
+                } else {
+                    start
+                        .iter()
+                        .map(|&v| {
+                            (v + rng.uniform(-cfg.perturbation, cfg.perturbation))
+                                .clamp(-cfg.bound, cfg.bound)
+                        })
+                        .collect()
+                }
+            })
+            .collect();
 
-        for restart in 0..cfg.restarts.max(1) {
-            let x0: Vec<f64> = if restart == 0 {
-                start.clone()
-            } else {
-                start
-                    .iter()
-                    .map(|&v| {
-                        (v + rng.uniform(-cfg.perturbation, cfg.perturbation))
-                            .clamp(-cfg.bound, cfg.bound)
-                    })
-                    .collect()
-            };
-            let params = RpropParams { iterations: cfg.iterations, ..RpropParams::default() };
-            let bound = cfg.bound;
+        let params = RpropParams { iterations: cfg.iterations, ..RpropParams::default() };
+        let bound = cfg.bound;
+        let threads = if cfg.threads == 0 { x0s.len() } else { cfg.threads };
+        let base = &*model;
+        let results = parallel_map_catch(x0s, threads, |_, x0| {
+            let mut scratch = base.clone();
             let p = rprop_maximize(
                 |p| {
-                    gp.set_hp_vector(p);
-                    (gp.log_marginal_likelihood(), gp.lml_grad())
+                    scratch.apply_hp_vector(p);
+                    (scratch.lml(), scratch.lml_grad())
                 },
                 &x0,
                 &params,
                 Some((-bound, bound)),
             );
-            gp.set_hp_vector(&p);
-            let lml = gp.log_marginal_likelihood();
-            if lml > best_lml && lml.is_finite() {
+            scratch.apply_hp_vector(&p);
+            (p, scratch.lml())
+        });
+
+        let mut best_p = start;
+        let mut best_lml = model.lml();
+        for (p, lml) in results.into_iter().flatten() {
+            if lml.is_finite() && lml > best_lml {
                 best_lml = lml;
                 best_p = p;
             }
-            let _ = nprm;
         }
-        gp.set_hp_vector(&best_p);
+        model.apply_hp_vector(&best_p);
     }
 }
 
@@ -93,6 +167,7 @@ mod tests {
     use super::*;
     use crate::kernel::{Kernel, SquaredExpArd};
     use crate::mean::ZeroMean;
+    use crate::model::gp::Gp;
     use crate::model::Model;
     use crate::rng::Pcg64;
 
@@ -133,5 +208,34 @@ mod tests {
         let p = gp.hp_vector();
         gp.optimize_hyperparams();
         assert_eq!(gp.hp_vector(), p);
+    }
+
+    #[test]
+    fn refit_counter_advances_and_survives_optimize() {
+        let mut rng = Pcg64::seed(5);
+        let xs: Vec<Vec<f64>> = (0..10).map(|_| rng.unit_point(1)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.1);
+        gp.hp_opt.config.iterations = 2;
+        gp.hp_opt.config.restarts = 2;
+        gp.fit(&xs, &ys);
+        assert_eq!(gp.hp_opt.refits(), 0);
+        gp.optimize_hyperparams();
+        gp.optimize_hyperparams();
+        // the counter must persist across calls (it de-correlates restart
+        // draws of successive service refits on equal-sized datasets)
+        assert_eq!(gp.hp_opt.refits(), 2);
+    }
+
+    #[test]
+    fn restart_seed_mixes_refits_and_sizes() {
+        // regression: `seed ^ n` collided for equal-sized datasets across
+        // refits, replaying identical restart perturbations
+        let s = 0x4C4D4C;
+        assert_ne!(restart_seed(s, 100, 0), restart_seed(s, 100, 1));
+        assert_ne!(restart_seed(s, 100, 1), restart_seed(s, 100, 2));
+        assert_ne!(restart_seed(s, 100, 0), restart_seed(s, 101, 0));
+        // the old scheme's xor-cancellation pairs must not collide either
+        assert_ne!(restart_seed(s, 3, 0), restart_seed(s ^ 3, 0, 0));
     }
 }

@@ -15,7 +15,7 @@ pub mod sgp;
 
 pub use gp::Gp;
 pub use serde::{GpState, SgpState};
-pub use hp_opt::{HpOptConfig, KernelLFOpt};
+pub use hp_opt::{HpOptConfig, KernelLFOpt, LmlModel};
 pub use sgp::{AdaptiveModel, SgpConfig, SparseGp};
 
 /// A probabilistic surrogate: fit observations, predict mean + variance.

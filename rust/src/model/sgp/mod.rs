@@ -33,6 +33,15 @@
 //! reduction building `A` streams through blocked low-rank kernels in
 //! [`crate::la::lowrank`].
 //!
+//! Hyper-parameters are fit by ML-II on the **exact FITC marginal
+//! likelihood**: [`fitc::SparseGp::log_marginal_likelihood`] evaluates
+//! `log N(y | m(X), Q_nn + Λ)` from the cached Woodbury factors in
+//! O(n·m), and [`fitc::SparseGp::lml_grad`] contracts the trace weights
+//! of `½ tr((μμᵀ − Σ⁻¹) dΣ)` against batched kernel-gradient blocks
+//! ([`crate::kernel::Kernel::grad_params_block`]) in O(n·m² + m³) — the
+//! same [`crate::model::hp_opt::KernelLFOpt`] iRprop⁻ machinery as the
+//! dense GP, generic over [`crate::model::hp_opt::LmlModel`].
+//!
 //! # Complexity
 //!
 //! | operation                    | dense `Gp`      | [`SparseGp`]          |
@@ -41,7 +50,7 @@
 //! | `add_sample` (amortized)     | O(n²)           | O(n·m + m³)           |
 //! | `predict` mean               | O(n)            | O(m)                  |
 //! | `predict` variance           | O(n²)           | O(m²)                 |
-//! | `optimize_hyperparams`       | O(n³) per step  | O(s³) proxy, s ≤ cap  |
+//! | `optimize_hyperparams`       | O(n³) per step  | O(n·m²) per step      |
 //! | memory                       | O(n²)           | O(n·m + m²)           |
 //!
 //! # Choosing a model

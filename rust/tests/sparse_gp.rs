@@ -86,6 +86,43 @@ fn sparse_posterior_actually_fits_branin() {
 }
 
 #[test]
+fn exact_fitc_hyperopt_beats_the_start_on_branin() {
+    // end-to-end: large-budget sparse fit, then ML-II on the exact FITC
+    // marginal likelihood (no dense-subset proxy) from a deliberately
+    // mis-specified start — the fitted model must be strictly better on
+    // its own objective and remain numerically healthy
+    let (xs, ys) = branin_data(384, 0xF17C);
+    let mut sparse = SparseGp::with_config(
+        Matern52::new(2),
+        DataMean::default(),
+        0.3, // over-estimated noise: ML-II should shrink it
+        SgpConfig { max_inducing: 64, ..SgpConfig::default() },
+    );
+    sparse.learn_noise = true;
+    sparse.hp_opt.config.restarts = 2;
+    sparse.hp_opt.config.iterations = 30;
+    sparse.fit(&xs, &ys);
+    let before = sparse.log_marginal_likelihood();
+    sparse.optimize_hyperparams();
+    let after = sparse.log_marginal_likelihood();
+    assert!(after.is_finite());
+    assert!(after > before, "exact FITC LML must not degrade: {before} -> {after}");
+    // Branin is low-noise: the learned noise should have dropped
+    assert!(
+        sparse.noise_var() < 0.09,
+        "noise variance {} should shrink below the 0.09 start",
+        sparse.noise_var()
+    );
+    // the refit model still predicts sanely
+    let mut rng = Pcg64::seed(3);
+    for _ in 0..32 {
+        let p = rng.unit_point(2);
+        let (mu, var) = sparse.predict(&p);
+        assert!(mu.is_finite() && var.is_finite() && var > 0.0);
+    }
+}
+
+#[test]
 fn adaptive_model_scales_through_migration() {
     // stream 400 Branin observations through an AdaptiveModel; it must
     // migrate at the threshold and keep a bounded inducing set while the

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""CI bench-trajectory gate.
+
+Merges the JSON-lines rows emitted by the smoke benches
+(`acqui_opt --smoke` -> target/acqui_opt_batch.json,
+`gp_scaling --smoke` -> target/gp_scaling.json) into one `BENCH_PR.json`
+document, compares it against the checked-in `rust/benches/baseline.json`,
+and fails (exit 1) on a >30% candidates/sec regression at any batch size.
+
+Gate policy
+-----------
+* `acqui_batch` rows gate **hard**: `batched_cps` and `pointwise_cps`
+  (higher is better) may not drop more than `--max-regression` (default
+  0.30) below the baseline at any batch size.
+* `gp_scaling` rows are tracked warn-only: `fit_plus_predict_s` (lower is
+  better) regressions print a warning but never fail the job (large-n
+  timings are too noisy on shared CI runners for a hard gate).
+* If the baseline has `"warn_only": true`, or has no matching row for a
+  PR row, everything downgrades to warnings — this is how the gate
+  behaves on first landing, while the baseline seeds.
+
+Refreshing the baseline
+-----------------------
+Run the two smoke benches locally (or download `BENCH_PR.json` from a CI
+run on the target runner class), then:
+
+    python3 scripts/bench_compare.py \
+        --pr rust/target/acqui_opt_batch.json rust/target/gp_scaling.json \
+        --write-baseline rust/benches/baseline.json
+
+and commit the result. A freshly written baseline has `warn_only: false`,
+arming the hard gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def read_rows(paths):
+    """Read JSON-lines rows from each existing path (missing files warn)."""
+    rows = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        rows.append(json.loads(line))
+        except FileNotFoundError:
+            print(f"WARN: bench output {path} not found (bench skipped?)")
+    return rows
+
+
+def row_key(row):
+    """Identity of a bench config across runs."""
+    if row.get("bench") == "acqui_batch":
+        return ("acqui_batch", row.get("n"), row.get("dim"), row.get("batch"))
+    if row.get("bench") == "gp_scaling":
+        return ("gp_scaling", row.get("model"), row.get("n"), row.get("m"))
+    return (row.get("bench"), json.dumps(row, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pr", nargs="+", default=[], help="PR bench JSON-lines files")
+    ap.add_argument("--baseline", help="checked-in baseline.json")
+    ap.add_argument("--out", help="merged BENCH_PR.json output path")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="fractional candidates/sec drop that fails the job")
+    ap.add_argument("--write-baseline",
+                    help="write a fresh baseline from the PR rows and exit")
+    args = ap.parse_args()
+
+    pr_rows = read_rows(args.pr)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": pr_rows}, f, indent=1)
+        print(f"merged {len(pr_rows)} rows -> {args.out}")
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump({"warn_only": False, "rows": pr_rows}, f, indent=1)
+        print(f"baseline seeded with {len(pr_rows)} rows -> {args.write_baseline}")
+        return 0
+
+    if not args.baseline:
+        print("no --baseline given; nothing to compare")
+        return 0
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"WARN: baseline {args.baseline} missing; warn-only run")
+        baseline = {"warn_only": True, "rows": []}
+
+    warn_only = bool(baseline.get("warn_only", False))
+    base_by_key = {row_key(r): r for r in baseline.get("rows", [])}
+    failures, warnings = [], []
+
+    for row in pr_rows:
+        key = row_key(row)
+        base = base_by_key.get(key)
+        if base is None:
+            warnings.append(f"no baseline for {key} (baseline still seeding?)")
+            continue
+        if row.get("bench") == "acqui_batch":
+            for metric in ("batched_cps", "pointwise_cps"):
+                now, then = row.get(metric), base.get(metric)
+                # None/<=0 baseline = unusable reference; a 0.0 PR value is
+                # a real (total) regression and must NOT skip the gate
+                if now is None or then is None or then <= 0:
+                    continue
+                drop = 1.0 - now / then
+                line = (f"{key} {metric}: {then:.0f} -> {now:.0f} cand/s "
+                        f"({-drop:+.1%})")
+                if drop > args.max_regression:
+                    (warnings if warn_only else failures).append(line)
+                else:
+                    print(f"ok   {line}")
+        elif row.get("bench") == "gp_scaling":
+            now, then = row.get("fit_plus_predict_s"), base.get("fit_plus_predict_s")
+            if now is None or then is None or then <= 0:
+                continue
+            slowdown = now / then - 1.0
+            line = f"{key} fit+predict: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
+            if slowdown > args.max_regression:
+                warnings.append(line)  # timing rows are warn-only by policy
+            else:
+                print(f"ok   {line}")
+
+    for w in warnings:
+        print(f"WARN {w}")
+    for f_ in failures:
+        print(f"FAIL {f_}")
+    if failures:
+        print(f"\n{len(failures)} hard bench regression(s) beyond "
+              f"{args.max_regression:.0%} — failing the job. If intentional, "
+              "refresh the baseline (see --write-baseline).")
+        return 1
+    print("\nbench-compare gate passed"
+          + (" (warn-only: baseline still seeding)" if warn_only else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
