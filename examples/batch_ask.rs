@@ -1,19 +1,32 @@
-//! q-batch ask/tell: one suggestion server feeding 4 parallel workers.
+//! q-batch ask/tell: one suggestion server feeding 4 parallel workers,
+//! under both batch strategies.
 //!
 //! The scenario the batched pipeline opens up (ROADMAP): instead of one
 //! robot trying one trial at a time, a farm of evaluators runs q trials
-//! concurrently. Each round the server proposes `q = 4` diverse points
-//! via the constant-liar heuristic ([`AskTellServer::ask_batch`]), the
+//! concurrently. Each round the server proposes `q = 4` points, the
 //! workers evaluate them in parallel threads (here: a noisy synthetic
 //! objective standing in for 4 physical robots), and every outcome is
 //! told back before the next round.
+//!
+//! Two proposal strategies run back to back
+//! ([`limbo::coordinator::BatchStrategy`]):
+//!
+//! * **constant liar** (default) — q pointwise maximizations with
+//!   posterior-mean lies in between: lowest proposal latency, blind to
+//!   the joint posterior;
+//! * **qEI** — Monte-Carlo multi-point expected improvement over the
+//!   joint posterior (frozen common random numbers per round): costs
+//!   more proposal compute per round, but the batch is scored as a
+//!   *set*, so diversity is bought exactly where the posterior
+//!   correlations say it pays. Prefer it when a trial is expensive
+//!   relative to the proposal optimization.
 //!
 //! Run with: `cargo run --release --example batch_ask`
 
 use std::thread;
 use std::time::{Duration, Instant};
 
-use limbo::coordinator::DefaultAskTellServer;
+use limbo::coordinator::{BatchStrategy, DefaultAskTellServer};
 
 /// The simulated experiment each worker runs (maximum 0 at (0.7, 0.3));
 /// the sleep stands in for the physical trial the paper's robots execute.
@@ -22,16 +35,14 @@ fn run_trial(x: &[f64]) -> f64 {
     -(x[0] - 0.7).powi(2) - (x[1] - 0.3).powi(2)
 }
 
-fn main() {
+fn drive(label: &str, strategy: BatchStrategy, rounds: usize) {
     const Q: usize = 4;
-    let rounds: usize =
-        if matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1")) { 4 } else { 8 };
-
-    let server = DefaultAskTellServer::with_defaults(2, 42).spawn();
+    let server = DefaultAskTellServer::with_defaults(2, 42)
+        .with_batch_strategy(strategy)
+        .spawn();
     let t0 = Instant::now();
 
     for round in 0..rounds {
-        // one q-point proposal: tell-the-lie, re-maximize, rollback
         let batch = server.ask_batch(Q);
 
         // dispatch the q trials to q parallel workers
@@ -57,7 +68,7 @@ fn main() {
         }
         let best = server.best().expect("observations recorded");
         println!(
-            "round {round}: trials [{}], incumbent {:.5} at ({:.3}, {:.3})",
+            "[{label}] round {round}: trials [{}], incumbent {:.5} at ({:.3}, {:.3})",
             trials.join(", "),
             best.1,
             best.0[0],
@@ -67,11 +78,18 @@ fn main() {
 
     let best = server.best().expect("observations recorded");
     println!(
-        "\n{} evaluations across {Q} parallel workers in {:.2}s -> best {:.5} at ({:.3}, {:.3})",
+        "[{label}] {} evaluations across {Q} parallel workers in {:.2}s -> best {:.5} at ({:.3}, {:.3})\n",
         rounds * Q,
         t0.elapsed().as_secs_f64(),
         best.1,
         best.0[0],
         best.0[1]
     );
+}
+
+fn main() {
+    let rounds: usize =
+        if matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1")) { 4 } else { 8 };
+    drive("constant-liar", BatchStrategy::ConstantLiar, rounds);
+    drive("qEI", BatchStrategy::QEi { mc_samples: 256 }, rounds);
 }

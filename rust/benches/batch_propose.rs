@@ -1,0 +1,110 @@
+//! Batch-proposal sweep: constant liar vs joint-posterior Monte-Carlo
+//! qEI on `AskTellServer::ask_batch`, at q ∈ {2, 4, 8}.
+//!
+//! Two columns per (strategy, q) config:
+//! * `propose_s` — median wall-clock of one q-point proposal (the
+//!   latency a fleet of parallel evaluators waits on);
+//! * `qei_score` — the proposed batch's joint qEI under one fixed-seed
+//!   reference estimator (higher = better batch; this is the quality the
+//!   constant liar trades away by ignoring posterior correlations).
+//!
+//! One JSON row per config goes to stdout and
+//! `target/batch_propose.json`, which CI merges into `BENCH_PR.json`
+//! (`scripts/bench_compare.py`; proposal timings are tracked warn-only
+//! like the gp_scaling rows). `--smoke` shrinks the training set and rep
+//! count to the CI-sized variant.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use limbo::acqui::batch::{BatchAcquiFn, QEi};
+use limbo::acqui::{AcquiContext, Ei};
+use limbo::benchlib::header;
+use limbo::coordinator::{AskTellServer, BatchStrategy};
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::{gp::Gp, Model};
+use limbo::opt::{Chained, NelderMead, OptimizerExt, ParallelRepeater, RandomPoint};
+use limbo::rng::Pcg64;
+
+type BenchServer =
+    AskTellServer<Gp<Matern52, DataMean>, Ei, ParallelRepeater<Chained<RandomPoint, NelderMead>>>;
+
+fn fitted_server(n: usize, strategy: BatchStrategy, seed: u64) -> BenchServer {
+    let mut rng = Pcg64::seed(17);
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| (6.0 * x[0]).sin() + x[1] * 0.5).collect();
+    let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+    gp.fit(&xs, &ys);
+    AskTellServer::new(
+        gp,
+        Ei::default(),
+        RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
+        2,
+        seed,
+    )
+    .with_batch_strategy(strategy)
+}
+
+fn median(mut samples: Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let n = if smoke { 64 } else { 256 };
+    let reps = if smoke { 3 } else { 7 };
+    header(&format!(
+        "batch proposal sweep (EI server over {n}-sample GP, dim=2, q in 2/4/8)"
+    ));
+
+    let mut json_rows: Vec<String> = Vec::new();
+    for q in [2usize, 4, 8] {
+        // fixed-seed reference estimator scoring both strategies' batches
+        let judge = QEi::new(1024, q, 0x0DDB);
+        let mut row_for = |name: &str, strategy: BatchStrategy| {
+            let mut srv = fitted_server(n, strategy, 23);
+            let mut times = Vec::with_capacity(reps);
+            let mut batch = Vec::new();
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                batch = srv.ask_batch(q);
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let propose_s = median(times);
+            let ctx = AcquiContext::new(
+                0,
+                srv.model.best_observation().unwrap_or(f64::NEG_INFINITY),
+                2,
+            );
+            let score = judge.eval_joint(&srv.model, &batch, &ctx);
+            println!(
+                "  {name}/q={q}: {propose_s:.4}s per proposal, reference qEI {score:.4}"
+            );
+            json_rows.push(format!(
+                "{{\"bench\":\"batch_propose\",\"smoke\":{smoke},\"n\":{n},\"dim\":2,\
+                 \"q\":{q},\"strategy\":\"{name}\",\"propose_s\":{propose_s:.6},\
+                 \"proposals_per_sec\":{:.3},\"qei_score\":{score:.6}}}",
+                1.0 / propose_s
+            ));
+        };
+        row_for("constant_liar", BatchStrategy::ConstantLiar);
+        row_for("qei", BatchStrategy::QEi { mc_samples: 512 });
+    }
+
+    let path = std::path::Path::new("target").join("batch_propose.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &json_rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    for row in &json_rows {
+        println!("{row}");
+    }
+}

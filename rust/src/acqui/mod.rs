@@ -5,12 +5,51 @@
 //! All are generic over [`Model`], so they work identically on the native
 //! [`crate::model::gp::Gp`] and the XLA-artifact backend.
 
+pub mod batch;
 mod math;
 
+pub use batch::{BatchAcquiFn, BatchAcquiObjective, QEi};
 pub use math::{norm_cdf, norm_pdf};
 
 use crate::model::Model;
 use crate::opt::Objective;
+
+/// Incumbent threshold for the improvement-based acquisitions (EI/PI/qEI).
+///
+/// Prefers the run context's incumbent; before any `tell` the context
+/// carries `-inf`, in which case the *model's* best observation is the
+/// correct threshold (a server wrapped around a pre-fitted model used to
+/// silently substitute `0.0` here — wrong for objectives whose values
+/// live far from 0). Only when the model has no data either does this
+/// fall back to the best *predicted* mean of the candidates (and 0.0 as
+/// the final no-information default).
+///
+/// `mus` is the caller's candidate pool: the whole batch for
+/// `eval_batch`, the single candidate's mean for a pointwise `eval`. In
+/// that last-resort branch the two can therefore use different
+/// thresholds — harmless in practice, because a model with no data
+/// predicts a *constant* prior mean for every standard [`crate::mean`]
+/// function, making the per-candidate and per-batch maxima identical.
+pub(crate) fn incumbent_for<M: Model + ?Sized>(
+    model: &M,
+    ctx: &AcquiContext,
+    mus: &[f64],
+) -> f64 {
+    if ctx.best.is_finite() {
+        return ctx.best;
+    }
+    if let Some(b) = model.best_observation() {
+        if b.is_finite() {
+            return b;
+        }
+    }
+    let m = mus.iter().copied().filter(|v| v.is_finite()).fold(f64::NEG_INFINITY, f64::max);
+    if m.is_finite() {
+        m
+    } else {
+        0.0
+    }
+}
 
 /// Run context the optimizer passes to the acquisition at each iteration.
 ///
@@ -187,6 +226,12 @@ impl Default for Ei {
 }
 
 impl Ei {
+    /// Analytic EI, clamped at 0: the A&S-7.1.26 `norm_cdf` carries an
+    /// absolute error of ~1.5e-7, which can drive the closed form
+    /// microscopically negative deep in the left tail (large negative z)
+    /// — a negative "expected improvement" breaks nonnegativity
+    /// invariants downstream (and qEI's MC estimator is nonnegative by
+    /// construction, so the analytic form should be too).
     #[inline]
     fn score(&self, mu: f64, var: f64, threshold: f64) -> f64 {
         let sigma = var.sqrt();
@@ -195,25 +240,22 @@ impl Ei {
             return gain.max(0.0);
         }
         let z = gain / sigma;
-        gain * norm_cdf(z) + sigma * norm_pdf(z)
+        (gain * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0)
     }
 }
 
 impl<M: Model + ?Sized> AcquiFn<M> for Ei {
     fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
-        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
         let (mu, var) = model.predict(x);
-        self.score(mu, var, best + self.xi)
+        let threshold = incumbent_for(model, ctx, std::slice::from_ref(&mu)) + self.xi;
+        self.score(mu, var, threshold)
     }
 
     fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
-        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
-        let threshold = best + self.xi;
-        model
-            .predict_batch(xs)
-            .into_iter()
-            .map(|(mu, var)| self.score(mu, var, threshold))
-            .collect()
+        let preds = model.predict_batch(xs);
+        let mus: Vec<f64> = preds.iter().map(|&(mu, _)| mu).collect();
+        let threshold = incumbent_for(model, ctx, &mus) + self.xi;
+        preds.into_iter().map(|(mu, var)| self.score(mu, var, threshold)).collect()
     }
 }
 
@@ -234,15 +276,15 @@ impl<M: Model + ?Sized> AcquiFn<M> for Pi {
     fn eval(&self, model: &M, x: &[f64], ctx: &AcquiContext) -> f64 {
         let (mu, var) = model.predict(x);
         let sigma = var.sqrt().max(1e-12);
-        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
-        norm_cdf((mu - best - self.xi) / sigma)
+        let threshold = incumbent_for(model, ctx, std::slice::from_ref(&mu)) + self.xi;
+        norm_cdf((mu - threshold) / sigma)
     }
 
     fn eval_batch(&self, model: &M, xs: &[Vec<f64>], ctx: &AcquiContext) -> Vec<f64> {
-        let best = if ctx.best.is_finite() { ctx.best } else { 0.0 };
-        let threshold = best + self.xi;
-        model
-            .predict_batch(xs)
+        let preds = model.predict_batch(xs);
+        let mus: Vec<f64> = preds.iter().map(|&(mu, _)| mu).collect();
+        let threshold = incumbent_for(model, ctx, &mus) + self.xi;
+        preds
             .into_iter()
             .map(|(mu, var)| norm_cdf((mu - threshold) / var.sqrt().max(1e-12)))
             .collect()
@@ -312,6 +354,64 @@ mod tests {
         let ctx = AcquiContext::new(1, -10.0, 1);
         let v = pi.eval(&gp, &[0.2], &ctx);
         assert!(v > 0.9 && v <= 1.0, "pi={v}");
+    }
+
+    #[test]
+    fn ei_pi_fall_back_to_model_incumbent_not_zero() {
+        // all-negative observations: with the old `best = 0.0` substitute
+        // the threshold sat far above every achievable value, flattening
+        // EI/PI into a wrong (near-zero everywhere) landscape
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.01);
+        gp.fit(&[vec![0.2], vec![0.8]], &[-120.0, -100.0]);
+        let ctx = AcquiContext::start(1); // incumbent -inf (no tell yet)
+        assert_eq!(incumbent_for(&gp, &ctx, &[-110.0]), -100.0);
+
+        let ei = Ei { xi: 0.0 };
+        let pi = Pi { xi: 0.0 };
+        // near the better observation, improvement is genuinely plausible:
+        // the fixed threshold (-100, not 0) must leave EI/PI responsive
+        let v_ei = ei.eval(&gp, &[0.95], &ctx);
+        let v_pi = pi.eval(&gp, &[0.95], &ctx);
+        assert!(v_ei > 1e-3, "EI with model incumbent should be alive: {v_ei}");
+        assert!(v_pi > 1e-3, "PI with model incumbent should be alive: {v_pi}");
+        // batch path agrees with the pointwise path on the same fallback
+        let cands = vec![vec![0.1], vec![0.5], vec![0.95]];
+        let b_ei = ei.eval_batch(&gp, &cands, &ctx);
+        let b_pi = pi.eval_batch(&gp, &cands, &ctx);
+        for (j, c) in cands.iter().enumerate() {
+            assert!((b_ei[j] - ei.eval(&gp, c, &ctx)).abs() < 1e-10);
+            assert!((b_pi[j] - pi.eval(&gp, c, &ctx)).abs() < 1e-10);
+        }
+        // empty model + no incumbent: max predicted mean (prior = 0 here)
+        let fresh = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.01);
+        assert_eq!(incumbent_for(&fresh, &ctx, &[]), 0.0);
+    }
+
+    #[test]
+    fn ei_nonnegative_and_monotone_across_the_tails() {
+        // sweep z in [-10, 10]: EI(mu = z, sigma = 1, thr = 0) must stay
+        // nonnegative (the A&S erf approximation can otherwise dip to
+        // ~-2e-16 in the far left tail) and monotone in mu up to the
+        // approximation's noise floor
+        let ei = Ei { xi: 0.0 };
+        let mut prev = -1.0;
+        for i in 0..=2000 {
+            let z = -10.0 + i as f64 * 0.01;
+            let v = ei.score(z, 1.0, 0.0);
+            assert!(v >= 0.0, "EI(z={z}) = {v} < 0");
+            assert!(
+                v >= prev - 1e-12,
+                "EI not monotone at z={z}: {v} < prev {prev}"
+            );
+            prev = v;
+        }
+        // deep left tail is vanishingly small (clamped at 0, never below)
+        assert!(ei.score(-10.0, 1.0, 0.0) < 1e-20);
+        // the A&S dip region (z ~ -8.4 drives the closed form slightly
+        // negative) must come out exactly clamped
+        assert!(ei.score(-8.375, 1.0, 0.0) >= 0.0);
+        // right tail approaches the gain asymptote
+        assert!((ei.score(10.0, 1.0, 0.0) - 10.0).abs() < 1e-6);
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!   AOT-compiled artifacts;
 //! * [`service`] — ask/tell suggestion server (channel-based, the online
 //!   adaptation deployment mode: the robot asks for a trial, reports the
-//!   outcome, asks again);
+//!   outcome, asks again), with q-point batch proposals via the constant
+//!   liar or joint-posterior Monte-Carlo qEI
+//!   ([`service::BatchStrategy`]);
 //! * [`batched_opt`] — batched UCB acquisition search for the XLA
 //!   backend, now a thin adapter over the generic
 //!   [`crate::opt::PopulationSearch`] + `eval_many` machinery (still ~64
@@ -28,5 +30,5 @@ pub mod service;
 pub mod xla_model;
 
 pub use experiment::{ExperimentRunner, ExperimentRow, RunOutcome};
-pub use service::{AskTellServer, DefaultAskTellServer, ServerHandle};
+pub use service::{AskTellServer, BatchStrategy, DefaultAskTellServer, ServerHandle};
 pub use xla_model::XlaGpModel;

@@ -8,19 +8,52 @@
 //! from a dedicated thread.
 //!
 //! [`AskTellServer::ask_batch`] extends the protocol to q-point proposals
-//! (constant-liar heuristic), so the server can drive a fleet of parallel
-//! evaluators — robot farms, cluster workers — instead of one trial at a
-//! time.
+//! so the server can drive a fleet of parallel evaluators — robot farms,
+//! cluster workers — instead of one trial at a time. Two proposal
+//! strategies are available ([`BatchStrategy`]):
+//!
+//! * [`BatchStrategy::ConstantLiar`] (default) — after each pointwise
+//!   maximization the model is told its own posterior mean at the
+//!   proposed point (the "lie") and the acquisition is re-maximized;
+//!   cheap (q ordinary maximizations) and latency-friendly, but the
+//!   joint posterior correlation between batch points never enters the
+//!   score.
+//! * [`BatchStrategy::QEi`] — Monte-Carlo multi-point expected
+//!   improvement over the **joint** posterior
+//!   ([`crate::acqui::batch::QEi`], common random numbers frozen per
+//!   proposal): strongly correlated points share a sample path and score
+//!   barely better than one of them, so diversity is rewarded exactly
+//!   where the posterior says it matters. Costs roughly
+//!   `mc_samples`× more per objective evaluation than a pointwise EI —
+//!   pick it when trials are expensive relative to proposal compute
+//!   (the regime the paper's robot deployments live in).
 
 use std::sync::mpsc;
 use std::thread;
 
+use crate::acqui::batch::{propose_batch_qei, QEi};
 use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ucb};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{AdaptiveModel, Model};
 use crate::opt::{Chained, NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
 use crate::rng::Pcg64;
+
+/// How [`AskTellServer::ask_batch`] turns one model posterior into `q`
+/// parallel trial proposals (see the module docs for the tradeoff).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchStrategy {
+    /// Greedy pointwise re-maximization with posterior-mean lies.
+    #[default]
+    ConstantLiar,
+    /// Monte-Carlo joint-posterior qEI with `mc_samples` frozen
+    /// antithetic common-random-number draws per proposal round.
+    QEi {
+        /// MC draws per acquisition evaluation (rounded down to even;
+        /// 256–1024 is a good range — noise shrinks as `1/sqrt`).
+        mc_samples: usize,
+    },
+}
 
 /// Requests a client can send.
 enum Request {
@@ -54,8 +87,11 @@ where
     iteration: usize,
     best: Option<(Vec<f64>, f64)>,
     /// Next observation count at which the model re-optimizes its
-    /// hyper-parameters (`None` = never). Doubles after each refit.
+    /// hyper-parameters (`None` = never). Doubles past the current count
+    /// after each refit.
     next_hp_refit: Option<usize>,
+    /// q-point proposal strategy for [`ask_batch`](Self::ask_batch).
+    batch_strategy: BatchStrategy,
 }
 
 /// The default service configuration: an [`AdaptiveModel`] surrogate
@@ -88,8 +124,12 @@ where
     A: AcquiFn<M> + 'static,
     O: Optimizer + 'static,
 {
-    /// Compose a server.
+    /// Compose a server. A model that already has data (`fit` /
+    /// deserialized state) seeds the incumbent: without this, the first
+    /// `ask` ran EI/UCB against a `-inf` incumbent and
+    /// [`best`](Self::best) lied `None` until the first `tell`.
     pub fn new(model: M, acquisition: A, inner_opt: O, dim: usize, seed: u64) -> Self {
+        let best = model.best_sample();
         Self {
             model,
             acquisition,
@@ -97,9 +137,29 @@ where
             rng: Pcg64::seed(seed),
             dim,
             iteration: 0,
-            best: None,
+            best,
             next_hp_refit: None,
+            batch_strategy: BatchStrategy::default(),
         }
+    }
+
+    /// Select the q-point proposal strategy for
+    /// [`ask_batch`](Self::ask_batch).
+    pub fn with_batch_strategy(mut self, strategy: BatchStrategy) -> Self {
+        self.batch_strategy = strategy;
+        self
+    }
+
+    /// Incumbent value for the acquisition context: the tracked best,
+    /// else the model's own best observation (a pre-fitted model whose
+    /// argmax is unknown — e.g. restored value-only state — must still
+    /// threshold EI correctly), else `-inf` (no data at all).
+    fn incumbent_value(&self) -> f64 {
+        self.best
+            .as_ref()
+            .map(|b| b.1)
+            .or_else(|| self.model.best_observation())
+            .unwrap_or(f64::NEG_INFINITY)
     }
 
     /// Enable ML-II hyper-parameter refits on a doubling schedule: the
@@ -119,25 +179,15 @@ where
         if self.model.n_samples() == 0 {
             return self.rng.unit_point(self.dim);
         }
-        let ctx = AcquiContext::new(
-            self.iteration,
-            self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY),
-            self.dim,
-        );
+        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
         let objective = AcquiObjective::new(&self.model, &self.acquisition, ctx);
         self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
     }
 
-    /// Propose `q` diverse trials to run in parallel, via the constant-
-    /// liar heuristic: after each maximization the model is *told its own
-    /// posterior mean* at the proposed point (the "lie"), the acquisition
-    /// is re-maximized on the lied model, and all lies are rolled back at
-    /// the end (the lies go into a scratch clone; `self.model` only ever
-    /// sees real [`tell`](Self::tell) observations). Lying flattens the
-    /// posterior variance around already-proposed points, steering the
-    /// next maximization elsewhere — q distinct, informative trials.
-    ///
-    /// Before any data: `q` random probes.
+    /// Propose `q` diverse trials to run in parallel, using the
+    /// configured [`BatchStrategy`] (constant liar by default; see
+    /// [`with_batch_strategy`](Self::with_batch_strategy) and the module
+    /// docs for the tradeoff). Before any data: `q` random probes.
     pub fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>>
     where
         M: Clone,
@@ -146,8 +196,26 @@ where
         if self.model.n_samples() == 0 {
             return (0..q).map(|_| self.rng.unit_point(self.dim)).collect();
         }
+        let batch = match self.batch_strategy {
+            BatchStrategy::ConstantLiar => self.ask_batch_constant_liar(q),
+            BatchStrategy::QEi { mc_samples } => self.ask_batch_qei(q, mc_samples),
+        };
+        self.dedupe_batch(batch)
+    }
+
+    /// Constant-liar proposals: after each maximization the model is
+    /// *told its own posterior mean* at the proposed point (the "lie"),
+    /// the acquisition is re-maximized on the lied model, and all lies
+    /// are rolled back at the end (the lies go into a scratch clone;
+    /// `self.model` only ever sees real [`tell`](Self::tell)
+    /// observations). Lying flattens the posterior variance around
+    /// already-proposed points, steering the next maximization elsewhere.
+    fn ask_batch_constant_liar(&mut self, q: usize) -> Vec<Vec<f64>>
+    where
+        M: Clone,
+    {
         let mut liar = self.model.clone();
-        let mut lied_best = self.best.as_ref().map(|b| b.1).unwrap_or(f64::NEG_INFINITY);
+        let mut lied_best = self.incumbent_value();
         let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
         for k in 0..q {
             let ctx = AcquiContext::new(self.iteration + k, lied_best, self.dim);
@@ -155,19 +223,40 @@ where
                 let objective = AcquiObjective::new(&liar, &self.acquisition, ctx);
                 self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
             };
-            // degenerate acquisition landscapes can re-propose an earlier
-            // point despite the lie; fall back to a random probe so the
-            // batch stays diverse (1e-8 squared distance ~ 1e-4 per axis)
-            let duplicate = batch.iter().any(|p| {
-                p.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() < 1e-8
-            });
-            let x = if duplicate { self.rng.unit_point(self.dim) } else { x };
             let (lie, _) = liar.predict(&x);
             liar.add_sample(&x, lie);
             lied_best = lied_best.max(lie);
             batch.push(x);
         }
         batch
+    }
+
+    /// Joint-posterior qEI proposals: one frozen-CRN [`QEi`] estimator
+    /// per round (fresh seed per call, deterministic within the call),
+    /// maximized by greedy marginal gains plus a joint refinement pass
+    /// over the flattened `q·d` batch vector
+    /// ([`propose_batch_qei`]). The server's pointwise acquisition is
+    /// not consulted here — qEI *is* the acquisition for the whole batch.
+    fn ask_batch_qei(&mut self, q: usize, mc_samples: usize) -> Vec<Vec<f64>> {
+        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
+        let seed = self.rng.next_u64();
+        let qei = QEi::new(mc_samples, q, seed);
+        propose_batch_qei(&self.model, &qei, &self.inner_opt, ctx, self.dim, q, &mut self.rng)
+    }
+
+    /// Degenerate acquisition landscapes can propose (near-)coincident
+    /// points despite the lie/joint penalty; replace duplicates with
+    /// random probes so the batch stays diverse (1e-8 squared distance
+    /// ~ 1e-4 per axis).
+    fn dedupe_batch(&mut self, batch: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
+        for x in batch {
+            let duplicate = out.iter().any(|p| {
+                p.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() < 1e-8
+            });
+            out.push(if duplicate { self.rng.unit_point(self.dim) } else { x });
+        }
+        out
     }
 
     /// Report an observation. May trigger a scheduled hyper-parameter
@@ -181,7 +270,16 @@ where
         if let Some(next) = self.next_hp_refit {
             if self.model.n_samples() >= next {
                 self.model.optimize_hyperparams();
-                self.next_hp_refit = Some(next.saturating_mul(2));
+                // advance the schedule past the *current* count: a burst
+                // of tells (the ask_batch workflow) or a pre-fitted model
+                // can leave n >= 2·next, and a single doubling would then
+                // trigger a full ML-II refit on every subsequent tell
+                // until the schedule catches up
+                let mut next = next;
+                while self.model.n_samples() >= next {
+                    next = next.saturating_mul(2);
+                }
+                self.next_hp_refit = Some(next);
             }
         }
     }
@@ -238,7 +336,10 @@ impl ServerHandle {
     }
 
     /// Request `q` diverse trial points for parallel evaluation (blocks
-    /// for the reply; see [`AskTellServer::ask_batch`]).
+    /// for the reply). The proposal strategy is server-side
+    /// configuration: select constant liar vs joint-posterior qEI with
+    /// [`AskTellServer::with_batch_strategy`] *before*
+    /// [`AskTellServer::spawn`].
     pub fn ask_batch(&self, q: usize) -> Vec<Vec<f64>> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Request::AskBatch(q, tx)).expect("server alive");
@@ -352,6 +453,87 @@ mod tests {
                 assert!(d2 > 1e-10, "batch points {a:?} and {b:?} coincide");
             }
         }
+    }
+
+    #[test]
+    fn prefitted_model_seeds_the_incumbent() {
+        // a server wrapped around a model that already has data must not
+        // lie `best() == None` / run EI with a -inf incumbent until the
+        // first tell
+        let mut gp = Gp::new(Matern52::new(1), DataMean::default(), 1e-3);
+        gp.fit(&[vec![0.1], vec![0.6], vec![0.9]], &[-5.0, -2.0, -4.0]);
+        let mut srv = AskTellServer::new(gp, Ucb::default(), RandomPoint::new(32), 1, 3);
+        let (bx, bv) = srv.best().expect("incumbent seeded from the model");
+        assert_eq!(bx, vec![0.6]);
+        assert_eq!(bv, -2.0);
+        assert!((srv.incumbent_value() - -2.0).abs() < 1e-12);
+        // ask works immediately with a finite incumbent
+        let x = srv.ask();
+        assert!((0.0..=1.0).contains(&x[0]));
+        // a worse tell must not displace the seeded incumbent
+        srv.tell(&[0.3], -9.0);
+        assert_eq!(srv.best().unwrap().1, -2.0);
+        srv.tell(&[0.55], -1.0);
+        assert_eq!(srv.best().unwrap().1, -1.0);
+    }
+
+    #[test]
+    fn burst_of_tells_triggers_one_refit_not_one_per_tell() {
+        // pre-fitted model far past the first refit threshold: the
+        // single-doubling schedule used to refit on *every* subsequent
+        // tell until `next` caught up with n (O(n·m²) each — exactly the
+        // ask_batch(q) burst workflow)
+        let mut rng = crate::rng::Pcg64::seed(41);
+        let xs: Vec<Vec<f64>> = (0..100).map(|_| rng.unit_point(1)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (7.0 * x[0]).sin()).collect();
+        let mut gp = Gp::new(Matern52::new(1), DataMean::default(), 0.05);
+        gp.fit(&xs, &ys);
+        let mut srv = AskTellServer::new(gp, Ucb::default(), RandomPoint::new(16), 1, 13)
+            .with_hp_refits(16);
+        srv.model.hp_opt.config.restarts = 1;
+        srv.model.hp_opt.config.iterations = 3;
+        // a 4-point burst (one ask_batch round's worth of tells)
+        for x in [[0.11], [0.31], [0.51], [0.71]] {
+            srv.tell(&x, (7.0 * x[0]).sin());
+        }
+        assert_eq!(
+            srv.model.hp_opt.refits(),
+            1,
+            "one refit for the burst, schedule advanced past n"
+        );
+        assert_eq!(srv.next_hp_refit, Some(128), "16 doubled past n=101 in one step");
+    }
+
+    #[test]
+    fn qei_strategy_proposes_distinct_points_and_converges() {
+        let f = |x: &[f64]| -(x[0] - 0.4).powi(2);
+        let mut srv = make_server().with_batch_strategy(BatchStrategy::QEi { mc_samples: 128 });
+        // cold start: q random probes
+        assert_eq!(srv.ask_batch(3).len(), 3);
+        for x in [[0.1], [0.5], [0.9]] {
+            srv.tell(&x, f(&x));
+        }
+        let n_before = srv.model.n_samples();
+        let batch = srv.ask_batch(4);
+        assert_eq!(batch.len(), 4);
+        // qEI scores the real model read-only: nothing may leak into it
+        assert_eq!(srv.model.n_samples(), n_before);
+        for (i, a) in batch.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&a[0]));
+            for b in batch.iter().skip(i + 1) {
+                let d2: f64 = a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum();
+                assert!(d2 > 1e-10, "batch points {a:?} and {b:?} coincide");
+            }
+        }
+        // full loop converges like the constant liar does
+        for _ in 0..4 {
+            for x in srv.ask_batch(4) {
+                let y = f(&x);
+                srv.tell(&x, y);
+            }
+        }
+        let (_, bv) = srv.best().unwrap();
+        assert!(bv > -0.02, "qEI batched best={bv}");
     }
 
     #[test]

@@ -151,6 +151,39 @@ impl Matrix {
         out
     }
 
+    /// Column Gram matrix `G = A^T A` (`cols x cols`, symmetric).
+    ///
+    /// One streaming pass over the row-major data, upper triangle
+    /// accumulated and mirrored — the B×B posterior-covariance assembly
+    /// of the joint batched GP posterior (`Model::predict_joint`), where
+    /// the full `V^T V` block generalizes the per-column norms of
+    /// [`col_squared_norms`](Self::col_squared_norms). The diagonal is
+    /// accumulated in the same row order as `col_squared_norms`, so the
+    /// joint covariance diagonal reproduces the batched variances exactly.
+    pub fn col_gram(&self) -> Matrix {
+        let m = self.cols;
+        let mut g = Matrix::zeros(m, m);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..m {
+                let vi = row[i];
+                if vi == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for (gij, &vj) in grow[i..].iter_mut().zip(&row[i..]) {
+                    *gij += vi * vj;
+                }
+            }
+        }
+        for i in 0..m {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
     /// Transpose.
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
@@ -244,6 +277,24 @@ mod tests {
             let naive: f64 = (0..5).map(|i| a[(i, j)] * a[(i, j)]).sum();
             assert!((sq[j] - naive).abs() < 1e-14);
         }
+    }
+
+    #[test]
+    fn col_gram_matches_explicit_product_and_norms() {
+        let a = Matrix::from_fn(6, 4, |i, j| ((i * 4 + j) as f64 * 0.61).cos());
+        let g = a.col_gram();
+        let explicit = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+        assert!(g.is_symmetric(0.0));
+        // diagonal must reproduce col_squared_norms bit-for-bit (the
+        // joint-posterior diagonal parity contract)
+        let norms = a.col_squared_norms();
+        for j in 0..4 {
+            assert_eq!(g[(j, j)], norms[j]);
+        }
+        // degenerate shapes
+        assert_eq!(Matrix::zeros(0, 3).col_gram(), Matrix::zeros(3, 3));
+        assert_eq!(Matrix::zeros(3, 0).col_gram(), Matrix::zeros(0, 0));
     }
 
     #[test]

@@ -41,7 +41,10 @@ pub mod testing;
 
 /// Convenient re-exports for typical use.
 pub mod prelude {
-    pub use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ei, GpUcb, Pi, Ucb};
+    pub use crate::acqui::{
+        AcquiContext, AcquiFn, AcquiObjective, BatchAcquiFn, BatchAcquiObjective, Ei, GpUcb,
+        Pi, QEi, Ucb,
+    };
     pub use crate::bayes_opt::{BOptimizer, Best, Evaluator, FnEval};
     pub use crate::benchfns::TestFunction;
     pub use crate::init::{Initializer, Lhs, RandomSampling};

@@ -307,6 +307,48 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
             .collect()
     }
 
+    /// Joint posterior over the batch: mean vector plus the full `B x B`
+    /// posterior covariance `K_** - V^T V` with `V = L^{-1} K_*` — the
+    /// same cross-covariance block and multi-RHS solve as
+    /// [`predict_batch`](Model::predict_batch) plus one `B x B` column
+    /// Gram, so the marginal cost of the correlations is O(n·B²). The
+    /// diagonal reproduces `predict_batch` exactly (same accumulation
+    /// order, same `1e-12` clamp).
+    fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        let b = xs.len();
+        if b == 0 {
+            return (Vec::new(), Matrix::zeros(0, 0));
+        }
+        let n = self.xs.len();
+        // exact prior block K_** (B x B)
+        let mut cov = self.kernel.cross_cov(xs, xs);
+        if n == 0 {
+            let mus = xs.iter().map(|x| self.mean.eval(x)).collect();
+            for j in 0..b {
+                cov[(j, j)] = self.kernel.variance();
+            }
+            return (mus, cov);
+        }
+        // K_* : n x B cross-covariance block, shared with predict_batch
+        let ks = self.kernel.cross_cov(&self.xs, xs);
+        let mut mus = ks.matvec_t(&self.alpha);
+        for (mu, x) in mus.iter_mut().zip(xs) {
+            *mu += self.mean.eval(x);
+        }
+        // V = L^{-1} K_* once, then the B x B data correction V^T V
+        let v = self.chol.solve_lower_multi(&ks);
+        let vtv = v.col_gram();
+        for (c, &g) in cov.data_mut().iter_mut().zip(vtv.data()) {
+            *c -= g;
+        }
+        // diagonal: the exact predict_batch expression (clamped variance)
+        let prior_var = self.kernel.variance();
+        for j in 0..b {
+            cov[(j, j)] = (prior_var - vtv[(j, j)]).max(1e-12);
+        }
+        (mus, cov)
+    }
+
     fn n_samples(&self) -> usize {
         self.xs.len()
     }
@@ -317,6 +359,10 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
 
     fn best_observation(&self) -> Option<f64> {
         self.best
+    }
+
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        crate::model::best_sample_of(&self.xs, &self.ys)
     }
 
     fn optimize_hyperparams(&mut self) {
@@ -475,6 +521,48 @@ mod tests {
         let fresh = Gp::new(Matern52::new(2), ZeroMean, 0.05);
         assert_eq!(fresh.predict_batch(&cands)[0], fresh.predict(&cands[0]));
         assert!(fresh.predict_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn predict_joint_diag_matches_batch_and_cov_is_consistent() {
+        let mut rng = Pcg64::seed(0x107);
+        let (xs, ys) = toy_data(20, &mut rng);
+        let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 0.05);
+        gp.fit(&xs, &ys);
+        let cands: Vec<Vec<f64>> = (0..9).map(|_| rng.unit_point(2)).collect();
+        let (mus, cov) = gp.predict_joint(&cands);
+        let batch = gp.predict_batch(&cands);
+        assert_eq!((cov.rows(), cov.cols()), (9, 9));
+        assert!(cov.is_symmetric(1e-12));
+        for j in 0..9 {
+            assert!((mus[j] - batch[j].0).abs() < 1e-12, "mu[{j}]");
+            assert!((cov[(j, j)] - batch[j].1).abs() < 1e-12, "var[{j}]");
+        }
+        // a point paired with itself is perfectly correlated: the 2x2
+        // joint covariance of [x, x] must be (numerically) rank one
+        let x = vec![0.31, 0.62];
+        let (_, c2) = gp.predict_joint(&[x.clone(), x]);
+        assert!((c2[(0, 0)] - c2[(0, 1)]).abs() < 1e-8);
+        assert!((c2[(0, 0)] - c2[(1, 1)]).abs() < 1e-8);
+        // empty batch and empty model edge cases
+        let (m0, c0) = gp.predict_joint(&[]);
+        assert!(m0.is_empty() && c0.rows() == 0);
+        let fresh = Gp::new(Matern52::new(2), ZeroMean, 0.05);
+        let (mf, cf) = fresh.predict_joint(&cands);
+        assert_eq!(mf[0], 0.0);
+        assert!((cf[(0, 0)] - fresh.kernel().variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_sample_recovers_argmax() {
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.01);
+        assert!(gp.best_sample().is_none());
+        gp.add_sample(&[0.1], 1.0);
+        gp.add_sample(&[0.2], 3.0);
+        gp.add_sample(&[0.3], 2.0);
+        let (x, y) = gp.best_sample().unwrap();
+        assert_eq!(x, vec![0.2]);
+        assert_eq!(y, 3.0);
     }
 
     #[test]

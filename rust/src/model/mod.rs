@@ -18,6 +18,22 @@ pub use serde::{GpState, SgpState};
 pub use hp_opt::{HpOptConfig, KernelLFOpt, LmlModel};
 pub use sgp::{AdaptiveModel, SgpConfig, SparseGp};
 
+use crate::la::Matrix;
+
+/// Finite-filtering argmax scan over stored samples — the shared body of
+/// the sample-retaining models' [`Model::best_sample`] implementations
+/// (non-finite observations never become the incumbent).
+pub(crate) fn best_sample_of(xs: &[Vec<f64>], ys: &[f64]) -> Option<(Vec<f64>, f64)> {
+    let (mut arg, mut best) = (None, f64::NEG_INFINITY);
+    for (x, &y) in xs.iter().zip(ys) {
+        if y.is_finite() && (arg.is_none() || y > best) {
+            arg = Some(x);
+            best = y;
+        }
+    }
+    arg.map(|x| (x.clone(), best))
+}
+
 /// A probabilistic surrogate: fit observations, predict mean + variance.
 pub trait Model: Send + Sync {
     /// Full refit from scratch.
@@ -44,6 +60,34 @@ pub trait Model: Send + Sync {
         xs.iter().map(|x| self.predict(x)).collect()
     }
 
+    /// Joint posterior over a candidate batch: the mean vector and the
+    /// full `B x B` posterior covariance of the latent function at `xs`.
+    ///
+    /// This is the entry point of the joint batch acquisitions
+    /// ([`crate::acqui::batch`]): Monte-Carlo qEI draws correlated sample
+    /// paths `mu + L z` from this covariance, so batch proposals account
+    /// for the correlation between candidate points instead of scoring
+    /// them independently. The covariance diagonal must match
+    /// [`predict_batch`](Self::predict_batch) variances (clamped at the
+    /// same `1e-12` floor); implementations assemble the dense `B x B`
+    /// block from one cross-covariance block and one multi-RHS solve.
+    ///
+    /// The default is the *uncorrelated* fallback — a diagonal covariance
+    /// from `predict_batch` — for backends without joint-posterior
+    /// support (e.g. the XLA artifact adapter); qEI degenerates to
+    /// independent draws there but stays well-defined.
+    fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        let preds = self.predict_batch(xs);
+        let b = preds.len();
+        let mut cov = Matrix::zeros(b, b);
+        let mut mus = Vec::with_capacity(b);
+        for (j, (mu, var)) in preds.into_iter().enumerate() {
+            mus.push(mu);
+            cov[(j, j)] = var;
+        }
+        (mus, cov)
+    }
+
     /// Number of fitted observations.
     fn n_samples(&self) -> usize;
 
@@ -52,6 +96,16 @@ pub trait Model: Send + Sync {
 
     /// Best (max) observed value so far, if any.
     fn best_observation(&self) -> Option<f64>;
+
+    /// Best observed `(x, y)` pair, if the model can recover the argmax
+    /// from its stored samples. Lets a freshly constructed
+    /// [`crate::coordinator::AskTellServer`] seed its incumbent from a
+    /// model that already has data (`fit` / deserialized state) instead
+    /// of lying `None` until the first `tell`. Default `None` for models
+    /// that do not retain their training inputs.
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        None
+    }
 
     /// Re-optimize hyper-parameters from the current data (ML-II).
     /// Default: no-op (not every model has hyper-parameters).

@@ -533,6 +533,49 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
             .collect()
     }
 
+    /// Joint posterior over the batch from the cached Woodbury factors:
+    /// `Σ_* = K_** − K_*m K_mm⁻¹ K_m* + K_*m A⁻¹ K_m*` — the exact prior
+    /// block minus the Nyström projection plus the FITC data correction,
+    /// assembled from the same `m x B` feature block and two multi-RHS
+    /// solves as [`predict_batch`](Model::predict_batch) plus two `B x B`
+    /// column Grams. Both subtracted/added terms are PSD quadratic forms,
+    /// so the result is PSD up to round-off; the diagonal reproduces
+    /// `predict_batch` exactly (same accumulation order, same clamp).
+    fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        let b = xs.len();
+        if b == 0 {
+            return (Vec::new(), Matrix::zeros(0, 0));
+        }
+        let m = self.inducing.len();
+        // exact prior block K_** (B x B)
+        let mut cov = self.kernel.cross_cov(xs, xs);
+        if m == 0 {
+            let mus = xs.iter().map(|x| self.mean.eval(x)).collect();
+            for j in 0..b {
+                cov[(j, j)] = self.kernel.variance();
+            }
+            return (mus, cov);
+        }
+        // K_* : m x B feature block against the inducing set
+        let ks = self.kernel.cross_cov(self.inducing.points(), xs);
+        let mut mus = ks.matvec_t(&self.alpha);
+        for (mu, x) in mus.iter_mut().zip(xs) {
+            *mu += self.mean.eval(x);
+        }
+        // Nyström projection Q_** = (L_mm^{-1}K_*)^T (L_mm^{-1}K_*) and
+        // the A^{-1} correction, each one multi-solve + one column Gram
+        let gq = self.l_mm.solve_lower_multi(&ks).col_gram();
+        let gc = self.l_a.solve_lower_multi(&ks).col_gram();
+        for ((c, &q), &a) in cov.data_mut().iter_mut().zip(gq.data()).zip(gc.data()) {
+            *c += a - q;
+        }
+        // diagonal: the exact predict_batch expression (clamped variance)
+        for (j, x) in xs.iter().enumerate() {
+            cov[(j, j)] = (self.kernel.eval(x, x) - gq[(j, j)] + gc[(j, j)]).max(1e-12);
+        }
+        (mus, cov)
+    }
+
     fn n_samples(&self) -> usize {
         self.xs.len()
     }
@@ -543,6 +586,10 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
 
     fn best_observation(&self) -> Option<f64> {
         self.best
+    }
+
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        crate::model::best_sample_of(&self.xs, &self.ys)
     }
 
     /// ML-II on the **exact FITC marginal likelihood** — the inducing set
@@ -691,6 +738,36 @@ mod tests {
         // empty model falls back to the prior
         let fresh = SparseGp::new(Matern52::new(2), ZeroMean, 0.05);
         assert_eq!(fresh.predict_batch(&cands)[0], fresh.predict(&cands[0]));
+    }
+
+    #[test]
+    fn predict_joint_diag_matches_batch_and_is_symmetric() {
+        let (xs, ys) = smooth_data(90, 2, 0x10E);
+        let mut sgp = SparseGp::with_config(
+            Matern52::new(2),
+            DataMean::default(),
+            0.05,
+            SgpConfig { max_inducing: 20, ..SgpConfig::default() },
+        );
+        sgp.fit(&xs, &ys);
+        let mut rng = Pcg64::seed(0x10F);
+        let cands: Vec<Vec<f64>> = (0..11).map(|_| rng.unit_point(2)).collect();
+        let (mus, cov) = sgp.predict_joint(&cands);
+        let batch = sgp.predict_batch(&cands);
+        assert!(cov.is_symmetric(1e-12));
+        for j in 0..11 {
+            assert!((mus[j] - batch[j].0).abs() < 1e-12, "mu[{j}]");
+            assert!((cov[(j, j)] - batch[j].1).abs() < 1e-12, "var[{j}]");
+        }
+        // duplicated candidate -> (numerically) perfectly correlated pair
+        let x = vec![0.4, 0.7];
+        let (_, c2) = sgp.predict_joint(&[x.clone(), x]);
+        assert!((c2[(0, 0)] - c2[(0, 1)]).abs() < 1e-8);
+        // empty model falls back to the prior diag
+        let fresh = SparseGp::new(Matern52::new(2), ZeroMean, 0.05);
+        let (mf, cf) = fresh.predict_joint(&cands);
+        assert_eq!(mf[0], 0.0);
+        assert!((cf[(0, 0)] - 1.0).abs() < 1e-12);
     }
 
     #[test]

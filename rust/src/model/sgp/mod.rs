@@ -183,6 +183,13 @@ impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
         }
     }
 
+    fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, crate::la::Matrix) {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.predict_joint(xs),
+            AdaptiveInner::Sparse(sgp) => sgp.predict_joint(xs),
+        }
+    }
+
     fn n_samples(&self) -> usize {
         match &self.inner {
             AdaptiveInner::Dense(gp) => gp.n_samples(),
@@ -201,6 +208,13 @@ impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
         match &self.inner {
             AdaptiveInner::Dense(gp) => gp.best_observation(),
             AdaptiveInner::Sparse(sgp) => sgp.best_observation(),
+        }
+    }
+
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.best_sample(),
+            AdaptiveInner::Sparse(sgp) => sgp.best_sample(),
         }
     }
 

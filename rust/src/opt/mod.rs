@@ -50,12 +50,29 @@ impl Candidate {
         Self { x, value }
     }
 
-    /// The better (higher-value) of two candidates.
+    /// The better (higher-value) of two candidates, poison-safe: NaN and
+    /// `+inf` values (a degenerate model state / an overflowing
+    /// objective) never survive against a usable challenger. With the
+    /// plain `other.value > self.value` comparison a NaN incumbent won
+    /// every remaining round (every `>` against NaN is false) and a
+    /// `+inf` value beat every finite candidate — either way one
+    /// poisoned evaluation hijacked the whole restart fold. `-inf` needs
+    /// no special case: it loses any ordinary comparison.
     pub fn max(self, other: Candidate) -> Candidate {
-        if other.value > self.value {
-            other
-        } else {
-            self
+        let self_usable = self.value.is_finite() || self.value == f64::NEG_INFINITY;
+        let other_usable = other.value.is_finite() || other.value == f64::NEG_INFINITY;
+        match (self_usable, other_usable) {
+            (true, false) => self,
+            (false, true) => other,
+            // both usable: ordinary comparison; both poisoned: at least
+            // drop a NaN incumbent in favor of the challenger
+            _ => {
+                if self.value.is_nan() || other.value > self.value {
+                    other
+                } else {
+                    self
+                }
+            }
         }
     }
 }
@@ -85,16 +102,30 @@ impl<F: Fn(&[f64]) -> f64 + Sync> Objective for F {
 /// Evaluate a population through [`Objective::eval_many`] and keep the
 /// best candidate (earliest wins ties, matching a sequential
 /// [`Candidate::max`] fold). `None` only for an empty population.
+///
+/// Non-finite values (NaN from a degenerate model state, ±inf from an
+/// overflowing objective) are skipped — one poisoned candidate used to
+/// stick as the incumbent because every later `value > NaN` comparison
+/// is false, hijacking the whole acquisition maximization. If *no*
+/// candidate evaluates finite, the first candidate is returned so the
+/// contract (`Some` for a non-empty population) still holds.
 pub fn best_of_population(f: &dyn Objective, pts: Vec<Vec<f64>>) -> Option<Candidate> {
     let values = f.eval_many(&pts);
     assert_eq!(values.len(), pts.len(), "eval_many: value count mismatch");
     let mut best: Option<Candidate> = None;
+    let mut fallback: Option<Candidate> = None;
     for (x, value) in pts.into_iter().zip(values) {
+        if !value.is_finite() {
+            if fallback.is_none() {
+                fallback = Some(Candidate { x, value });
+            }
+            continue;
+        }
         if best.as_ref().map_or(true, |b| value > b.value) {
             best = Some(Candidate { x, value });
         }
     }
-    best
+    best.or(fallback)
 }
 
 /// A derivative-free maximizer over the unit hypercube.
@@ -142,6 +173,23 @@ impl<O: Optimizer> Optimizer for ParallelRepeater<O> {
         let inner = &self.inner;
         let results = pool::parallel_map(rngs, self.threads, |_, mut r| {
             inner.optimize(f, dim, &mut r)
+        });
+        results
+            .into_iter()
+            .reduce(Candidate::max)
+            .expect("at least one restart")
+    }
+
+    /// Every restart is seeded at `x0` (forwarded to the inner
+    /// optimizer's `optimize_from`) — without this override the trait
+    /// default silently dropped the seed, so a caller refining a known
+    /// good point (e.g. the qEI joint-refinement pass over a greedy
+    /// batch) restarted from scratch instead.
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        let rngs: Vec<Pcg64> = (0..self.n.max(1)).map(|i| rng.fork(i as u64)).collect();
+        let inner = &self.inner;
+        let results = pool::parallel_map(rngs, self.threads, |_, mut r| {
+            inner.optimize_from(f, x0, &mut r)
         });
         results
             .into_iter()
@@ -226,5 +274,70 @@ mod tests {
         let a = Candidate { x: vec![0.0], value: 1.0 };
         let b = Candidate { x: vec![1.0], value: 2.0 };
         assert_eq!(a.clone().max(b.clone()), b);
+    }
+
+    #[test]
+    fn candidate_max_is_poison_safe() {
+        let good = Candidate { x: vec![0.0], value: 1.0 };
+        let nan = Candidate { x: vec![1.0], value: f64::NAN };
+        // a NaN incumbent must lose to any usable challenger...
+        assert_eq!(nan.clone().max(good.clone()), good);
+        // ...and a NaN challenger must never displace a usable incumbent
+        assert_eq!(good.clone().max(nan.clone()), good);
+        // +inf (overflowing objective) must not hijack the fold either way
+        let over = Candidate { x: vec![3.0], value: f64::INFINITY };
+        assert_eq!(over.clone().max(good.clone()), good);
+        assert_eq!(good.clone().max(over.clone()), good);
+        // among poisoned values, a NaN incumbent yields to the challenger
+        assert_eq!(nan.max(over.clone()), over);
+        // -inf incumbents still lose normally
+        let worst = Candidate { x: vec![2.0], value: f64::NEG_INFINITY };
+        assert_eq!(worst.clone().max(good.clone()), good);
+        assert_eq!(worst.clone().max(worst.clone()), worst);
+    }
+
+    #[test]
+    fn best_of_population_skips_injected_non_finite_values() {
+        use crate::testing;
+        testing::check(
+            "best-of-population-nan-safe",
+            0x4A4E,
+            48,
+            |rng: &mut Pcg64| {
+                let n = 2 + rng.below(20);
+                // per-candidate values, then poison a random subset
+                let mut values: Vec<f64> =
+                    (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+                let n_poison = rng.below(n);
+                for _ in 0..n_poison {
+                    let i = rng.below(n);
+                    values[i] = match rng.below(3) {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        _ => f64::NEG_INFINITY,
+                    };
+                }
+                values
+            },
+            |values| {
+                let pts: Vec<Vec<f64>> =
+                    (0..values.len()).map(|i| vec![i as f64]).collect();
+                let vals = values.clone();
+                let f = move |x: &[f64]| vals[x[0] as usize];
+                let got = best_of_population(&f, pts).expect("non-empty");
+                let finite_max = values
+                    .iter()
+                    .copied()
+                    .filter(|v| v.is_finite())
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if finite_max.is_finite() {
+                    testing::close(got.value, finite_max, 1e-15)
+                } else if got.value.is_finite() {
+                    Err(format!("no finite value existed but got {}", got.value))
+                } else {
+                    Ok(()) // all-poisoned population: fallback candidate
+                }
+            },
+        );
     }
 }

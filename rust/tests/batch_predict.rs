@@ -134,6 +134,82 @@ fn adaptive_model_predict_batch_equivalence_both_regimes() {
     }
 }
 
+/// The joint posterior's covariance diagonal must reproduce
+/// `predict_batch` variances (and the mean vector its means) to ≤ 1e-10,
+/// and the covariance must be symmetric — for every model family.
+fn assert_joint_matches_batch<M: Model>(model: &M, rng: &mut Pcg64, b: usize, label: &str) {
+    let dim = model.dim();
+    let cands: Vec<Vec<f64>> = (0..b.max(1)).map(|_| rng.unit_point(dim)).collect();
+    let (mus, cov) = model.predict_joint(&cands);
+    let batch = model.predict_batch(&cands);
+    assert_eq!(mus.len(), cands.len(), "{label}: mean length");
+    assert_eq!((cov.rows(), cov.cols()), (cands.len(), cands.len()), "{label}: cov shape");
+    assert!(cov.is_symmetric(1e-12), "{label}: cov not symmetric");
+    for j in 0..cands.len() {
+        let scale = 1.0_f64.max(batch[j].0.abs());
+        assert!(
+            (mus[j] - batch[j].0).abs() <= TOL * scale,
+            "{label}: joint mu[{j}] {} vs batch {}",
+            mus[j],
+            batch[j].0
+        );
+        assert!(
+            (cov[(j, j)] - batch[j].1).abs() <= TOL * 1.0_f64.max(batch[j].1.abs()),
+            "{label}: joint var[{j}] {} vs batch {}",
+            cov[(j, j)],
+            batch[j].1
+        );
+        // cross-covariances are bounded by the variances (Cauchy-Schwarz,
+        // generous round-off slack)
+        for k in 0..cands.len() {
+            let bound = (cov[(j, j)] * cov[(k, k)]).sqrt() + 1e-8;
+            assert!(
+                cov[(j, k)].abs() <= bound + 1e-8,
+                "{label}: cov[{j},{k}] {} exceeds CS bound {bound}",
+                cov[(j, k)]
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_joint_diag_parity_dense_sparse_adaptive() {
+    for case in 0..16u64 {
+        let mut rng = Pcg64::seed(0x1013 + case);
+        let dim = 1 + rng.below(3);
+        let b = 1 + rng.below(16);
+        let (xs, ys) = random_data(&mut rng, 40 + rng.below(40), dim);
+
+        let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), 0.05);
+        gp.fit(&xs, &ys);
+        assert_joint_matches_batch(&gp, &mut rng, b, "joint/dense");
+
+        let mut sgp = SparseGp::with_config(
+            Matern52::new(dim),
+            DataMean::default(),
+            0.05,
+            SgpConfig { max_inducing: 16, ..SgpConfig::default() },
+        );
+        sgp.fit(&xs, &ys);
+        assert_joint_matches_batch(&sgp, &mut rng, b, "joint/sparse");
+
+        let mut dense_adaptive =
+            AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 0.05)
+                .with_threshold(1000);
+        dense_adaptive.fit(&xs, &ys);
+        assert!(!dense_adaptive.is_sparse());
+        assert_joint_matches_batch(&dense_adaptive, &mut rng, b, "joint/adaptive-dense");
+
+        let mut sparse_adaptive =
+            AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 0.05)
+                .with_threshold(20)
+                .with_sparse_config(SgpConfig { max_inducing: 16, ..SgpConfig::default() });
+        sparse_adaptive.fit(&xs, &ys);
+        assert!(sparse_adaptive.is_sparse());
+        assert_joint_matches_batch(&sparse_adaptive, &mut rng, b, "joint/adaptive-sparse");
+    }
+}
+
 #[test]
 fn empty_and_unfitted_models_batch_like_pointwise() {
     let mut rng = Pcg64::seed(0xE);

@@ -1,0 +1,78 @@
+//! Integration: joint-posterior qEI batch proposals vs the constant liar
+//! on Branin at q = 4 with an equal evaluation budget.
+//!
+//! Both servers share the same surrogate family (dense GP, Matérn-5/2,
+//! data mean), the same EI-family acquisition, the same inner optimizer
+//! budget, the same ML-II refit schedule, and the same per-seed init
+//! design; only the batch strategy differs. Regret is aggregated over a
+//! few seeds — a single-seed comparison of two stochastic optimizers is
+//! a coin flip, the aggregate is the claim qEI makes (and the MC slack
+//! below covers estimator noise, ~1/sqrt(mc_samples)).
+
+use limbo::acqui::Ei;
+use limbo::benchfns::{Branin, TestFunction};
+use limbo::coordinator::{AskTellServer, BatchStrategy};
+use limbo::kernel::Matern52;
+use limbo::mean::DataMean;
+use limbo::model::gp::Gp;
+use limbo::opt::{NelderMead, OptimizerExt, RandomPoint};
+use limbo::rng::Pcg64;
+
+const Q: usize = 4;
+const ROUNDS: usize = 9;
+const N_INIT: usize = 6;
+
+/// One full batched BO run on Branin; returns the simple regret.
+fn run_branin(strategy: BatchStrategy, seed: u64) -> f64 {
+    let branin = Branin;
+    let mut srv = AskTellServer::new(
+        Gp::new(Matern52::new(2), DataMean::default(), 1e-2),
+        Ei::default(),
+        RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
+        2,
+        seed,
+    )
+    .with_hp_refits(8)
+    .with_batch_strategy(strategy);
+    // shared init design per seed (identical across strategies)
+    let mut init_rng = Pcg64::seed(seed ^ 0xB0A71);
+    for _ in 0..N_INIT {
+        let x = init_rng.unit_point(2);
+        let y = branin.eval(&x);
+        srv.tell(&x, y);
+    }
+    for _ in 0..ROUNDS {
+        for x in srv.ask_batch(Q) {
+            let y = branin.eval(&x);
+            srv.tell(&x, y);
+        }
+    }
+    let (_, best) = srv.best().expect("observations recorded");
+    branin.optimum() - best
+}
+
+#[test]
+fn qei_regret_at_most_constant_liar_on_branin_q4() {
+    let seeds = [101u64, 202, 303];
+    let mut cl_total = 0.0;
+    let mut qei_total = 0.0;
+    for &seed in &seeds {
+        let cl = run_branin(BatchStrategy::ConstantLiar, seed);
+        let qei = run_branin(BatchStrategy::QEi { mc_samples: 512 }, seed);
+        println!("seed {seed}: CL regret {cl:.4}, qEI regret {qei:.4}");
+        cl_total += cl;
+        qei_total += qei;
+    }
+    let cl_mean = cl_total / seeds.len() as f64;
+    let qei_mean = qei_total / seeds.len() as f64;
+    // 42 evaluations is enough budget for both strategies to converge on
+    // Branin; both regrets must be small in absolute terms...
+    assert!(cl_mean < 0.5, "constant liar failed to converge: {cl_mean}");
+    assert!(qei_mean < 0.5, "qEI failed to converge: {qei_mean}");
+    // ...and qEI must be at least as good as the constant liar up to the
+    // MC-estimator noise allowance
+    assert!(
+        qei_mean <= cl_mean + 0.1,
+        "qEI mean regret {qei_mean} worse than constant liar {cl_mean} beyond MC slack"
+    );
+}

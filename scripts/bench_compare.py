@@ -3,18 +3,21 @@
 
 Merges the JSON-lines rows emitted by the smoke benches
 (`acqui_opt --smoke` -> target/acqui_opt_batch.json,
-`gp_scaling --smoke` -> target/gp_scaling.json) into one `BENCH_PR.json`
-document, compares it against the checked-in `rust/benches/baseline.json`,
-and fails (exit 1) on a >30% candidates/sec regression at any batch size.
+`gp_scaling --smoke` -> target/gp_scaling.json,
+`batch_propose --smoke` -> target/batch_propose.json) into one
+`BENCH_PR.json` document, compares it against the checked-in
+`rust/benches/baseline.json`, and fails (exit 1) on a >30%
+candidates/sec regression at any batch size.
 
 Gate policy
 -----------
 * `acqui_batch` rows gate **hard**: `batched_cps` and `pointwise_cps`
   (higher is better) may not drop more than `--max-regression` (default
   0.30) below the baseline at any batch size.
-* `gp_scaling` rows are tracked warn-only: `fit_plus_predict_s` (lower is
-  better) regressions print a warning but never fail the job (large-n
-  timings are too noisy on shared CI runners for a hard gate).
+* `gp_scaling` and `batch_propose` rows are tracked warn-only:
+  `fit_plus_predict_s` / `propose_s` (lower is better) regressions print
+  a warning but never fail the job (wall-clock timings are too noisy on
+  shared CI runners for a hard gate).
 * If the baseline has `"warn_only": true`, or has no matching row for a
   PR row, everything downgrades to warnings — this is how the gate
   behaves on first landing, while the baseline seeds.
@@ -26,6 +29,7 @@ run on the target runner class), then:
 
     python3 scripts/bench_compare.py \
         --pr rust/target/acqui_opt_batch.json rust/target/gp_scaling.json \
+             rust/target/batch_propose.json \
         --write-baseline rust/benches/baseline.json
 
 and commit the result. A freshly written baseline has `warn_only: false`,
@@ -58,6 +62,8 @@ def row_key(row):
         return ("acqui_batch", row.get("n"), row.get("dim"), row.get("batch"))
     if row.get("bench") == "gp_scaling":
         return ("gp_scaling", row.get("model"), row.get("n"), row.get("m"))
+    if row.get("bench") == "batch_propose":
+        return ("batch_propose", row.get("strategy"), row.get("n"), row.get("q"))
     return (row.get("bench"), json.dumps(row, sort_keys=True))
 
 
@@ -126,6 +132,17 @@ def main():
             line = f"{key} fit+predict: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
             if slowdown > args.max_regression:
                 warnings.append(line)  # timing rows are warn-only by policy
+            else:
+                print(f"ok   {line}")
+        elif row.get("bench") == "batch_propose":
+            # proposal latency: warn-only like the other wall-clock rows
+            now, then = row.get("propose_s"), base.get("propose_s")
+            if now is None or then is None or then <= 0:
+                continue
+            slowdown = now / then - 1.0
+            line = f"{key} propose: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
+            if slowdown > args.max_regression:
+                warnings.append(line)
             else:
                 print(f"ok   {line}")
 
