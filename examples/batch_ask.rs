@@ -26,7 +26,7 @@
 use std::thread;
 use std::time::{Duration, Instant};
 
-use limbo::coordinator::{BatchStrategy, DefaultAskTellServer};
+use limbo::prelude::*;
 
 /// The simulated experiment each worker runs (maximum 0 at (0.7, 0.3));
 /// the sleep stands in for the physical trial the paper's robots execute.
@@ -37,9 +37,10 @@ fn run_trial(x: &[f64]) -> f64 {
 
 fn drive(label: &str, strategy: BatchStrategy, rounds: usize) {
     const Q: usize = 4;
-    let server = DefaultAskTellServer::with_defaults(2, 42)
-        .with_batch_strategy(strategy)
-        .spawn();
+    // service defaults (adaptive surrogate, no init design) through the
+    // declarative builder, with the batch strategy as part of the
+    // definition
+    let server = BoDef::service(2).seed(42).batch(strategy).build_adaptive_server().spawn();
     let t0 = Instant::now();
 
     for round in 0..rounds {

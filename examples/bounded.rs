@@ -1,0 +1,65 @@
+//! Bounded domains end to end — optimizing over a real-world box
+//! instead of the unit cube.
+//!
+//! Every model-facing computation in limbo lives on `[0, 1]^d`; before
+//! `Domain`, callers optimizing a physical quantity (joint angles,
+//! temperatures, the Branin box below) had to hand-normalize inputs and
+//! de-normalize every proposal. `BoDef::bounds` attaches the box to the
+//! definition and the built optimizer/server speaks user coordinates at
+//! every entry point: proposals, observations, the incumbent, and the
+//! observer event stream.
+//!
+//! The objective is the classic Branin function on its native domain
+//! `x ∈ [-5, 10], y ∈ [0, 15]` (maximized as `-branin`, optimum
+//! ≈ -0.397887 at three minima). A `JsonlObserver` subscribes to the
+//! run's event bus and writes one JSON row per event.
+//!
+//! Run: `cargo run --release --example bounded`
+//! (`LIMBO_SMOKE=1` shrinks the budget for CI.)
+
+use limbo::prelude::*;
+
+/// Branin–Hoo in its native coordinates (minimization form).
+fn branin(x: f64, y: f64) -> f64 {
+    let a = 1.0;
+    let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+    let c = 5.0 / std::f64::consts::PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * std::f64::consts::PI);
+    a * (y - b * x * x + c * x - r).powi(2) + s * (1.0 - t) * x.cos() + s
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
+    let iterations = if smoke { 25 } else { 60 };
+    let events = std::env::temp_dir().join("limbo_bounded_events.jsonl");
+
+    // the definition carries the box; nothing below normalizes anything
+    let mut opt = BoDef::new(2)
+        .bounds(&[(-5.0, 10.0), (0.0, 15.0)])
+        .acquisition(Ei::default())
+        .refit(RefitSchedule::Doubling { first: 16 })
+        .iterations(iterations)
+        .seed(42)
+        .observer(JsonlObserver::create(&events).expect("event log"))
+        .build_optimizer();
+
+    let best = opt.optimize(&FnEval::new(2, |x: &[f64]| -branin(x[0], x[1])));
+
+    println!("evaluations : {}", best.evaluations);
+    println!("best x      : [{:.4}, {:.4}]  (user coordinates)", best.x[0], best.x[1]);
+    println!("best value  : {:.6}  (optimum -0.397887)", best.value);
+    println!("event log   : {}", events.display());
+
+    // proposals and the incumbent live in the Branin box, not [0,1]^2
+    assert!((-5.0..=10.0).contains(&best.x[0]) && (0.0..=15.0).contains(&best.x[1]));
+    let floor = if smoke { -5.0 } else { -1.5 };
+    assert!(best.value > floor, "should approach the optimum, got {}", best.value);
+
+    let log = std::fs::read_to_string(&events).expect("event log written");
+    let observations = log.lines().filter(|l| l.contains(r#""event":"observation""#)).count();
+    assert_eq!(observations, best.evaluations, "one JSON row per observation");
+    assert!(log.lines().last().unwrap().contains(r#""event":"stopped""#));
+    println!("ok");
+}

@@ -7,13 +7,14 @@
 //! using Acqui_t  = limbo::acqui::UCB<Params, GP_t>;
 //! limbo::bayes_opt::BOptimizer<Params, modelfun<GP_t>, acquifun<Acqui_t>> opt;
 //! ```
-//! Here the same swap is a different set of generic type arguments — still
-//! fully monomorphized, no trait objects anywhere on the hot path.
+//! Here the same swap is a different `BoDef` setter call: each setter
+//! that replaces a policy replaces a *type parameter* of the definition,
+//! so the result is still fully monomorphized — no trait objects
+//! anywhere on the hot path.
 //!
 //! Run: `cargo run --release --example custom_components`
 
 use limbo::prelude::*;
-use limbo::bayes_opt::HpSchedule;
 use limbo::opt::Cmaes;
 
 fn main() {
@@ -22,44 +23,44 @@ fn main() {
     });
 
     // ---- variant 1: Matérn-5/2 + UCB (the paper's snippet) ----
-    let gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-3);
-    let mut opt = BOptimizer::new(
-        gp,
-        Ucb { alpha: 0.5 },
-        RandomSampling { n: 10 },
-        RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
-        MaxIterations(30),
-        1,
-    );
+    let mut opt = BoDef::new(2)
+        .noise(1e-3)
+        .acquisition(Ucb { alpha: 0.5 })
+        .refit(RefitSchedule::Never)
+        .iterations(30)
+        .seed(1)
+        .build_optimizer();
     let best = opt.optimize(&my_fun);
     println!("Matern52 + UCB          : best {:.6} at {:?}", best.value, best.x);
 
     // ---- variant 2: SE-ARD kernel + EI + CMA-ES inner optimizer,
     //      with periodic hyper-parameter learning (KernelLFOpt) ----
-    let mut gp = Gp::new(SquaredExpArd::new(2), DataMean::default(), 1e-3);
-    gp.hp_opt.config.restarts = 2;
-    let mut opt = BOptimizer::new(
-        gp,
-        Ei { xi: 0.01 },
-        Lhs { n: 10 },
-        Cmaes::new(400),
-        MaxIterations(30),
-        2,
-    )
-    .with_hp_schedule(HpSchedule::Every(5));
+    let mut opt = BoDef::new(2)
+        .kernel(SquaredExpArd::new)
+        .noise(1e-3)
+        .acquisition(Ei { xi: 0.01 })
+        .init(Lhs { n: 10 })
+        .inner_opt(Cmaes::new(400))
+        .refit(RefitSchedule::Every(5))
+        .hp_config(limbo::model::HpOptConfig { restarts: 2, ..Default::default() })
+        .iterations(30)
+        .seed(2)
+        .build_optimizer();
     let best = opt.optimize(&my_fun);
     println!("SE-ARD + EI + CMA-ES/HPO: best {:.6} at {:?}", best.value, best.x);
 
     // ---- variant 3: GP-UCB + DIRECT (deterministic inner optimizer) ----
-    let gp = Gp::new(Matern32::new(2), ZeroMean, 1e-3);
-    let mut opt = BOptimizer::new(
-        gp,
-        GpUcb { delta: 0.1 },
-        limbo::init::GridSampling { bins: 3 },
-        limbo::opt::Direct::new(400),
-        MaxIterations(30),
-        3,
-    );
+    let mut opt = BoDef::new(2)
+        .kernel(Matern32::new)
+        .mean(ZeroMean)
+        .noise(1e-3)
+        .acquisition(GpUcb { delta: 0.1 })
+        .init(limbo::init::GridSampling { bins: 3 })
+        .inner_opt(limbo::opt::Direct::new(400))
+        .refit(RefitSchedule::Never)
+        .iterations(30)
+        .seed(3)
+        .build_optimizer();
     let best = opt.optimize(&my_fun);
     println!("Matern32 + GP-UCB+DIRECT: best {:.6} at {:?}", best.value, best.x);
     println!("ok");

@@ -12,9 +12,7 @@
 //!
 //! Run: `cargo run --release --example damaged_robot`
 
-use limbo::coordinator::AskTellServer;
 use limbo::prelude::*;
-use limbo::opt::{NelderMead, RandomPoint};
 
 /// Simulated hexapod: legs 0..6, tripod-gait CPG controller.
 struct Hexapod {
@@ -92,14 +90,18 @@ fn main() {
     println!("reference gait: healthy speed {v_healthy:.3}, after damage {v_damaged_ref:.3}");
     assert!(v_damaged_ref < v_healthy, "damage must hurt the reference gait");
 
-    // online adaptation: UCB + GP, 15 trials max (the paper's "~2 minutes")
-    let mut server = AskTellServer::new(
-        Gp::new(Matern52::new(6), DataMean::default(), 1e-3),
-        Ucb { alpha: 0.3 },
-        RandomPoint::new(512).then(NelderMead::default()).restarts(8, 4),
-        6,
-        2015,
-    );
+    // online adaptation: UCB + GP, 15 trials max (the paper's "~2
+    // minutes") — one declarative definition, built as an ask/tell
+    // server (no init design: the robot seeds the model with the old
+    // reference gait instead of random probes)
+    let mut server = BoDef::new(6)
+        .noise(1e-3)
+        .acquisition(Ucb { alpha: 0.3 })
+        .inner_opt(RandomPoint::new(512).then(NelderMead::default()).restarts(8, 4))
+        .init(NoInit)
+        .refit(RefitSchedule::Never)
+        .seed(2015)
+        .build_server();
 
     // seed with the (now bad) reference gait — the robot knows what used
     // to work

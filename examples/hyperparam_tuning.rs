@@ -9,10 +9,8 @@
 //!
 //! Run: `cargo run --release --example hyperparam_tuning`
 
-use limbo::bayes_opt::HpSchedule;
 use limbo::prelude::*;
 use limbo::la::{CholeskyFactor, Matrix};
-use limbo::opt::{NelderMead, RandomPoint};
 
 /// Synthetic regression task: y = sin(3x) + 0.5 cos(7x) + noise.
 struct Task {
@@ -88,17 +86,15 @@ fn main() {
     let budget = 40;
 
     // ---- Bayesian optimization (maximize -RMSE) ----
-    let mut gp = Gp::new(Matern52::new(3), DataMean::default(), 1e-3);
-    gp.hp_opt.config.restarts = 2;
-    let mut opt = BOptimizer::new(
-        gp,
-        Ei::default(),
-        Lhs { n: 8 },
-        RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
-        MaxIterations(budget - 8),
-        1,
-    )
-    .with_hp_schedule(HpSchedule::Every(5));
+    let mut opt = BoDef::new(3)
+        .noise(1e-3)
+        .acquisition(Ei::default())
+        .init(Lhs { n: 8 })
+        .refit(RefitSchedule::Every(5))
+        .hp_config(limbo::model::HpOptConfig { restarts: 2, ..Default::default() })
+        .iterations(budget - 8)
+        .seed(1)
+        .build_optimizer();
     let bo_best = opt.optimize(&FnEval::new(3, |u: &[f64]| -task.train_eval(u)));
     let bo_rmse = -bo_best.value;
 

@@ -6,7 +6,9 @@
 //! opt.optimize(my_fun());
 //! ```
 //! maximizes `my_fun(x) = -sum_i x_i^2 sin(2 x_i)` over `[0, 1]^2` with
-//! the library defaults.
+//! the library defaults. `BoDef` is the `Params` struct analog: a
+//! declarative definition that monomorphizes to the same concrete types
+//! as hand-composition.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -20,8 +22,9 @@ fn main() {
 
     // default parameters (the `Params` struct of the C++ version):
     // Matérn-5/2 GP, data mean, UCB(0.5), 10 random init samples,
-    // parallel-restarted random+Nelder-Mead inner optimizer, 40 iterations
-    let mut opt = BOptimizer::with_defaults(2, 42);
+    // parallel-restarted random+Nelder-Mead inner optimizer, 40
+    // iterations, doubling-schedule ML-II refits
+    let mut opt = BoDef::new(2).seed(42).build_optimizer();
     let best = opt.optimize(&my_fun);
 
     println!("evaluations : {}", best.evaluations);

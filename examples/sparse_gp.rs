@@ -37,7 +37,7 @@ fn main() {
     // (refit points 40, 80, 160, 320, ... land one refit past the
     // migration threshold even in the smoke run)
     let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42)
-        .with_hp_refits(40);
+        .with_refit(RefitSchedule::Doubling { first: 40 });
 
     let t0 = Instant::now();
     let mut switched_at = None;
@@ -45,7 +45,7 @@ fn main() {
         let x = srv.ask();
         let y = f(&x);
         srv.tell(&x, y);
-        if switched_at.is_none() && srv.model.is_sparse() {
+        if switched_at.is_none() && srv.core.model.is_sparse() {
             switched_at = Some(i);
         }
         if i % 250 == 0 {
@@ -53,7 +53,7 @@ fn main() {
             println!(
                 "eval {i:>5}  t={:>8.2?}  model={:<6}  best={bv:.4} at ({:.3}, {:.3})",
                 t0.elapsed(),
-                if srv.model.is_sparse() { "sparse" } else { "dense" },
+                if srv.core.model.is_sparse() { "sparse" } else { "dense" },
                 bx[0],
                 bx[1],
             );
@@ -65,9 +65,9 @@ fn main() {
     println!(
         "migration   : dense -> sparse at eval {} (threshold {})",
         switched_at.map_or_else(|| "never".to_string(), |i| i.to_string()),
-        srv.model.threshold(),
+        srv.core.model.threshold(),
     );
-    if let Some(sgp) = srv.model.as_sparse() {
+    if let Some(sgp) = srv.core.model.as_sparse() {
         println!(
             "sparse model: n={} observations summarized by m={} inducing points",
             sgp.n_samples(),

@@ -19,12 +19,13 @@ use std::time::Instant;
 
 use limbo::acqui::batch::{BatchAcquiFn, QEi};
 use limbo::acqui::{AcquiContext, Ei};
+use limbo::bayes_opt::BoDef;
 use limbo::benchlib::header;
 use limbo::coordinator::{AskTellServer, BatchStrategy};
 use limbo::kernel::Matern52;
 use limbo::mean::DataMean;
 use limbo::model::{gp::Gp, Model};
-use limbo::opt::{Chained, NelderMead, OptimizerExt, ParallelRepeater, RandomPoint};
+use limbo::opt::{Chained, NelderMead, ParallelRepeater, RandomPoint};
 use limbo::rng::Pcg64;
 
 type BenchServer =
@@ -34,16 +35,16 @@ fn fitted_server(n: usize, strategy: BatchStrategy, seed: u64) -> BenchServer {
     let mut rng = Pcg64::seed(17);
     let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
     let ys: Vec<f64> = xs.iter().map(|x| (6.0 * x[0]).sin() + x[1] * 0.5).collect();
-    let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
-    gp.fit(&xs, &ys);
-    AskTellServer::new(
-        gp,
-        Ei::default(),
-        RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
-        2,
-        seed,
-    )
-    .with_batch_strategy(strategy)
+    // the declarative path the redesign certifies: definition -> server
+    let mut srv = BoDef::service(2)
+        .noise(1e-2)
+        .acquisition(Ei::default())
+        .batch(strategy)
+        .seed(seed)
+        .build_server();
+    srv.core.model.fit(&xs, &ys);
+    srv.core.refresh_incumbent();
+    srv
 }
 
 fn median(mut samples: Vec<f64>) -> f64 {
@@ -75,10 +76,10 @@ fn main() {
             let propose_s = median(times);
             let ctx = AcquiContext::new(
                 0,
-                srv.model.best_observation().unwrap_or(f64::NEG_INFINITY),
+                srv.core.model.best_observation().unwrap_or(f64::NEG_INFINITY),
                 2,
             );
-            let score = judge.eval_joint(&srv.model, &batch, &ctx);
+            let score = judge.eval_joint(&srv.core.model, &batch, &ctx);
             println!(
                 "  {name}/q={q}: {propose_s:.4}s per proposal, reference qEI {score:.4}"
             );

@@ -14,21 +14,30 @@
 //! * the GP re-factors the full Gram matrix on every new sample (O(n^3)
 //!   per iteration instead of the incremental O(n^2) update),
 //! * scratch vectors are allocated per call instead of reused,
-//! * the run loop itself is a method on an abstract base, not
-//!   monomorphized.
+//! * predictions stay point-by-point: [`DynGp`] deliberately does **not**
+//!   override [`Model::predict_batch`], so population-based inner
+//!   optimizers pay one virtual-dispatch `predict` per candidate.
+//!
+//! The *loop*, however, is the shared [`BoCore`] engine —
+//! [`BayesOptLike::optimize`] drives the same propose/observe/refit
+//! state machine as [`crate::bayes_opt::BOptimizer`] and the ask/tell
+//! server, with trait-object components plugged in ([`DynGp`] implements
+//! [`Model`], [`DynAcquiFn`] adapts a boxed [`DynAcqui`]). Accuracy must
+//! therefore match the static implementation (pinned by an integration
+//! test); only wall-clock differs — the paper's entire point.
 //!
 //! Algorithmic defaults mirror BayesOpt's: LHS(10) initialization,
 //! ARD Matérn-5/2 kernel, Expected Improvement, DIRECT inner optimizer,
 //! and (optionally) ML-II hyper-parameter refits on a fixed schedule.
-//! Accuracy must therefore match the static implementation (pinned by an
-//! integration test); only wall-clock differs — the paper's entire point.
 
-use crate::acqui::{norm_cdf, norm_pdf};
+use crate::acqui::{norm_cdf, norm_pdf, AcquiContext, AcquiFn};
+use crate::bayes_opt::core::{BoCore, RefitSchedule};
 use crate::bayes_opt::{Best, Evaluator};
 use crate::la::CholeskyFactor;
 use crate::la::Matrix;
+use crate::model::Model;
 use crate::opt::rprop::{rprop_maximize, RpropParams};
-use crate::opt::{Direct, Objective, Optimizer};
+use crate::opt::Direct;
 use crate::rng::{latin_hypercube, Pcg64};
 
 /// Object-safe kernel interface (the OO mirror of [`crate::kernel::Kernel`]).
@@ -142,6 +151,30 @@ impl DynAcqui for DynEi {
     }
 }
 
+/// Adapter exposing a boxed [`DynAcqui`] as the [`AcquiFn`] policy the
+/// shared core expects: every score goes through the virtual `eval` and
+/// a virtual-dispatch point prediction, preserving the OO cost profile
+/// inside the unified loop.
+pub struct DynAcquiFn {
+    inner: Box<dyn DynAcqui>,
+}
+
+impl DynAcquiFn {
+    /// Wrap a boxed acquisition.
+    pub fn new(inner: Box<dyn DynAcqui>) -> Self {
+        Self { inner }
+    }
+}
+
+impl AcquiFn<DynGp> for DynAcquiFn {
+    fn eval(&self, model: &DynGp, x: &[f64], ctx: &AcquiContext) -> f64 {
+        let (mu, var) = model.predict(x);
+        self.inner.eval(mu, var, ctx.best())
+    }
+    // no eval_batch override: the default per-candidate loop is the
+    // point — the baseline must not benefit from the batched posterior
+}
+
 /// The OO Gaussian process: boxed kernel, full refit on every new sample.
 pub struct DynGp {
     kernel: Box<dyn DynKernel>,
@@ -151,6 +184,23 @@ pub struct DynGp {
     mean: f64,
     chol: Option<CholeskyFactor>,
     alpha: Vec<f64>,
+    /// Rprop iterations per ML-II refit (used by the [`Model`] hook).
+    pub hp_iters: usize,
+}
+
+impl Clone for DynGp {
+    fn clone(&self) -> Self {
+        Self {
+            kernel: self.kernel.clone_box(),
+            noise_var: self.noise_var,
+            xs: self.xs.clone(),
+            ys: self.ys.clone(),
+            mean: self.mean,
+            chol: self.chol.clone(),
+            alpha: self.alpha.clone(),
+            hp_iters: self.hp_iters,
+        }
+    }
 }
 
 impl DynGp {
@@ -164,14 +214,8 @@ impl DynGp {
             mean: 0.0,
             chol: None,
             alpha: Vec::new(),
+            hp_iters: 20,
         }
-    }
-
-    /// Add a sample; BayesOpt-style **full** O(n^3) refit.
-    pub fn add_sample(&mut self, x: &[f64], y: f64) {
-        self.xs.push(x.to_vec());
-        self.ys.push(y);
-        self.refit();
     }
 
     /// Full Gram rebuild + factorization + alpha.
@@ -205,18 +249,6 @@ impl DynGp {
                 Err(e) => panic!("baseline GP singular: {e}"),
             }
         }
-    }
-
-    /// Posterior mean/variance (allocates the k* vector each call).
-    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
-        let Some(chol) = &self.chol else {
-            return (self.mean, self.kernel.variance());
-        };
-        let ks: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
-        let mu = self.mean + crate::la::dot(&ks, &self.alpha);
-        let v = chol.solve_lower(&ks);
-        let var = (self.kernel.variance() - crate::la::dot(&v, &v)).max(1e-12);
-        (mu, var)
     }
 
     /// Log marginal likelihood.
@@ -257,7 +289,7 @@ impl DynGp {
     }
 
     /// ML-II refit of the kernel hyper-parameters with Rprop.
-    pub fn optimize_hyperparams(&mut self, iterations: usize) {
+    pub fn refit_hyperparams(&mut self, iterations: usize) {
         if self.xs.len() < 2 {
             return;
         }
@@ -276,10 +308,54 @@ impl DynGp {
         self.kernel.set_params(&best);
         self.refit();
     }
+}
 
-    /// Number of samples.
-    pub fn n_samples(&self) -> usize {
+impl Model for DynGp {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.refit();
+    }
+
+    /// Add a sample; BayesOpt-style **full** O(n^3) refit.
+    fn add_sample(&mut self, x: &[f64], y: f64) {
+        self.xs.push(x.to_vec());
+        self.ys.push(y);
+        self.refit();
+    }
+
+    /// Posterior mean/variance (allocates the k* vector each call).
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let Some(chol) = &self.chol else {
+            return (self.mean, self.kernel.variance());
+        };
+        let ks: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
+        let mu = self.mean + crate::la::dot(&ks, &self.alpha);
+        let v = chol.solve_lower(&ks);
+        let var = (self.kernel.variance() - crate::la::dot(&v, &v)).max(1e-12);
+        (mu, var)
+    }
+
+    fn n_samples(&self) -> usize {
         self.xs.len()
+    }
+
+    /// Input dimension (0 before the first sample — the OO design never
+    /// stored it, BayesOpt-style).
+    fn dim(&self) -> usize {
+        self.xs.first().map_or(0, Vec::len)
+    }
+
+    fn best_observation(&self) -> Option<f64> {
+        self.ys.iter().copied().filter(|y| y.is_finite()).reduce(f64::max)
+    }
+
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        crate::model::best_sample_of(&self.xs, &self.ys)
+    }
+
+    fn optimize_hyperparams(&mut self) {
+        self.refit_hyperparams(self.hp_iters);
     }
 }
 
@@ -312,7 +388,9 @@ impl Default for BayesOptLikeConfig {
     }
 }
 
-/// The dynamically-dispatched optimizer (the "BayesOpt" column of Fig. 1).
+/// The dynamically-dispatched optimizer (the "BayesOpt" column of Fig. 1):
+/// trait-object components driven through the same [`BoCore`] loop as the
+/// static implementation.
 pub struct BayesOptLike {
     /// Configuration.
     pub config: BayesOptLikeConfig,
@@ -326,57 +404,37 @@ impl BayesOptLike {
         Self { config: BayesOptLikeConfig::default(), rng: Pcg64::seed(seed) }
     }
 
-    /// Run the OO loop on `f`.
+    /// Run the OO-component loop on `f` via the shared core.
     pub fn optimize(&mut self, f: &dyn Evaluator) -> Best {
         let dim = f.dim();
-        let kernel: Box<dyn DynKernel> = Box::new(DynMatern52::new(dim));
-        let mut gp = DynGp::new(kernel, self.config.noise);
-        let acqui: Box<dyn DynAcqui> = Box::new(DynEi { xi: 0.01 });
+        let mut gp = DynGp::new(Box::new(DynMatern52::new(dim)), self.config.noise);
+        gp.hp_iters = self.config.hp_iters;
+        let acqui = DynAcquiFn::new(Box::new(DynEi { xi: 0.01 }));
         let inner = Direct::new(self.config.inner_evals);
+        let refit = match self.config.hp_every {
+            Some(k) => RefitSchedule::Every(k),
+            None => RefitSchedule::Never,
+        };
+        let mut core = BoCore::new(gp, acqui, inner, dim, 0).with_refit(refit);
+        // continue this instance's RNG stream across optimize() calls
+        core.rng = self.rng.clone();
 
-        let mut best = Best { x: vec![0.5; dim], value: f64::NEG_INFINITY, evaluations: 0 };
-        let mut evals = 0usize;
-
-        for x in latin_hypercube(self.config.n_init, dim, &mut self.rng) {
+        let design = latin_hypercube(self.config.n_init, dim, &mut core.rng);
+        core.seed_design(design);
+        while core.init_pending() > 0 {
+            let x = core.propose();
             let y = f.eval(&x);
-            evals += 1;
-            gp.add_sample(&x, y);
-            if y > best.value {
-                best = Best { x, value: y, evaluations: evals };
-            }
+            core.observe(&x, y);
         }
-        if self.config.hp_every.is_some() && gp.n_samples() >= 2 {
-            gp.optimize_hyperparams(self.config.hp_iters);
+        for _ in 0..self.config.iterations {
+            let x = core.propose();
+            let y = f.eval(&x);
+            core.observe(&x, y);
         }
-
-        for it in 0..self.config.iterations {
-            // deliberate wiring: the closure objective gets `eval_many`
-            // from the blanket Fn impl — a per-point loop, so the
-            // population-refactored inner optimizers still drive the
-            // baseline at its unbatched Fig-1 cost profile
-            let best_val = best.value;
-            let gp_ref = &gp;
-            let acqui_ref = &*acqui;
-            let objective = move |x: &[f64]| -> f64 {
-                let (mu, var) = gp_ref.predict(x);
-                acqui_ref.eval(mu, var, best_val)
-            };
-            let cand =
-                Optimizer::optimize(&inner, &objective as &dyn Objective, dim, &mut self.rng);
-            let y = f.eval(&cand.x);
-            evals += 1;
-            gp.add_sample(&cand.x, y);
-            if y > best.value {
-                best = Best { x: cand.x, value: y, evaluations: evals };
-            }
-            if let Some(k) = self.config.hp_every {
-                if k > 0 && (it + 1) % k == 0 {
-                    gp.optimize_hyperparams(self.config.hp_iters);
-                }
-            }
-        }
-        best.evaluations = evals;
-        best
+        core.finish();
+        self.rng = core.rng.clone();
+        let (x, value) = core.best().unwrap_or_else(|| (vec![0.5; dim], f64::NEG_INFINITY));
+        Best { x, value, evaluations: core.evaluations() }
     }
 }
 
@@ -408,6 +466,16 @@ mod tests {
             assert!((md - ms).abs() < 1e-9, "mu {md} vs {ms}");
             assert!((vd - vs).abs() < 1e-9, "var {vd} vs {vs}");
         }
+    }
+
+    #[test]
+    fn dyn_gp_model_interface_tracks_best() {
+        let mut gp = DynGp::new(Box::new(DynMatern52::new(1)), 1e-2);
+        assert_eq!(gp.dim(), 0, "dim unknown before data, OO-style");
+        gp.fit(&[vec![0.2], vec![0.7]], &[1.0, 3.0]);
+        assert_eq!(gp.dim(), 1);
+        assert_eq!(gp.best_observation(), Some(3.0));
+        assert_eq!(gp.best_sample(), Some((vec![0.7], 3.0)));
     }
 
     #[test]

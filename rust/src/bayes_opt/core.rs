@@ -1,0 +1,785 @@
+//! The single ask/tell engine every public entry point drives.
+//!
+//! [`BoCore`] owns the full Bayesian-optimization loop state machine —
+//! initial design queue, fit, propose (single point or q-batch via
+//! [`BatchStrategy`]), observe, [`RefitSchedule`] bookkeeping, incumbent
+//! tracking — so that [`crate::bayes_opt::BOptimizer`] (run to
+//! completion), [`crate::coordinator::AskTellServer`] (sync and
+//! threaded), the [`crate::baseline`] comparator and the coordinator
+//! drivers are all thin frontends over *one* implementation instead of
+//! carrying divergent private copies of the loop.
+//!
+//! Two supporting pieces live here as well:
+//!
+//! * [`Domain`] maps user-facing box bounds to the internal unit cube, so
+//!   callers stop hand-normalizing their inputs: every [`BoCore`] entry
+//!   point speaks user coordinates, every model-facing computation stays
+//!   on `[0, 1]^d`.
+//! * [`Observer`] is the paper's `stat` policy family as an event bus:
+//!   typed [`BoEvent`]s ([`BoEvent::InitDone`], [`BoEvent::Proposal`],
+//!   [`BoEvent::Observation`], [`BoEvent::Refit`], [`BoEvent::Stopped`])
+//!   are dispatched from the core, and writers such as
+//!   [`crate::stat::RunLogger`] subscribe without touching the loop.
+
+use std::collections::VecDeque;
+
+use crate::acqui::batch::{propose_batch_qei, QEi};
+use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective};
+use crate::model::Model;
+use crate::opt::Optimizer;
+use crate::rng::Pcg64;
+use crate::stop::StopContext;
+
+/// How often hyper-parameters are re-fit (ML-II) during a run — the one
+/// schedule shared by every entry point (optimizer, ask/tell server,
+/// baseline comparator).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RefitSchedule {
+    /// Never re-fit (fixed hyper-parameters).
+    #[default]
+    Never,
+    /// Re-fit once right after the initial design, then after every
+    /// `k`-th model-guided observation.
+    Every(usize),
+    /// Re-fit when the observation count first reaches `first`, then at
+    /// `2·first`, `4·first`, ... — O(log n) refits over an unbounded
+    /// run, the right default for an always-on service.
+    Doubling {
+        /// Observation count of the first refit (clamped to ≥ 2).
+        first: usize,
+    },
+}
+
+/// How [`BoCore::propose_batch`] turns one model posterior into `q`
+/// parallel trial proposals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchStrategy {
+    /// Greedy pointwise re-maximization with posterior-mean lies: after
+    /// each maximization a scratch clone of the model is told its own
+    /// posterior mean at the proposed point, flattening the variance
+    /// there so the next maximization is steered elsewhere. Cheap
+    /// (q ordinary maximizations) and latency-friendly, but the joint
+    /// posterior correlation between batch points never enters the score.
+    #[default]
+    ConstantLiar,
+    /// Monte-Carlo multi-point expected improvement over the **joint**
+    /// posterior ([`crate::acqui::batch::QEi`], common random numbers
+    /// frozen per proposal): strongly correlated points share a sample
+    /// path and score barely better than one of them, so diversity is
+    /// rewarded exactly where the posterior says it matters. Costs
+    /// roughly `mc_samples`× more per objective evaluation than a
+    /// pointwise EI — pick it when trials are expensive relative to
+    /// proposal compute.
+    QEi {
+        /// MC draws per acquisition evaluation (rounded down to even;
+        /// 256–1024 is a good range — noise shrinks as `1/sqrt`).
+        mc_samples: usize,
+    },
+}
+
+/// A rectangular search domain: per-dimension `[lo, hi]` bounds mapped
+/// to the internal unit cube.
+///
+/// Every [`BoCore`] entry point (and therefore every builder-produced
+/// optimizer and server) speaks **user coordinates**; the model, the
+/// acquisition maximization and the initial design all live on
+/// `[0, 1]^d`. The default [`Domain::unit`] is the identity mapping, so
+/// unit-cube callers pay nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Domain {
+    lo: Vec<f64>,
+    span: Vec<f64>,
+    unit: bool,
+}
+
+impl Domain {
+    /// The identity domain `[0, 1]^dim`.
+    pub fn unit(dim: usize) -> Self {
+        Self { lo: vec![0.0; dim], span: vec![1.0; dim], unit: true }
+    }
+
+    /// A box domain from per-dimension `(lo, hi)` bounds.
+    ///
+    /// # Panics
+    /// If any bound is non-finite or `hi <= lo`.
+    pub fn from_bounds(bounds: &[(f64, f64)]) -> Self {
+        let mut lo = Vec::with_capacity(bounds.len());
+        let mut span = Vec::with_capacity(bounds.len());
+        let mut unit = true;
+        for &(l, h) in bounds {
+            assert!(
+                l.is_finite() && h.is_finite() && h > l,
+                "Domain bounds must be finite with hi > lo, got ({l}, {h})"
+            );
+            unit &= l == 0.0 && h == 1.0;
+            lo.push(l);
+            span.push(h - l);
+        }
+        Self { lo, span, unit }
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// True for the identity `[0, 1]^d` mapping.
+    pub fn is_unit(&self) -> bool {
+        self.unit
+    }
+
+    /// Per-dimension `(lo, hi)` bounds.
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        self.lo.iter().zip(&self.span).map(|(&l, &s)| (l, l + s)).collect()
+    }
+
+    /// Map a user-coordinate point into the unit cube. Points outside
+    /// the box map outside `[0, 1]^d` (no clamping).
+    pub fn to_unit(&self, x: &[f64]) -> Vec<f64> {
+        if self.unit {
+            return x.to_vec();
+        }
+        x.iter().zip(self.lo.iter().zip(&self.span)).map(|(&v, (&l, &s))| (v - l) / s).collect()
+    }
+
+    /// Map a unit-cube point into user coordinates.
+    pub fn from_unit(&self, u: &[f64]) -> Vec<f64> {
+        if self.unit {
+            return u.to_vec();
+        }
+        u.iter().zip(self.lo.iter().zip(&self.span)).map(|(&v, (&l, &s))| l + v * s).collect()
+    }
+}
+
+/// Typed run events dispatched from [`BoCore`] to its [`Observer`]s.
+///
+/// All coordinates are **user coordinates** (see [`Domain`]).
+#[derive(Clone, Debug)]
+pub enum BoEvent<'a> {
+    /// The queued initial design has been fully evaluated.
+    InitDone {
+        /// Observations in the model at this point.
+        n_samples: usize,
+    },
+    /// The core proposed trial point(s) — one event per `propose` /
+    /// `propose_batch` call.
+    Proposal {
+        /// Model-guided iteration counter at proposal time.
+        iteration: usize,
+        /// Number of points proposed (1 for the single-point path).
+        q: usize,
+        /// The proposed points.
+        xs: &'a [Vec<f64>],
+    },
+    /// An observation entered the model.
+    Observation {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: &'a [f64],
+        /// Observed value.
+        y: f64,
+        /// Incumbent best value after this observation.
+        best: f64,
+    },
+    /// The model re-optimized its hyper-parameters (ML-II).
+    Refit {
+        /// Observations in the model at refit time.
+        n_samples: usize,
+    },
+    /// The run finished (driver-initiated; fired once).
+    Stopped {
+        /// Problem dimensionality.
+        dim: usize,
+        /// Total observations.
+        evaluations: usize,
+        /// Final incumbent best value (`-inf` if no data).
+        best: f64,
+    },
+}
+
+/// A run-statistics sink — the paper's `stat` policy family, decoupled
+/// from the loop: [`BoCore`] dispatches [`BoEvent`]s, observers write
+/// files, collect traces, or feed dashboards without the loop knowing.
+pub trait Observer: Send {
+    /// Handle one event. Called synchronously from the loop; keep it
+    /// cheap (buffer writes, defer flushes to [`BoEvent::Stopped`]).
+    fn on_event(&mut self, event: &BoEvent);
+}
+
+/// The single ask/tell core: one generic, monomorphized implementation
+/// of the propose/observe/refit loop state machine.
+///
+/// `M`, `A`, `O` are the model, acquisition and inner-optimizer policies
+/// (statically dispatched — swapping one is a type change, not a virtual
+/// call). Frontends differ only in *who drives* the loop:
+///
+/// * [`crate::bayes_opt::BOptimizer::optimize`] drives it to completion
+///   against an [`crate::bayes_opt::Evaluator`] and a stop criterion;
+/// * [`crate::coordinator::AskTellServer`] exposes `propose`/`observe`
+///   as `ask`/`tell` (inline or over channels from a server thread);
+/// * [`crate::baseline::BayesOptLike`] drives it with trait-object
+///   components to reproduce the paper's Figure-1 comparison.
+pub struct BoCore<M, A, O>
+where
+    M: Model,
+    A: AcquiFn<M>,
+    O: Optimizer,
+{
+    /// Surrogate model (fitted in place; stores unit-cube inputs).
+    pub model: M,
+    /// Acquisition policy.
+    pub acquisition: A,
+    /// Inner optimizer maximizing the acquisition each iteration.
+    pub inner_opt: O,
+    /// RNG (drives the initial design, the inner optimizer and random
+    /// probes).
+    pub rng: Pcg64,
+    dim: usize,
+    domain: Domain,
+    /// Queued initial-design points (unit cube), served by `propose`
+    /// before any acquisition maximization happens.
+    init_queue: VecDeque<Vec<f64>>,
+    init_total: usize,
+    /// Design points handed out by `propose`/`propose_batch` so far.
+    init_served: usize,
+    /// Observations attributed to the initial design so far: an
+    /// observation is an init observation iff a served design point is
+    /// still awaiting one — out-of-band warm-start tells are counted as
+    /// model-guided even while design points sit in the queue.
+    init_observed: usize,
+    /// Model-guided observations (excludes the initial design).
+    iteration: usize,
+    /// Total observations.
+    evaluations: usize,
+    /// Incumbent best `(x, y)` in unit coordinates.
+    best: Option<(Vec<f64>, f64)>,
+    refit: RefitSchedule,
+    /// Next observation count that triggers a doubling-schedule refit.
+    next_refit: Option<usize>,
+    batch_strategy: BatchStrategy,
+    observers: Vec<Box<dyn Observer>>,
+    finished: bool,
+}
+
+impl<M, A, O> BoCore<M, A, O>
+where
+    M: Model,
+    A: AcquiFn<M>,
+    O: Optimizer,
+{
+    /// Compose a core from explicit policies. A model that already has
+    /// data (`fit` / deserialized state) seeds the incumbent, so the
+    /// first proposal never runs EI/UCB against a `-inf` incumbent.
+    pub fn new(model: M, acquisition: A, inner_opt: O, dim: usize, seed: u64) -> Self {
+        let best = model.best_sample();
+        Self {
+            model,
+            acquisition,
+            inner_opt,
+            rng: Pcg64::seed(seed),
+            dim,
+            domain: Domain::unit(dim),
+            init_queue: VecDeque::new(),
+            init_total: 0,
+            init_served: 0,
+            init_observed: 0,
+            iteration: 0,
+            evaluations: 0,
+            best,
+            refit: RefitSchedule::Never,
+            next_refit: None,
+            batch_strategy: BatchStrategy::default(),
+            observers: Vec::new(),
+            finished: false,
+        }
+    }
+
+    /// Set the search domain (user bounds mapped to the unit cube).
+    ///
+    /// # Panics
+    /// If the domain dimensionality differs from the core's.
+    pub fn with_domain(mut self, domain: Domain) -> Self {
+        assert_eq!(domain.dim(), self.dim, "Domain dim must match the optimizer dim");
+        self.domain = domain;
+        self
+    }
+
+    /// Set the hyper-parameter refit schedule.
+    pub fn with_refit(mut self, schedule: RefitSchedule) -> Self {
+        self.refit = schedule;
+        self.next_refit = match schedule {
+            RefitSchedule::Doubling { first } => Some(first.max(2)),
+            _ => None,
+        };
+        self
+    }
+
+    /// Select the q-point proposal strategy for
+    /// [`propose_batch`](Self::propose_batch).
+    pub fn with_batch_strategy(mut self, strategy: BatchStrategy) -> Self {
+        self.batch_strategy = strategy;
+        self
+    }
+
+    /// Subscribe an observer to the run's event stream.
+    pub fn with_observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Subscribe an observer (in-place form).
+    pub fn add_observer(&mut self, observer: impl Observer + 'static) {
+        self.observers.push(Box::new(observer));
+    }
+
+    /// Subscribe an already-boxed observer (the type-erased form the
+    /// [`crate::bayes_opt::BoDef`] builder collects).
+    pub fn add_boxed_observer(&mut self, observer: Box<dyn Observer>) {
+        self.observers.push(observer);
+    }
+
+    /// Queue unit-cube initial-design points; `propose` serves them (in
+    /// order) before any acquisition maximization happens.
+    pub fn seed_design(&mut self, points: Vec<Vec<f64>>) {
+        self.init_total += points.len();
+        self.init_queue.extend(points);
+    }
+
+    /// Problem dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The search domain.
+    pub fn domain(&self) -> &Domain {
+        &self.domain
+    }
+
+    /// Queued initial-design points not yet proposed.
+    pub fn init_pending(&self) -> usize {
+        self.init_queue.len()
+    }
+
+    /// Model-guided observations so far (excludes the initial design).
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Total observations so far.
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    /// Next observation count that triggers a doubling-schedule refit.
+    pub fn next_refit(&self) -> Option<usize> {
+        self.next_refit
+    }
+
+    /// The configured q-point proposal strategy.
+    pub fn batch_strategy(&self) -> BatchStrategy {
+        self.batch_strategy
+    }
+
+    /// Incumbent best `(x, value)` in user coordinates.
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.as_ref().map(|(x, y)| (self.domain.from_unit(x), *y))
+    }
+
+    /// Incumbent value for the acquisition context: the tracked best,
+    /// else the model's own best observation (a pre-fitted model whose
+    /// argmax is unknown — e.g. restored value-only state — must still
+    /// threshold EI correctly), else `-inf` (no data at all).
+    pub fn incumbent_value(&self) -> f64 {
+        self.best
+            .as_ref()
+            .map(|b| b.1)
+            .or_else(|| self.model.best_observation())
+            .unwrap_or(f64::NEG_INFINITY)
+    }
+
+    /// Re-seed the incumbent from the model's stored samples. Drivers
+    /// that refit the model on externally rewritten data (e.g. the
+    /// ParEGO scalarization changes every iteration) call this so the
+    /// acquisition thresholds against the *current* objective.
+    pub fn refresh_incumbent(&mut self) {
+        self.best = self.model.best_sample();
+    }
+
+    /// Snapshot for the stop criteria.
+    pub fn stop_context(&self) -> StopContext {
+        StopContext {
+            iteration: self.iteration,
+            evaluations: self.evaluations,
+            best: self.incumbent_value(),
+        }
+    }
+
+    fn emit(observers: &mut [Box<dyn Observer>], event: &BoEvent) {
+        for obs in observers.iter_mut() {
+            obs.on_event(event);
+        }
+    }
+
+    /// Next suggested trial (user coordinates): a queued initial-design
+    /// point if any remain, a random probe while the model has no data,
+    /// else the acquisition maximizer.
+    pub fn propose(&mut self) -> Vec<f64> {
+        let unit = if let Some(x) = self.init_queue.pop_front() {
+            self.init_served += 1;
+            x
+        } else if self.model.n_samples() == 0 {
+            self.rng.unit_point(self.dim)
+        } else {
+            self.maximize_acquisition()
+        };
+        let x = self.domain.from_unit(&unit);
+        let xs = [x];
+        Self::emit(
+            &mut self.observers,
+            &BoEvent::Proposal { iteration: self.iteration, q: 1, xs: &xs },
+        );
+        let [x] = xs;
+        x
+    }
+
+    fn maximize_acquisition(&mut self) -> Vec<f64> {
+        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
+        let objective = AcquiObjective::new(&self.model, &self.acquisition, ctx);
+        self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+    }
+
+    /// Propose `q` diverse trials (user coordinates) to run in parallel,
+    /// using the configured [`BatchStrategy`]. Queued initial-design
+    /// points are served first; while the model has no data the
+    /// remainder are random probes.
+    pub fn propose_batch(&mut self, q: usize) -> Vec<Vec<f64>>
+    where
+        M: Clone,
+    {
+        let q = q.max(1);
+        let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
+        while batch.len() < q {
+            if let Some(x) = self.init_queue.pop_front() {
+                self.init_served += 1;
+                batch.push(x);
+            } else {
+                break;
+            }
+        }
+        let remaining = q - batch.len();
+        if remaining > 0 {
+            if self.model.n_samples() == 0 {
+                batch.extend((0..remaining).map(|_| self.rng.unit_point(self.dim)));
+            } else {
+                let proposed = match self.batch_strategy {
+                    BatchStrategy::ConstantLiar => self.propose_constant_liar(remaining),
+                    BatchStrategy::QEi { mc_samples } => self.propose_qei(remaining, mc_samples),
+                };
+                batch.extend(proposed);
+            }
+        }
+        // dedupe over the WHOLE batch: an acquisition proposal can land
+        // on a still-queued init point (or two init points can collide),
+        // and the diversity guarantee covers the batch as a set
+        let batch = self.dedupe_batch(batch);
+        let batch: Vec<Vec<f64>> = batch.iter().map(|x| self.domain.from_unit(x)).collect();
+        Self::emit(
+            &mut self.observers,
+            &BoEvent::Proposal { iteration: self.iteration, q: batch.len(), xs: &batch },
+        );
+        batch
+    }
+
+    /// Constant-liar proposals: after each maximization the model is
+    /// *told its own posterior mean* at the proposed point (the "lie"),
+    /// the acquisition is re-maximized on the lied model, and all lies
+    /// are rolled back at the end (the lies go into a scratch clone;
+    /// `self.model` only ever sees real observations). Lying flattens
+    /// the posterior variance around already-proposed points, steering
+    /// the next maximization elsewhere.
+    fn propose_constant_liar(&mut self, q: usize) -> Vec<Vec<f64>>
+    where
+        M: Clone,
+    {
+        let mut liar = self.model.clone();
+        let mut lied_best = self.incumbent_value();
+        let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
+        for k in 0..q {
+            let ctx = AcquiContext::new(self.iteration + k, lied_best, self.dim);
+            let x = {
+                let objective = AcquiObjective::new(&liar, &self.acquisition, ctx);
+                self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+            };
+            let (lie, _) = liar.predict(&x);
+            liar.add_sample(&x, lie);
+            lied_best = lied_best.max(lie);
+            batch.push(x);
+        }
+        batch
+    }
+
+    /// Joint-posterior qEI proposals: one frozen-CRN [`QEi`] estimator
+    /// per round (fresh seed per call, deterministic within the call),
+    /// maximized by greedy marginal gains plus a joint refinement pass
+    /// over the flattened `q·d` batch vector ([`propose_batch_qei`]).
+    /// The pointwise acquisition is not consulted here — qEI *is* the
+    /// acquisition for the whole batch.
+    fn propose_qei(&mut self, q: usize, mc_samples: usize) -> Vec<Vec<f64>> {
+        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
+        let seed = self.rng.next_u64();
+        let qei = QEi::new(mc_samples, q, seed);
+        propose_batch_qei(&self.model, &qei, &self.inner_opt, ctx, self.dim, q, &mut self.rng)
+    }
+
+    /// Degenerate acquisition landscapes can propose (near-)coincident
+    /// points despite the lie/joint penalty; replace duplicates with
+    /// random probes so the batch stays diverse (1e-8 squared distance
+    /// ~ 1e-4 per axis).
+    fn dedupe_batch(&mut self, batch: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
+        for x in batch {
+            let duplicate = out.iter().any(|p| {
+                p.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() < 1e-8
+            });
+            out.push(if duplicate { self.rng.unit_point(self.dim) } else { x });
+        }
+        out
+    }
+
+    /// Report an observation (user coordinates). Updates the model and
+    /// the incumbent, advances the iteration/refit bookkeeping, and may
+    /// trigger a scheduled ML-II refit.
+    ///
+    /// An observation counts toward the initial design iff a served
+    /// design point is still awaiting its outcome; out-of-band
+    /// warm-start observations (a `tell` before any design point was
+    /// asked for) are model-guided iterations. The attribution is by
+    /// count, not by matching `x`: a warm-start tell interleaved
+    /// *between* a design point's ask and its tell is attributed to the
+    /// design slot (indistinguishable without comparing coordinates —
+    /// warm-start before asking if exact accounting matters).
+    pub fn observe(&mut self, x: &[f64], y: f64) {
+        let unit = self.domain.to_unit(x);
+        self.model.add_sample(&unit, y);
+        self.evaluations += 1;
+        self.finished = false;
+        let in_init = self.init_observed < self.init_served;
+        if in_init {
+            self.init_observed += 1;
+        } else {
+            self.iteration += 1;
+        }
+        if y.is_finite() && self.best.as_ref().map_or(true, |b| y > b.1) {
+            self.best = Some((unit, y));
+        }
+        let best = self.incumbent_value();
+        Self::emit(
+            &mut self.observers,
+            &BoEvent::Observation { evaluations: self.evaluations, x, y, best },
+        );
+        let init_completed =
+            in_init && self.init_observed == self.init_total && self.init_queue.is_empty();
+        if init_completed {
+            Self::emit(
+                &mut self.observers,
+                &BoEvent::InitDone { n_samples: self.model.n_samples() },
+            );
+        }
+        self.advance_refit_schedule(in_init, init_completed);
+    }
+
+    /// Apply the refit schedule after one observation.
+    fn advance_refit_schedule(&mut self, in_init: bool, init_completed: bool) {
+        let n = self.model.n_samples();
+        let fire = match self.refit {
+            RefitSchedule::Never => false,
+            RefitSchedule::Every(k) => {
+                if in_init {
+                    // refit once right after the initial design
+                    init_completed && n >= 2
+                } else {
+                    k > 0 && self.iteration % k == 0
+                }
+            }
+            RefitSchedule::Doubling { .. } => match self.next_refit {
+                Some(next) if n >= next => {
+                    // advance past the *current* count: a burst of
+                    // observations (the propose_batch workflow) or a
+                    // pre-fitted model can leave n >= 2·next, and a
+                    // single doubling would then trigger a full ML-II
+                    // refit on every subsequent observation until the
+                    // schedule catches up
+                    let mut next = next;
+                    while n >= next {
+                        next = next.saturating_mul(2);
+                    }
+                    self.next_refit = Some(next);
+                    true
+                }
+                _ => false,
+            },
+        };
+        if fire {
+            self.model.optimize_hyperparams();
+            Self::emit(&mut self.observers, &BoEvent::Refit { n_samples: n });
+        }
+    }
+
+    /// Signal the end of the run to the observers (fired once; later
+    /// calls are no-ops). Drivers that own a run lifecycle — the
+    /// run-to-completion optimizer, the server thread on shutdown —
+    /// call this so file-writing observers can flush.
+    pub fn finish(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        let event = BoEvent::Stopped {
+            dim: self.dim,
+            evaluations: self.evaluations,
+            best: self.incumbent_value(),
+        };
+        Self::emit(&mut self.observers, &event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acqui::Ucb;
+    use crate::kernel::Matern52;
+    use crate::mean::DataMean;
+    use crate::model::gp::Gp;
+    use crate::opt::RandomPoint;
+    use std::sync::{Arc, Mutex};
+
+    fn make_core() -> BoCore<Gp<Matern52, DataMean>, Ucb, RandomPoint> {
+        BoCore::new(
+            Gp::new(Matern52::new(1), DataMean::default(), 1e-3),
+            Ucb::default(),
+            RandomPoint::new(32),
+            1,
+            7,
+        )
+    }
+
+    #[test]
+    fn domain_round_trips_and_identity() {
+        let d = Domain::from_bounds(&[(-5.0, 10.0), (0.0, 15.0)]);
+        assert!(!d.is_unit());
+        assert_eq!(d.dim(), 2);
+        let u = d.to_unit(&[-5.0, 15.0]);
+        assert!((u[0] - 0.0).abs() < 1e-15 && (u[1] - 1.0).abs() < 1e-15);
+        let x = d.from_unit(&[0.5, 0.5]);
+        assert!((x[0] - 2.5).abs() < 1e-12 && (x[1] - 7.5).abs() < 1e-12);
+        let id = Domain::unit(3);
+        assert!(id.is_unit());
+        assert_eq!(id.from_unit(&[0.25, 0.5, 0.75]), vec![0.25, 0.5, 0.75]);
+        assert!(Domain::from_bounds(&[(0.0, 1.0)]).is_unit());
+    }
+
+    #[test]
+    #[should_panic]
+    fn domain_rejects_inverted_bounds() {
+        let _ = Domain::from_bounds(&[(1.0, 0.0)]);
+    }
+
+    #[test]
+    fn init_queue_served_before_acquisition() {
+        let mut core = make_core();
+        core.seed_design(vec![vec![0.25], vec![0.75]]);
+        assert_eq!(core.init_pending(), 2);
+        let a = core.propose();
+        assert_eq!(a, vec![0.25]);
+        core.observe(&a, -1.0);
+        assert_eq!(core.iteration(), 0, "init observations are not iterations");
+        let b = core.propose();
+        assert_eq!(b, vec![0.75]);
+        core.observe(&b, 1.0);
+        assert_eq!(core.init_pending(), 0);
+        assert_eq!(core.best().unwrap().1, 1.0);
+        // model-guided from here
+        let c = core.propose();
+        core.observe(&c, 0.0);
+        assert_eq!(core.iteration(), 1);
+        assert_eq!(core.evaluations(), 3);
+    }
+
+    #[test]
+    fn bounded_domain_maps_both_directions() {
+        let mut core = make_core().with_domain(Domain::from_bounds(&[(10.0, 20.0)]));
+        core.seed_design(vec![vec![0.5]]);
+        let x = core.propose();
+        assert!((x[0] - 15.0).abs() < 1e-12, "init point mapped to user coords");
+        core.observe(&x, 3.0);
+        let (bx, bv) = core.best().unwrap();
+        assert!((bx[0] - 15.0).abs() < 1e-12);
+        assert_eq!(bv, 3.0);
+        // proposals stay inside the user box
+        for _ in 0..5 {
+            let x = core.propose();
+            assert!((10.0..=20.0).contains(&x[0]), "proposal {x:?} outside the box");
+            core.observe(&x, -(x[0] - 14.0).powi(2));
+        }
+    }
+
+    #[derive(Clone, Default)]
+    struct Counter(Arc<Mutex<(usize, usize, usize, usize, usize)>>);
+
+    impl Observer for Counter {
+        fn on_event(&mut self, event: &BoEvent) {
+            let mut c = self.0.lock().unwrap();
+            match event {
+                BoEvent::InitDone { .. } => c.0 += 1,
+                BoEvent::Proposal { .. } => c.1 += 1,
+                BoEvent::Observation { .. } => c.2 += 1,
+                BoEvent::Refit { .. } => c.3 += 1,
+                BoEvent::Stopped { .. } => c.4 += 1,
+            }
+        }
+    }
+
+    #[test]
+    fn event_bus_fires_the_full_lifecycle() {
+        let counter = Counter::default();
+        let mut core = make_core().with_refit(RefitSchedule::Doubling { first: 4 });
+        core.model.hp_opt.config.restarts = 1;
+        core.model.hp_opt.config.iterations = 2;
+        core.add_observer(counter.clone());
+        core.seed_design(vec![vec![0.2], vec![0.8]]);
+        for _ in 0..6 {
+            let x = core.propose();
+            core.observe(&x, -(x[0] - 0.4).powi(2));
+        }
+        core.finish();
+        core.finish(); // idempotent
+        let c = counter.0.lock().unwrap().clone();
+        assert_eq!(c.0, 1, "InitDone once");
+        assert_eq!(c.1, 6, "one Proposal per propose");
+        assert_eq!(c.2, 6, "one Observation per observe");
+        assert_eq!(c.3, 1, "Doubling{{4}} refits once at n=4 within 6 evals");
+        assert_eq!(c.4, 1, "Stopped exactly once");
+    }
+
+    #[test]
+    fn doubling_schedule_advances_past_bursts() {
+        let mut core = make_core().with_refit(RefitSchedule::Doubling { first: 2 });
+        core.model.hp_opt.config.restarts = 1;
+        core.model.hp_opt.config.iterations = 2;
+        for i in 0..5 {
+            core.observe(&[0.1 + 0.2 * i as f64], (i as f64).sin());
+        }
+        assert_eq!(core.next_refit(), Some(8), "2 -> 4 -> 8 after n=5");
+    }
+
+    #[test]
+    fn nonfinite_observations_never_become_incumbent() {
+        let mut core = make_core();
+        core.observe(&[0.5], f64::INFINITY);
+        core.observe(&[0.6], f64::NAN);
+        assert!(core.best().is_none());
+        core.observe(&[0.7], -3.0);
+        assert_eq!(core.best().unwrap().1, -3.0);
+    }
+}

@@ -1,0 +1,542 @@
+//! The declarative experiment definition — the Rust analog of the
+//! paper's `Params` struct.
+//!
+//! [`BoDef`] collects every policy and parameter of a Bayesian
+//! optimization experiment in one builder and monomorphizes to the same
+//! concrete types as hand-composition (each setter that swaps a policy
+//! swaps a *type parameter*, so there is zero dynamic dispatch on the
+//! hot path). One definition builds either frontend of the shared
+//! [`BoCore`](crate::bayes_opt::BoCore) engine:
+//!
+//! * [`BoDef::build_optimizer`] — a run-to-completion
+//!   [`BOptimizer`];
+//! * [`BoDef::build_server`] / [`BoDef::spawn_server`] — an ask/tell
+//!   [`AskTellServer`] (inline or on its own thread) whose initial
+//!   design, refit schedule and batch strategy match the optimizer's
+//!   exactly (same seed ⇒ bit-identical traces, see
+//!   `tests/api_parity.rs`);
+//! * the `*_adaptive_*` variants swap the dense GP for an
+//!   [`AdaptiveModel`] that migrates to the sparse inducing-point GP on
+//!   large budgets.
+//!
+//! ```no_run
+//! use limbo::prelude::*;
+//! let mut opt = BoDef::new(2)
+//!     .kernel(Matern52::new)
+//!     .acquisition(Ei::default())
+//!     .batch(BatchStrategy::QEi { mc_samples: 256 })
+//!     .refit(RefitSchedule::Doubling { first: 16 })
+//!     .bounds(&[(-5.0, 10.0), (0.0, 15.0)])
+//!     .seed(42)
+//!     .build_optimizer();
+//! let best = opt.optimize(&FnEval::new(2, |x: &[f64]| -(x[0] * x[0] + x[1] * x[1])));
+//! ```
+
+use crate::acqui::{AcquiFn, Ucb};
+use crate::bayes_opt::core::{BatchStrategy, BoCore, Domain, Observer, RefitSchedule};
+use crate::bayes_opt::BOptimizer;
+use crate::coordinator::service::{AskTellServer, ServerHandle};
+use crate::init::{Initializer, NoInit, RandomSampling};
+use crate::kernel::{Kernel, Matern52};
+use crate::mean::{DataMean, MeanFn};
+use crate::model::{gp::Gp, AdaptiveModel, HpOptConfig};
+use crate::opt::{Chained, NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
+use crate::stop::{MaxIterations, StopCriterion};
+
+/// The default inner optimizer: 8 parallel restarts of 256 random
+/// probes refined by Nelder–Mead.
+pub type DefaultInnerOpt = ParallelRepeater<Chained<RandomPoint, NelderMead>>;
+
+/// Declarative definition of a Bayesian-optimization experiment.
+///
+/// Type parameters are the swappable policies (kernel, mean,
+/// acquisition, initializer, inner optimizer, stop criterion); the
+/// defaults reproduce the library defaults (Matérn-5/2 GP with data
+/// mean, UCB, 10 random init samples, random+Nelder–Mead restarts, 40
+/// iterations, doubling ML-II refits from n = 16).
+pub struct BoDef<
+    K = Matern52,
+    Mn = DataMean,
+    A = Ucb,
+    I = RandomSampling,
+    O = DefaultInnerOpt,
+    S = MaxIterations,
+> {
+    dim: usize,
+    kernel: K,
+    mean: Mn,
+    acquisition: A,
+    initializer: I,
+    inner_opt: O,
+    stop: S,
+    noise: f64,
+    seed: u64,
+    refit: RefitSchedule,
+    batch: BatchStrategy,
+    domain: Domain,
+    hp: Option<HpOptConfig>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl BoDef {
+    /// A definition with the library defaults for a `dim`-dimensional
+    /// problem over the unit cube (override the box with
+    /// [`bounds`](Self::bounds)).
+    pub fn new(dim: usize) -> BoDef {
+        BoDef {
+            dim,
+            kernel: Matern52::new(dim),
+            mean: DataMean::default(),
+            acquisition: Ucb::default(),
+            initializer: RandomSampling { n: 10 },
+            inner_opt: RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
+            stop: MaxIterations(40),
+            noise: 1e-4,
+            seed: 42,
+            refit: RefitSchedule::Doubling { first: 16 },
+            batch: BatchStrategy::default(),
+            domain: Domain::unit(dim),
+            hp: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// The always-on service defaults (the old
+    /// `DefaultAskTellServer::with_defaults` spelling): noise 1e-3, no
+    /// initial design (the first asks are random probes / warm-start
+    /// tells), a lighter 4×2-restart inner optimizer. Finish with
+    /// [`build_adaptive_server`](Self::build_adaptive_server) for the
+    /// dense→sparse surrogate an unbounded run needs.
+    pub fn service(dim: usize) -> BoDef<Matern52, DataMean, Ucb, NoInit, DefaultInnerOpt> {
+        BoDef::new(dim)
+            .noise(1e-3)
+            .init(NoInit)
+            .inner_opt(RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2))
+    }
+}
+
+impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
+    /// Swap the kernel; takes a `dim -> kernel` constructor so the
+    /// definition's dimensionality is threaded automatically
+    /// (`.kernel(Matern52::new)`, `.kernel(SquaredExpArd::new)`, or
+    /// `.kernel(|_| my_kernel)` for a pre-built instance).
+    pub fn kernel<K2>(self, kernel: impl FnOnce(usize) -> K2) -> BoDef<K2, Mn, A, I, O, S> {
+        let kernel = kernel(self.dim);
+        BoDef {
+            dim: self.dim,
+            kernel,
+            mean: self.mean,
+            acquisition: self.acquisition,
+            initializer: self.initializer,
+            inner_opt: self.inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Swap the mean function.
+    pub fn mean<Mn2>(self, mean: Mn2) -> BoDef<K, Mn2, A, I, O, S> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean,
+            acquisition: self.acquisition,
+            initializer: self.initializer,
+            inner_opt: self.inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Swap the acquisition function.
+    pub fn acquisition<A2>(self, acquisition: A2) -> BoDef<K, Mn, A2, I, O, S> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean: self.mean,
+            acquisition,
+            initializer: self.initializer,
+            inner_opt: self.inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Swap the initial-design generator.
+    pub fn init<I2>(self, initializer: I2) -> BoDef<K, Mn, A, I2, O, S> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean: self.mean,
+            acquisition: self.acquisition,
+            initializer,
+            inner_opt: self.inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Swap the inner (acquisition-maximizing) optimizer.
+    pub fn inner_opt<O2>(self, inner_opt: O2) -> BoDef<K, Mn, A, I, O2, S> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean: self.mean,
+            acquisition: self.acquisition,
+            initializer: self.initializer,
+            inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Swap the stop criterion (only consulted by the run-to-completion
+    /// frontend).
+    pub fn stop<S2>(self, stop: S2) -> BoDef<K, Mn, A, I, O, S2> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean: self.mean,
+            acquisition: self.acquisition,
+            initializer: self.initializer,
+            inner_opt: self.inner_opt,
+            stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+        }
+    }
+
+    /// Stop after `n` model-guided iterations (shorthand for
+    /// `.stop(MaxIterations(n))`).
+    pub fn iterations(self, n: usize) -> BoDef<K, Mn, A, I, O, MaxIterations> {
+        self.stop(MaxIterations(n))
+    }
+
+    /// Use `n` i.i.d. random initial samples (shorthand for
+    /// `.init(RandomSampling { n })`).
+    pub fn init_samples(self, n: usize) -> BoDef<K, Mn, A, RandomSampling, O, S> {
+        self.init(RandomSampling { n })
+    }
+
+    /// Observation-noise standard deviation of the GP.
+    pub fn noise(mut self, noise: f64) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// RNG seed (initial design, inner optimizer, random probes).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Hyper-parameter refit schedule.
+    pub fn refit(mut self, schedule: RefitSchedule) -> Self {
+        self.refit = schedule;
+        self
+    }
+
+    /// q-point batch proposal strategy.
+    pub fn batch(mut self, strategy: BatchStrategy) -> Self {
+        self.batch = strategy;
+        self
+    }
+
+    /// ML-II hyper-opt settings (restarts, iRprop⁻ iterations, ...)
+    /// applied to the built surrogate — the declarative form of
+    /// reaching into `core.model.hp_opt.config` after building.
+    pub fn hp_config(mut self, config: HpOptConfig) -> Self {
+        self.hp = Some(config);
+        self
+    }
+
+    /// Optimize over the box `bounds` instead of the unit cube; every
+    /// built frontend then speaks user coordinates (see [`Domain`]).
+    ///
+    /// # Panics
+    /// If `bounds.len()` differs from the definition's dimension or any
+    /// bound is invalid.
+    pub fn bounds(mut self, bounds: &[(f64, f64)]) -> Self {
+        assert_eq!(bounds.len(), self.dim, "bounds must cover every dimension");
+        self.domain = Domain::from_bounds(bounds);
+        self
+    }
+
+    /// Set the search domain directly.
+    pub fn domain(mut self, domain: Domain) -> Self {
+        assert_eq!(domain.dim(), self.dim, "Domain dim must match the definition dim");
+        self.domain = domain;
+        self
+    }
+
+    /// Subscribe a run observer (repeatable).
+    pub fn observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+}
+
+impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S>
+where
+    K: Kernel,
+    Mn: MeanFn,
+    I: Initializer,
+    O: Optimizer,
+    S: StopCriterion,
+{
+    /// Assemble the shared engine around `make(kernel, mean, noise,
+    /// hp)` — the one place every definition field is threaded into a
+    /// core, so the dense and adaptive build paths cannot drift apart.
+    fn into_core<M>(self, make: Make<K, Mn, M>) -> (BoCore<M, A, O>, I, S)
+    where
+        M: crate::model::Model,
+        A: AcquiFn<M>,
+    {
+        let BoDef {
+            dim,
+            kernel,
+            mean,
+            acquisition,
+            initializer,
+            inner_opt,
+            stop,
+            noise,
+            seed,
+            refit,
+            batch,
+            domain,
+            hp,
+            observers,
+        } = self;
+        let model = make(kernel, mean, noise, hp);
+        let mut core = BoCore::new(model, acquisition, inner_opt, dim, seed)
+            .with_domain(domain)
+            .with_refit(refit)
+            .with_batch_strategy(batch);
+        for obs in observers {
+            core.add_boxed_observer(obs);
+        }
+        (core, initializer, stop)
+    }
+
+    /// Core + queued init design: the server has no `optimize()` moment
+    /// to draw the design, so it is drawn here with the same RNG order
+    /// the optimizer frontend uses.
+    fn into_server<M>(self, make: Make<K, Mn, M>) -> AskTellServer<M, A, O>
+    where
+        M: crate::model::Model,
+        A: AcquiFn<M>,
+    {
+        let dim = self.dim;
+        let (mut core, initializer, _stop) = self.into_core(make);
+        let design = initializer.points(dim, &mut core.rng);
+        core.seed_design(design);
+        AskTellServer { core }
+    }
+
+    /// Build the run-to-completion frontend (dense GP surrogate).
+    pub fn build_optimizer(self) -> BOptimizer<Gp<K, Mn>, A, I, O, S>
+    where
+        A: AcquiFn<Gp<K, Mn>>,
+    {
+        let (core, initializer, stop) = self.into_core(make_dense);
+        BOptimizer { core, initializer, stop }
+    }
+
+    /// Build the run-to-completion frontend with an [`AdaptiveModel`]
+    /// surrogate (dense while small, sparse past its threshold — for
+    /// budgets beyond a few hundred evaluations).
+    pub fn build_adaptive_optimizer(self) -> BOptimizer<AdaptiveModel<K, Mn>, A, I, O, S>
+    where
+        A: AcquiFn<AdaptiveModel<K, Mn>>,
+    {
+        let (core, initializer, stop) = self.into_core(make_adaptive);
+        BOptimizer { core, initializer, stop }
+    }
+
+    /// Build the inline ask/tell frontend (dense GP surrogate). The
+    /// initial design is queued into the server, so the first asks
+    /// serve the same design points the optimizer frontend would
+    /// evaluate — the two produce identical traces for the same seed.
+    pub fn build_server(self) -> AskTellServer<Gp<K, Mn>, A, O>
+    where
+        A: AcquiFn<Gp<K, Mn>>,
+    {
+        self.into_server(make_dense)
+    }
+
+    /// Build the inline ask/tell frontend with an [`AdaptiveModel`]
+    /// surrogate — the right default for an always-on service that
+    /// accumulates observations indefinitely.
+    pub fn build_adaptive_server(self) -> AskTellServer<AdaptiveModel<K, Mn>, A, O>
+    where
+        A: AcquiFn<AdaptiveModel<K, Mn>>,
+    {
+        self.into_server(make_adaptive)
+    }
+
+    /// Build the threaded ask/tell frontend: the server from
+    /// [`build_server`](Self::build_server) moved onto its own thread.
+    pub fn spawn_server(self) -> ServerHandle
+    where
+        A: AcquiFn<Gp<K, Mn>> + Send + 'static,
+        O: Send + 'static,
+        Gp<K, Mn>: Clone + Send + 'static,
+    {
+        self.build_server().spawn()
+    }
+}
+
+/// Surrogate constructor shape [`BoDef`] builds through: kernel, mean,
+/// noise, and the optional hyper-opt settings.
+type Make<K, Mn, M> = fn(K, Mn, f64, Option<HpOptConfig>) -> M;
+
+fn make_dense<K: Kernel, Mn: MeanFn>(
+    kernel: K,
+    mean: Mn,
+    noise: f64,
+    hp: Option<HpOptConfig>,
+) -> Gp<K, Mn> {
+    let mut gp = Gp::new(kernel, mean, noise);
+    if let Some(config) = hp {
+        gp.hp_opt.config = config;
+    }
+    gp
+}
+
+fn make_adaptive<K: Kernel, Mn: MeanFn>(
+    kernel: K,
+    mean: Mn,
+    noise: f64,
+    hp: Option<HpOptConfig>,
+) -> AdaptiveModel<K, Mn> {
+    let model = AdaptiveModel::new(kernel, mean, noise);
+    match hp {
+        Some(config) => model.with_hp_config(config),
+        None => model,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acqui::Ei;
+    use crate::bayes_opt::FnEval;
+    use crate::kernel::SquaredExpArd;
+    use crate::model::Model;
+
+    #[test]
+    fn default_def_matches_library_defaults_and_converges() {
+        let mut opt = BoDef::new(1).seed(3).iterations(15).build_optimizer();
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.3).powi(2)));
+        assert_eq!(best.evaluations, 25, "10 init + 15 iterations");
+        assert!(best.value > -0.01, "best={}", best.value);
+    }
+
+    #[test]
+    fn swapped_policies_monomorphize_and_converge() {
+        let mut opt = BoDef::new(1)
+            .kernel(SquaredExpArd::new)
+            .acquisition(Ei::default())
+            .init(crate::init::Lhs { n: 6 })
+            .inner_opt(crate::opt::Cmaes::new(150))
+            .refit(RefitSchedule::Never)
+            .noise(1e-3)
+            .seed(11)
+            .iterations(12)
+            .build_optimizer();
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.71).powi(2)));
+        assert!((best.x[0] - 0.71).abs() < 0.05, "x={:?}", best.x);
+    }
+
+    #[test]
+    fn server_and_optimizer_share_the_definition() {
+        let f = |x: &[f64]| -(x[0] - 0.6).powi(2);
+        let def = || BoDef::new(1).seed(9).init_samples(4).refit(RefitSchedule::Never);
+        let mut opt = def().iterations(8).build_optimizer();
+        let best = opt.optimize(&FnEval::new(1, f));
+        let mut srv = def().build_server();
+        for _ in 0..12 {
+            let x = srv.ask();
+            let y = f(&x);
+            srv.tell(&x, y);
+        }
+        // same definition, same seed, same budget: identical outcome
+        let (sx, sv) = srv.best().unwrap();
+        assert_eq!(best.x, sx);
+        assert_eq!(best.value, sv);
+    }
+
+    #[test]
+    fn bounded_definition_optimizes_in_user_coordinates() {
+        let mut opt = BoDef::new(1)
+            .bounds(&[(-4.0, 4.0)])
+            .seed(5)
+            .refit(RefitSchedule::Never)
+            .iterations(15)
+            .build_optimizer();
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 1.5).powi(2)));
+        assert!((best.x[0] - 1.5).abs() < 0.1, "x={:?}", best.x);
+        assert!((-4.0..=4.0).contains(&best.x[0]));
+    }
+
+    #[test]
+    fn hp_config_reaches_the_built_model() {
+        let opt = BoDef::new(1)
+            .hp_config(HpOptConfig { restarts: 7, iterations: 9, ..Default::default() })
+            .build_optimizer();
+        assert_eq!(opt.core.model.hp_opt.config.restarts, 7);
+        assert_eq!(opt.core.model.hp_opt.config.iterations, 9);
+        let srv = BoDef::service(1)
+            .hp_config(HpOptConfig { restarts: 5, ..Default::default() })
+            .build_adaptive_server();
+        assert_eq!(srv.core.model.as_dense().unwrap().hp_opt.config.restarts, 5);
+    }
+
+    #[test]
+    fn adaptive_server_builds_and_runs() {
+        let mut srv = BoDef::new(1).seed(21).init(crate::init::NoInit).build_adaptive_server();
+        for _ in 0..8 {
+            let x = srv.ask();
+            let y = -(x[0] - 0.2).powi(2);
+            srv.tell(&x, y);
+        }
+        assert_eq!(srv.core.model.n_samples(), 8);
+        assert!(srv.best().unwrap().1 > -0.1);
+    }
+}

@@ -1,34 +1,46 @@
-//! The Bayesian-optimization template loop — `limbo::bayes_opt::BOptimizer`.
+//! The Bayesian-optimization template loop — `limbo::bayes_opt`.
 //!
-//! `BOptimizer<M, A, I, O, S>` is generic over its five policies (model,
-//! acquisition, initializer, inner optimizer, stopping criterion), so the
-//! whole optimization loop is **monomorphized**: swapping a component is a
-//! type change, not a virtual call — exactly the paper's policy-based C++
-//! design mapped to Rust generics. The dynamic-dispatch mirror of this
-//! loop lives in [`crate::baseline`] (the Figure-1 comparator).
+//! [`BoCore`] (in [`mod@core`]) is the single ask/tell engine: it owns
+//! the loop state machine (initial design → fit → propose → observe →
+//! refit → incumbent tracking) and dispatches typed [`BoEvent`]s to
+//! [`Observer`]s. [`BOptimizer`] is the run-to-completion frontend over
+//! it, generic over its policies (model, acquisition, initializer,
+//! inner optimizer, stopping criterion), so the whole loop is
+//! **monomorphized**: swapping a component is a type change, not a
+//! virtual call — exactly the paper's policy-based C++ design mapped to
+//! Rust generics. [`BoDef`] (in [`mod@def`]) is the declarative builder
+//! that assembles either this frontend or the ask/tell server from one
+//! definition. The dynamic-dispatch mirror lives in [`crate::baseline`]
+//! (the Figure-1 comparator) — driving the *same* core.
 //!
 //! ```no_run
 //! use limbo::prelude::*;
 //! let f = |x: &[f64]| -x.iter().map(|&v| v * v * (2.0 * v).sin()).sum::<f64>();
-//! let mut opt = BOptimizer::with_defaults(2, 42);
+//! let mut opt = BoDef::new(2).seed(42).build_optimizer();
 //! let best = opt.optimize(&FnEval::new(2, f));
 //! println!("best {:?} -> {}", best.x, best.value);
 //! ```
 
-use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ucb};
+pub mod core;
+pub mod def;
+
+pub use self::core::{BatchStrategy, BoCore, BoEvent, Domain, Observer, RefitSchedule};
+pub use self::def::{BoDef, DefaultInnerOpt};
+
+use crate::acqui::{AcquiFn, Ucb};
 use crate::init::{Initializer, RandomSampling};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{gp::Gp, AdaptiveModel, Model};
-use crate::opt::{NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
-use crate::rng::Pcg64;
+use crate::opt::{NelderMead, Optimizer, ParallelRepeater, RandomPoint};
 use crate::stat::RunLogger;
-use crate::stop::{MaxIterations, StopContext, StopCriterion};
+use crate::stop::{MaxIterations, StopCriterion};
 
 /// Result of an optimization run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Best {
-    /// Best input found (in `[0, 1]^dim`).
+    /// Best input found, in user coordinates (the unit cube unless a
+    /// [`Domain`] was configured).
     pub x: Vec<f64>,
     /// Best observed value.
     pub value: f64,
@@ -69,7 +81,13 @@ impl<F: Fn(&[f64]) -> f64 + Sync> Evaluator for FnEval<F> {
     }
 }
 
-/// How often hyper-parameters are re-fit (ML-II) during the run.
+/// How often hyper-parameters were re-fit before the schedules were
+/// unified; superseded by [`RefitSchedule`], which every entry point
+/// (optimizer, server, baseline) now shares.
+#[deprecated(
+    since = "0.2.0",
+    note = "use RefitSchedule (adds the service's Doubling schedule) with with_refit"
+)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HpSchedule {
     /// Never re-fit (fixed hyper-parameters).
@@ -78,7 +96,19 @@ pub enum HpSchedule {
     Every(usize),
 }
 
-/// The statically-composed Bayesian optimizer.
+#[allow(deprecated)]
+impl From<HpSchedule> for RefitSchedule {
+    fn from(schedule: HpSchedule) -> RefitSchedule {
+        match schedule {
+            HpSchedule::Never => RefitSchedule::Never,
+            HpSchedule::Every(k) => RefitSchedule::Every(k),
+        }
+    }
+}
+
+/// The statically-composed, run-to-completion Bayesian optimizer: an
+/// initializer, a stop criterion and an [`Evaluator`]-driving loop on
+/// top of the shared [`BoCore`] engine.
 pub struct BOptimizer<M, A, I, O, S>
 where
     M: Model,
@@ -87,22 +117,13 @@ where
     O: Optimizer,
     S: StopCriterion,
 {
-    /// Surrogate model (fitted in place during the run).
-    pub model: M,
-    /// Acquisition function.
-    pub acquisition: A,
+    /// The shared ask/tell engine (model, acquisition, inner optimizer,
+    /// RNG, incumbent, refit schedule, observers).
+    pub core: BoCore<M, A, O>,
     /// Initial-design generator.
     pub initializer: I,
-    /// Inner optimizer maximizing the acquisition each iteration.
-    pub inner_opt: O,
     /// Stop rule.
     pub stop: S,
-    /// Hyper-parameter refit schedule.
-    pub hp_schedule: HpSchedule,
-    /// RNG (seeds the initializer and the inner optimizer).
-    pub rng: Pcg64,
-    /// Optional run logger (samples/observations/best traces).
-    pub stats: Option<RunLogger>,
 }
 
 /// The default configuration's concrete type (Matérn-5/2 GP + data mean,
@@ -117,19 +138,12 @@ pub type DefaultBOptimizer = BOptimizer<
 
 impl DefaultBOptimizer {
     /// The library defaults the quickstart uses: 10 random init samples,
-    /// UCB(0.5), Matérn-5/2 GP with data mean and 1e-10..ish noise,
-    /// 8 parallel restarts of random-then-Nelder-Mead, 40 iterations.
+    /// UCB(0.5), Matérn-5/2 GP with data mean, 8 parallel restarts of
+    /// random-then-Nelder-Mead, 40 iterations, ML-II refits on the
+    /// doubling schedule from n = 16.
+    #[deprecated(since = "0.2.0", note = "use BoDef::new(dim).seed(seed).build_optimizer()")]
     pub fn with_defaults(dim: usize, seed: u64) -> Self {
-        BOptimizer {
-            model: Gp::new(Matern52::new(dim), DataMean::default(), 1e-4),
-            acquisition: Ucb::default(),
-            initializer: RandomSampling { n: 10 },
-            inner_opt: RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
-            stop: MaxIterations(40),
-            hp_schedule: HpSchedule::Never,
-            rng: Pcg64::seed(seed),
-            stats: None,
-        }
+        BoDef::new(dim).seed(seed).build_optimizer()
     }
 }
 
@@ -149,17 +163,12 @@ impl AdaptiveBOptimizer {
     /// Defaults for runs whose budget exceeds a few hundred evaluations
     /// (`iterations` sets the stop rule; the model switches to sparse on
     /// its own past [`crate::model::sgp::DEFAULT_SPARSE_THRESHOLD`]).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use BoDef::new(dim).seed(seed).iterations(n).build_adaptive_optimizer()"
+    )]
     pub fn with_adaptive_defaults(dim: usize, seed: u64, iterations: usize) -> Self {
-        BOptimizer {
-            model: AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-4),
-            acquisition: Ucb::default(),
-            initializer: RandomSampling { n: 10 },
-            inner_opt: RandomPoint::new(256).then(NelderMead::default()).restarts(8, 4),
-            stop: MaxIterations(iterations),
-            hp_schedule: HpSchedule::Never,
-            rng: Pcg64::seed(seed),
-            stats: None,
-        }
+        BoDef::new(dim).seed(seed).iterations(iterations).build_adaptive_optimizer()
     }
 }
 
@@ -171,7 +180,14 @@ where
     O: Optimizer,
     S: StopCriterion,
 {
-    /// Compose an optimizer from explicit components.
+    /// Compose an optimizer from explicit components. (The declarative
+    /// route is [`BoDef`], which builds the same concrete types.)
+    ///
+    /// The problem dimensionality is taken from `model.dim()`; a model
+    /// that only learns its dimension from data (e.g. the baseline's
+    /// `DynGp`) must be driven through [`BoCore`] directly with an
+    /// explicit dimension — [`optimize`](Self::optimize) checks the
+    /// evaluator against the core's dimension and panics on a mismatch.
     pub fn new(
         model: M,
         acquisition: A,
@@ -180,89 +196,92 @@ where
         stop: S,
         seed: u64,
     ) -> Self {
-        Self {
-            model,
-            acquisition,
-            initializer,
-            inner_opt,
-            stop,
-            hp_schedule: HpSchedule::Never,
-            rng: Pcg64::seed(seed),
-            stats: None,
-        }
+        let dim = model.dim();
+        Self { core: BoCore::new(model, acquisition, inner_opt, dim, seed), initializer, stop }
+    }
+
+    /// Set the hyper-parameter refit schedule.
+    pub fn with_refit(mut self, schedule: RefitSchedule) -> Self {
+        self.core = self.core.with_refit(schedule);
+        self
+    }
+
+    /// Set the search domain (user bounds mapped to the unit cube).
+    pub fn with_domain(mut self, domain: Domain) -> Self {
+        self.core = self.core.with_domain(domain);
+        self
+    }
+
+    /// Subscribe a run observer.
+    pub fn with_observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.core = self.core.with_observer(observer);
+        self
     }
 
     /// Enable periodic ML-II hyper-parameter refits.
-    pub fn with_hp_schedule(mut self, schedule: HpSchedule) -> Self {
-        self.hp_schedule = schedule;
-        self
+    #[deprecated(since = "0.2.0", note = "use with_refit(RefitSchedule)")]
+    #[allow(deprecated)]
+    pub fn with_hp_schedule(self, schedule: HpSchedule) -> Self {
+        self.with_refit(schedule.into())
     }
 
     /// Attach a run logger.
-    pub fn with_stats(mut self, logger: RunLogger) -> Self {
-        self.stats = Some(logger);
-        self
+    #[deprecated(
+        since = "0.2.0",
+        note = "use with_observer(logger) — RunLogger implements Observer"
+    )]
+    pub fn with_stats(self, logger: RunLogger) -> Self {
+        self.with_observer(logger)
     }
 
     /// Run the full loop: initialization, then model-guided sampling until
     /// the stop criterion fires. Returns the best sample found.
+    ///
+    /// A second call continues the same model but re-runs the full
+    /// budget — a fresh initial design is drawn and the stop criterion
+    /// sees iteration/evaluation counts relative to the call (the
+    /// incumbent, like the model, persists across calls).
     pub fn optimize(&mut self, f: &impl Evaluator) -> Best {
-        let dim = f.dim();
-        let mut best = Best { x: vec![0.5; dim], value: f64::NEG_INFINITY, evaluations: 0 };
-        let mut evals = 0usize;
+        let dim = self.core.dim();
+        assert_eq!(
+            f.dim(),
+            dim,
+            "evaluator dim must match the optimizer dim (a dim-0 core means the \
+             model did not know its dimension at construction)"
+        );
+        let call_start_iterations = self.core.iteration();
+        let call_start_evaluations = self.core.evaluations();
 
         // ---- initialization phase ----
-        for x in self.initializer.points(dim, &mut self.rng) {
-            let y = f.eval(&x);
-            evals += 1;
-            self.model.add_sample(&x, y);
-            if y > best.value {
-                best = Best { x: x.clone(), value: y, evaluations: evals };
-            }
-            if let Some(log) = &mut self.stats {
-                log.log_sample(evals, &x, y, best.value);
-            }
+        // (skipped only when a definition-built core already queued a
+        // design for this call)
+        if self.core.init_pending() == 0 {
+            let design = self.initializer.points(dim, &mut self.core.rng);
+            self.core.seed_design(design);
         }
-        if self.hp_schedule != HpSchedule::Never && self.model.n_samples() >= 2 {
-            self.model.optimize_hyperparams();
+        while self.core.init_pending() > 0 {
+            let x = self.core.propose();
+            let y = f.eval(&x);
+            self.core.observe(&x, y);
         }
 
         // ---- model-guided loop ----
-        let mut iteration = 0usize;
         loop {
-            let ctx = StopContext { iteration, evaluations: evals, best: best.value };
+            let mut ctx = self.core.stop_context();
+            ctx.iteration -= call_start_iterations;
+            ctx.evaluations -= call_start_evaluations;
             if self.stop.stop(&ctx) {
                 break;
             }
-            // batched acquisition objective: population-based inner
-            // optimizers score whole generations through eval_many →
-            // predict_batch instead of per-point predicts
-            let actx = AcquiContext::new(iteration, best.value, dim);
-            let objective = AcquiObjective::new(&self.model, &self.acquisition, actx);
-            let cand = self.inner_opt.optimize(&objective, dim, &mut self.rng);
-
-            let y = f.eval(&cand.x);
-            evals += 1;
-            self.model.add_sample(&cand.x, y);
-            if y > best.value {
-                best = Best { x: cand.x.clone(), value: y, evaluations: evals };
-            }
-            if let Some(log) = &mut self.stats {
-                log.log_sample(evals, &cand.x, y, best.value);
-            }
-            if let HpSchedule::Every(k) = self.hp_schedule {
-                if k > 0 && (iteration + 1) % k == 0 {
-                    self.model.optimize_hyperparams();
-                }
-            }
-            iteration += 1;
+            let x = self.core.propose();
+            let y = f.eval(&x);
+            self.core.observe(&x, y);
         }
 
-        best.evaluations = evals;
-        if let Some(log) = &mut self.stats {
-            log.finish(dim, evals);
-        }
-        best
+        self.core.finish();
+        let midpoint = self.core.domain().from_unit(&vec![0.5; dim]);
+        let (x, value) = self.core.best().unwrap_or((midpoint, f64::NEG_INFINITY));
+        Best { x, value, evaluations: self.core.evaluations() - call_start_evaluations }
     }
 }
 
@@ -272,7 +291,8 @@ mod tests {
     use crate::acqui::Ei;
     use crate::kernel::SquaredExpArd;
     use crate::mean::ZeroMean;
-    use crate::opt::Cmaes;
+    use crate::model::SgpConfig;
+    use crate::opt::{Cmaes, OptimizerExt};
     use crate::stop::TargetReached;
 
     /// The paper's example function (maximum 0 at x = 0 boundary is NOT
@@ -285,10 +305,20 @@ mod tests {
 
     #[test]
     fn default_optimizer_solves_paper_example() {
-        let mut opt = BOptimizer::with_defaults(2, 7);
+        let mut opt = BoDef::new(2).seed(7).build_optimizer();
         let best = opt.optimize(&FnEval::new(2, my_fun));
         assert!(best.value > -0.01, "best={}", best.value);
         assert_eq!(best.evaluations, 50); // 10 init + 40 iterations
+    }
+
+    #[test]
+    fn deprecated_defaults_shim_builds_the_same_type() {
+        #[allow(deprecated)]
+        let mut opt = BOptimizer::with_defaults(2, 7);
+        let best = opt.optimize(&FnEval::new(2, my_fun));
+        let mut via_def = BoDef::new(2).seed(7).build_optimizer();
+        let best_def = via_def.optimize(&FnEval::new(2, my_fun));
+        assert_eq!(best, best_def, "shim must be a pure alias of the builder");
     }
 
     #[test]
@@ -303,27 +333,66 @@ mod tests {
             MaxIterations(15),
             3,
         );
-        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| {
-            -(x[0] - 0.73).powi(2)
-        }));
+        let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.73).powi(2)));
         assert!((best.x[0] - 0.73).abs() < 0.05, "x={:?}", best.x);
     }
 
     #[test]
     fn adaptive_optimizer_goes_sparse_and_still_converges() {
-        let mut opt = AdaptiveBOptimizer::with_adaptive_defaults(1, 13, 30);
+        let mut opt = BoDef::new(1).seed(13).iterations(30).build_adaptive_optimizer();
         // force an early dense→sparse migration so the sparse path drives
         // most of the run (keeps the test fast)
-        opt.model = AdaptiveModel::new(Matern52::new(1), DataMean::default(), 1e-4)
+        opt.core.model = AdaptiveModel::new(Matern52::new(1), DataMean::default(), 1e-4)
             .with_threshold(15)
-            .with_sparse_config(crate::model::SgpConfig {
-                max_inducing: 24,
-                ..Default::default()
-            });
+            .with_sparse_config(SgpConfig { max_inducing: 24, ..Default::default() });
         let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.37).powi(2)));
-        assert!(opt.model.is_sparse(), "model should have migrated");
+        assert!(opt.core.model.is_sparse(), "model should have migrated");
         assert!(best.value > -0.01, "best={}", best.value);
         assert_eq!(best.evaluations, 40); // 10 init + 30 iterations
+    }
+
+    #[test]
+    fn optimize_reruns_with_a_fresh_budget() {
+        let mut opt = BoDef::new(1)
+            .seed(19)
+            .init_samples(4)
+            .refit(RefitSchedule::Never)
+            .iterations(5)
+            .build_optimizer();
+        let f = FnEval::new(1, |x: &[f64]| -(x[0] - 0.5).powi(2));
+        let first = opt.optimize(&f);
+        assert_eq!(first.evaluations, 9, "4 init + 5 iterations");
+        // a second call must re-run the full budget on the same model,
+        // not silently no-op against the exhausted stop criterion
+        let second = opt.optimize(&f);
+        assert_eq!(second.evaluations, 9, "rerun evaluates a fresh 4 + 5 budget");
+        assert_eq!(opt.core.model.n_samples(), 18, "model accumulates across calls");
+        assert!(second.value >= first.value, "incumbent persists across calls");
+    }
+
+    #[test]
+    fn warm_start_tells_do_not_eat_the_init_budget() {
+        // out-of-band observations before the design is served must be
+        // counted as model-guided, not as init points (the refit
+        // schedule and GP-UCB beta depend on the iteration counter)
+        let mut core = BoCore::new(
+            Gp::new(Matern52::new(1), DataMean::default(), 1e-3),
+            Ucb::default(),
+            RandomPoint::new(16),
+            1,
+            5,
+        );
+        core.seed_design(vec![vec![0.2], vec![0.8]]);
+        core.observe(&[0.5], -1.0); // warm start, design still queued
+        assert_eq!(core.iteration(), 1, "warm tell is a model-guided iteration");
+        let a = core.propose();
+        assert_eq!(a, vec![0.2], "design still served in order");
+        core.observe(&a, -2.0);
+        assert_eq!(core.iteration(), 1, "design observation is not an iteration");
+        let b = core.propose();
+        core.observe(&b, -3.0);
+        assert_eq!(core.init_pending(), 0);
+        assert_eq!(core.evaluations(), 3);
     }
 
     #[test]
@@ -343,7 +412,7 @@ mod tests {
     }
 
     #[test]
-    fn hp_schedule_runs_and_still_converges() {
+    fn refit_schedule_runs_and_still_converges() {
         let model = Gp::new(SquaredExpArd::new(1), DataMean::default(), 1e-3);
         let mut opt = BOptimizer::new(
             model,
@@ -353,20 +422,32 @@ mod tests {
             MaxIterations(12),
             5,
         )
-        .with_hp_schedule(HpSchedule::Every(3));
+        .with_refit(RefitSchedule::Every(3));
         let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.4).powi(2)));
         assert!(best.value > -0.01, "best={}", best.value);
     }
 
     #[test]
-    fn logs_when_stats_attached() {
+    fn deprecated_hp_schedule_maps_onto_refit_schedule() {
+        #[allow(deprecated)]
+        {
+            assert_eq!(RefitSchedule::from(HpSchedule::Never), RefitSchedule::Never);
+            assert_eq!(RefitSchedule::from(HpSchedule::Every(4)), RefitSchedule::Every(4));
+        }
+    }
+
+    #[test]
+    fn logs_when_observer_attached() {
         let dir = std::env::temp_dir().join("limbo_bo_stats_test");
         let _ = std::fs::remove_dir_all(&dir);
-        let mut opt = BOptimizer::with_defaults(1, 1);
-        opt.stop = MaxIterations(3);
-        opt.stats = Some(RunLogger::create(&dir).unwrap());
+        let mut opt = BoDef::new(1)
+            .seed(1)
+            .iterations(3)
+            .observer(RunLogger::create(&dir).unwrap())
+            .build_optimizer();
         let _ = opt.optimize(&FnEval::new(1, |x: &[f64]| -x[0]));
         let best_file = std::fs::read_to_string(dir.join("best.dat")).unwrap();
         assert_eq!(best_file.lines().count(), 13); // 10 init + 3 iters
+        assert!(dir.join("meta.dat").exists(), "Stopped event flushes the footer");
     }
 }

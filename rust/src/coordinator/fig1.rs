@@ -9,13 +9,11 @@
 
 use crate::acqui::Ei;
 use crate::baseline::{BayesOptLike, BayesOptLikeConfig};
-use crate::bayes_opt::{BOptimizer, FnEval, HpSchedule};
+use crate::bayes_opt::{BoDef, FnEval, RefitSchedule};
 use crate::benchfns::TestFunction;
 use crate::coordinator::experiment::{BenchConfig, RunOutcome};
 use crate::init::Lhs;
-use crate::kernel::Matern52;
-use crate::mean::DataMean;
-use crate::model::gp::Gp;
+use crate::model::HpOptConfig;
 use crate::opt::Direct;
 use crate::stop::MaxIterations;
 
@@ -76,20 +74,20 @@ impl BenchConfig for LimboConfig {
     fn run(&self, f: &dyn TestFunction, seed: u64) -> RunOutcome {
         let s = &self.settings;
         let dim = f.dim();
-        let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), s.noise);
-        gp.hp_opt.config.iterations = s.hp_iters;
-        gp.hp_opt.config.restarts = 1;
-        let mut opt = BOptimizer::new(
-            gp,
-            Ei::default(),
-            Lhs { n: s.n_init },
-            Direct::new(s.inner_evals),
-            MaxIterations(s.iterations),
-            seed,
-        );
-        if let Some(k) = s.hp_every {
-            opt = opt.with_hp_schedule(HpSchedule::Every(k));
-        }
+        let refit = match s.hp_every {
+            Some(k) => RefitSchedule::Every(k),
+            None => RefitSchedule::Never,
+        };
+        let mut opt = BoDef::new(dim)
+            .noise(s.noise)
+            .acquisition(Ei::default())
+            .init(Lhs { n: s.n_init })
+            .inner_opt(Direct::new(s.inner_evals))
+            .stop(MaxIterations(s.iterations))
+            .refit(refit)
+            .hp_config(HpOptConfig { iterations: s.hp_iters, restarts: 1, ..Default::default() })
+            .seed(seed)
+            .build_optimizer();
         let best = opt.optimize(&FnEval::new(dim, |x: &[f64]| f.eval(x)));
         RunOutcome::ok(best.value, best.evaluations)
     }

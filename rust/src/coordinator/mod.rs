@@ -10,8 +10,9 @@
 //!   AOT-compiled artifacts;
 //! * [`service`] — ask/tell suggestion server (channel-based, the online
 //!   adaptation deployment mode: the robot asks for a trial, reports the
-//!   outcome, asks again), with q-point batch proposals via the constant
-//!   liar or joint-posterior Monte-Carlo qEI
+//!   outcome, asks again), a thin frontend over the shared
+//!   [`crate::bayes_opt::BoCore`] engine with q-point batch proposals
+//!   via the constant liar or joint-posterior Monte-Carlo qEI
 //!   ([`service::BatchStrategy`]);
 //! * [`batched_opt`] — batched UCB acquisition search for the XLA
 //!   backend, now a thin adapter over the generic

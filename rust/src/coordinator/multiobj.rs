@@ -7,11 +7,12 @@
 //! single-objective GP on the scalarized history. A Pareto [`Archive`]
 //! keeps the non-dominated set.
 
-use crate::acqui::{AcquiContext, AcquiObjective, Ucb};
+use crate::acqui::Ucb;
+use crate::bayes_opt::core::BoCore;
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{gp::Gp, Model};
-use crate::opt::{NelderMead, Optimizer, OptimizerExt, RandomPoint};
+use crate::opt::{NelderMead, OptimizerExt, RandomPoint};
 use crate::rng::Pcg64;
 
 /// A vector-valued objective (all components maximized).
@@ -118,6 +119,12 @@ impl ParEgo {
     }
 
     /// Run; returns the final Pareto archive.
+    ///
+    /// Each iteration re-scalarizes the history under a fresh weight
+    /// vector, refits the shared core's GP on it, and asks the core for
+    /// one acquisition step — ParEGO owns the scalarization and the
+    /// Pareto archive, while the propose/observe machinery is the same
+    /// [`BoCore`] every other entry point drives.
     pub fn optimize(&mut self, f: &dyn MultiEvaluator) -> Archive {
         let dim = f.dim_in();
         let k = f.dim_out();
@@ -125,38 +132,47 @@ impl ParEgo {
         let mut xs: Vec<Vec<f64>> = Vec::new();
         let mut objs: Vec<Vec<f64>> = Vec::new();
 
+        let mut core = BoCore::new(
+            Gp::new(Matern52::new(dim), DataMean::default(), 1e-3),
+            Ucb::default(),
+            RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
+            dim,
+            0,
+        );
+        // continue this instance's RNG stream across optimize() calls
+        core.rng = self.rng.clone();
+
         for _ in 0..self.n_init {
-            let x = self.rng.unit_point(dim);
+            let x = core.rng.unit_point(dim);
             let o = f.eval(&x);
             archive.insert(x.clone(), o.clone());
             xs.push(x);
             objs.push(o);
         }
 
-        for it in 0..self.iterations {
+        for _ in 0..self.iterations {
             // random weight vector on the simplex
-            let mut w: Vec<f64> = (0..k).map(|_| -self.rng.next_f64().ln()).collect();
+            let mut w: Vec<f64> = (0..k).map(|_| -core.rng.next_f64().ln()).collect();
             let sum: f64 = w.iter().sum();
             for wi in w.iter_mut() {
                 *wi /= sum;
             }
-            // scalarize history and fit a fresh GP
+            // scalarize history, refit the core's GP on it, and re-seed
+            // the incumbent so the acquisition thresholds against the
+            // *current* scalarization (the previous iteration's
+            // observation used different weights)
             let ys: Vec<f64> = objs.iter().map(|o| tchebycheff(o, &w, self.rho)).collect();
-            let mut gp = Gp::new(Matern52::new(dim), DataMean::default(), 1e-3);
-            gp.fit(&xs, &ys);
-            let best_scalar = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            core.model.fit(&xs, &ys);
+            core.refresh_incumbent();
 
-            let inner = RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2);
-            let ctx = AcquiContext::new(it, best_scalar, dim);
-            let acq = Ucb::default();
-            let objective = AcquiObjective::new(&gp, &acq, ctx);
-            let cand = inner.optimize(&objective, dim, &mut self.rng);
-
-            let o = f.eval(&cand.x);
-            archive.insert(cand.x.clone(), o.clone());
-            xs.push(cand.x);
+            let x = core.propose();
+            let o = f.eval(&x);
+            archive.insert(x.clone(), o.clone());
+            core.observe(&x, tchebycheff(&o, &w, self.rho));
+            xs.push(x);
             objs.push(o);
         }
+        self.rng = core.rng.clone();
         archive
     }
 }

@@ -7,53 +7,35 @@
 //! the acquisition maximization, and communicates over `mpsc` channels
 //! from a dedicated thread.
 //!
+//! The loop itself is not implemented here: [`AskTellServer`] is a thin
+//! frontend over the shared [`BoCore`] engine — `ask`/`tell` are
+//! `propose`/`observe`, so the server, [`crate::bayes_opt::BOptimizer`]
+//! and the [`crate::baseline`] comparator all run the *same*
+//! propose/observe/refit state machine (same [`RefitSchedule`], same
+//! incumbent rules, same [`BatchStrategy`] q-point proposals, same
+//! [`crate::bayes_opt::Observer`] event bus). A server built from a
+//! [`crate::bayes_opt::BoDef`] additionally serves the definition's
+//! initial design from its first asks, making its trace bit-identical
+//! to the run-to-completion frontend for the same seed.
+//!
 //! [`AskTellServer::ask_batch`] extends the protocol to q-point proposals
 //! so the server can drive a fleet of parallel evaluators — robot farms,
-//! cluster workers — instead of one trial at a time. Two proposal
-//! strategies are available ([`BatchStrategy`]):
-//!
-//! * [`BatchStrategy::ConstantLiar`] (default) — after each pointwise
-//!   maximization the model is told its own posterior mean at the
-//!   proposed point (the "lie") and the acquisition is re-maximized;
-//!   cheap (q ordinary maximizations) and latency-friendly, but the
-//!   joint posterior correlation between batch points never enters the
-//!   score.
-//! * [`BatchStrategy::QEi`] — Monte-Carlo multi-point expected
-//!   improvement over the **joint** posterior
-//!   ([`crate::acqui::batch::QEi`], common random numbers frozen per
-//!   proposal): strongly correlated points share a sample path and score
-//!   barely better than one of them, so diversity is rewarded exactly
-//!   where the posterior says it matters. Costs roughly
-//!   `mc_samples`× more per objective evaluation than a pointwise EI —
-//!   pick it when trials are expensive relative to proposal compute
-//!   (the regime the paper's robot deployments live in).
+//! cluster workers — instead of one trial at a time; see
+//! [`BatchStrategy`] for the constant-liar vs joint-posterior qEI
+//! tradeoff.
 
 use std::sync::mpsc;
 use std::thread;
 
-use crate::acqui::batch::{propose_batch_qei, QEi};
-use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective, Ucb};
+use crate::acqui::{AcquiFn, Ucb};
+use crate::bayes_opt::core::{BoCore, Domain, Observer, RefitSchedule};
+use crate::bayes_opt::BoDef;
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{AdaptiveModel, Model};
-use crate::opt::{Chained, NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
-use crate::rng::Pcg64;
+use crate::opt::{Chained, NelderMead, Optimizer, ParallelRepeater, RandomPoint};
 
-/// How [`AskTellServer::ask_batch`] turns one model posterior into `q`
-/// parallel trial proposals (see the module docs for the tradeoff).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum BatchStrategy {
-    /// Greedy pointwise re-maximization with posterior-mean lies.
-    #[default]
-    ConstantLiar,
-    /// Monte-Carlo joint-posterior qEI with `mc_samples` frozen
-    /// antithetic common-random-number draws per proposal round.
-    QEi {
-        /// MC draws per acquisition evaluation (rounded down to even;
-        /// 256–1024 is a good range — noise shrinks as `1/sqrt`).
-        mc_samples: usize,
-    },
-}
+pub use crate::bayes_opt::core::BatchStrategy;
 
 /// Requests a client can send.
 enum Request {
@@ -75,23 +57,8 @@ where
     A: AcquiFn<M>,
     O: Optimizer,
 {
-    /// Surrogate model.
-    pub model: M,
-    /// Acquisition policy.
-    pub acquisition: A,
-    /// Inner optimizer.
-    pub inner_opt: O,
-    /// RNG.
-    pub rng: Pcg64,
-    dim: usize,
-    iteration: usize,
-    best: Option<(Vec<f64>, f64)>,
-    /// Next observation count at which the model re-optimizes its
-    /// hyper-parameters (`None` = never). Doubles past the current count
-    /// after each refit.
-    next_hp_refit: Option<usize>,
-    /// q-point proposal strategy for [`ask_batch`](Self::ask_batch).
-    batch_strategy: BatchStrategy,
+    /// The shared ask/tell engine this server fronts.
+    pub core: BoCore<M, A, O>,
 }
 
 /// The default service configuration: an [`AdaptiveModel`] surrogate
@@ -106,15 +73,12 @@ pub type DefaultAskTellServer = AskTellServer<
 
 impl DefaultAskTellServer {
     /// Service defaults for a `dim`-dimensional problem.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use BoDef::service(dim).seed(seed).build_adaptive_server()"
+    )]
     pub fn with_defaults(dim: usize, seed: u64) -> Self {
-        AskTellServer::new(
-            AdaptiveModel::new(Matern52::new(dim), DataMean::default(), 1e-3),
-            Ucb::default(),
-            RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
-            dim,
-            seed,
-        )
-        .with_hp_refits(16)
+        BoDef::service(dim).seed(seed).build_adaptive_server()
     }
 }
 
@@ -129,164 +93,86 @@ where
     /// `ask` ran EI/UCB against a `-inf` incumbent and
     /// [`best`](Self::best) lied `None` until the first `tell`.
     pub fn new(model: M, acquisition: A, inner_opt: O, dim: usize, seed: u64) -> Self {
-        let best = model.best_sample();
-        Self {
-            model,
-            acquisition,
-            inner_opt,
-            rng: Pcg64::seed(seed),
-            dim,
-            iteration: 0,
-            best,
-            next_hp_refit: None,
-            batch_strategy: BatchStrategy::default(),
-        }
+        Self { core: BoCore::new(model, acquisition, inner_opt, dim, seed) }
     }
 
     /// Select the q-point proposal strategy for
     /// [`ask_batch`](Self::ask_batch).
     pub fn with_batch_strategy(mut self, strategy: BatchStrategy) -> Self {
-        self.batch_strategy = strategy;
+        self.core = self.core.with_batch_strategy(strategy);
         self
     }
 
-    /// Incumbent value for the acquisition context: the tracked best,
-    /// else the model's own best observation (a pre-fitted model whose
-    /// argmax is unknown — e.g. restored value-only state — must still
-    /// threshold EI correctly), else `-inf` (no data at all).
-    fn incumbent_value(&self) -> f64 {
-        self.best
-            .as_ref()
-            .map(|b| b.1)
-            .or_else(|| self.model.best_observation())
-            .unwrap_or(f64::NEG_INFINITY)
-    }
-
-    /// Enable ML-II hyper-parameter refits on a doubling schedule: the
-    /// model re-optimizes when the observation count first reaches
-    /// `first`, then at 2·`first`, 4·`first`, ... — O(log n) refits over
-    /// an unbounded run. Once the [`AdaptiveModel`] has gone sparse each
-    /// refit maximizes the **exact FITC marginal likelihood** (O(n·m²)
-    /// per iRprop⁻ step), so the always-on service fits the objective it
-    /// actually serves rather than a dense-subset proxy.
-    pub fn with_hp_refits(mut self, first: usize) -> Self {
-        self.next_hp_refit = Some(first.max(2));
+    /// Set the hyper-parameter refit schedule. The service default
+    /// (via [`crate::bayes_opt::BoDef`]) is
+    /// `RefitSchedule::Doubling { first: 16 }`: O(log n) ML-II refits
+    /// over an unbounded run, each maximizing the **exact FITC marginal
+    /// likelihood** once the [`AdaptiveModel`] has gone sparse.
+    pub fn with_refit(mut self, schedule: RefitSchedule) -> Self {
+        self.core = self.core.with_refit(schedule);
         self
     }
 
-    /// Next suggested trial. Before any data: a random probe.
+    /// Set the search domain (user bounds mapped to the unit cube).
+    pub fn with_domain(mut self, domain: Domain) -> Self {
+        self.core = self.core.with_domain(domain);
+        self
+    }
+
+    /// Subscribe a run observer.
+    pub fn with_observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.core = self.core.with_observer(observer);
+        self
+    }
+
+    /// Enable ML-II hyper-parameter refits on a doubling schedule.
+    #[deprecated(since = "0.2.0", note = "use with_refit(RefitSchedule::Doubling { first })")]
+    pub fn with_hp_refits(self, first: usize) -> Self {
+        self.with_refit(RefitSchedule::Doubling { first })
+    }
+
+    /// Incumbent value for the acquisition context (see
+    /// [`BoCore::incumbent_value`]).
+    pub fn incumbent_value(&self) -> f64 {
+        self.core.incumbent_value()
+    }
+
+    /// Next suggested trial: a queued initial-design point if the server
+    /// was built from a definition with one, a random probe before any
+    /// data, else the acquisition maximizer.
     pub fn ask(&mut self) -> Vec<f64> {
-        if self.model.n_samples() == 0 {
-            return self.rng.unit_point(self.dim);
-        }
-        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
-        let objective = AcquiObjective::new(&self.model, &self.acquisition, ctx);
-        self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+        self.core.propose()
     }
 
     /// Propose `q` diverse trials to run in parallel, using the
     /// configured [`BatchStrategy`] (constant liar by default; see
-    /// [`with_batch_strategy`](Self::with_batch_strategy) and the module
-    /// docs for the tradeoff). Before any data: `q` random probes.
+    /// [`with_batch_strategy`](Self::with_batch_strategy)). Before any
+    /// data: `q` random probes.
     pub fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>>
     where
         M: Clone,
     {
-        let q = q.max(1);
-        if self.model.n_samples() == 0 {
-            return (0..q).map(|_| self.rng.unit_point(self.dim)).collect();
-        }
-        let batch = match self.batch_strategy {
-            BatchStrategy::ConstantLiar => self.ask_batch_constant_liar(q),
-            BatchStrategy::QEi { mc_samples } => self.ask_batch_qei(q, mc_samples),
-        };
-        self.dedupe_batch(batch)
-    }
-
-    /// Constant-liar proposals: after each maximization the model is
-    /// *told its own posterior mean* at the proposed point (the "lie"),
-    /// the acquisition is re-maximized on the lied model, and all lies
-    /// are rolled back at the end (the lies go into a scratch clone;
-    /// `self.model` only ever sees real [`tell`](Self::tell)
-    /// observations). Lying flattens the posterior variance around
-    /// already-proposed points, steering the next maximization elsewhere.
-    fn ask_batch_constant_liar(&mut self, q: usize) -> Vec<Vec<f64>>
-    where
-        M: Clone,
-    {
-        let mut liar = self.model.clone();
-        let mut lied_best = self.incumbent_value();
-        let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
-        for k in 0..q {
-            let ctx = AcquiContext::new(self.iteration + k, lied_best, self.dim);
-            let x = {
-                let objective = AcquiObjective::new(&liar, &self.acquisition, ctx);
-                self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
-            };
-            let (lie, _) = liar.predict(&x);
-            liar.add_sample(&x, lie);
-            lied_best = lied_best.max(lie);
-            batch.push(x);
-        }
-        batch
-    }
-
-    /// Joint-posterior qEI proposals: one frozen-CRN [`QEi`] estimator
-    /// per round (fresh seed per call, deterministic within the call),
-    /// maximized by greedy marginal gains plus a joint refinement pass
-    /// over the flattened `q·d` batch vector
-    /// ([`propose_batch_qei`]). The server's pointwise acquisition is
-    /// not consulted here — qEI *is* the acquisition for the whole batch.
-    fn ask_batch_qei(&mut self, q: usize, mc_samples: usize) -> Vec<Vec<f64>> {
-        let ctx = AcquiContext::new(self.iteration, self.incumbent_value(), self.dim);
-        let seed = self.rng.next_u64();
-        let qei = QEi::new(mc_samples, q, seed);
-        propose_batch_qei(&self.model, &qei, &self.inner_opt, ctx, self.dim, q, &mut self.rng)
-    }
-
-    /// Degenerate acquisition landscapes can propose (near-)coincident
-    /// points despite the lie/joint penalty; replace duplicates with
-    /// random probes so the batch stays diverse (1e-8 squared distance
-    /// ~ 1e-4 per axis).
-    fn dedupe_batch(&mut self, batch: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
-        let mut out: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
-        for x in batch {
-            let duplicate = out.iter().any(|p| {
-                p.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() < 1e-8
-            });
-            out.push(if duplicate { self.rng.unit_point(self.dim) } else { x });
-        }
-        out
+        self.core.propose_batch(q)
     }
 
     /// Report an observation. May trigger a scheduled hyper-parameter
-    /// refit (see [`with_hp_refits`](Self::with_hp_refits)).
+    /// refit (see [`with_refit`](Self::with_refit)).
     pub fn tell(&mut self, x: &[f64], y: f64) {
-        self.model.add_sample(x, y);
-        self.iteration += 1;
-        if self.best.as_ref().map_or(true, |b| y > b.1) {
-            self.best = Some((x.to_vec(), y));
-        }
-        if let Some(next) = self.next_hp_refit {
-            if self.model.n_samples() >= next {
-                self.model.optimize_hyperparams();
-                // advance the schedule past the *current* count: a burst
-                // of tells (the ask_batch workflow) or a pre-fitted model
-                // can leave n >= 2·next, and a single doubling would then
-                // trigger a full ML-II refit on every subsequent tell
-                // until the schedule catches up
-                let mut next = next;
-                while self.model.n_samples() >= next {
-                    next = next.saturating_mul(2);
-                }
-                self.next_hp_refit = Some(next);
-            }
-        }
+        self.core.observe(x, y);
     }
 
     /// Incumbent best.
     pub fn best(&self) -> Option<(Vec<f64>, f64)> {
-        self.best.clone()
+        self.core.best()
+    }
+
+    /// Signal the end of the run to the attached observers
+    /// ([`crate::bayes_opt::BoEvent::Stopped`] — file-writing observers
+    /// flush on it). Idempotent. A spawned server does this on
+    /// shutdown automatically; an inline server's driving loop calls it
+    /// when the run is over.
+    pub fn finish(&mut self) {
+        self.core.finish();
     }
 
     /// Move the server onto its own thread; returns a cloneable handle.
@@ -316,6 +202,8 @@ where
                     Request::Shutdown => break,
                 }
             }
+            // flush file-writing observers before the thread exits
+            self.core.finish();
         });
         ServerHandle { tx, join: Some(join) }
     }
@@ -407,8 +295,9 @@ mod tests {
 
     #[test]
     fn default_server_uses_adaptive_model_and_converges() {
+        #[allow(deprecated)]
         let mut srv = DefaultAskTellServer::with_defaults(1, 17);
-        assert!(!srv.model.is_sparse());
+        assert!(!srv.core.model.is_sparse());
         let f = |x: &[f64]| -(x[0] - 0.8).powi(2);
         for _ in 0..15 {
             let x = srv.ask();
@@ -417,7 +306,7 @@ mod tests {
         }
         let (_, bv) = srv.best().unwrap();
         assert!(bv > -0.02, "best={bv}");
-        assert_eq!(srv.model.n_samples(), 15);
+        assert_eq!(srv.core.model.n_samples(), 15);
     }
 
     #[test]
@@ -441,11 +330,11 @@ mod tests {
         for x in [[0.1], [0.5], [0.9]] {
             srv.tell(&x, f(&x));
         }
-        let n_before = srv.model.n_samples();
+        let n_before = srv.core.model.n_samples();
         let batch = srv.ask_batch(4);
         assert_eq!(batch.len(), 4);
         // the constant-liar lies must not leak into the real model
-        assert_eq!(srv.model.n_samples(), n_before);
+        assert_eq!(srv.core.model.n_samples(), n_before);
         for (i, a) in batch.iter().enumerate() {
             assert!((0.0..=1.0).contains(&a[0]));
             for b in batch.iter().skip(i + 1) {
@@ -489,19 +378,19 @@ mod tests {
         let mut gp = Gp::new(Matern52::new(1), DataMean::default(), 0.05);
         gp.fit(&xs, &ys);
         let mut srv = AskTellServer::new(gp, Ucb::default(), RandomPoint::new(16), 1, 13)
-            .with_hp_refits(16);
-        srv.model.hp_opt.config.restarts = 1;
-        srv.model.hp_opt.config.iterations = 3;
+            .with_refit(RefitSchedule::Doubling { first: 16 });
+        srv.core.model.hp_opt.config.restarts = 1;
+        srv.core.model.hp_opt.config.iterations = 3;
         // a 4-point burst (one ask_batch round's worth of tells)
         for x in [[0.11], [0.31], [0.51], [0.71]] {
             srv.tell(&x, (7.0 * x[0]).sin());
         }
         assert_eq!(
-            srv.model.hp_opt.refits(),
+            srv.core.model.hp_opt.refits(),
             1,
             "one refit for the burst, schedule advanced past n"
         );
-        assert_eq!(srv.next_hp_refit, Some(128), "16 doubled past n=101 in one step");
+        assert_eq!(srv.core.next_refit(), Some(128), "16 doubled past n=101 in one step");
     }
 
     #[test]
@@ -513,11 +402,11 @@ mod tests {
         for x in [[0.1], [0.5], [0.9]] {
             srv.tell(&x, f(&x));
         }
-        let n_before = srv.model.n_samples();
+        let n_before = srv.core.model.n_samples();
         let batch = srv.ask_batch(4);
         assert_eq!(batch.len(), 4);
         // qEI scores the real model read-only: nothing may leak into it
-        assert_eq!(srv.model.n_samples(), n_before);
+        assert_eq!(srv.core.model.n_samples(), n_before);
         for (i, a) in batch.iter().enumerate() {
             assert!((0.0..=1.0).contains(&a[0]));
             for b in batch.iter().skip(i + 1) {
@@ -546,18 +435,18 @@ mod tests {
             1,
             7,
         )
-        .with_hp_refits(8);
-        srv.model.hp_opt.config.restarts = 1;
-        srv.model.hp_opt.config.iterations = 10;
-        let start_hp = srv.model.hp_vector();
+        .with_refit(RefitSchedule::Doubling { first: 8 });
+        srv.core.model.hp_opt.config.restarts = 1;
+        srv.core.model.hp_opt.config.iterations = 10;
+        let start_hp = srv.core.model.hp_vector();
         // short-lengthscale data: ML-II must move the kernel params
         for _ in 0..17 {
             let x = rng.unit_point(1);
             srv.tell(&x, (11.0 * x[0]).sin());
         }
         // refits fired at n = 8 and n = 16 (doubling schedule)
-        assert_eq!(srv.model.hp_opt.refits(), 2);
-        assert_ne!(srv.model.hp_vector(), start_hp, "refit should move hyper-params");
+        assert_eq!(srv.core.model.hp_opt.refits(), 2);
+        assert_ne!(srv.core.model.hp_vector(), start_hp, "refit should move hyper-params");
     }
 
     #[test]

@@ -9,11 +9,41 @@
 //! optimizer — initializer, model (kernel + mean), acquisition function,
 //! inner optimizer, hyper-parameter optimizer, stopping criterion, stats —
 //! is a swappable *policy*, composed statically so that flexibility costs
-//! nothing at runtime (no virtual dispatch). The C++ template design maps
-//! onto Rust generics: [`bayes_opt::BOptimizer`] is monomorphized over its
-//! component types, while [`baseline::BayesOptLike`] is the same algorithm
-//! built the classic OO way (trait objects) to reproduce the paper's
-//! Figure-1 comparison against BayesOpt.
+//! nothing at runtime (no virtual dispatch). In this reproduction the
+//! composition surface is [`bayes_opt::BoDef`], the analog of the C++
+//! `Params` struct: a declarative builder that monomorphizes to concrete
+//! types and builds either frontend of the single shared loop engine
+//! ([`bayes_opt::BoCore`]) from one definition —
+//!
+//! ```no_run
+//! use limbo::prelude::*;
+//!
+//! // the quickstart: maximize f over [0,1]^2 with the library defaults
+//! let f = FnEval::new(2, |x: &[f64]| {
+//!     -x.iter().map(|&v| v * v * (2.0 * v).sin()).sum::<f64>()
+//! });
+//! let mut opt = BoDef::new(2).seed(42).build_optimizer();
+//! let best = opt.optimize(&f);
+//! println!("best {:?} -> {}", best.x, best.value);
+//!
+//! // the same definition as an ask/tell server over a real-world box
+//! let mut srv = BoDef::new(2)
+//!     .acquisition(Ei::default())
+//!     .refit(RefitSchedule::Doubling { first: 16 })
+//!     .bounds(&[(-5.0, 10.0), (0.0, 15.0)])
+//!     .seed(42)
+//!     .build_server();
+//! let x = srv.ask(); // user coordinates — no hand-normalizing
+//! srv.tell(&x, -(x[0] * x[0] + x[1]));
+//! ```
+//!
+//! Every entry point — the run-to-completion [`bayes_opt::BOptimizer`],
+//! the sync and threaded [`coordinator::AskTellServer`], and the
+//! dynamic-dispatch Figure-1 comparator [`baseline::BayesOptLike`] —
+//! drives the same [`bayes_opt::BoCore`] propose/observe/refit state
+//! machine, and run statistics are [`bayes_opt::Observer`]s on its typed
+//! event bus ([`stat::RunLogger`], [`stat::JsonlObserver`],
+//! [`stat::TraceHandle`]).
 //!
 //! The GP compute hot path additionally has an AOT-compiled XLA backend
 //! ([`runtime::XlaGp`]): JAX/Pallas graphs are lowered to HLO at build
@@ -45,9 +75,13 @@ pub mod prelude {
         AcquiContext, AcquiFn, AcquiObjective, BatchAcquiFn, BatchAcquiObjective, Ei, GpUcb,
         Pi, QEi, Ucb,
     };
-    pub use crate::bayes_opt::{BOptimizer, Best, Evaluator, FnEval};
+    pub use crate::bayes_opt::{
+        BOptimizer, BatchStrategy, Best, BoCore, BoDef, BoEvent, Domain, Evaluator, FnEval,
+        Observer, RefitSchedule,
+    };
     pub use crate::benchfns::TestFunction;
-    pub use crate::init::{Initializer, Lhs, RandomSampling};
+    pub use crate::coordinator::{AskTellServer, DefaultAskTellServer, ServerHandle};
+    pub use crate::init::{Initializer, Lhs, NoInit, RandomSampling};
     pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
     pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
     pub use crate::model::{gp::Gp, AdaptiveModel, GpState, Model, SgpConfig, SgpState, SparseGp};
@@ -56,5 +90,6 @@ pub mod prelude {
         RandomPoint,
     };
     pub use crate::rng::Pcg64;
+    pub use crate::stat::{JsonlObserver, RunLogger, TraceHandle};
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
 }

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use limbo::acqui::Ei;
-use limbo::bayes_opt::{BOptimizer, FnEval, HpSchedule};
+use limbo::bayes_opt::{BOptimizer, BoDef, FnEval, RefitSchedule};
 use limbo::benchfns;
 use limbo::coordinator::config::Config;
 use limbo::coordinator::experiment::{print_table, speedups, ExperimentRunner};
@@ -75,12 +75,15 @@ fn cmd_run(cfg: &Config) {
     let backend = cfg.get_str("backend", "native");
 
     let eval = FnEval::new(dim, |x: &[f64]| f.eval(x));
+    let refit = if hpo { RefitSchedule::Every(5) } else { RefitSchedule::Never };
     let best = match backend {
         "xla" => {
             let dir = find_artifact_dir().expect("artifacts/ not found; run `make artifacts`");
             let client = Arc::new(RtClient::cpu().expect("PJRT client"));
             let gp = Arc::new(XlaGp::new(client, &dir, "matern52").expect("XlaGp"));
             let model = XlaGpModel::new(gp, dim);
+            // the XLA adapter is composed explicitly; BoDef builds the
+            // native GP surrogates
             let mut opt = BOptimizer::new(
                 model,
                 Ei::default(),
@@ -88,32 +91,26 @@ fn cmd_run(cfg: &Config) {
                 Direct::new(500),
                 MaxIterations(iterations),
                 seed,
-            );
-            if hpo {
-                opt = opt.with_hp_schedule(HpSchedule::Every(5));
-            }
+            )
+            .with_refit(refit);
             if let Some(dir) = cfg.get("out") {
-                opt = opt.with_stats(RunLogger::create(std::path::Path::new(dir)).unwrap());
+                opt = opt.with_observer(RunLogger::create(std::path::Path::new(dir)).unwrap());
             }
             opt.optimize(&eval)
         }
         _ => {
-            let gp = Gp::new(Matern52::new(dim), DataMean::default(), 1e-2);
-            let mut opt = BOptimizer::new(
-                gp,
-                Ei::default(),
-                Lhs { n: n_init },
-                Direct::new(500),
-                MaxIterations(iterations),
-                seed,
-            );
-            if hpo {
-                opt = opt.with_hp_schedule(HpSchedule::Every(5));
-            }
+            let mut def = BoDef::new(dim)
+                .noise(1e-2)
+                .acquisition(Ei::default())
+                .init(Lhs { n: n_init })
+                .inner_opt(Direct::new(500))
+                .stop(MaxIterations(iterations))
+                .refit(refit)
+                .seed(seed);
             if let Some(dir) = cfg.get("out") {
-                opt = opt.with_stats(RunLogger::create(std::path::Path::new(dir)).unwrap());
+                def = def.observer(RunLogger::create(std::path::Path::new(dir)).unwrap());
             }
-            opt.optimize(&eval)
+            def.build_optimizer().optimize(&eval)
         }
     };
     println!(

@@ -113,6 +113,17 @@ impl<K: Kernel, M: MeanFn> AdaptiveModel<K, M> {
         self
     }
 
+    /// Override the ML-II hyper-opt settings on the current inner model
+    /// (the dense→sparse migration carries them over, see
+    /// [`SparseGp::from_dense`]).
+    pub fn with_hp_config(mut self, config: crate::model::HpOptConfig) -> Self {
+        match &mut self.inner {
+            AdaptiveInner::Dense(g) => g.hp_opt.config = config,
+            AdaptiveInner::Sparse(s) => s.hp_opt.config = config,
+        }
+        self
+    }
+
     /// The switch-over threshold.
     pub fn threshold(&self) -> usize {
         self.threshold

@@ -1,14 +1,27 @@
-//! Run statistics writers — the `limbo::stat::*` policy family.
+//! Run statistics writers — the `limbo::stat::*` policy family, as
+//! observers on the [`BoCore`](crate::bayes_opt::BoCore) event bus.
 //!
-//! [`RunLogger`] writes the standard Limbo run files into a run directory:
-//! `samples.dat` (evaluated points), `observations.dat`, `best.dat`
-//! (best-so-far trace), and `meta.dat` (dimension, wall time). All files
-//! are plain TSV so downstream plotting needs no extra tooling.
+//! Every writer implements [`Observer`] and subscribes to the typed
+//! [`BoEvent`] stream the core dispatches (`InitDone`, `Proposal`,
+//! `Observation`, `Refit`, `Stopped`) — the loop never knows who is
+//! listening:
+//!
+//! * [`RunLogger`] writes the standard Limbo run files (`samples.dat`,
+//!   `observations.dat`, `best.dat`, `meta.dat`) into a run directory;
+//! * [`JsonlObserver`] writes one JSON object per event — the
+//!   machine-readable twin of the TSV traces, matching the bench
+//!   pipeline's JSON-rows idiom;
+//! * [`TraceHandle`] collects the observation trace in memory behind a
+//!   cloneable handle (the cross-frontend parity tests compare these
+//!   bit-for-bit).
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+use crate::bayes_opt::core::{BoEvent, Observer};
 
 /// TSV run logger; every write goes through buffered files flushed on drop.
 pub struct RunLogger {
@@ -65,6 +78,143 @@ impl RunLogger {
     }
 }
 
+impl Observer for RunLogger {
+    fn on_event(&mut self, event: &BoEvent) {
+        match *event {
+            BoEvent::Observation { evaluations, x, y, best } => {
+                self.log_sample(evaluations, x, y, best);
+            }
+            BoEvent::Stopped { dim, evaluations, .. } => self.finish(dim, evaluations),
+            _ => {}
+        }
+    }
+}
+
+/// One recorded observation of a run (user coordinates).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRow {
+    /// Total observations including this one.
+    pub evaluations: usize,
+    /// Evaluated point.
+    pub x: Vec<f64>,
+    /// Observed value.
+    pub y: f64,
+    /// Incumbent best after this observation.
+    pub best: f64,
+}
+
+/// In-memory observation trace behind a cloneable handle: subscribe one
+/// clone to the run, read the rows from another after (or during) it.
+/// The cross-frontend parity tests compare these traces bit-for-bit.
+#[derive(Clone, Default)]
+pub struct TraceHandle {
+    rows: Arc<Mutex<Vec<TraceRow>>>,
+}
+
+impl TraceHandle {
+    /// An empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of the rows recorded so far.
+    pub fn rows(&self) -> Vec<TraceRow> {
+        self.rows.lock().expect("trace lock").clone()
+    }
+
+    /// Rows recorded so far.
+    pub fn len(&self) -> usize {
+        self.rows.lock().expect("trace lock").len()
+    }
+
+    /// True before the first observation.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Observer for TraceHandle {
+    fn on_event(&mut self, event: &BoEvent) {
+        if let BoEvent::Observation { evaluations, x, y, best } = *event {
+            self.rows
+                .lock()
+                .expect("trace lock")
+                .push(TraceRow { evaluations, x: x.to_vec(), y, best });
+        }
+    }
+}
+
+/// JSON-lines event writer: one compact JSON object per [`BoEvent`],
+/// flushed on [`BoEvent::Stopped`]. The machine-readable twin of
+/// [`RunLogger`]'s TSV files, in the same rows-of-JSON shape the bench
+/// pipeline (`benches/*.rs` → `BENCH_PR.json`) consumes.
+pub struct JsonlObserver {
+    out: BufWriter<File>,
+}
+
+impl JsonlObserver {
+    /// Create (or truncate) the event log at `path`.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self { out: BufWriter::new(File::create(path)?) })
+    }
+
+    /// JSON-safe float: non-finite values (a `-inf` incumbent before
+    /// any data, a NaN objective) become `null` — `inf`/`NaN` tokens
+    /// would make the whole line unparseable.
+    fn fmt_f64(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v:.10e}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    fn fmt_point(x: &[f64]) -> String {
+        let vs: Vec<String> = x.iter().map(|&v| Self::fmt_f64(v)).collect();
+        format!("[{}]", vs.join(","))
+    }
+}
+
+impl Observer for JsonlObserver {
+    fn on_event(&mut self, event: &BoEvent) {
+        let _ = match *event {
+            BoEvent::InitDone { n_samples } => {
+                writeln!(self.out, r#"{{"event":"init_done","n_samples":{n_samples}}}"#)
+            }
+            BoEvent::Proposal { iteration, q, xs } => {
+                let pts: Vec<String> = xs.iter().map(|x| Self::fmt_point(x)).collect();
+                writeln!(
+                    self.out,
+                    r#"{{"event":"proposal","iteration":{iteration},"q":{q},"xs":[{}]}}"#,
+                    pts.join(",")
+                )
+            }
+            BoEvent::Observation { evaluations, x, y, best } => writeln!(
+                self.out,
+                r#"{{"event":"observation","evaluations":{evaluations},"x":{},"y":{},"best":{}}}"#,
+                Self::fmt_point(x),
+                Self::fmt_f64(y),
+                Self::fmt_f64(best)
+            ),
+            BoEvent::Refit { n_samples } => {
+                writeln!(self.out, r#"{{"event":"refit","n_samples":{n_samples}}}"#)
+            }
+            BoEvent::Stopped { dim, evaluations, best } => {
+                let r = writeln!(
+                    self.out,
+                    r#"{{"event":"stopped","dim":{dim},"evaluations":{evaluations},"best":{}}}"#,
+                    Self::fmt_f64(best)
+                );
+                let _ = self.out.flush();
+                r
+            }
+        };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +235,72 @@ mod tests {
         assert_eq!(best.lines().count(), 2);
         let samples = std::fs::read_to_string(dir.join("samples.dat")).unwrap();
         assert!(samples.lines().next().unwrap().starts_with("0\t"));
+    }
+
+    #[test]
+    fn run_logger_consumes_events() {
+        let dir = std::env::temp_dir().join("limbo_stat_observer_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut log = RunLogger::create(&dir).unwrap();
+        log.on_event(&BoEvent::Observation { evaluations: 1, x: &[0.4], y: 2.0, best: 2.0 });
+        log.on_event(&BoEvent::Refit { n_samples: 1 }); // ignored
+        log.on_event(&BoEvent::Stopped { dim: 1, evaluations: 1, best: 2.0 });
+        let best = std::fs::read_to_string(dir.join("best.dat")).unwrap();
+        assert_eq!(best.lines().count(), 1);
+        let meta = std::fs::read_to_string(dir.join("meta.dat")).unwrap();
+        assert!(meta.contains("evaluations\t1"));
+    }
+
+    #[test]
+    fn trace_handle_records_observations_only() {
+        let trace = TraceHandle::new();
+        let mut subscriber = trace.clone();
+        assert!(trace.is_empty());
+        subscriber.on_event(&BoEvent::InitDone { n_samples: 0 });
+        subscriber.on_event(&BoEvent::Observation {
+            evaluations: 1,
+            x: &[0.5, 0.25],
+            y: -1.0,
+            best: -1.0,
+        });
+        subscriber.on_event(&BoEvent::Stopped { dim: 2, evaluations: 1, best: -1.0 });
+        let rows = trace.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0], TraceRow { evaluations: 1, x: vec![0.5, 0.25], y: -1.0, best: -1.0 });
+    }
+
+    #[test]
+    fn jsonl_observer_writes_one_line_per_event() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_test/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut obs = JsonlObserver::create(&path).unwrap();
+        let xs = vec![vec![0.5]];
+        obs.on_event(&BoEvent::Proposal { iteration: 0, q: 1, xs: &xs });
+        obs.on_event(&BoEvent::Observation { evaluations: 1, x: &[0.5], y: 1.0, best: 1.0 });
+        obs.on_event(&BoEvent::Stopped { dim: 1, evaluations: 1, best: 1.0 });
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains(r#""event":"proposal""#));
+        assert!(lines[1].contains(r#""event":"observation""#));
+        assert!(lines[2].contains(r#""event":"stopped""#));
+    }
+
+    #[test]
+    fn jsonl_observer_writes_null_for_non_finite_values() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_nonfinite/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut obs = JsonlObserver::create(&path).unwrap();
+        obs.on_event(&BoEvent::Observation {
+            evaluations: 1,
+            x: &[0.5],
+            y: f64::NAN,
+            best: f64::NEG_INFINITY,
+        });
+        obs.on_event(&BoEvent::Stopped { dim: 1, evaluations: 1, best: f64::NEG_INFINITY });
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains(r#""y":null"#), "NaN must serialize as null: {content}");
+        assert!(content.contains(r#""best":null"#), "-inf must serialize as null: {content}");
+        assert!(!content.contains("inf") && !content.contains("NaN"), "{content}");
     }
 }

@@ -1,4 +1,9 @@
 //! Stopping criteria — the `limbo::stop::*` policy family.
+//!
+//! Criteria inspect the [`StopContext`] snapshot the shared engine
+//! exposes ([`crate::bayes_opt::BoCore::stop_context`]); the
+//! run-to-completion frontend checks its criterion against it before
+//! every model-guided proposal.
 
 /// Snapshot of the run the criteria inspect each iteration.
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,156 @@
+//! Cross-frontend parity: one `BoDef` + seed driven through (a) the
+//! run-to-completion `BOptimizer`, (b) the sync `AskTellServer`
+//! ask/tell loop, and (c) the spawned threaded `ServerHandle` must
+//! produce **bit-identical** sample/observation traces.
+//!
+//! This is the regression net for the `BoCore` extraction: all three
+//! frontends are thin drivers over the same engine, so any divergence —
+//! a frontend growing its own incumbent rule, refit schedule, RNG
+//! consumption order, or proposal path — shows up here as a trace
+//! mismatch at the first differing bit.
+
+use limbo::prelude::*;
+use limbo::stat::TraceRow;
+
+const N_INIT: usize = 6;
+const ITERATIONS: usize = 10;
+const TOTAL: usize = N_INIT + ITERATIONS;
+
+/// The shared definition; every frontend gets an identical copy plus
+/// its own trace subscriber. The refit schedule is part of the parity
+/// surface (fires at n = 8 and n = 16 within the budget), with a small
+/// single-restart hyper-opt so the test stays fast and deterministic.
+fn def(
+    trace: TraceHandle,
+) -> limbo::bayes_opt::BoDef<
+    Matern52,
+    DataMean,
+    Ei,
+    RandomSampling,
+    limbo::bayes_opt::DefaultInnerOpt,
+    MaxIterations,
+> {
+    BoDef::new(2)
+        .acquisition(Ei::default())
+        .init_samples(N_INIT)
+        .inner_opt(RandomPoint::new(64).then(NelderMead::default()).restarts(2, 2))
+        .refit(RefitSchedule::Doubling { first: 8 })
+        .hp_config(limbo::model::HpOptConfig { restarts: 1, iterations: 5, ..Default::default() })
+        .noise(1e-3)
+        .seed(0xC0FFEE)
+        .iterations(ITERATIONS)
+        .observer(trace)
+}
+
+fn objective(x: &[f64]) -> f64 {
+    -(x[0] - 0.55).powi(2) - (x[1] - 0.35).powi(2) + 0.1 * (9.0 * x[0]).sin()
+}
+
+fn run_optimizer() -> Vec<TraceRow> {
+    let trace = TraceHandle::new();
+    let mut opt = def(trace.clone()).build_optimizer();
+    let best = opt.optimize(&FnEval::new(2, objective));
+    assert_eq!(best.evaluations, TOTAL);
+    trace.rows()
+}
+
+fn run_sync_server() -> Vec<TraceRow> {
+    let trace = TraceHandle::new();
+    let mut srv = def(trace.clone()).build_server();
+    for _ in 0..TOTAL {
+        let x = srv.ask();
+        let y = objective(&x);
+        srv.tell(&x, y);
+    }
+    trace.rows()
+}
+
+fn run_threaded_server() -> Vec<TraceRow> {
+    let trace = TraceHandle::new();
+    let handle = def(trace.clone()).spawn_server();
+    for _ in 0..TOTAL {
+        let x = handle.ask();
+        let y = objective(&x);
+        handle.tell(x, y);
+    }
+    // tell() is fire-and-forget: join the server thread (drop sends
+    // Shutdown and blocks) so the final observation is in the trace
+    drop(handle);
+    trace.rows()
+}
+
+/// Compare two traces bit-for-bit (`to_bits` — no epsilon anywhere).
+fn assert_traces_identical(a: &[TraceRow], b: &[TraceRow], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: trace lengths differ");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.evaluations, rb.evaluations, "{label}: eval counter at row {i}");
+        assert_eq!(ra.x.len(), rb.x.len(), "{label}: dim at row {i}");
+        for (d, (va, vb)) in ra.x.iter().zip(&rb.x).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: sample row {i} dim {d}: {va} vs {vb}"
+            );
+        }
+        assert_eq!(
+            ra.y.to_bits(),
+            rb.y.to_bits(),
+            "{label}: observation row {i}: {} vs {}",
+            ra.y,
+            rb.y
+        );
+        assert_eq!(
+            ra.best.to_bits(),
+            rb.best.to_bits(),
+            "{label}: incumbent row {i}: {} vs {}",
+            ra.best,
+            rb.best
+        );
+    }
+}
+
+#[test]
+fn optimizer_and_servers_produce_bit_identical_traces() {
+    let opt = run_optimizer();
+    assert_eq!(opt.len(), TOTAL);
+    let sync = run_sync_server();
+    let threaded = run_threaded_server();
+    assert_traces_identical(&opt, &sync, "optimize vs sync ask/tell");
+    assert_traces_identical(&opt, &threaded, "optimize vs threaded ask/tell");
+}
+
+#[test]
+fn parity_holds_over_a_bounded_domain() {
+    let run_opt = || {
+        let trace = TraceHandle::new();
+        let mut opt = def(trace.clone())
+            .bounds(&[(-2.0, 6.0), (10.0, 30.0)])
+            .refit(RefitSchedule::Never)
+            .build_optimizer();
+        let f = FnEval::new(2, |x: &[f64]| -(x[0] - 1.0).powi(2) - (0.1 * (x[1] - 20.0)).powi(2));
+        opt.optimize(&f);
+        trace.rows()
+    };
+    let run_srv = || {
+        let trace = TraceHandle::new();
+        let mut srv = def(trace.clone())
+            .bounds(&[(-2.0, 6.0), (10.0, 30.0)])
+            .refit(RefitSchedule::Never)
+            .build_server();
+        for _ in 0..TOTAL {
+            let x = srv.ask();
+            assert!((-2.0..=6.0).contains(&x[0]) && (10.0..=30.0).contains(&x[1]));
+            let y = -(x[0] - 1.0).powi(2) - (0.1 * (x[1] - 20.0)).powi(2);
+            srv.tell(&x, y);
+        }
+        trace.rows()
+    };
+    assert_traces_identical(&run_opt(), &run_srv(), "bounded optimize vs ask/tell");
+}
+
+#[test]
+fn determinism_same_def_same_trace() {
+    let a = run_optimizer();
+    let b = run_optimizer();
+    assert_traces_identical(&a, &b, "repeatability");
+}

@@ -4,6 +4,7 @@
 //! random batch sizes, and the q-batch ask/tell path must propose
 //! distinct points while converging like the sequential loop.
 
+use limbo::bayes_opt::BoDef;
 use limbo::coordinator::DefaultAskTellServer;
 use limbo::kernel::{Exponential, Kernel, Matern52, SquaredExpArd};
 use limbo::mean::DataMean;
@@ -11,6 +12,12 @@ use limbo::model::{gp::Gp, AdaptiveModel, Model, SgpConfig, SparseGp};
 use limbo::rng::Pcg64;
 
 const TOL: f64 = 1e-10;
+
+/// The service defaults (adaptive surrogate, no init design), spelled
+/// through the declarative builder.
+fn make_adaptive_server(dim: usize, seed: u64) -> DefaultAskTellServer {
+    BoDef::service(dim).seed(seed).build_adaptive_server()
+}
 
 fn random_data(rng: &mut Pcg64, n: usize, dim: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
     let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(dim)).collect();
@@ -227,7 +234,7 @@ fn ask_batch_q_distinct_and_convergence_parity() {
     let q = 4;
 
     // batched: 6 rounds of q=4 proposals
-    let mut batched = DefaultAskTellServer::with_defaults(2, 31);
+    let mut batched = make_adaptive_server(2, 31);
     for _ in 0..6 {
         let batch = batched.ask_batch(q);
         assert_eq!(batch.len(), q);
@@ -245,7 +252,7 @@ fn ask_batch_q_distinct_and_convergence_parity() {
     }
 
     // sequential: same total budget, one point at a time
-    let mut seq = DefaultAskTellServer::with_defaults(2, 31);
+    let mut seq = make_adaptive_server(2, 31);
     for _ in 0..(6 * q) {
         let x = seq.ask();
         let y = f(&x);

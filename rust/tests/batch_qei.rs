@@ -10,6 +10,7 @@
 //! below covers estimator noise, ~1/sqrt(mc_samples)).
 
 use limbo::acqui::Ei;
+use limbo::bayes_opt::RefitSchedule;
 use limbo::benchfns::{Branin, TestFunction};
 use limbo::coordinator::{AskTellServer, BatchStrategy};
 use limbo::kernel::Matern52;
@@ -32,7 +33,7 @@ fn run_branin(strategy: BatchStrategy, seed: u64) -> f64 {
         2,
         seed,
     )
-    .with_hp_refits(8)
+    .with_refit(RefitSchedule::Doubling { first: 8 })
     .with_batch_strategy(strategy);
     // shared init design per seed (identical across strategies)
     let mut init_rng = Pcg64::seed(seed ^ 0xB0A71);

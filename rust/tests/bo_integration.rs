@@ -4,7 +4,7 @@
 //! ask/tell service composed with every major component family.
 
 use limbo::acqui::{Ei, GpUcb, Ucb};
-use limbo::bayes_opt::{BOptimizer, FnEval, HpSchedule};
+use limbo::bayes_opt::{BOptimizer, FnEval, RefitSchedule};
 use limbo::benchfns::{self, TestFunction};
 use limbo::benchlib::Summary;
 use limbo::coordinator::experiment::BenchConfig;
@@ -133,7 +133,7 @@ fn hpo_improves_misscaled_problems() {
             seed,
         );
         if hpo {
-            opt = opt.with_hp_schedule(HpSchedule::Every(5));
+            opt = opt.with_refit(RefitSchedule::Every(5));
         }
         f.accuracy(opt.optimize(&FnEval::new(2, |x: &[f64]| f.eval(x))).value)
     };
@@ -176,7 +176,7 @@ fn stat_traces_are_complete_and_monotone() {
         MaxIterations(10),
         3,
     )
-    .with_stats(limbo::stat::RunLogger::create(&dir).unwrap());
+    .with_observer(limbo::stat::RunLogger::create(&dir).unwrap());
     let _ = opt.optimize(&FnEval::new(2, |x: &[f64]| f.eval(x)));
 
     let best = std::fs::read_to_string(dir.join("best.dat")).unwrap();
