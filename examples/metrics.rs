@@ -1,0 +1,61 @@
+//! Profiling a run — where every millisecond of a Branin optimization
+//! goes.
+//!
+//! Attaches a [`MetricsObserver`] to a bounded Branin run: it switches
+//! the `limbo::obs` span registry on, and on stop writes the phase
+//! breakdown into the run directory (`meta.dat` TSV lines plus
+//! `metrics.json`). The example also brackets the run with its own
+//! snapshot pair to print the phase table — calls, total seconds,
+//! p50/p95/p99 — and the share of wall time the ask/tell service path
+//! accounts for.
+//!
+//! Run: `cargo run --release --example metrics`
+//! (`LIMBO_SMOKE=1` shrinks the budget to a CI-sized run.)
+
+use limbo::benchfns;
+use limbo::prelude::*;
+
+fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
+    let iterations = if smoke { 20 } else { 60 };
+    let branin = benchfns::by_name("branin", 2).expect("branin is registered");
+    let dir = std::env::temp_dir().join("limbo_metrics_example");
+
+    // bracket the run ourselves as well, to print the table at the end
+    // (the observer's own base snapshot is taken in create())
+    limbo::obs::set_enabled(true);
+    let base = limbo::obs::snapshot();
+    let t0 = std::time::Instant::now();
+
+    let mut opt = BoDef::new(2)
+        .bounds(&[(-5.0, 10.0), (0.0, 15.0)])
+        .iterations(iterations)
+        .refit(RefitSchedule::Doubling { first: 12 })
+        .seed(7)
+        .observer(RunLogger::create(&dir).expect("run dir"))
+        // after RunLogger: its finish truncates meta.dat, the phase
+        // breakdown appends second
+        .observer(MetricsObserver::create(&dir).expect("run dir"))
+        .build_optimizer();
+    // benchfns functions take unit-cube inputs and scale internally, so
+    // map the Domain's user coordinates back to [0,1]^2 before calling
+    let best = opt.optimize(&FnEval::new(2, |x: &[f64]| {
+        branin.eval(&[(x[0] + 5.0) / 15.0, x[1] / 15.0])
+    }));
+
+    let wall = t0.elapsed().as_secs_f64();
+    let delta = limbo::obs::snapshot().delta_since(&base);
+    println!(
+        "branin: best={:.6} accuracy={:.3e} in {} evaluations",
+        best.value,
+        branin.accuracy(best.value),
+        best.evaluations
+    );
+    println!("\n{}", delta.render_table(Some(wall)));
+    println!(
+        "service path (ask+tell spans): {:.1}% of {:.3}s wall",
+        100.0 * delta.service_seconds() / wall.max(f64::MIN_POSITIVE),
+        wall
+    );
+    println!("reports: {} (meta.dat phase lines + metrics.json)", dir.display());
+}

@@ -39,6 +39,10 @@ fn main() {
     let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42)
         .with_refit(RefitSchedule::Doubling { first: 40 });
 
+    // profile the whole run: the phase table at the end attributes the
+    // wall time to ask/tell service, Cholesky, sparse fit, migration...
+    limbo::obs::set_enabled(true);
+    let metrics_base = limbo::obs::snapshot();
     let t0 = Instant::now();
     let mut switched_at = None;
     for i in 1..=budget {
@@ -75,4 +79,13 @@ fn main() {
         );
     }
     println!("best value  : {bv:.6} at ({:.4}, {:.4})", bx[0], bx[1]);
+
+    let wall = t0.elapsed().as_secs_f64();
+    let delta = limbo::obs::snapshot().delta_since(&metrics_base);
+    println!("\n{}", delta.render_table(Some(wall)));
+    println!(
+        "phase coverage: ask+tell spans account for {:.1}% of {:.2}s wall",
+        100.0 * delta.service_seconds() / wall.max(f64::MIN_POSITIVE),
+        wall
+    );
 }

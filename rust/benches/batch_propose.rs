@@ -13,6 +13,12 @@
 //! (`scripts/bench_compare.py`; proposal timings are tracked warn-only
 //! like the gp_scaling rows). `--smoke` shrinks the training set and rep
 //! count to the CI-sized variant.
+//!
+//! Headline timings run with metrics **disabled**; a final un-timed
+//! proposal per config runs with the `limbo::obs` span registry on and
+//! emits `"bench":"batch_propose_phase"` rows (inner-optimizer vs qEI MC
+//! vs batch acquisition seconds), so a `propose_s` regression points at
+//! a phase, not just a strategy.
 
 use std::io::Write as _;
 use std::time::Instant;
@@ -89,6 +95,26 @@ fn main() {
                  \"proposals_per_sec\":{:.3},\"qei_score\":{score:.6}}}",
                 1.0 / propose_s
             ));
+            // one extra un-timed proposal with spans on: attribute
+            // propose_s to inner-opt vs qEI MC vs batch acquisition
+            limbo::obs::set_enabled(true);
+            let base = limbo::obs::snapshot();
+            std::hint::black_box(srv.ask_batch(q));
+            let delta = limbo::obs::snapshot().delta_since(&base);
+            limbo::obs::set_enabled(false);
+            for p in limbo::obs::Phase::ALL {
+                let calls = delta.calls(p);
+                if calls == 0 {
+                    continue;
+                }
+                json_rows.push(format!(
+                    "{{\"bench\":\"batch_propose_phase\",\"n\":{n},\"q\":{q},\
+                     \"strategy\":\"{name}\",\"phase\":\"{}\",\"seconds\":{:.6},\
+                     \"calls\":{calls}}}",
+                    p.name(),
+                    delta.seconds(p)
+                ));
+            }
         };
         row_for("constant_liar", BatchStrategy::ConstantLiar);
         row_for("qei", BatchStrategy::QEi { mc_samples: 512 });

@@ -13,6 +13,13 @@
 //! into `BENCH_PR.json` for the bench-trajectory gate
 //! (`scripts/bench_compare.py` vs `benches/baseline.json`).
 //!
+//! After each config's headline timing (taken with metrics **disabled**,
+//! so the numbers stay comparable to historic rows), one extra un-timed
+//! pass runs with the `limbo::obs` span registry enabled and emits a
+//! `"bench":"gp_scaling_phase"` row per active phase — so a regression
+//! in `fit_s` can be attributed to Cholesky vs cross-covariance vs the
+//! sparse fit itself.
+//!
 //! Pass `--smoke` (or set `LIMBO_GP_SCALING_QUICK=1`) to cap the sweep at
 //! n=1024 — the CI-sized variant.
 
@@ -97,6 +104,32 @@ fn json_row(
     rows.push(row);
 }
 
+/// One extra un-timed pass with the span registry on: attributes the
+/// headline seconds (measured above with metrics off) to phases. The
+/// probe posterior is profiled through `predict_batch` — spans are
+/// batch-granularity by design, per-point `predict` stays span-free.
+fn phase_rows(rows: &mut Vec<String>, model: &str, n: usize, m: usize, run: impl FnOnce()) {
+    limbo::obs::set_enabled(true);
+    let base = limbo::obs::snapshot();
+    run();
+    let delta = limbo::obs::snapshot().delta_since(&base);
+    limbo::obs::set_enabled(false);
+    for p in limbo::obs::Phase::ALL {
+        let calls = delta.calls(p);
+        if calls == 0 {
+            continue;
+        }
+        let row = format!(
+            "{{\"bench\":\"gp_scaling_phase\",\"model\":\"{model}\",\"n\":{n},\"m\":{m},\
+             \"phase\":\"{}\",\"seconds\":{:.6},\"calls\":{calls}}}",
+            p.name(),
+            delta.seconds(p)
+        );
+        println!("{row}");
+        rows.push(row);
+    }
+}
+
 fn sweep_section(quick: bool) -> Vec<String> {
     header("dense vs sparse sweep (dim=2; JSON row per config)");
     let mut rows: Vec<String> = Vec::new();
@@ -127,6 +160,11 @@ fn sweep_section(quick: bool) -> Vec<String> {
         }) / probes.len() as f64;
         let dense_total = dense_fit + dense_pred;
         json_row(&mut rows, "dense", n, 0, dense_fit, dense_pred, 1.0);
+        phase_rows(&mut rows, "dense", n, 0, || {
+            let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-2);
+            gp.fit(&xs, &ys);
+            std::hint::black_box(gp.predict_batch(&probes));
+        });
 
         for &m in &[32usize, 64, 128] {
             let cfg = SgpConfig { max_inducing: m, ..SgpConfig::default() };
@@ -145,6 +183,12 @@ fn sweep_section(quick: bool) -> Vec<String> {
             }) / probes.len() as f64;
             let speedup = dense_total / (sparse_fit + sparse_pred);
             json_row(&mut rows, "sparse", n, m, sparse_fit, sparse_pred, speedup);
+            phase_rows(&mut rows, "sparse", n, m, || {
+                let mut sgp =
+                    SparseGp::with_config(Matern52::new(2), DataMean::default(), 1e-2, cfg.clone());
+                sgp.fit(&xs, &ys);
+                std::hint::black_box(sgp.predict_batch(&probes));
+            });
         }
     }
     rows

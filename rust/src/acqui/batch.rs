@@ -42,6 +42,7 @@
 use crate::acqui::{incumbent_for, AcquiContext};
 use crate::la::spd_factor_jittered;
 use crate::model::Model;
+use crate::obs::{self, Counter, Phase};
 use crate::opt::{Objective, Optimizer};
 use crate::rng::Pcg64;
 
@@ -110,6 +111,8 @@ impl QEi {
 
 impl<M: Model + ?Sized> BatchAcquiFn<M> for QEi {
     fn eval_joint(&self, model: &M, batch: &[Vec<f64>], ctx: &AcquiContext) -> f64 {
+        let _span = obs::span(Phase::QeiMc);
+        obs::counter_add(Counter::QeiMcDraws, self.mc_samples as u64);
         let q = batch.len();
         assert!(q >= 1, "qEI of an empty batch");
         assert!(

@@ -12,6 +12,7 @@ pub use batch::{BatchAcquiFn, BatchAcquiObjective, QEi};
 pub use math::{norm_cdf, norm_pdf};
 
 use crate::model::Model;
+use crate::obs::{self, Phase};
 use crate::opt::Objective;
 
 /// Incumbent threshold for the improvement-based acquisitions (EI/PI/qEI).
@@ -139,6 +140,7 @@ impl<M: Model + ?Sized, A: AcquiFn<M>> Objective for AcquiObjective<'_, M, A> {
     }
 
     fn eval_many(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let _span = obs::span(Phase::AcquiBatch);
         self.acqui.eval_batch(self.model, xs, &self.ctx)
     }
 }

@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 use crate::acqui::batch::{propose_batch_qei, QEi};
 use crate::acqui::{AcquiContext, AcquiFn, AcquiObjective};
 use crate::model::Model;
+use crate::obs::{Counter, Gauge, Phase};
 use crate::opt::Optimizer;
 use crate::rng::Pcg64;
 use crate::stop::StopContext;
@@ -425,6 +426,7 @@ where
     /// point if any remain, a random probe while the model has no data,
     /// else the acquisition maximizer.
     pub fn propose(&mut self) -> Vec<f64> {
+        let _span = crate::obs::span(Phase::Ask);
         let unit = if let Some(x) = self.init_queue.pop_front() {
             self.init_served += 1;
             x
@@ -457,6 +459,7 @@ where
     where
         M: Clone,
     {
+        let _span = crate::obs::span(Phase::Ask);
         let q = q.max(1);
         let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
         while batch.len() < q {
@@ -560,8 +563,10 @@ where
     /// design slot (indistinguishable without comparing coordinates —
     /// warm-start before asking if exact accounting matters).
     pub fn observe(&mut self, x: &[f64], y: f64) {
+        let _span = crate::obs::span(Phase::Tell);
         let unit = self.domain.to_unit(x);
         self.model.add_sample(&unit, y);
+        crate::obs::gauge_set(Gauge::ModelSamples, self.model.n_samples() as u64);
         self.evaluations += 1;
         self.finished = false;
         let in_init = self.init_observed < self.init_served;
@@ -621,7 +626,11 @@ where
             },
         };
         if fire {
-            self.model.optimize_hyperparams();
+            {
+                let _span = crate::obs::span(Phase::Refit);
+                crate::obs::counter_add(Counter::Refits, 1);
+                self.model.optimize_hyperparams();
+            }
             Self::emit(&mut self.observers, &BoEvent::Refit { n_samples: n });
         }
     }
@@ -760,6 +769,51 @@ mod tests {
         assert_eq!(c.2, 6, "one Observation per observe");
         assert_eq!(c.3, 1, "Doubling{{4}} refits once at n=4 within 6 evals");
         assert_eq!(c.4, 1, "Stopped exactly once");
+    }
+
+    /// An observer that appends `"<name>:<event>"` to a shared log, so a
+    /// test can see the interleaving across multiple subscribers.
+    struct NamedRecorder {
+        name: &'static str,
+        log: Arc<Mutex<Vec<String>>>,
+    }
+
+    impl Observer for NamedRecorder {
+        fn on_event(&mut self, event: &BoEvent) {
+            let tag = match event {
+                BoEvent::InitDone { .. } => "init_done",
+                BoEvent::Proposal { .. } => "proposal",
+                BoEvent::Observation { .. } => "observation",
+                BoEvent::Refit { .. } => "refit",
+                BoEvent::Stopped { .. } => "stopped",
+            };
+            self.log.lock().unwrap().push(format!("{}:{tag}", self.name));
+        }
+    }
+
+    /// Observers fire in subscription order, per event. This ordering is
+    /// load-bearing: `MetricsObserver` appends its phase breakdown to
+    /// the `meta.dat` that `RunLogger::finish` truncates, so "subscribed
+    /// after ⇒ runs after" is what keeps both in the file.
+    #[test]
+    fn observers_dispatch_in_subscription_order() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut core = make_core()
+            .with_observer(NamedRecorder { name: "first", log: Arc::clone(&log) })
+            .with_observer(NamedRecorder { name: "second", log: Arc::clone(&log) });
+        core.seed_design(vec![vec![0.25]]);
+        let x = core.propose();
+        core.observe(&x, 0.5);
+        core.finish();
+        let entries = log.lock().unwrap().clone();
+        assert!(!entries.is_empty());
+        assert_eq!(entries.len() % 2, 0, "every event reaches both: {entries:?}");
+        for pair in entries.chunks(2) {
+            let (f, s) = (&pair[0], &pair[1]);
+            let event = f.strip_prefix("first:").expect("first subscriber fires first");
+            assert_eq!(s, &format!("second:{event}"), "same event, in order: {entries:?}");
+        }
+        assert_eq!(entries.last().unwrap(), "second:stopped");
     }
 
     #[test]

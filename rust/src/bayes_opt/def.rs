@@ -101,8 +101,7 @@ impl BoDef {
         }
     }
 
-    /// The always-on service defaults (the old
-    /// `DefaultAskTellServer::with_defaults` spelling): noise 1e-3, no
+    /// The always-on service defaults: noise 1e-3, no
     /// initial design (the first asks are random probes / warm-start
     /// tells), a lighter 4×2-restart inner optimizer. Finish with
     /// [`build_adaptive_server`](Self::build_adaptive_server) for the

@@ -33,7 +33,6 @@ use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{gp::Gp, AdaptiveModel, Model};
 use crate::opt::{NelderMead, Optimizer, ParallelRepeater, RandomPoint};
-use crate::stat::RunLogger;
 use crate::stop::{MaxIterations, StopCriterion};
 
 /// Result of an optimization run.
@@ -81,31 +80,6 @@ impl<F: Fn(&[f64]) -> f64 + Sync> Evaluator for FnEval<F> {
     }
 }
 
-/// How often hyper-parameters were re-fit before the schedules were
-/// unified; superseded by [`RefitSchedule`], which every entry point
-/// (optimizer, server, baseline) now shares.
-#[deprecated(
-    since = "0.2.0",
-    note = "use RefitSchedule (adds the service's Doubling schedule) with with_refit"
-)]
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum HpSchedule {
-    /// Never re-fit (fixed hyper-parameters).
-    Never,
-    /// Re-fit after every `k`-th new sample.
-    Every(usize),
-}
-
-#[allow(deprecated)]
-impl From<HpSchedule> for RefitSchedule {
-    fn from(schedule: HpSchedule) -> RefitSchedule {
-        match schedule {
-            HpSchedule::Never => RefitSchedule::Never,
-            HpSchedule::Every(k) => RefitSchedule::Every(k),
-        }
-    }
-}
-
 /// The statically-composed, run-to-completion Bayesian optimizer: an
 /// initializer, a stop criterion and an [`Evaluator`]-driving loop on
 /// top of the shared [`BoCore`] engine.
@@ -136,17 +110,6 @@ pub type DefaultBOptimizer = BOptimizer<
     MaxIterations,
 >;
 
-impl DefaultBOptimizer {
-    /// The library defaults the quickstart uses: 10 random init samples,
-    /// UCB(0.5), Matérn-5/2 GP with data mean, 8 parallel restarts of
-    /// random-then-Nelder-Mead, 40 iterations, ML-II refits on the
-    /// doubling schedule from n = 16.
-    #[deprecated(since = "0.2.0", note = "use BoDef::new(dim).seed(seed).build_optimizer()")]
-    pub fn with_defaults(dim: usize, seed: u64) -> Self {
-        BoDef::new(dim).seed(seed).build_optimizer()
-    }
-}
-
 /// The large-budget configuration: same policies as
 /// [`DefaultBOptimizer`], but the surrogate is an
 /// [`AdaptiveModel`] that migrates from the exact dense GP to the sparse
@@ -158,19 +121,6 @@ pub type AdaptiveBOptimizer = BOptimizer<
     ParallelRepeater<crate::opt::Chained<RandomPoint, NelderMead>>,
     MaxIterations,
 >;
-
-impl AdaptiveBOptimizer {
-    /// Defaults for runs whose budget exceeds a few hundred evaluations
-    /// (`iterations` sets the stop rule; the model switches to sparse on
-    /// its own past [`crate::model::sgp::DEFAULT_SPARSE_THRESHOLD`]).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use BoDef::new(dim).seed(seed).iterations(n).build_adaptive_optimizer()"
-    )]
-    pub fn with_adaptive_defaults(dim: usize, seed: u64, iterations: usize) -> Self {
-        BoDef::new(dim).seed(seed).iterations(iterations).build_adaptive_optimizer()
-    }
-}
 
 impl<M, A, I, O, S> BOptimizer<M, A, I, O, S>
 where
@@ -216,22 +166,6 @@ where
     pub fn with_observer(mut self, observer: impl Observer + 'static) -> Self {
         self.core = self.core.with_observer(observer);
         self
-    }
-
-    /// Enable periodic ML-II hyper-parameter refits.
-    #[deprecated(since = "0.2.0", note = "use with_refit(RefitSchedule)")]
-    #[allow(deprecated)]
-    pub fn with_hp_schedule(self, schedule: HpSchedule) -> Self {
-        self.with_refit(schedule.into())
-    }
-
-    /// Attach a run logger.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use with_observer(logger) — RunLogger implements Observer"
-    )]
-    pub fn with_stats(self, logger: RunLogger) -> Self {
-        self.with_observer(logger)
     }
 
     /// Run the full loop: initialization, then model-guided sampling until
@@ -293,6 +227,7 @@ mod tests {
     use crate::mean::ZeroMean;
     use crate::model::SgpConfig;
     use crate::opt::{Cmaes, OptimizerExt};
+    use crate::stat::RunLogger;
     use crate::stop::TargetReached;
 
     /// The paper's example function (maximum 0 at x = 0 boundary is NOT
@@ -309,16 +244,6 @@ mod tests {
         let best = opt.optimize(&FnEval::new(2, my_fun));
         assert!(best.value > -0.01, "best={}", best.value);
         assert_eq!(best.evaluations, 50); // 10 init + 40 iterations
-    }
-
-    #[test]
-    fn deprecated_defaults_shim_builds_the_same_type() {
-        #[allow(deprecated)]
-        let mut opt = BOptimizer::with_defaults(2, 7);
-        let best = opt.optimize(&FnEval::new(2, my_fun));
-        let mut via_def = BoDef::new(2).seed(7).build_optimizer();
-        let best_def = via_def.optimize(&FnEval::new(2, my_fun));
-        assert_eq!(best, best_def, "shim must be a pure alias of the builder");
     }
 
     #[test]
@@ -425,15 +350,6 @@ mod tests {
         .with_refit(RefitSchedule::Every(3));
         let best = opt.optimize(&FnEval::new(1, |x: &[f64]| -(x[0] - 0.4).powi(2)));
         assert!(best.value > -0.01, "best={}", best.value);
-    }
-
-    #[test]
-    fn deprecated_hp_schedule_maps_onto_refit_schedule() {
-        #[allow(deprecated)]
-        {
-            assert_eq!(RefitSchedule::from(HpSchedule::Never), RefitSchedule::Never);
-            assert_eq!(RefitSchedule::from(HpSchedule::Every(4)), RefitSchedule::Every(4));
-        }
     }
 
     #[test]

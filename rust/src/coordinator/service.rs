@@ -29,7 +29,6 @@ use std::thread;
 
 use crate::acqui::{AcquiFn, Ucb};
 use crate::bayes_opt::core::{BoCore, Domain, Observer, RefitSchedule};
-use crate::bayes_opt::BoDef;
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{AdaptiveModel, Model};
@@ -70,17 +69,6 @@ pub type DefaultAskTellServer = AskTellServer<
     Ucb,
     ParallelRepeater<Chained<RandomPoint, NelderMead>>,
 >;
-
-impl DefaultAskTellServer {
-    /// Service defaults for a `dim`-dimensional problem.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use BoDef::service(dim).seed(seed).build_adaptive_server()"
-    )]
-    pub fn with_defaults(dim: usize, seed: u64) -> Self {
-        BoDef::service(dim).seed(seed).build_adaptive_server()
-    }
-}
 
 impl<M, A, O> AskTellServer<M, A, O>
 where
@@ -123,12 +111,6 @@ where
     pub fn with_observer(mut self, observer: impl Observer + 'static) -> Self {
         self.core = self.core.with_observer(observer);
         self
-    }
-
-    /// Enable ML-II hyper-parameter refits on a doubling schedule.
-    #[deprecated(since = "0.2.0", note = "use with_refit(RefitSchedule::Doubling { first })")]
-    pub fn with_hp_refits(self, first: usize) -> Self {
-        self.with_refit(RefitSchedule::Doubling { first })
     }
 
     /// Incumbent value for the acquisition context (see
@@ -260,6 +242,7 @@ impl Drop for ServerHandle {
 mod tests {
     use super::*;
     use crate::acqui::Ucb;
+    use crate::bayes_opt::BoDef;
     use crate::kernel::Matern52;
     use crate::mean::DataMean;
     use crate::model::gp::Gp;
@@ -295,8 +278,7 @@ mod tests {
 
     #[test]
     fn default_server_uses_adaptive_model_and_converges() {
-        #[allow(deprecated)]
-        let mut srv = DefaultAskTellServer::with_defaults(1, 17);
+        let mut srv: DefaultAskTellServer = BoDef::service(1).seed(17).build_adaptive_server();
         assert!(!srv.core.model.is_sparse());
         let f = |x: &[f64]| -(x[0] - 0.8).powi(2);
         for _ in 0..15 {

@@ -7,6 +7,7 @@
 //! hot-path optimization of the native GP here.
 
 use crate::la::{dot, Matrix};
+use crate::obs::{self, Phase};
 
 /// Column-block width of [`CholeskyFactor::solve_lower_multi`] (a block of
 /// RHS columns plus one factor row stay cache-resident while `L` streams).
@@ -38,6 +39,7 @@ impl std::error::Error for NotPositiveDefinite {}
 impl CholeskyFactor {
     /// Factor a full SPD matrix (standard left-looking algorithm, O(n^3)).
     pub fn factor(a: &Matrix) -> Result<Self, NotPositiveDefinite> {
+        let _span = obs::span(Phase::CholFactor);
         assert_eq!(a.rows(), a.cols(), "cholesky: matrix must be square");
         let n = a.rows();
         let mut l = Matrix::zeros(n, n);
@@ -80,6 +82,7 @@ impl CholeskyFactor {
     /// Solves `L w = b` (forward substitution), then the new diagonal is
     /// `sqrt(c - |w|^2)`.
     pub fn extend(&mut self, b: &[f64], c: f64) -> Result<(), NotPositiveDefinite> {
+        let _span = obs::span(Phase::CholFactor);
         let n = self.dim();
         assert_eq!(b.len(), n, "extend: column length mismatch");
         let w = self.solve_lower(b);
@@ -148,6 +151,7 @@ impl CholeskyFactor {
     /// per block of [`SOLVE_COL_BLOCK`] columns — the hot kernel of the
     /// batched GP posterior (`predict_batch`).
     pub fn solve_lower_multi(&self, b: &Matrix) -> Matrix {
+        let _span = obs::span(Phase::CholSolve);
         let n = self.dim();
         assert_eq!(b.rows(), n, "solve_lower_multi: RHS row mismatch");
         let m = b.cols();
@@ -188,6 +192,7 @@ impl CholeskyFactor {
     /// result needs rows `k > i`, so the sweep runs bottom-up with the
     /// factor accessed by columns (`L^T[i, k] = L[k, i]`).
     pub fn solve_lower_t_multi(&self, b: &Matrix) -> Matrix {
+        let _span = obs::span(Phase::CholSolve);
         let n = self.dim();
         assert_eq!(b.rows(), n, "solve_lower_t_multi: RHS row mismatch");
         let m = b.cols();

@@ -6,6 +6,8 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
+use crate::obs::{self, Phase};
+
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
@@ -115,6 +117,7 @@ impl Matrix {
     /// of [`matmul`](Self::matmul) / [`matmul_into`](Self::matmul_into);
     /// `matmul` skips the redundant zero-fill on its fresh buffer).
     fn matmul_accum(&self, other: &Matrix, out: &mut Matrix) {
+        let _span = obs::span(Phase::MatMul);
         assert_eq!(self.cols, other.rows, "matmul: dim mismatch");
         assert_eq!(
             (out.rows, out.cols),

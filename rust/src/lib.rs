@@ -49,6 +49,29 @@
 //! ([`runtime::XlaGp`]): JAX/Pallas graphs are lowered to HLO at build
 //! time (`make artifacts`) and executed from Rust via PJRT — Python is
 //! never on the optimization path.
+//!
+//! # Profiling a run
+//!
+//! Every hot layer is instrumented with phase-level [`obs::Span`] timers
+//! feeding a process-wide metrics registry (see [`obs`] for the cost
+//! model: one relaxed atomic load when disabled, per-thread shards when
+//! enabled). To see where a run's milliseconds go:
+//!
+//! * attach a [`stat::MetricsObserver`] to any `BoDef` frontend — it
+//!   enables timing and writes the per-run phase breakdown into the run
+//!   directory's `meta.dat` (TSV lines) and `metrics.json` on stop;
+//! * pass `--metrics` to the CLI (`limbo run dim=2 --metrics`) for a
+//!   phase table on stderr, or `metrics=true` as a config key;
+//! * run `cargo run --release --example metrics` for a worked Branin
+//!   breakdown, or bracket your own region with [`obs::snapshot`] and
+//!   [`obs::Snapshot::delta_since`];
+//! * `benches/gp_scaling.rs` and `benches/batch_propose.rs` emit
+//!   per-phase JSON rows so `scripts/bench_compare.py` attributes a
+//!   regression to a phase (Cholesky vs. refit vs. acquisition) instead
+//!   of a whole bench.
+//!
+//! Spans never touch the RNG or reorder floating-point work, so traces
+//! are bit-identical with metrics on or off (`tests/api_parity.rs`).
 
 pub mod acqui;
 pub mod baseline;
@@ -61,6 +84,7 @@ pub mod kernel;
 pub mod la;
 pub mod mean;
 pub mod model;
+pub mod obs;
 pub mod opt;
 pub mod pool;
 pub mod rng;
@@ -90,6 +114,6 @@ pub mod prelude {
         RandomPoint,
     };
     pub use crate::rng::Pcg64;
-    pub use crate::stat::{JsonlObserver, RunLogger, TraceHandle};
+    pub use crate::stat::{JsonlObserver, MetricsObserver, RunLogger, TraceHandle};
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
 }

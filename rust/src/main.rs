@@ -26,11 +26,22 @@ use limbo::mean::DataMean;
 use limbo::model::gp::Gp;
 use limbo::opt::{Direct, NelderMead, OptimizerExt, RandomPoint};
 use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
-use limbo::stat::RunLogger;
+use limbo::stat::{MetricsObserver, RunLogger};
 use limbo::stop::MaxIterations;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // `--metrics` is a bare flag; pull it out before Config parsing
+    // (which only accepts key=value pairs). `metrics=true` works too.
+    let mut metrics = false;
+    args.retain(|a| {
+        if a == "--metrics" {
+            metrics = true;
+            false
+        } else {
+            true
+        }
+    });
     let Some(cmd) = args.first().map(String::as_str) else {
         usage();
         return;
@@ -39,12 +50,23 @@ fn main() {
         eprintln!("bad arguments: {e}");
         std::process::exit(2);
     });
+    let metrics = metrics || cfg.get_bool("metrics", false);
+    let profile = if metrics {
+        limbo::obs::set_enabled(true);
+        Some((limbo::obs::snapshot(), std::time::Instant::now()))
+    } else {
+        None
+    };
     match cmd {
-        "run" => cmd_run(&cfg),
+        "run" => cmd_run(&cfg, metrics),
         "fig1" => cmd_fig1(&cfg),
         "serve" => cmd_serve(&cfg),
         "info" => cmd_info(),
         _ => usage(),
+    }
+    if let Some((base, start)) = profile {
+        let delta = limbo::obs::snapshot().delta_since(&base);
+        eprintln!("\n{}", delta.render_table(Some(start.elapsed().as_secs_f64())));
     }
 }
 
@@ -53,14 +75,14 @@ fn usage() {
         "usage: limbo <run|fig1|serve|info> [key=value ...]\n\
          \n\
          run    function=branin dim=2 iterations=40 init=10 hpo=false \\\n\
-         \x20      backend=native|xla seed=1 out=/tmp/run\n\
+         \x20      backend=native|xla seed=1 out=/tmp/run --metrics\n\
          fig1   replicates=30 iterations=40 functions=branin,sphere hpo=both\n\
          serve  dim=2 seed=1    (stdin protocol: ask / tell <y> / best / quit)\n\
          info"
     );
 }
 
-fn cmd_run(cfg: &Config) {
+fn cmd_run(cfg: &Config, metrics: bool) {
     let name = cfg.get_str("function", "branin");
     let dim = cfg.get_usize("dim", 2);
     let Some(f) = benchfns::by_name(name, dim) else {
@@ -94,7 +116,13 @@ fn cmd_run(cfg: &Config) {
             )
             .with_refit(refit);
             if let Some(dir) = cfg.get("out") {
-                opt = opt.with_observer(RunLogger::create(std::path::Path::new(dir)).unwrap());
+                let dir = std::path::Path::new(dir);
+                opt = opt.with_observer(RunLogger::create(dir).unwrap());
+                if metrics {
+                    // after RunLogger: its `finish` truncates meta.dat,
+                    // the phase breakdown must append second
+                    opt = opt.with_observer(MetricsObserver::create(dir).unwrap());
+                }
             }
             opt.optimize(&eval)
         }
@@ -108,7 +136,11 @@ fn cmd_run(cfg: &Config) {
                 .refit(refit)
                 .seed(seed);
             if let Some(dir) = cfg.get("out") {
-                def = def.observer(RunLogger::create(std::path::Path::new(dir)).unwrap());
+                let dir = std::path::Path::new(dir);
+                def = def.observer(RunLogger::create(dir).unwrap());
+                if metrics {
+                    def = def.observer(MetricsObserver::create(dir).unwrap());
+                }
             }
             def.build_optimizer().optimize(&eval)
         }

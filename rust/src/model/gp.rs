@@ -13,6 +13,7 @@ use crate::la::{dot, CholeskyFactor, Matrix};
 use crate::mean::MeanFn;
 use crate::model::hp_opt::{KernelLFOpt, LmlModel};
 use crate::model::Model;
+use crate::obs::{self, Phase};
 
 /// Gaussian process with kernel `K`, prior mean `M`.
 #[derive(Clone)]
@@ -119,6 +120,7 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
     /// Full O(n^3) refit (Gram + factor + alpha). Falls back to adding
     /// jitter if the Gram matrix is numerically singular.
     pub fn refit(&mut self) {
+        let _span = obs::span(Phase::DenseFit);
         let n = self.xs.len();
         self.mean.update(&self.ys);
         if n == 0 {
@@ -176,6 +178,7 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
     /// upper triangle is visited (2x fewer kernel-gradient evaluations).
     /// See EXPERIMENTS.md §Perf for the before/after.
     pub fn lml_grad(&self) -> Vec<f64> {
+        let _span = obs::span(Phase::LmlGrad);
         let n = self.xs.len();
         let np = self.kernel.n_params();
         let mut grad = vec![0.0; np + 1];
@@ -286,6 +289,7 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
     /// column block rather than once per candidate (the §Perf lever the
     /// population-based inner optimizers exploit via `eval_many`).
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let _span = obs::span(Phase::PredictBatch);
         let n = self.xs.len();
         if xs.is_empty() {
             return Vec::new();
@@ -294,7 +298,10 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
             return xs.iter().map(|x| (self.mean.eval(x), self.kernel.variance())).collect();
         }
         // K_* : n x B cross-covariance block
-        let ks = self.kernel.cross_cov(&self.xs, xs);
+        let ks = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(&self.xs, xs)
+        };
         // means: K_*^T alpha in one pass
         let mus = ks.matvec_t(&self.alpha);
         // variances: solve L V = K_* once, then column norms
@@ -315,13 +322,17 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
     /// diagonal reproduces `predict_batch` exactly (same accumulation
     /// order, same `1e-12` clamp).
     fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        let _span = obs::span(Phase::PredictJoint);
         let b = xs.len();
         if b == 0 {
             return (Vec::new(), Matrix::zeros(0, 0));
         }
         let n = self.xs.len();
         // exact prior block K_** (B x B)
-        let mut cov = self.kernel.cross_cov(xs, xs);
+        let mut cov = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(xs, xs)
+        };
         if n == 0 {
             let mus = xs.iter().map(|x| self.mean.eval(x)).collect();
             for j in 0..b {
@@ -330,7 +341,10 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
             return (mus, cov);
         }
         // K_* : n x B cross-covariance block, shared with predict_batch
-        let ks = self.kernel.cross_cov(&self.xs, xs);
+        let ks = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(&self.xs, xs)
+        };
         let mut mus = ks.matvec_t(&self.alpha);
         for (mu, x) in mus.iter_mut().zip(xs) {
             *mu += self.mean.eval(x);

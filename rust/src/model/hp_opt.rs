@@ -14,6 +14,7 @@
 //! out over [`crate::pool::parallel_map_catch`], each on its own clone of
 //! the model, so a panicking restart costs only that restart.
 
+use crate::obs::{self, Counter, Phase};
 use crate::opt::rprop::{rprop_maximize, RpropParams};
 use crate::pool::parallel_map_catch;
 use crate::rng::Pcg64;
@@ -109,6 +110,8 @@ impl KernelLFOpt {
     /// clones of the model (each a full rprop trajectory); the best of
     /// all restarts — never worse than the starting point — is applied.
     pub fn run<T: LmlModel>(&mut self, model: &mut T) {
+        let _span = obs::span(Phase::HpOpt);
+        obs::counter_add(Counter::HpRestarts, self.config.restarts.max(1) as u64);
         let start = model.hp_vector();
         let seed = restart_seed(self.config.seed, model.n_samples() as u64, self.refits);
         self.refits += 1;

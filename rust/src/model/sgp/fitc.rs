@@ -25,6 +25,7 @@ use crate::model::gp::Gp;
 use crate::model::hp_opt::{KernelLFOpt, LmlModel};
 use crate::model::sgp::inducing::{InducingSet, InducingUpdate};
 use crate::model::Model;
+use crate::obs::{self, Counter, Gauge, Phase};
 
 /// Tunables for [`SparseGp`].
 #[derive(Clone, Debug)]
@@ -112,6 +113,8 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     /// Build a sparse GP from a fitted dense GP (same kernel/mean state,
     /// current hyper-parameters), refitting on its data.
     pub fn from_dense(gp: &Gp<K, M>, config: SgpConfig) -> Self {
+        let _span = obs::span(Phase::SparseMigrate);
+        obs::counter_add(Counter::SparseMigrations, 1);
         let (kernel, mean) = (gp.kernel().clone(), gp.mean().clone());
         let mut sgp = Self::with_config(kernel, mean, gp.noise_var().sqrt(), config);
         sgp.learn_noise = gp.learn_noise;
@@ -209,6 +212,7 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     }
 
     fn refit_inner(&mut self, rebuild_inducing: bool) {
+        let _span = obs::span(Phase::SparseFit);
         self.mean.update(&self.ys);
         let n = self.xs.len();
         if n == 0 {
@@ -275,6 +279,7 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
         self.rows = rows;
         self.w = w;
         self.alpha = alpha;
+        obs::gauge_set(Gauge::InducingPoints, m as u64);
     }
 
     /// Exact FITC log marginal likelihood of the current fit,
@@ -324,6 +329,7 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     /// * an m×m inducing block
     ///   `½ (S diag(v) Sᵀ − γγᵀ + K_mm⁻¹ − A⁻¹)` on `dk(z_j, z_k)`.
     pub fn lml_grad(&self) -> Vec<f64> {
+        let _span = obs::span(Phase::LmlGrad);
         let n = self.xs.len();
         let np = self.kernel.n_params();
         let mut grad = vec![0.0; np + 1];
@@ -510,6 +516,7 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
     /// set (vs. `2B` independent solves point-wise) — the sparse half of
     /// the batch-first pipeline.
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let _span = obs::span(Phase::PredictBatch);
         let m = self.inducing.len();
         if xs.is_empty() {
             return Vec::new();
@@ -518,7 +525,10 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
             return xs.iter().map(|x| (self.mean.eval(x), self.kernel.variance())).collect();
         }
         // K_* : m x B feature block against the inducing set
-        let ks = self.kernel.cross_cov(self.inducing.points(), xs);
+        let ks = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(self.inducing.points(), xs)
+        };
         let mus = ks.matvec_t(&self.alpha);
         // q_** = k_*^T K_mm^{-1} k_* and the A^{-1} correction, batched
         let q_star = self.l_mm.solve_lower_multi(&ks).col_squared_norms();
@@ -542,13 +552,17 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
     /// so the result is PSD up to round-off; the diagonal reproduces
     /// `predict_batch` exactly (same accumulation order, same clamp).
     fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        let _span = obs::span(Phase::PredictJoint);
         let b = xs.len();
         if b == 0 {
             return (Vec::new(), Matrix::zeros(0, 0));
         }
         let m = self.inducing.len();
         // exact prior block K_** (B x B)
-        let mut cov = self.kernel.cross_cov(xs, xs);
+        let mut cov = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(xs, xs)
+        };
         if m == 0 {
             let mus = xs.iter().map(|x| self.mean.eval(x)).collect();
             for j in 0..b {
@@ -557,7 +571,10 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
             return (mus, cov);
         }
         // K_* : m x B feature block against the inducing set
-        let ks = self.kernel.cross_cov(self.inducing.points(), xs);
+        let ks = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(self.inducing.points(), xs)
+        };
         let mut mus = ks.matvec_t(&self.alpha);
         for (mu, x) in mus.iter_mut().zip(xs) {
             *mu += self.mean.eval(x);

@@ -31,6 +31,7 @@ pub use population::PopulationSearch;
 pub use random::RandomPoint;
 pub use rprop::{rprop_maximize, RpropParams};
 
+use crate::obs::{self, Counter, Phase};
 use crate::pool;
 use crate::rng::Pcg64;
 
@@ -169,6 +170,8 @@ pub struct ParallelRepeater<O: Optimizer> {
 
 impl<O: Optimizer> Optimizer for ParallelRepeater<O> {
     fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let _span = obs::span(Phase::InnerOpt);
+        obs::counter_add(Counter::InnerRestarts, self.n.max(1) as u64);
         let rngs: Vec<Pcg64> = (0..self.n.max(1)).map(|i| rng.fork(i as u64)).collect();
         let inner = &self.inner;
         let results = pool::parallel_map(rngs, self.threads, |_, mut r| {
@@ -186,6 +189,8 @@ impl<O: Optimizer> Optimizer for ParallelRepeater<O> {
     /// good point (e.g. the qEI joint-refinement pass over a greedy
     /// batch) restarted from scratch instead.
     fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        let _span = obs::span(Phase::InnerOpt);
+        obs::counter_add(Counter::InnerRestarts, self.n.max(1) as u64);
         let rngs: Vec<Pcg64> = (0..self.n.max(1)).map(|i| rng.fork(i as u64)).collect();
         let inner = &self.inner;
         let results = pool::parallel_map(rngs, self.threads, |_, mut r| {

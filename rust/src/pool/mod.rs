@@ -12,6 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
+
+use crate::obs::{self, Counter, Phase};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -86,12 +89,23 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Submit a job.
+    /// Submit a job. When metrics are enabled the job is wrapped to
+    /// attribute its queue wait (submit → dequeue) and execution time to
+    /// [`Phase::PoolQueueWait`] / [`Phase::PoolExec`].
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        obs::counter_add(Counter::PoolJobs, 1);
         {
             let (lock, _) = &*self.pending;
             *lock_unpoisoned(lock) += 1;
         }
+        let enqueued = if obs::enabled() { Some(Instant::now()) } else { None };
+        let job = move || {
+            if let Some(t0) = enqueued {
+                obs::record_duration(Phase::PoolQueueWait, t0.elapsed());
+            }
+            let _span = obs::span(Phase::PoolExec);
+            job();
+        };
         self.sender.send(Message::Run(Box::new(job))).expect("pool shut down");
     }
 

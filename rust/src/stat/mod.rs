@@ -13,7 +13,12 @@
 //!   pipeline's JSON-rows idiom;
 //! * [`TraceHandle`] collects the observation trace in memory behind a
 //!   cloneable handle (the cross-frontend parity tests compare these
-//!   bit-for-bit).
+//!   bit-for-bit);
+//! * [`MetricsObserver`] enables the [`crate::obs`] span registry for
+//!   the run and writes its phase breakdown (where the milliseconds
+//!   went: Cholesky vs. refit vs. acquisition) into `meta.dat` and
+//!   `metrics.json` on stop — or on drop, so a panicking run still
+//!   reports.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -22,14 +27,21 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::bayes_opt::core::{BoEvent, Observer};
+use crate::obs::{self, Counter, Phase};
 
-/// TSV run logger; every write goes through buffered files flushed on drop.
+/// TSV run logger; every write goes through buffered files flushed on
+/// [`finish`](Self::finish) (and again on drop, so an early-dropped run
+/// keeps the rows it logged). I/O errors are never silently swallowed:
+/// they are counted in [`write_failures`](Self::write_failures), mirrored
+/// to the process-wide [`Counter::StatWriteFailures`], and surfaced as a
+/// `write_failures` line in `meta.dat`.
 pub struct RunLogger {
     dir: PathBuf,
     samples: BufWriter<File>,
     observations: BufWriter<File>,
     best: BufWriter<File>,
     start: Instant,
+    write_failures: u64,
 }
 
 impl RunLogger {
@@ -45,36 +57,76 @@ impl RunLogger {
             observations: open("observations.dat")?,
             best: open("best.dat")?,
             start: Instant::now(),
+            write_failures: 0,
         })
+    }
+
+    /// Count one failed write locally and in the process-wide registry.
+    fn check<T>(&mut self, r: std::io::Result<T>) {
+        if r.is_err() {
+            self.write_failures += 1;
+            obs::counter_add(Counter::StatWriteFailures, 1);
+        }
+    }
+
+    /// Writes that failed so far (buffered writes surface errors at
+    /// flush time, so the final count is only in after
+    /// [`finish`](Self::finish)).
+    pub fn write_failures(&self) -> u64 {
+        self.write_failures
     }
 
     /// Record one evaluation.
     pub fn log_sample(&mut self, iteration: usize, x: &[f64], y: f64, best: f64) {
         let xs: Vec<String> = x.iter().map(|v| format!("{v:.10e}")).collect();
-        let _ = writeln!(self.samples, "{iteration}\t{}", xs.join("\t"));
-        let _ = writeln!(self.observations, "{iteration}\t{y:.10e}");
-        let _ = writeln!(
+        let r = writeln!(self.samples, "{iteration}\t{}", xs.join("\t"));
+        self.check(r);
+        let r = writeln!(self.observations, "{iteration}\t{y:.10e}");
+        self.check(r);
+        let r = writeln!(
             self.best,
             "{iteration}\t{best:.10e}\t{:.6}",
             self.start.elapsed().as_secs_f64()
         );
+        self.check(r);
     }
 
     /// Write the run footer (`meta.dat`) and flush everything.
     pub fn finish(&mut self, dim: usize, total_evals: usize) {
+        let r = self.samples.flush();
+        self.check(r);
+        let r = self.observations.flush();
+        self.check(r);
+        let r = self.best.flush();
+        self.check(r);
         let elapsed = self.start.elapsed().as_secs_f64();
-        let _ = std::fs::write(
+        let r = std::fs::write(
             self.dir.join("meta.dat"),
-            format!("dim\t{dim}\nevaluations\t{total_evals}\nwall_seconds\t{elapsed:.6}\n"),
+            format!(
+                "dim\t{dim}\nevaluations\t{total_evals}\nwall_seconds\t{elapsed:.6}\n\
+                 write_failures\t{}\n",
+                self.write_failures
+            ),
         );
-        let _ = self.samples.flush();
-        let _ = self.observations.flush();
-        let _ = self.best.flush();
+        self.check(r);
     }
 
     /// The run directory.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+}
+
+impl Drop for RunLogger {
+    /// Flush the buffered rows so an early-dropped (or panicking) run
+    /// keeps everything it logged, even if `finish` never ran.
+    fn drop(&mut self) {
+        let r = self.samples.flush();
+        self.check(r);
+        let r = self.observations.flush();
+        self.check(r);
+        let r = self.best.flush();
+        self.check(r);
     }
 }
 
@@ -145,9 +197,12 @@ impl Observer for TraceHandle {
 }
 
 /// JSON-lines event writer: one compact JSON object per [`BoEvent`],
-/// flushed on [`BoEvent::Stopped`]. The machine-readable twin of
-/// [`RunLogger`]'s TSV files, in the same rows-of-JSON shape the bench
-/// pipeline (`benches/*.rs` → `BENCH_PR.json`) consumes.
+/// flushed on [`BoEvent::Stopped`] **and on drop** — a run that is
+/// dropped early (or unwinds out of a panicking evaluation) keeps every
+/// buffered event. The machine-readable twin of [`RunLogger`]'s TSV
+/// files, in the same rows-of-JSON shape the bench pipeline
+/// (`benches/*.rs` → `BENCH_PR.json`) consumes. Write/flush errors are
+/// counted in [`Counter::StatWriteFailures`].
 pub struct JsonlObserver {
     out: BufWriter<File>,
 }
@@ -159,6 +214,12 @@ impl JsonlObserver {
             std::fs::create_dir_all(parent)?;
         }
         Ok(Self { out: BufWriter::new(File::create(path)?) })
+    }
+
+    fn flush_counting(&mut self) {
+        if self.out.flush().is_err() {
+            obs::counter_add(Counter::StatWriteFailures, 1);
+        }
     }
 
     /// JSON-safe float: non-finite values (a `-inf` incumbent before
@@ -178,9 +239,18 @@ impl JsonlObserver {
     }
 }
 
+impl Drop for JsonlObserver {
+    /// Flush buffered events so a run that never emitted
+    /// [`BoEvent::Stopped`] (early drop, panic unwind, caller bug) still
+    /// keeps everything it was told about.
+    fn drop(&mut self) {
+        self.flush_counting();
+    }
+}
+
 impl Observer for JsonlObserver {
     fn on_event(&mut self, event: &BoEvent) {
-        let _ = match *event {
+        let r = match *event {
             BoEvent::InitDone { n_samples } => {
                 writeln!(self.out, r#"{{"event":"init_done","n_samples":{n_samples}}}"#)
             }
@@ -208,10 +278,130 @@ impl Observer for JsonlObserver {
                     r#"{{"event":"stopped","dim":{dim},"evaluations":{evaluations},"best":{}}}"#,
                     Self::fmt_f64(best)
                 );
-                let _ = self.out.flush();
+                self.flush_counting();
                 r
             }
         };
+        if r.is_err() {
+            obs::counter_add(Counter::StatWriteFailures, 1);
+        }
+    }
+}
+
+/// Event-bus observer that profiles a run with the [`crate::obs`] span
+/// registry and reports where the milliseconds went.
+///
+/// On creation it enables metrics collection process-wide and takes a
+/// base snapshot; on [`BoEvent::Stopped`] (or on drop, if the run never
+/// stopped cleanly) it computes the delta over the run and writes
+///
+/// * a phase breakdown appended to `meta.dat` (`phase.<name>.seconds`,
+///   `phase.<name>.calls`, `counter.<name>` TSV lines, plus
+///   `phase_wall_seconds` / `phase_service_seconds` / `phase_coverage`);
+/// * `metrics.json` — the full [`obs::Snapshot::to_json`] document
+///   wrapped with wall-clock and coverage, for machine consumption
+///   (Prometheus text exposition is available via
+///   [`obs::Snapshot::to_prometheus`]).
+///
+/// Subscribe it **after** [`RunLogger`]: `RunLogger::finish` truncates
+/// `meta.dat` when it handles `Stopped`, and observers run in
+/// subscription order, so the phase lines must land second.
+///
+/// Timing never touches RNG draws or floating-point evaluation order, so
+/// runs are bit-identical with and without a `MetricsObserver` attached
+/// (enforced by `tests/api_parity.rs`).
+pub struct MetricsObserver {
+    dir: PathBuf,
+    base: obs::Snapshot,
+    start: Instant,
+    written: bool,
+}
+
+impl MetricsObserver {
+    /// Enable metrics collection and start profiling now; reports are
+    /// written into `dir` when the run stops.
+    pub fn create(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        obs::set_enabled(true);
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            base: obs::snapshot(),
+            start: Instant::now(),
+            written: false,
+        })
+    }
+
+    /// The run's phase activity so far (delta over the base snapshot).
+    pub fn delta(&self) -> obs::Snapshot {
+        obs::snapshot().delta_since(&self.base)
+    }
+
+    fn write_reports(&mut self) {
+        if self.written {
+            return;
+        }
+        self.written = true;
+        let delta = self.delta();
+        let wall = self.start.elapsed().as_secs_f64();
+        let service = delta.service_seconds();
+        let coverage = if wall > 0.0 { service / wall } else { 0.0 };
+
+        let mut lines = String::new();
+        lines.push_str(&format!("phase_wall_seconds\t{wall:.6}\n"));
+        lines.push_str(&format!("phase_service_seconds\t{service:.6}\n"));
+        lines.push_str(&format!("phase_coverage\t{coverage:.4}\n"));
+        for p in Phase::ALL {
+            let calls = delta.calls(p);
+            if calls == 0 {
+                continue;
+            }
+            lines.push_str(&format!(
+                "phase.{}.seconds\t{:.6}\n",
+                p.name(),
+                delta.seconds(p)
+            ));
+            lines.push_str(&format!("phase.{}.calls\t{calls}\n", p.name()));
+        }
+        for c in Counter::ALL {
+            let v = delta.counter(c);
+            if v == 0 {
+                continue;
+            }
+            lines.push_str(&format!("counter.{}\t{v}\n", c.name()));
+        }
+        let appended = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(self.dir.join("meta.dat"))
+            .and_then(|mut f| f.write_all(lines.as_bytes()));
+        if appended.is_err() {
+            obs::counter_add(Counter::StatWriteFailures, 1);
+        }
+
+        let json = format!(
+            "{{\"wall_seconds\":{wall:.6},\"service_seconds\":{service:.6},\
+             \"coverage\":{coverage:.4},\"metrics\":{}}}\n",
+            delta.to_json()
+        );
+        if std::fs::write(self.dir.join("metrics.json"), json).is_err() {
+            obs::counter_add(Counter::StatWriteFailures, 1);
+        }
+    }
+}
+
+impl Observer for MetricsObserver {
+    fn on_event(&mut self, event: &BoEvent) {
+        if let BoEvent::Stopped { .. } = *event {
+            self.write_reports();
+        }
+    }
+}
+
+impl Drop for MetricsObserver {
+    /// A run that panicked or was dropped mid-flight still reports the
+    /// phases it ran.
+    fn drop(&mut self) {
+        self.write_reports();
     }
 }
 
@@ -249,6 +439,41 @@ mod tests {
         assert_eq!(best.lines().count(), 1);
         let meta = std::fs::read_to_string(dir.join("meta.dat")).unwrap();
         assert!(meta.contains("evaluations\t1"));
+        assert!(meta.contains("write_failures\t0"), "{meta}");
+    }
+
+    #[test]
+    fn run_logger_counts_write_failures_instead_of_swallowing() {
+        let dir = std::env::temp_dir().join("limbo_stat_failure_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut log = RunLogger::create(&dir).unwrap();
+        log.log_sample(0, &[0.1], 1.0, 1.0);
+        // Yank the directory out from under the logger: the buffered
+        // row files stay writable (unlinked-but-open), but `finish`'s
+        // meta.dat creation must fail — and be counted, not swallowed.
+        std::fs::remove_dir_all(&dir).unwrap();
+        let base = obs::snapshot();
+        log.finish(1, 1);
+        assert!(log.write_failures() >= 1);
+        let delta = obs::snapshot().delta_since(&base);
+        assert!(
+            delta.counter(Counter::StatWriteFailures) >= 1,
+            "failure must reach the process-wide registry"
+        );
+    }
+
+    /// Regression for the `let _ = flush()` swallow: `/dev/full` opens
+    /// fine but every flush fails with ENOSPC, which must land in
+    /// [`Counter::StatWriteFailures`].
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn jsonl_observer_counts_enospc_on_flush() {
+        let base = obs::snapshot();
+        let mut writer = JsonlObserver::create(Path::new("/dev/full")).unwrap();
+        writer.on_event(&BoEvent::Stopped { dim: 1, evaluations: 1, best: 0.0 });
+        drop(writer);
+        let delta = obs::snapshot().delta_since(&base);
+        assert!(delta.counter(Counter::StatWriteFailures) >= 1);
     }
 
     #[test]
@@ -302,5 +527,68 @@ mod tests {
         assert!(content.contains(r#""y":null"#), "NaN must serialize as null: {content}");
         assert!(content.contains(r#""best":null"#), "-inf must serialize as null: {content}");
         assert!(!content.contains("inf") && !content.contains("NaN"), "{content}");
+    }
+
+    /// Regression: events logged before an early drop (no `Stopped`)
+    /// must survive — `Drop` flushes the buffer.
+    #[test]
+    fn jsonl_observer_flushes_buffered_events_on_drop() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_drop/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut writer = JsonlObserver::create(&path).unwrap();
+            writer.on_event(&BoEvent::InitDone { n_samples: 3 });
+            writer.on_event(&BoEvent::Refit { n_samples: 3 });
+            // dropped here without ever seeing BoEvent::Stopped
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content.lines().count(), 2, "buffered events lost on drop: {content}");
+    }
+
+    #[test]
+    fn metrics_observer_appends_phase_breakdown_and_writes_json() {
+        let _guard = obs::test_serial_guard();
+        let dir = std::env::temp_dir().join("limbo_stat_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prior = obs::enabled();
+        {
+            let mut metrics = MetricsObserver::create(&dir).unwrap();
+            assert!(obs::enabled(), "create() must switch metrics on");
+            // Pretend meta.dat already has RunLogger's footer; the phase
+            // lines must append after it, not clobber it.
+            std::fs::write(dir.join("meta.dat"), "dim\t2\n").unwrap();
+            obs::record_duration(Phase::Ask, std::time::Duration::from_millis(4));
+            obs::record_duration(Phase::CholFactor, std::time::Duration::from_millis(2));
+            metrics.on_event(&BoEvent::Stopped { dim: 2, evaluations: 5, best: 0.0 });
+        }
+        obs::set_enabled(prior);
+        let meta = std::fs::read_to_string(dir.join("meta.dat")).unwrap();
+        assert!(meta.starts_with("dim\t2\n"), "must append, not truncate: {meta}");
+        assert!(meta.contains("phase_wall_seconds\t"), "{meta}");
+        assert!(meta.contains("phase_service_seconds\t"), "{meta}");
+        assert!(meta.contains("phase_coverage\t"), "{meta}");
+        assert!(meta.contains("phase.ask.seconds\t"), "{meta}");
+        assert!(meta.contains("phase.chol_factor.seconds\t"), "{meta}");
+        let json = std::fs::read_to_string(dir.join("metrics.json")).unwrap();
+        assert!(json.contains(r#""wall_seconds":"#), "{json}");
+        assert!(json.contains(r#""service_seconds":"#), "{json}");
+        assert!(json.contains(r#""ask""#), "{json}");
+    }
+
+    /// A run that panics or is abandoned mid-flight still reports: the
+    /// observer's `Drop` writes the files if `Stopped` never arrived.
+    #[test]
+    fn metrics_observer_reports_on_drop_without_stopped() {
+        let _guard = obs::test_serial_guard();
+        let dir = std::env::temp_dir().join("limbo_stat_metrics_drop_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prior = obs::enabled();
+        {
+            let _metrics = MetricsObserver::create(&dir).unwrap();
+        }
+        obs::set_enabled(prior);
+        assert!(dir.join("metrics.json").exists());
+        let meta = std::fs::read_to_string(dir.join("meta.dat")).unwrap();
+        assert!(meta.contains("phase_wall_seconds\t"), "{meta}");
     }
 }

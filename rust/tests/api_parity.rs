@@ -154,3 +154,21 @@ fn determinism_same_def_same_trace() {
     let b = run_optimizer();
     assert_traces_identical(&a, &b, "repeatability");
 }
+
+/// The observability layer must stay out of the deterministic trace:
+/// spans only read clocks, never the RNG or the floating-point
+/// evaluation order, so a run with the metrics registry enabled is
+/// bit-identical to one with it disabled.
+#[test]
+fn metrics_on_or_off_leaves_traces_bit_identical() {
+    // Serialize against other tests that toggle the global enabled flag
+    // (the obs unit tests); the flag itself is what this test varies.
+    let _guard = limbo::obs::test_serial_guard();
+    let prior = limbo::obs::enabled();
+    limbo::obs::set_enabled(false);
+    let off = run_optimizer();
+    limbo::obs::set_enabled(true);
+    let on = run_optimizer();
+    limbo::obs::set_enabled(prior);
+    assert_traces_identical(&off, &on, "metrics off vs on");
+}

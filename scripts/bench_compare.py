@@ -18,9 +18,16 @@ Gate policy
   `fit_plus_predict_s` / `propose_s` (lower is better) regressions print
   a warning but never fail the job (wall-clock timings are too noisy on
   shared CI runners for a hard gate).
+* `gp_scaling_phase` and `batch_propose_phase` rows (per-phase seconds
+  from the `limbo::obs` span registry) are also warn-only; they exist to
+  attribute a headline regression to a phase — when `propose_s` warns,
+  the matching phase rows say whether the inner optimizer, the qEI MC
+  sampler, or the Cholesky factor slowed down.
 * If the baseline has `"warn_only": true`, or has no matching row for a
   PR row, everything downgrades to warnings — this is how the gate
-  behaves on first landing, while the baseline seeds.
+  behaves on first landing, while the baseline seeds. With
+  `"warn_only": false` the candidates/sec gate is armed and fails the
+  job as soon as matching baseline rows exist.
 
 Refreshing the baseline
 -----------------------
@@ -64,6 +71,12 @@ def row_key(row):
         return ("gp_scaling", row.get("model"), row.get("n"), row.get("m"))
     if row.get("bench") == "batch_propose":
         return ("batch_propose", row.get("strategy"), row.get("n"), row.get("q"))
+    if row.get("bench") == "gp_scaling_phase":
+        return ("gp_scaling_phase", row.get("model"), row.get("n"), row.get("m"),
+                row.get("phase"))
+    if row.get("bench") == "batch_propose_phase":
+        return ("batch_propose_phase", row.get("strategy"), row.get("n"),
+                row.get("q"), row.get("phase"))
     return (row.get("bench"), json.dumps(row, sort_keys=True))
 
 
@@ -86,7 +99,13 @@ def main():
 
     if args.write_baseline:
         with open(args.write_baseline, "w") as f:
-            json.dump({"warn_only": False, "rows": pr_rows}, f, indent=1)
+            json.dump({
+                "_comment": "Recorded by scripts/bench_compare.py "
+                            "--write-baseline from a real bench run; refresh "
+                            "from CI-runner rows, never hand-edit the numbers.",
+                "warn_only": False,
+                "rows": pr_rows,
+            }, f, indent=1)
         print(f"baseline seeded with {len(pr_rows)} rows -> {args.write_baseline}")
         return 0
 
@@ -145,6 +164,24 @@ def main():
                 warnings.append(line)
             else:
                 print(f"ok   {line}")
+        elif row.get("bench") in ("gp_scaling_phase", "batch_propose_phase"):
+            # per-phase attribution rows (warn-only): when a headline row
+            # above warns, these say WHICH phase regressed
+            now, then = row.get("seconds"), base.get("seconds")
+            if now is None or then is None or then <= 0:
+                continue
+            slowdown = now / then - 1.0
+            line = f"{key}: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
+            if slowdown > args.max_regression:
+                warnings.append(line)
+            else:
+                print(f"ok   {line}")
+
+    if not warn_only and not base_by_key:
+        warnings.append(
+            "baseline is armed (warn_only: false) but has no rows yet — "
+            "download the bench-baseline-seed artifact from a trunk CI run "
+            "and commit it as rust/benches/baseline.json")
 
     for w in warnings:
         print(f"WARN {w}")
