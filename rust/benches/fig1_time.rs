@@ -1,47 +1,165 @@
-//! Figure-1 wall-clock panel, steady-state form: full-run timing of the
-//! static vs dynamic implementation per test function (quick protocol —
-//! the full 250-replicate study with accuracy panels is
-//! `examples/fig1_repro.rs`).
+//! Figure-1 accuracy-vs-wall-clock sweep: the static `BoDef` engine vs
+//! the dynamic `baseline::BayesOptLike` across dimensions (branin/2,
+//! hartmann6/6, ackley/10), iteration budgets, and the with/without-HPO
+//! panels. The full 250-replicate accuracy study is
+//! `examples/fig1_repro.rs`; this bench is the CI-diffable timing grid.
+//!
+//! Every cell prints one machine-readable JSON row
+//! (`{"bench":"fig1_time","func":...,"dim":...,"iters":...,"hpo":...,
+//! "limbo_s":...,"bayesopt_s":...,"ratio":...}`) plus per-phase
+//! attribution rows (`"bench":"fig1_time_phase"`) from one extra
+//! metrics-enabled limbo run, so a ratio regression can be pinned to
+//! Cholesky vs cross-covariance vs the inner optimizer. Rows are also
+//! written to `target/fig1_time.json`, which CI merges into
+//! `BENCH_PR.json` for the bench-trajectory gate
+//! (`scripts/bench_compare.py` vs `benches/baseline.json`).
+//!
+//! Pass `--smoke` for the CI-sized variant (2 cells, 1 seed).
 
-use limbo::benchlib::{header, Bencher};
-use limbo::benchfns::{by_name, TestFunction};
+use std::io::Write as _;
+use std::time::Instant;
+
+use limbo::benchfns::by_name;
 use limbo::coordinator::experiment::BenchConfig;
 use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
 
-fn main() {
-    // single-core-friendly protocol: 4 representative functions, 12
-    // iterations, 5 samples (the full study is examples/fig1_repro)
-    let b = Bencher { samples: 5, ..Bencher::quick() };
-    let settings = Fig1Settings { iterations: 12, inner_evals: 300, ..Default::default() };
-    let limbo = LimboConfig::new(settings);
-    let bayesopt = BaselineConfig::new(settings);
-    let limbo_hpo = LimboConfig::new(settings.with_hpo());
-    let bayesopt_hpo = BaselineConfig::new(settings.with_hpo());
+/// One sweep cell: a test function at a given iteration budget, with or
+/// without periodic ML-II refits.
+struct Cell {
+    func: &'static str,
+    dim: usize,
+    iters: usize,
+    hpo: bool,
+}
 
-    header("fig1 wall-clock (12 iterations/run, quick protocol)");
-    let functions: Vec<Box<dyn TestFunction>> = ["branin", "sphere", "ackley", "hartmann3"]
-        .iter()
-        .map(|n| by_name(n, 2).unwrap())
-        .collect();
+/// Median wall seconds and mean accuracy over `seeds` full runs.
+fn time_runs(cfg: &dyn BenchConfig, func: &str, dim: usize, seeds: &[u64]) -> (f64, f64) {
+    let f = by_name(func, dim).expect("known test function");
+    let mut secs = Vec::new();
+    let mut acc = 0.0;
+    for &seed in seeds {
+        let t0 = Instant::now();
+        let out = cfg.run(f.as_ref(), seed);
+        secs.push(t0.elapsed().as_secs_f64());
+        acc += f.accuracy(out.best_value);
+    }
+    secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (secs[secs.len() / 2], acc / seeds.len() as f64)
+}
+
+/// One extra un-timed limbo run with the span registry on: attributes the
+/// headline seconds (measured above with metrics off) to phases.
+fn phase_rows(rows: &mut Vec<String>, cell: &Cell, cfg: &LimboConfig, seed: u64) {
+    let f = by_name(cell.func, cell.dim).expect("known test function");
+    limbo::obs::set_enabled(true);
+    let base = limbo::obs::snapshot();
+    cfg.run(f.as_ref(), seed);
+    let delta = limbo::obs::snapshot().delta_since(&base);
+    limbo::obs::set_enabled(false);
+    for p in limbo::obs::Phase::ALL {
+        let calls = delta.calls(p);
+        if calls == 0 {
+            continue;
+        }
+        let row = format!(
+            "{{\"bench\":\"fig1_time_phase\",\"func\":\"{}\",\"dim\":{},\"iters\":{},\
+             \"hpo\":{},\"phase\":\"{}\",\"seconds\":{:.6},\"calls\":{calls}}}",
+            cell.func,
+            cell.dim,
+            cell.iters,
+            cell.hpo,
+            p.name(),
+            delta.seconds(p)
+        );
+        println!("{row}");
+        rows.push(row);
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+
+    let cells: Vec<Cell> = if smoke {
+        vec![
+            Cell { func: "branin", dim: 2, iters: 8, hpo: false },
+            Cell { func: "hartmann6", dim: 6, iters: 8, hpo: true },
+        ]
+    } else {
+        let mut v = Vec::new();
+        for &(func, dim) in &[("branin", 2usize), ("hartmann6", 6), ("ackley", 10)] {
+            for &iters in &[15usize, 30] {
+                for &hpo in &[false, true] {
+                    v.push(Cell { func, dim, iters, hpo });
+                }
+            }
+        }
+        v
+    };
+    let seeds: &[u64] = if smoke { &[3] } else { &[3, 17, 42] };
+    let inner_evals = if smoke { 200 } else { 300 };
+
+    println!(
+        "fig1 sweep: {} cells x {} seeds (paper speed-ups: 1.47-1.76x no-HPO, 2.05-2.54x HPO)",
+        cells.len(),
+        seeds.len()
+    );
+    let mut rows: Vec<String> = Vec::new();
     let mut ratios = Vec::new();
     let mut ratios_hpo = Vec::new();
-    for f in functions {
-        let name = f.name().to_string();
-        let r1 = b.bench(&format!("limbo/{name}"), || limbo.run(f.as_ref(), 3));
-        let r2 = b.bench(&format!("bayesopt/{name}"), || bayesopt.run(f.as_ref(), 3));
-        let ratio = r2.per_iter.median / r1.per_iter.median;
-        ratios.push(ratio);
-        let r3 = b.bench(&format!("limbo+hpo/{name}"), || limbo_hpo.run(f.as_ref(), 3));
-        let r4 = b.bench(&format!("bayesopt+hpo/{name}"), || bayesopt_hpo.run(f.as_ref(), 3));
-        let ratio_hpo = r4.per_iter.median / r3.per_iter.median;
-        ratios_hpo.push(ratio_hpo);
-        println!("    -> speed-up: {ratio:.2}x (no HPO), {ratio_hpo:.2}x (HPO)");
+    for cell in &cells {
+        let mut settings =
+            Fig1Settings { iterations: cell.iters, inner_evals, ..Default::default() };
+        if cell.hpo {
+            settings = settings.with_hpo();
+        }
+        let limbo = LimboConfig::new(settings);
+        let bayesopt = BaselineConfig::new(settings);
+        let (limbo_s, limbo_acc) = time_runs(&limbo, cell.func, cell.dim, seeds);
+        let (bayes_s, bayes_acc) = time_runs(&bayesopt, cell.func, cell.dim, seeds);
+        let ratio = bayes_s / limbo_s;
+        if cell.hpo {
+            ratios_hpo.push(ratio);
+        } else {
+            ratios.push(ratio);
+        }
+        let row = format!(
+            "{{\"bench\":\"fig1_time\",\"func\":\"{}\",\"dim\":{},\"iters\":{},\"hpo\":{},\
+             \"limbo_s\":{limbo_s:.4},\"bayesopt_s\":{bayes_s:.4},\"ratio\":{ratio:.3},\
+             \"limbo_acc\":{limbo_acc:.5},\"bayesopt_acc\":{bayes_acc:.5},\"seeds\":{}}}",
+            cell.func,
+            cell.dim,
+            cell.iters,
+            cell.hpo,
+            seeds.len()
+        );
+        println!("{row}");
+        rows.push(row);
+        phase_rows(&mut rows, cell, &limbo, seeds[0]);
     }
-    let rng = |v: &[f64]| {
-        (v.iter().cloned().fold(f64::INFINITY, f64::min),
-         v.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+
+    let range = |v: &[f64]| {
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
     };
-    let (lo, hi) = rng(&ratios);
-    let (lo_h, hi_h) = rng(&ratios_hpo);
-    println!("\nspeed-up ranges: {lo:.2}-{hi:.2}x no-HPO (paper 1.47-1.76), {lo_h:.2}-{hi_h:.2}x HPO (paper 2.05-2.54)");
+    if !ratios.is_empty() {
+        let (lo, hi) = range(&ratios);
+        println!("\nspeed-up range no-HPO: {lo:.2}-{hi:.2}x (paper: 1.47-1.76x)");
+    }
+    if !ratios_hpo.is_empty() {
+        let (lo, hi) = range(&ratios_hpo);
+        println!("speed-up range HPO:    {lo:.2}-{hi:.2}x (paper: 2.05-2.54x)");
+    }
+
+    let path = std::path::Path::new("target").join("fig1_time.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -1,10 +1,18 @@
 //! Kernel micro-bench: the Gram-matrix hot spot.
 //!
-//! Compares the native Rust kernel evaluation loop (what `Gp::refit` does)
-//! against one full XLA `predict` artifact call (which contains the
-//! Pallas-tiled Gram + Cholesky + solves), plus per-pair kernel eval costs
-//! for each kernel type — the L1-level numbers behind DESIGN.md §Perf.
+//! Compares the per-pair native evaluation loop against the blocked
+//! `cross_cov` path (what `Gp::refit` now uses), plus one full XLA
+//! `predict` artifact call (which contains the Pallas-tiled Gram +
+//! Cholesky + solves) and per-pair kernel eval costs for each kernel
+//! type — the L1-level numbers behind DESIGN.md §Perf.
+//!
+//! The Gram section emits one JSON row per size
+//! (`{"bench":"kernel_micro","kernel":"matern52","n":...,
+//! "gram_pairwise_s":...,"gram_blocked_s":...}`), also written to
+//! `target/kernel_micro.json` for the CI bench-trajectory gate. Pass
+//! `--smoke` to skip the per-pair and XLA sections.
 
+use std::io::Write as _;
 use std::sync::Arc;
 
 use limbo::benchlib::{header, Bencher};
@@ -27,28 +35,42 @@ fn gram_native<K: Kernel>(kernel: &K, xs: &[Vec<f64>]) -> Matrix {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
     let b = Bencher::quick();
     let mut rng = Pcg64::seed(4);
 
-    header("per-pair kernel evaluation (dim=6)");
-    let a = rng.unit_point(6);
-    let c = rng.unit_point(6);
-    let se = SquaredExpArd::new(6);
-    let m52 = Matern52::new(6);
-    let m32 = Matern32::new(6);
-    let ex = Exponential::new(6);
-    b.bench("se_ard/pair", || se.eval(&a, &c));
-    b.bench("matern52/pair", || m52.eval(&a, &c));
-    b.bench("matern32/pair", || m32.eval(&a, &c));
-    b.bench("exponential/pair", || ex.eval(&a, &c));
+    if !smoke {
+        header("per-pair kernel evaluation (dim=6)");
+        let a = rng.unit_point(6);
+        let c = rng.unit_point(6);
+        let se = SquaredExpArd::new(6);
+        let m52 = Matern52::new(6);
+        let m32 = Matern32::new(6);
+        let ex = Exponential::new(6);
+        b.bench("se_ard/pair", || se.eval(&a, &c));
+        b.bench("matern52/pair", || m52.eval(&a, &c));
+        b.bench("matern32/pair", || m32.eval(&a, &c));
+        b.bench("exponential/pair", || ex.eval(&a, &c));
+    }
 
-    for n in [64usize, 128, 256] {
+    let mut rows: Vec<String> = Vec::new();
+    let ns: &[usize] = if smoke { &[64, 128] } else { &[64, 128, 256] };
+    for &n in ns {
         header(&format!("Gram matrix n={n} (dim=2)"));
         let xs: Vec<Vec<f64>> = (0..n).map(|_| rng.unit_point(2)).collect();
         let k2 = Matern52::new(2);
-        b.bench(&format!("native_gram/n={n}"), || gram_native(&k2, &xs));
+        let pairwise = b.bench(&format!("pairwise_gram/n={n}"), || gram_native(&k2, &xs));
+        let blocked = b.bench(&format!("blocked_gram/n={n}"), || k2.cross_cov(&xs, &xs));
+        let row = format!(
+            "{{\"bench\":\"kernel_micro\",\"kernel\":\"matern52\",\"n\":{n},\
+             \"gram_pairwise_s\":{:.9},\"gram_blocked_s\":{:.9}}}",
+            pairwise.per_iter.median, blocked.per_iter.median
+        );
+        println!("{row}");
+        rows.push(row);
 
-        if let Some(dir) = find_artifact_dir() {
+        let artifact_dir = if smoke { None } else { find_artifact_dir() };
+        if let Some(dir) = artifact_dir {
             let client = Arc::new(RtClient::cpu().expect("client"));
             let backend = Arc::new(XlaGp::new(client, &dir, "matern52").expect("backend"));
             let flat: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
@@ -60,5 +82,17 @@ fn main() {
                 backend.predict(&flat, &ys, 2, &cands, &loghp, 0.0).expect("predict")
             });
         }
+    }
+
+    let path = std::path::Path::new("target").join("kernel_micro.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -2,7 +2,7 @@
 //! sample paths; included for the component-zoo completeness the paper
 //! advertises.
 
-use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
+use super::{ard_r2, scaled_cross_apply, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 /// ARD exponential kernel: `sigma_f^2 * exp(-r)` with
@@ -55,11 +55,7 @@ impl Kernel for Exponential {
     }
 
     fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
-        let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
-        for v in out.data_mut() {
-            *v = self.sf2 * (-v.sqrt()).exp();
-        }
-        out
+        scaled_cross_apply(xs, cands, &self.inv_ls, self.sf2, |r2| (-r2.sqrt()).exp())
     }
 
     fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

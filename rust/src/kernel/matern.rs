@@ -3,7 +3,7 @@
 //! Matérn-5/2 is the BayesOpt default and the kernel the paper's snippet
 //! swaps in (`limbo::kernel::MaternFiveHalves`).
 
-use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
+use super::{ard_r2, scaled_cross_apply, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 const SQRT5: f64 = 2.2360679774997896;
@@ -67,11 +67,7 @@ macro_rules! matern_impl {
             }
 
             fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
-                let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
-                for v in out.data_mut() {
-                    *v = self.sf2 * $name::shape(*v);
-                }
-                out
+                scaled_cross_apply(xs, cands, &self.inv_ls, self.sf2, $name::shape)
             }
 
             fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

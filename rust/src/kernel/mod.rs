@@ -138,14 +138,25 @@ fn scale_points(pts: &[Vec<f64>], inv_ls: &[f64]) -> (Vec<f64>, Vec<f64>) {
     (flat, norms)
 }
 
+/// Fixed row-panel height of the parallel gradient reduction below: the
+/// partial-sum boundaries depend only on this constant (never the thread
+/// count), so the merged gradient is bit-stable under `Tune::threads`.
+const GRAD_PANEL_ROWS: usize = 64;
+
 /// Shared `grad_params_block` core for the ARD stationary kernels, whose
 /// parameter gradients all factor as
 /// `dk/dlog l_d = sf² · shape_dlog(r²) · t_d²` and
 /// `dk/dlog σ_f = 2 sf² · shape(r²)` over the scaled difference
 /// `t = (a − b)/l`. Both point sets are scaled by the inverse
-/// lengthscales **once** (the same accumulators as [`scaled_cross_r2`]),
-/// then each weighted pair costs one dot product, two shape evaluations,
-/// and a mul/add-only per-dimension loop.
+/// lengthscales **once** (the same accumulators as
+/// [`scaled_cross_apply`]), then each weighted pair costs one dot
+/// product, two shape evaluations, and a mul/add-only per-dimension
+/// loop.
+///
+/// Large blocks reduce fixed-height row panels over scoped threads;
+/// the per-panel partials merge in panel-index order, so the summation
+/// order is a function of the panel constant alone and results are
+/// identical for any [`crate::la::Tune::threads`].
 ///
 /// `out` layout: `[d lengthscale grads..., signal grad]` — accumulated
 /// into, matching the [`Kernel::grad_params_block`] contract.
@@ -155,8 +166,8 @@ pub(crate) fn scaled_grad_block(
     cands: &[Vec<f64>],
     inv_ls: &[f64],
     sf2: f64,
-    shape: impl Fn(f64) -> f64,
-    shape_dlog: impl Fn(f64) -> f64,
+    shape: impl Fn(f64) -> f64 + Sync,
+    shape_dlog: impl Fn(f64) -> f64 + Sync,
     weights: &Matrix,
     out: &mut [f64],
 ) {
@@ -164,47 +175,100 @@ pub(crate) fn scaled_grad_block(
     assert_eq!(weights.cols(), cands.len(), "weight cols mismatch");
     let d = inv_ls.len();
     assert_eq!(out.len(), d + 1, "gradient length mismatch");
+    if xs.is_empty() || cands.is_empty() {
+        return;
+    }
     let (a, a_norms) = scale_points(xs, inv_ls);
     let (b, b_norms) = scale_points(cands, inv_ls);
-    for i in 0..xs.len() {
-        let ai = &a[i * d..(i + 1) * d];
-        let an = a_norms[i];
-        let wrow = weights.row(i);
-        for (j, &w) in wrow.iter().enumerate() {
-            if w == 0.0 {
-                continue;
+    let t = crate::la::tune();
+    let flops = xs.len().saturating_mul(cands.len()).saturating_mul(2 * d + 24);
+    let panels: Vec<usize> = (0..xs.len().div_ceil(GRAD_PANEL_ROWS)).collect();
+    let partials =
+        crate::pool::parallel_map_hinted(panels, t.threads, flops, t.par_min_flops, |_, pi| {
+            let i0 = pi * GRAD_PANEL_ROWS;
+            let i1 = (i0 + GRAD_PANEL_ROWS).min(xs.len());
+            let mut part = vec![0.0; d + 1];
+            for i in i0..i1 {
+                let ai = &a[i * d..(i + 1) * d];
+                let an = a_norms[i];
+                let wrow = weights.row(i);
+                for (j, &w) in wrow.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let bj = &b[j * d..(j + 1) * d];
+                    let r2 = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
+                    let coeff = w * sf2 * shape_dlog(r2);
+                    for (o, (&av, &bv)) in part[..d].iter_mut().zip(ai.iter().zip(bj)) {
+                        let diff = av - bv;
+                        *o += coeff * diff * diff;
+                    }
+                    part[d] += w * 2.0 * sf2 * shape(r2);
+                }
             }
-            let bj = &b[j * d..(j + 1) * d];
-            let r2 = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
-            let coeff = w * sf2 * shape_dlog(r2);
-            for (o, (&av, &bv)) in out[..d].iter_mut().zip(ai.iter().zip(bj)) {
-                let t = av - bv;
-                *o += coeff * t * t;
-            }
-            out[d] += w * 2.0 * sf2 * shape(r2);
+            part
+        });
+    // merge in panel-index order (parallel_map preserves item order)
+    for part in partials {
+        for (o, &p) in out.iter_mut().zip(&part) {
+            *o += p;
         }
     }
 }
 
-/// ARD-scaled squared distances for every `(xs[i], cands[j])` pair, as an
-/// `xs.len() x cands.len()` matrix. Both point sets are scaled by the
-/// inverse lengthscales **once**, then each pair costs one dot product via
-/// `r^2 = |a'|^2 + |b'|^2 - 2 a'.b'` (clamped at 0 against cancellation).
-/// Shared by the stationary kernels' `cross_cov` specializations.
-pub(crate) fn scaled_cross_r2(xs: &[Vec<f64>], cands: &[Vec<f64>], inv_ls: &[f64]) -> Matrix {
+/// Fused scaled-distance map for the stationary kernels:
+/// `out[i][j] = sf² · shape(r²(xs[i], cands[j]))` with
+/// `r² = |a'|² + |b'|² − 2 a'·b'` over the inverse-lengthscale-scaled
+/// points (clamped at 0 against cancellation). Both point sets are
+/// scaled **once**; candidates are walked in [`crate::la::Tune::block`]-
+/// sized strips (a strip of scaled candidates stays cache-resident
+/// across the panel's rows) and disjoint output row panels fan out over
+/// scoped threads. Each pair's arithmetic is fixed, so results are
+/// bit-identical to the unblocked sweep for any thread count. Shared by
+/// the stationary kernels' `cross_cov` specializations.
+pub(crate) fn scaled_cross_apply(
+    xs: &[Vec<f64>],
+    cands: &[Vec<f64>],
+    inv_ls: &[f64],
+    sf2: f64,
+    shape: impl Fn(f64) -> f64 + Sync,
+) -> Matrix {
     let d = inv_ls.len();
+    let n = xs.len();
+    let m = cands.len();
+    let mut out = Matrix::zeros(n, m);
+    if n == 0 || m == 0 {
+        return out;
+    }
     let (a, a_norms) = scale_points(xs, inv_ls);
     let (b, b_norms) = scale_points(cands, inv_ls);
-    let mut out = Matrix::zeros(xs.len(), cands.len());
-    for i in 0..xs.len() {
-        let ai = &a[i * d..(i + 1) * d];
-        let an = a_norms[i];
-        let row = out.row_mut(i);
-        for (j, o) in row.iter_mut().enumerate() {
-            let bj = &b[j * d..(j + 1) * d];
-            *o = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
+    let t = crate::la::tune();
+    // ~2d mul/adds for the dot plus the shape's transcendental per pair
+    let flops = n.saturating_mul(m).saturating_mul(2 * d + 16);
+    let threads = t.threads_for(flops);
+    let rows_per = n.div_ceil(threads);
+    let jb = t.block.max(16);
+    let tasks: Vec<&mut [f64]> = out.data_mut().chunks_mut(rows_per * m).collect();
+    crate::pool::parallel_map_hinted(tasks, threads, flops, t.par_min_flops, |ci, chunk| {
+        let i0 = ci * rows_per;
+        let rows = chunk.len() / m;
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + jb).min(m);
+            for di in 0..rows {
+                let i = i0 + di;
+                let ai = &a[i * d..(i + 1) * d];
+                let an = a_norms[i];
+                let orow = &mut chunk[di * m..(di + 1) * m];
+                for j in j0..j1 {
+                    let bj = &b[j * d..(j + 1) * d];
+                    let r2 = (an + b_norms[j] - 2.0 * crate::la::dot(ai, bj)).max(0.0);
+                    orow[j] = sf2 * shape(r2);
+                }
+            }
+            j0 = j1;
         }
-    }
+    });
     out
 }
 

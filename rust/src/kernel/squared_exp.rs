@@ -1,6 +1,6 @@
 //! Squared-exponential (RBF/Gaussian) kernels, isotropic and ARD.
 
-use super::{ard_r2, scaled_cross_r2, scaled_grad_block, Kernel};
+use super::{ard_r2, scaled_cross_apply, scaled_grad_block, Kernel};
 use crate::la::Matrix;
 
 /// ARD squared exponential:
@@ -67,11 +67,7 @@ impl Kernel for SquaredExpArd {
     }
 
     fn cross_cov(&self, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
-        let mut out = scaled_cross_r2(xs, cands, &self.inv_ls);
-        for v in out.data_mut() {
-            *v = self.sf2 * (-0.5 * *v).exp();
-        }
-        out
+        scaled_cross_apply(xs, cands, &self.inv_ls, self.sf2, |r2| (-0.5 * r2).exp())
     }
 
     fn grad_params(&self, a: &[f64], b: &[f64], out: &mut [f64]) {

@@ -37,9 +37,126 @@ impl std::fmt::Display for NotPositiveDefinite {
 impl std::error::Error for NotPositiveDefinite {}
 
 impl CholeskyFactor {
-    /// Factor a full SPD matrix (standard left-looking algorithm, O(n^3)).
+    /// Factor a full SPD matrix (O(n^3)).
+    ///
+    /// Large matrices take the blocked right-looking path: per
+    /// [`Tune::block`](crate::la::Tune)-wide panel, a scalar diagonal
+    /// factor, a row-parallel triangular panel solve, and a SYRK-style
+    /// trailing downdate distributed over disjoint row panels — the
+    /// trailing update (where ~all the flops are) streams the finished
+    /// panel instead of re-reading whole factor rows, and the parallel
+    /// splits never change any element's arithmetic, so results are
+    /// thread-count-invariant. Matrices below `Tune::small` (or no
+    /// wider than one block) use [`factor_unblocked`](Self::factor_unblocked).
+    /// The two paths order the pivot summations differently; parity is
+    /// pinned at ≤1e-12 by `tests/blocked_la.rs`.
     pub fn factor(a: &Matrix) -> Result<Self, NotPositiveDefinite> {
         let _span = obs::span(Phase::CholFactor);
+        assert_eq!(a.rows(), a.cols(), "cholesky: matrix must be square");
+        let n = a.rows();
+        let t = crate::la::tune();
+        if n < t.small || n <= t.block {
+            return Self::factor_unblocked(a);
+        }
+        let nb = t.block.max(4);
+        let mut l = a.clone();
+        let mut k0 = 0;
+        while k0 < n {
+            let k1 = (k0 + nb).min(n);
+            let w = k1 - k0;
+            // 1) scalar factor of the diagonal block, in place. Earlier
+            //    panels' contributions were already subtracted by their
+            //    trailing downdates, so the recurrence only spans the
+            //    block's own columns [k0, j).
+            for i in k0..k1 {
+                for j in k0..=i {
+                    let s = l[(i, j)] - dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                    if i == j {
+                        if s <= 0.0 || !s.is_finite() {
+                            return Err(NotPositiveDefinite { pivot: i, value: s });
+                        }
+                        l[(i, j)] = s.sqrt();
+                    } else {
+                        l[(i, j)] = s / l[(j, j)];
+                    }
+                }
+            }
+            if k1 == n {
+                break;
+            }
+            let below = n - k1;
+            // snapshot the finished w x w diagonal block so the panel
+            // tasks can read it while writing their own rows of `l`
+            let mut diag = vec![0.0; w * w];
+            for (bi, drow) in diag.chunks_mut(w).enumerate() {
+                drow.copy_from_slice(&l.row(k0 + bi)[k0..k1]);
+            }
+            let rows_per = below.div_ceil(t.threads.max(1));
+            // 2) panel solve: L21 L11^T = A21, each task owns disjoint
+            //    rows of the panel
+            {
+                let tail = &mut l.data_mut()[k1 * n..];
+                let tasks: Vec<&mut [f64]> = tail.chunks_mut(rows_per * n).collect();
+                crate::pool::parallel_map_hinted(
+                    tasks,
+                    t.threads,
+                    below * w * w,
+                    t.par_min_flops,
+                    |_, chunk| {
+                        for row in chunk.chunks_mut(n) {
+                            for j in 0..w {
+                                let dj = &diag[j * w..j * w + j];
+                                let s = row[k0 + j] - dot(&row[k0..k0 + j], dj);
+                                row[k0 + j] = s / diag[j * w + j];
+                            }
+                        }
+                    },
+                );
+            }
+            // snapshot the solved panel for the same aliasing reason
+            let mut panel = vec![0.0; below * w];
+            for (pi, prow) in panel.chunks_mut(w).enumerate() {
+                prow.copy_from_slice(&l.row(k1 + pi)[k0..k1]);
+            }
+            // 3) trailing downdate A22 -= L21 L21^T (lower triangle only),
+            //    one dot per touched element, disjoint row panels
+            {
+                let tail = &mut l.data_mut()[k1 * n..];
+                let tasks: Vec<&mut [f64]> = tail.chunks_mut(rows_per * n).collect();
+                crate::pool::parallel_map_hinted(
+                    tasks,
+                    t.threads,
+                    below * below * w,
+                    t.par_min_flops,
+                    |ci, chunk| {
+                        let base = ci * rows_per;
+                        for (di, row) in chunk.chunks_mut(n).enumerate() {
+                            let pr = base + di; // panel-relative row index
+                            let pi = &panel[pr * w..(pr + 1) * w];
+                            for j in k1..=(k1 + pr) {
+                                let pj = &panel[(j - k1) * w..(j - k1 + 1) * w];
+                                row[j] -= dot(pi, pj);
+                            }
+                        }
+                    },
+                );
+            }
+            k0 = k1;
+        }
+        // the working copy started from full A: zero the upper triangle
+        for i in 0..n {
+            for v in &mut l.row_mut(i)[i + 1..] {
+                *v = 0.0;
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Scalar reference factorization (standard left-looking algorithm).
+    /// Small matrices dispatch here from [`factor`](Self::factor); it is
+    /// public as the reference implementation the blocked-vs-naive
+    /// property tests compare against.
+    pub fn factor_unblocked(a: &Matrix) -> Result<Self, NotPositiveDefinite> {
         assert_eq!(a.rows(), a.cols(), "cholesky: matrix must be square");
         let n = a.rows();
         let mut l = Matrix::zeros(n, n);
@@ -150,40 +267,62 @@ impl CholeskyFactor {
     /// once per RHS, so solving m right-hand sides costs one pass over `L`
     /// per block of [`SOLVE_COL_BLOCK`] columns — the hot kernel of the
     /// batched GP posterior (`predict_batch`).
+    /// Independent column blocks additionally fan out over scoped
+    /// threads: each task solves its block into a local dense panel
+    /// (column stripes of the row-major output are not contiguous) with
+    /// fixed per-column arithmetic, then the panels are scattered back
+    /// sequentially — results are bit-identical for any thread count
+    /// (and agree with per-column [`solve_lower`](Self::solve_lower) to
+    /// `<= 1e-12`; the unrolled `dot` reduction orders differ).
     pub fn solve_lower_multi(&self, b: &Matrix) -> Matrix {
         let _span = obs::span(Phase::CholSolve);
         let n = self.dim();
         assert_eq!(b.rows(), n, "solve_lower_multi: RHS row mismatch");
         let m = b.cols();
         let mut x = Matrix::zeros(n, m);
-        let mut c0 = 0;
-        while c0 < m {
-            let c1 = (c0 + SOLVE_COL_BLOCK).min(m);
-            let data = x.data_mut();
-            for i in 0..n {
-                let lrow = self.l.row(i);
-                // split the flat storage so row i is writable while rows
-                // k < i stay readable (forward substitution dependency)
-                let (prev, cur) = data.split_at_mut(i * m);
-                let xi = &mut cur[c0..c1];
-                xi.copy_from_slice(&b.row(i)[c0..c1]);
-                for (k, &lik) in lrow[..i].iter().enumerate() {
-                    if lik == 0.0 {
-                        continue;
-                    }
-                    let xk = &prev[k * m + c0..k * m + c1];
-                    for (o, &v) in xi.iter_mut().zip(xk) {
-                        *o -= lik * v;
-                    }
+        if n == 0 || m == 0 {
+            return x;
+        }
+        let t = crate::la::tune();
+        let flops = n.saturating_mul(n).saturating_mul(m) / 2;
+        let blocks: Vec<usize> = (0..m.div_ceil(SOLVE_COL_BLOCK)).collect();
+        let panels =
+            crate::pool::parallel_map_hinted(blocks, t.threads, flops, t.par_min_flops, |_, bi| {
+                let c0 = bi * SOLVE_COL_BLOCK;
+                self.solve_lower_panel(b, c0, (c0 + SOLVE_COL_BLOCK).min(m))
+            });
+        scatter_panels(&mut x, &panels);
+        x
+    }
+
+    /// One column block of the blocked forward substitution, solved into
+    /// a local dense `n x (c1-c0)` panel.
+    fn solve_lower_panel(&self, b: &Matrix, c0: usize, c1: usize) -> Vec<f64> {
+        let n = self.dim();
+        let bw = c1 - c0;
+        let mut data = vec![0.0; n * bw];
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            // split the flat storage so row i is writable while rows
+            // k < i stay readable (forward substitution dependency)
+            let (prev, cur) = data.split_at_mut(i * bw);
+            let xi = &mut cur[..bw];
+            xi.copy_from_slice(&b.row(i)[c0..c1]);
+            for (k, &lik) in lrow[..i].iter().enumerate() {
+                if lik == 0.0 {
+                    continue;
                 }
-                let inv = 1.0 / lrow[i];
-                for o in xi.iter_mut() {
-                    *o *= inv;
+                let xk = &prev[k * bw..(k + 1) * bw];
+                for (o, &v) in xi.iter_mut().zip(xk) {
+                    *o -= lik * v;
                 }
             }
-            c0 = c1;
+            let inv = 1.0 / lrow[i];
+            for o in xi.iter_mut() {
+                *o *= inv;
+            }
         }
-        x
+        data
     }
 
     /// Solve `L^T X = B` for a block of right-hand sides (column-blocked
@@ -191,40 +330,59 @@ impl CholeskyFactor {
     /// [`solve_lower_multi`](Self::solve_lower_multi)): row `i` of the
     /// result needs rows `k > i`, so the sweep runs bottom-up with the
     /// factor accessed by columns (`L^T[i, k] = L[k, i]`).
+    /// Column blocks are independent and fan out over scoped threads
+    /// into local panels, exactly like
+    /// [`solve_lower_multi`](Self::solve_lower_multi) (same determinism
+    /// contract: thread-count-invariant, per-column parity `<= 1e-12`).
     pub fn solve_lower_t_multi(&self, b: &Matrix) -> Matrix {
         let _span = obs::span(Phase::CholSolve);
         let n = self.dim();
         assert_eq!(b.rows(), n, "solve_lower_t_multi: RHS row mismatch");
         let m = b.cols();
         let mut x = Matrix::zeros(n, m);
-        let mut c0 = 0;
-        while c0 < m {
-            let c1 = (c0 + SOLVE_COL_BLOCK).min(m);
-            let data = x.data_mut();
-            for i in (0..n).rev() {
-                // split the flat storage so row i is writable while rows
-                // k > i stay readable (backward substitution dependency)
-                let (cur, next) = data.split_at_mut((i + 1) * m);
-                let xi = &mut cur[i * m + c0..i * m + c1];
-                xi.copy_from_slice(&b.row(i)[c0..c1]);
-                for k in (i + 1)..n {
-                    let lki = self.l[(k, i)];
-                    if lki == 0.0 {
-                        continue;
-                    }
-                    let xk = &next[(k - i - 1) * m + c0..(k - i - 1) * m + c1];
-                    for (o, &v) in xi.iter_mut().zip(xk) {
-                        *o -= lki * v;
-                    }
+        if n == 0 || m == 0 {
+            return x;
+        }
+        let t = crate::la::tune();
+        let flops = n.saturating_mul(n).saturating_mul(m) / 2;
+        let blocks: Vec<usize> = (0..m.div_ceil(SOLVE_COL_BLOCK)).collect();
+        let panels =
+            crate::pool::parallel_map_hinted(blocks, t.threads, flops, t.par_min_flops, |_, bi| {
+                let c0 = bi * SOLVE_COL_BLOCK;
+                self.solve_lower_t_panel(b, c0, (c0 + SOLVE_COL_BLOCK).min(m))
+            });
+        scatter_panels(&mut x, &panels);
+        x
+    }
+
+    /// One column block of the blocked backward substitution, solved
+    /// into a local dense `n x (c1-c0)` panel.
+    fn solve_lower_t_panel(&self, b: &Matrix, c0: usize, c1: usize) -> Vec<f64> {
+        let n = self.dim();
+        let bw = c1 - c0;
+        let mut data = vec![0.0; n * bw];
+        for i in (0..n).rev() {
+            // split the flat storage so row i is writable while rows
+            // k > i stay readable (backward substitution dependency)
+            let (cur, next) = data.split_at_mut((i + 1) * bw);
+            let xi = &mut cur[i * bw..];
+            xi.copy_from_slice(&b.row(i)[c0..c1]);
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                if lki == 0.0 {
+                    continue;
                 }
-                let inv = 1.0 / self.l[(i, i)];
-                for o in xi.iter_mut() {
-                    *o *= inv;
+                let xk = &next[(k - i - 1) * bw..(k - i) * bw];
+                for (o, &v) in xi.iter_mut().zip(xk) {
+                    *o -= lki * v;
                 }
             }
-            c0 = c1;
+            let inv = 1.0 / self.l[(i, i)];
+            for o in xi.iter_mut() {
+                *o *= inv;
+            }
         }
-        x
+        data
     }
 
     /// Solve `A X = B` for a block of right-hand sides via the two
@@ -236,23 +394,49 @@ impl CholeskyFactor {
 
     /// Solve `L^T x = b` (backward substitution).
     pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.dim()];
+        self.solve_lower_t_into(b, &mut x);
+        x
+    }
+
+    /// Solve `L^T x = b` into a caller-provided buffer (allocation-free
+    /// sibling of [`solve_lower_into`](Self::solve_lower_into)).
+    pub fn solve_lower_t_into(&self, b: &[f64], x: &mut [f64]) {
         let n = self.dim();
         assert_eq!(b.len(), n);
-        let mut x = vec![0.0; n];
+        assert_eq!(x.len(), n);
+        x.copy_from_slice(b);
+        self.solve_lower_t_in_place(x);
+    }
+
+    /// Backward substitution in place: row `i` only reads entries
+    /// `x[j]` with `j > i`, which are already final.
+    fn solve_lower_t_in_place(&self, x: &mut [f64]) {
+        let n = self.dim();
         for i in (0..n).rev() {
-            let mut s = b[i];
+            let mut s = x[i];
             // column access: L^T[i, j] = L[j, i] for j > i
             for j in (i + 1)..n {
                 s -= self.l[(j, i)] * x[j];
             }
             x[i] = s / self.l[(i, i)];
         }
-        x
     }
 
     /// Solve `A x = b` via the two substitutions.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        self.solve_lower_t(&self.solve_lower(b))
+        let mut x = vec![0.0; self.dim()];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// Solve `A x = b` into a caller-provided buffer: forward
+    /// substitution into `x`, then backward substitution in place — no
+    /// intermediate vector (the scalar paths used to allocate one per
+    /// solve; the GP's alpha recompute reuses its own buffer instead).
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        self.solve_lower_into(b, x);
+        self.solve_lower_t_in_place(x);
     }
 
     /// `log det A = 2 * sum_i log L[i,i]`.
@@ -304,6 +488,20 @@ impl CholeskyFactor {
             let k = i.min(j) + 1;
             dot(&self.l.row(i)[..k], &self.l.row(j)[..k])
         })
+    }
+}
+
+/// Copy the per-block dense panels produced by the parallel multi-RHS
+/// solves back into their column stripes of the row-major output.
+fn scatter_panels(x: &mut Matrix, panels: &[Vec<f64>]) {
+    let n = x.rows();
+    let mut c0 = 0;
+    for panel in panels {
+        let bw = panel.len() / n;
+        for (i, prow) in panel.chunks(bw).enumerate() {
+            x.row_mut(i)[c0..c0 + bw].copy_from_slice(prow);
+        }
+        c0 += bw;
     }
 }
 
@@ -428,6 +626,25 @@ mod tests {
             for i in 0..n {
                 assert!((y[i] - explicit[i]).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_solves() {
+        let mut rng = Pcg64::seed(0x1270);
+        let n = 17;
+        let a = random_spd(n, &mut rng);
+        let ch = CholeskyFactor::factor(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let mut x = vec![0.0; n];
+        ch.solve_lower_t_into(&b, &mut x);
+        assert_eq!(x, ch.solve_lower_t(&b));
+        ch.solve_into(&b, &mut x);
+        assert_eq!(x, ch.solve(&b));
+        // and the in-place two-phase solve really solves A x = b
+        let back = a.matvec(&x);
+        for i in 0..n {
+            assert!((back[i] - b[i]).abs() < 1e-8, "i={i}");
         }
     }
 

@@ -116,6 +116,14 @@ impl Matrix {
     /// `out += A B` over an already-initialized accumulator (shared core
     /// of [`matmul`](Self::matmul) / [`matmul_into`](Self::matmul_into);
     /// `matmul` skips the redundant zero-fill on its fresh buffer).
+    ///
+    /// Large products take the cache-blocked path: disjoint row panels
+    /// of `out` fan out over scoped threads and each panel runs the
+    /// k-blocked 4-row register-tiled micro-kernel (`mm_panel`). Every
+    /// output element still accumulates over `k` in ascending order into
+    /// one accumulator, so the result is invariant to the thread count
+    /// and block size — the knobs in [`crate::la::Tune`] are pure
+    /// performance knobs here.
     fn matmul_accum(&self, other: &Matrix, out: &mut Matrix) {
         let _span = obs::span(Phase::MatMul);
         assert_eq!(self.cols, other.rows, "matmul: dim mismatch");
@@ -124,7 +132,32 @@ impl Matrix {
             (self.rows, other.cols),
             "matmul: output shape mismatch"
         );
-        // ikj loop order: stream through `other` rows contiguously
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        if n == 0 || k == 0 || m == 0 {
+            return;
+        }
+        let t = crate::la::tune();
+        if n.min(k).min(m) < t.small {
+            self.matmul_accum_naive(other, out);
+            return;
+        }
+        let flops = 2usize.saturating_mul(n).saturating_mul(k).saturating_mul(m);
+        let threads = t.threads_for(flops);
+        let rows_per = n.div_ceil(threads);
+        let kb = t.block.max(8);
+        let tasks: Vec<&mut [f64]> = out.data.chunks_mut(rows_per * m).collect();
+        crate::pool::parallel_map_hinted(tasks, threads, flops, t.par_min_flops, |ci, chunk| {
+            let r0 = ci * rows_per;
+            let rows = chunk.len() / m;
+            mm_panel(&self.data[r0 * k..(r0 + rows) * k], &other.data, chunk, k, m, kb);
+        });
+    }
+
+    /// Scalar reference for [`matmul_accum`](Self::matmul_accum) (ikj
+    /// loop order: stream through `other` rows contiguously). Small
+    /// products dispatch here; the blocked-vs-naive property tests pin
+    /// the two paths against each other.
+    fn matmul_accum_naive(&self, other: &Matrix, out: &mut Matrix) {
         for i in 0..self.rows {
             for k in 0..self.cols {
                 let a = self[(i, k)];
@@ -163,21 +196,38 @@ impl Matrix {
     /// [`col_squared_norms`](Self::col_squared_norms). The diagonal is
     /// accumulated in the same row order as `col_squared_norms`, so the
     /// joint covariance diagonal reproduces the batched variances exactly.
+    /// Large Grams distribute disjoint row panels of `G` over scoped
+    /// threads; each panel streams `A` once with the same r-ascending
+    /// per-element accumulation as the scalar loop, so results (and the
+    /// diagonal parity above) are bit-identical for any thread count.
     pub fn col_gram(&self) -> Matrix {
         let m = self.cols;
         let mut g = Matrix::zeros(m, m);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..m {
-                let vi = row[i];
-                if vi == 0.0 {
-                    continue;
+        if m == 0 {
+            return g;
+        }
+        let t = crate::la::tune();
+        let flops = self.rows.saturating_mul(m).saturating_mul(m);
+        let threads = t.threads_for(flops).min(m);
+        let rows_per = m.div_ceil(threads);
+        {
+            let tasks: Vec<&mut [f64]> = g.data.chunks_mut(rows_per * m).collect();
+            crate::pool::parallel_map_hinted(tasks, threads, flops, t.par_min_flops, |ci, chunk| {
+                let i0 = ci * rows_per;
+                for r in 0..self.rows {
+                    let row = self.row(r);
+                    for (di, grow) in chunk.chunks_mut(m).enumerate() {
+                        let i = i0 + di;
+                        let vi = row[i];
+                        if vi == 0.0 {
+                            continue;
+                        }
+                        for (gij, &vj) in grow[i..].iter_mut().zip(&row[i..]) {
+                            *gij += vi * vj;
+                        }
+                    }
                 }
-                let grow = g.row_mut(i);
-                for (gij, &vj) in grow[i..].iter_mut().zip(&row[i..]) {
-                    *gij += vi * vj;
-                }
-            }
+            });
         }
         for i in 0..m {
             for j in 0..i {
@@ -215,6 +265,55 @@ impl Matrix {
             }
         }
         true
+    }
+}
+
+/// Row-panel micro-kernel of the blocked matmul: `out += A_panel * B`
+/// with `A_panel` `rows x k` (`rows = out.len() / m`) and `B` `k x m`,
+/// both row-major. `k` is walked in ascending `kb`-sized blocks so a
+/// block of `B` rows stays cache-resident, and four output rows share
+/// each streamed `B` row (register tile) — the inner `j` loop is
+/// unit-stride multiply-add code the compiler autovectorizes. Every
+/// output element accumulates over `k` in ascending order, identical to
+/// the scalar reference.
+fn mm_panel(a: &[f64], b: &[f64], out: &mut [f64], k: usize, m: usize, kb: usize) {
+    let rows = out.len() / m;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + kb).min(k);
+        let mut i = 0;
+        while i + 4 <= rows {
+            let (o01, o23) = out[i * m..(i + 4) * m].split_at_mut(2 * m);
+            let (o0, o1) = o01.split_at_mut(m);
+            let (o2, o3) = o23.split_at_mut(m);
+            for kk in k0..k1 {
+                let brow = &b[kk * m..(kk + 1) * m];
+                let a0 = a[i * k + kk];
+                let a1 = a[(i + 1) * k + kk];
+                let a2 = a[(i + 2) * k + kk];
+                let a3 = a[(i + 3) * k + kk];
+                for j in 0..m {
+                    let bv = brow[j];
+                    o0[j] += a0 * bv;
+                    o1[j] += a1 * bv;
+                    o2[j] += a2 * bv;
+                    o3[j] += a3 * bv;
+                }
+            }
+            i += 4;
+        }
+        while i < rows {
+            let orow = &mut out[i * m..(i + 1) * m];
+            for kk in k0..k1 {
+                let av = a[i * k + kk];
+                let brow = &b[kk * m..(kk + 1) * m];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            i += 1;
+        }
+        k0 = k1;
     }
 }
 

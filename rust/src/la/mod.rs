@@ -8,14 +8,41 @@
 //!
 //! f64 throughout: the native GP path is the reference for the f32 XLA
 //! artifacts.
+//!
+//! # Blocking and threading cost model
+//!
+//! The dense hot kernels ([`Matrix::matmul`]/[`Matrix::col_gram`],
+//! [`CholeskyFactor::factor`], the multi-RHS substitutions, and the
+//! stationary kernels' cross-covariance in [`crate::kernel`]) are
+//! cache-blocked, written as unit-stride 4-wide-unrolled loops the
+//! compiler autovectorizes, and fan panel-level work out over scoped
+//! threads ([`crate::pool::parallel_map`]). The shared cost model:
+//!
+//! * **Blocking** keeps one `block x block` f64 panel (32 KiB at the
+//!   default `block = 64`) L1-resident, so an O(n³) kernel streams each
+//!   operand O(n/block) times instead of O(n) times.
+//! * **Threading** splits *disjoint output row/column panels* across
+//!   workers — never a shared accumulator — so the per-element
+//!   arithmetic is fixed and results are bit-identical for any thread
+//!   count. Kernels below `par_min_flops` run inline (a scoped spawn
+//!   costs more than a small kernel).
+//! * **Fallback**: below the `small` dimension threshold the scalar
+//!   reference loops run instead (`CholeskyFactor::factor_unblocked`
+//!   stays public as the reference implementation).
+//!
+//! All knobs live in one process-wide [`Tune`] (env-overridable via
+//! `LIMBO_LA_*`; see [`tune()`]); blocked-vs-scalar parity is pinned at
+//! ≤1e-12 by `tests/blocked_la.rs`.
 
 pub mod cholesky;
 pub mod eig;
 pub mod lowrank;
 pub mod matrix;
+pub mod tune;
 pub mod vecops;
 
 pub use cholesky::CholeskyFactor;
+pub use tune::{set_tune, tune, Tune};
 pub use eig::{sym_eig, SymEig};
 pub use lowrank::{
     rank1_update, sandwich_solve, spd_factor_jittered, weighted_gram, weighted_normal_eqs,

@@ -1,0 +1,145 @@
+//! Runtime tuning knobs for the blocked, multithreaded `la` kernels.
+//!
+//! One process-wide [`Tune`] value steers every blocked kernel in
+//! [`crate::la`] and the stationary kernels' scaled-norm paths:
+//!
+//! * [`block`](Tune::block) — panel width of the blocked Cholesky
+//!   factorization, the k-blocking of the matmul micro-kernel, and the
+//!   candidate-strip width of the kernel cross-covariance (sized so a
+//!   panel of `block x block` doubles stays L1-resident at the default).
+//! * [`threads`](Tune::threads) — fork-join width for panel-level work
+//!   (disjoint output row/column panels distributed over
+//!   [`crate::pool::parallel_map`]). Defaults to the machine
+//!   (`available_parallelism`), i.e. the pool size.
+//! * [`par_min_flops`](Tune::par_min_flops) — minimum flop estimate
+//!   before a kernel fans out at all; below it the panels run inline on
+//!   the calling thread (scoped-thread spawn costs tens of microseconds,
+//!   which dwarfs a small kernel).
+//! * [`small`](Tune::small) — dimension threshold below which the
+//!   blocked code paths fall back to the scalar reference loops
+//!   entirely.
+//!
+//! **Determinism contract**: `threads` and `par_min_flops` never change
+//! results — the parallel fan-outs only ever split disjoint output
+//! panels whose per-element arithmetic (and reduction order, for the
+//! gradient panels) is fixed independently of the thread count, so runs
+//! are bit-identical across 1/2/N threads (pinned by
+//! `tests/api_parity.rs` and `tests/blocked_la.rs`). `block` and `small`
+//! select between equally valid but *numerically different* summation
+//! orders (blocked vs scalar Cholesky); vary them between experiments,
+//! not within a reproducibility-sensitive run.
+//!
+//! Every knob is overridable from the environment at first use
+//! (`LIMBO_LA_THREADS`, `LIMBO_LA_BLOCK`, `LIMBO_LA_PAR_MIN`,
+//! `LIMBO_LA_SMALL`) and at runtime via [`set_tune`] (used by the bench
+//! and test thread-count sweeps).
+
+use std::sync::RwLock;
+
+/// Tuning knobs for the blocked `la` kernels (see the module docs for
+/// the cost model and the determinism contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tune {
+    /// Cache-block / panel width (Cholesky panels, matmul k-blocks,
+    /// cross-covariance candidate strips).
+    pub block: usize,
+    /// Fork-join width for panel-parallel kernels (1 = never spawn).
+    pub threads: usize,
+    /// Minimum estimated flops before a kernel goes parallel.
+    pub par_min_flops: usize,
+    /// Matrices with every dimension below this use the scalar
+    /// reference loops instead of the blocked paths.
+    pub small: usize,
+}
+
+impl Default for Tune {
+    /// Environment-independent defaults: 64-wide blocks (a 64x64 f64
+    /// panel is 32 KiB — one L1), machine-sized thread count, ~2 Mflop
+    /// parallel threshold, scalar fallback below 64.
+    fn default() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { block: 64, threads, par_min_flops: 2_000_000, small: 64 }
+    }
+}
+
+impl Tune {
+    /// Defaults with any `LIMBO_LA_*` environment overrides applied.
+    pub fn from_env() -> Self {
+        let mut t = Self::default();
+        if let Some(v) = env_usize("LIMBO_LA_BLOCK") {
+            t.block = v.max(1);
+        }
+        if let Some(v) = env_usize("LIMBO_LA_THREADS") {
+            t.threads = v.max(1);
+        }
+        if let Some(v) = env_usize("LIMBO_LA_PAR_MIN") {
+            t.par_min_flops = v;
+        }
+        if let Some(v) = env_usize("LIMBO_LA_SMALL") {
+            t.small = v;
+        }
+        t
+    }
+
+    /// Worker count for a kernel with the given flop estimate: 1 below
+    /// [`par_min_flops`](Self::par_min_flops), else
+    /// [`threads`](Self::threads).
+    pub fn threads_for(&self, flops: usize) -> usize {
+        if flops < self.par_min_flops {
+            1
+        } else {
+            self.threads.max(1)
+        }
+    }
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.trim().parse().ok()
+}
+
+/// `None` until first read; initialized lazily from [`Tune::from_env`]
+/// so env overrides apply however early a kernel runs.
+static TUNE: RwLock<Option<Tune>> = RwLock::new(None);
+
+/// The process-wide tuning knobs (initialized from the environment on
+/// first read). An uncontended read lock costs nanoseconds — noise next
+/// to any kernel large enough to block.
+pub fn tune() -> Tune {
+    let read = TUNE.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+    if let Some(t) = *read {
+        return t;
+    }
+    drop(read);
+    let t = Tune::from_env();
+    let mut write = TUNE.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // a racing initializer computed the same value; keep the first
+    *write.get_or_insert(t)
+}
+
+/// Replace the process-wide tuning knobs (bench/test sweeps; see the
+/// module docs for which knobs are safe to vary under reproducibility).
+pub fn set_tune(t: Tune) {
+    *TUNE.write().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let t = Tune::default();
+        assert!(t.block >= 8);
+        assert!(t.threads >= 1);
+        assert!(t.small >= 1);
+        assert_eq!(t.threads_for(0), 1);
+        assert_eq!(t.threads_for(usize::MAX), t.threads);
+    }
+
+    #[test]
+    fn global_read_is_initialized() {
+        // don't mutate the global here: unit tests share the process
+        let t = tune();
+        assert!(t.threads >= 1 && t.block >= 1);
+    }
+}

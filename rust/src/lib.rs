@@ -72,6 +72,32 @@
 //!
 //! Spans never touch the RNG or reorder floating-point work, so traces
 //! are bit-identical with metrics on or off (`tests/api_parity.rs`).
+//!
+//! # Performance tuning
+//!
+//! The dense hot kernels (matmul, Cholesky, multi-RHS solves, kernel
+//! cross-covariance) are cache-blocked and fanned out over the
+//! process-wide [`pool`]; one [`la::Tune`] config controls panel size,
+//! thread count, the parallel-dispatch FLOP threshold, and the
+//! scalar-fallback cutoff. Defaults come from [`la::Tune::from_env`]
+//! (`LIMBO_LA_BLOCK`, `LIMBO_LA_THREADS`, `LIMBO_LA_PAR_MIN`,
+//! `LIMBO_LA_SMALL`), and [`la::set_tune`] overrides them at runtime.
+//!
+//! When the `--metrics` phase table points at a dense phase (`matmul`,
+//! `cholesky`, `cross_cov`, or the solve phases), these knobs are the
+//! lever: lower `LIMBO_LA_PAR_MIN` to parallelize smaller problems,
+//! raise `LIMBO_LA_BLOCK` on cores with larger L1 caches, or pin
+//! `LIMBO_LA_THREADS=1` when the surrounding code (e.g. HPO restarts
+//! through [`pool::parallel_map`]) already saturates the machine —
+//! nested fan-outs queue rather than oversubscribe, but single-threaded
+//! inner kernels keep the outer parallelism as the only scheduler.
+//!
+//! Changing `threads` or `par_min_flops` NEVER changes results, bitwise:
+//! parallel fan-outs split disjoint output panels with fixed per-element
+//! arithmetic (`tests/api_parity.rs` sweeps 1/2/8 threads through a full
+//! optimizer run). `block` and `small` pick different — equally valid —
+//! summation orders and are pinned to the scalar references at
+//! `<= 1e-12` by `tests/blocked_la.rs`.
 
 pub mod acqui;
 pub mod baseline;

@@ -102,17 +102,21 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
         hp
     }
 
+    /// Training Gram `K + sigma_n^2 I` via the kernel's blocked
+    /// [`cross_cov`](crate::kernel::Kernel::cross_cov) (the scaled-norm
+    /// path is bitwise symmetric on identical point sets), with the
+    /// diagonal set to the exact `k(x, x) = variance()`: the norm-based
+    /// `r²` at `i == j` can be a rounding-level nonzero, which the
+    /// non-smooth kernels (exponential) would amplify through `sqrt`.
     fn gram(&self) -> Matrix {
         let n = self.xs.len();
-        let noise = self.noise_var();
-        let mut k = Matrix::zeros(n, n);
+        let mut k = {
+            let _cc = obs::span(Phase::CrossCov);
+            self.kernel.cross_cov(&self.xs, &self.xs)
+        };
+        let kdiag = self.kernel.variance() + self.noise_var();
         for i in 0..n {
-            for j in 0..=i {
-                let v = self.kernel.eval(&self.xs[i], &self.xs[j]);
-                k[(i, j)] = v;
-                k[(j, i)] = v;
-            }
-            k[(i, i)] += noise;
+            k[(i, i)] = kdiag;
         }
         k
     }
@@ -153,7 +157,10 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
     fn recompute_alpha(&mut self) {
         let resid: Vec<f64> =
             self.xs.iter().zip(&self.ys).map(|(x, &y)| y - self.mean.eval(x)).collect();
-        self.alpha = self.chol.solve(&resid);
+        // solve_into: forward + in-place backward into the cached alpha
+        // buffer, no intermediate allocation
+        self.alpha.resize(resid.len(), 0.0);
+        self.chol.solve_into(&resid, &mut self.alpha);
     }
 
     /// Log marginal likelihood of the current fit.
@@ -174,9 +181,14 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
     /// `dLML/dtheta = 0.5 tr((alpha alpha^T - K^-1) dK/dtheta)`.
     /// Hot path of every ML-II refit: `K^-1` comes from the triangular
     /// inverse of the cached Cholesky factor (~3x fewer flops than unit-
-    /// vector solves), and both `W` and `dK` are symmetric so only the
-    /// upper triangle is visited (2x fewer kernel-gradient evaluations).
-    /// See EXPERIMENTS.md §Perf for the before/after.
+    /// vector solves), then the whole trace contracts in one pass through
+    /// the kernel's blocked
+    /// [`grad_params_block`](crate::kernel::Kernel::grad_params_block)
+    /// with the weight matrix `W = 0.5 (alpha alpha^T - K^-1)` — the
+    /// stationary kernels scale both point-set copies once and spend one
+    /// dot product per pair instead of n²/2 `grad_params` calls. The
+    /// noise gradient is the `W` trace times `dK/dlog sigma_n = 2
+    /// sigma_n^2 I`. See EXPERIMENTS.md §Perf for the before/after.
     pub fn lml_grad(&self) -> Vec<f64> {
         let _span = obs::span(Phase::LmlGrad);
         let n = self.xs.len();
@@ -186,26 +198,18 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
             return grad;
         }
         let kinv = self.chol.inverse();
-        let mut dk = vec![0.0; np];
+        let mut w = Matrix::zeros(n, n);
         for i in 0..n {
-            // diagonal term (weight 1)
-            let w_ii = self.alpha[i] * self.alpha[i] - kinv[(i, i)];
-            self.kernel.grad_params(&self.xs[i], &self.xs[i], &mut dk);
-            for (g, &d) in grad[..np].iter_mut().zip(&dk) {
-                *g += 0.5 * w_ii * d;
-            }
-            // dK/dlog sn = 2 sigma_n^2 on the diagonal only
-            grad[np] += 0.5 * w_ii * 2.0 * self.noise_var();
-            // strict upper triangle counted twice by symmetry
-            let kinv_row = kinv.row(i);
-            for j in (i + 1)..n {
-                let w = self.alpha[i] * self.alpha[j] - kinv_row[j];
-                self.kernel.grad_params(&self.xs[i], &self.xs[j], &mut dk);
-                for (g, &d) in grad[..np].iter_mut().zip(&dk) {
-                    *g += w * d; // 2 * 0.5 * w * d
-                }
+            let ai = self.alpha[i];
+            let krow = kinv.row(i);
+            let wrow = w.row_mut(i);
+            for (wij, (&aj, &kv)) in wrow.iter_mut().zip(self.alpha.iter().zip(krow)) {
+                *wij = 0.5 * (ai * aj - kv);
             }
         }
+        self.kernel.grad_params_block(&self.xs, &self.xs, &w, &mut grad[..np]);
+        let tr: f64 = (0..n).map(|i| w[(i, i)]).sum();
+        grad[np] = tr * 2.0 * self.noise_var();
         grad
     }
 

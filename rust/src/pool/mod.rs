@@ -5,7 +5,12 @@
 //!   coordinator's experiment runner and the ask/tell service),
 //! * [`parallel_map`] — scoped fork-join helper used for parallel
 //!   restarts of the inner optimizers (Limbo's "several restarts ...
-//!   performed in parallel").
+//!   performed in parallel") and by the blocked `la` kernels for panel
+//!   fan-out. [`parallel_map_hinted`] adds a small-input fast path: a
+//!   work estimate below a threshold runs every item inline on the
+//!   calling thread, so tiny matrices never pay fork/queue overhead
+//!   (the `pool_queue_wait`/`pool_exec` spans price that overhead when
+//!   metrics are on).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -174,13 +179,22 @@ where
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
     let queue = Mutex::new(work);
     let results = Mutex::new(&mut slots);
+    // fork timestamp for queue-wait attribution: time from fork to an
+    // item's dequeue is exactly how long that item sat in the queue
+    let forked = if obs::enabled() { Some(Instant::now()) } else { None };
     thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let item = lock_unpoisoned(&queue).pop();
                 match item {
                     Some((i, t)) => {
-                        let r = catch_unwind(AssertUnwindSafe(|| f(i, t)));
+                        if let Some(t0) = forked {
+                            obs::record_duration(Phase::PoolQueueWait, t0.elapsed());
+                        }
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            let _span = obs::span(Phase::PoolExec);
+                            f(i, t)
+                        }));
                         lock_unpoisoned(&results)[i] = Some(r);
                     }
                     None => break,
@@ -241,6 +255,31 @@ where
     out
 }
 
+/// [`parallel_map`] with a small-input fast path: when `total_work`
+/// (any monotone work estimate — the `la` kernels pass a flop count)
+/// is below `min_parallel_work`, every item runs inline on the calling
+/// thread with no fork, no queue, and no span bookkeeping.
+///
+/// The inline and forked paths compute bit-identical results for the
+/// workloads this crate fans out (disjoint output panels with fixed
+/// per-element arithmetic), so the threshold is purely a performance
+/// knob — see [`crate::la::Tune::par_min_flops`].
+pub fn parallel_map_hinted<T, R, F>(
+    items: Vec<T>,
+    threads: usize,
+    total_work: usize,
+    min_parallel_work: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let threads = if total_work < min_parallel_work { 1 } else { threads };
+    parallel_map(items, threads, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +322,18 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_hinted_inline_and_forked_agree() {
+        let items: Vec<usize> = (0..33).collect();
+        let want: Vec<usize> = (0..33).map(|x| x * 3 + 1).collect();
+        // below the threshold: runs inline on the caller
+        let inline = parallel_map_hinted(items.clone(), 8, 100, 1_000_000, |_, x| x * 3 + 1);
+        assert_eq!(inline, want);
+        // at/above the threshold: forks, same results in the same order
+        let forked = parallel_map_hinted(items, 8, 1_000_000, 1_000_000, |_, x| x * 3 + 1);
+        assert_eq!(forked, want);
     }
 
     #[test]

@@ -9,8 +9,19 @@
 //! consumption order, or proposal path — shows up here as a trace
 //! mismatch at the first differing bit.
 
+use std::sync::{Mutex, MutexGuard};
+
 use limbo::prelude::*;
 use limbo::stat::TraceRow;
+
+/// All tests in this binary serialize on one lock: the la-tuning test
+/// mutates the process-global [`limbo::la::Tune`], and every other test's
+/// bit-identity claim assumes the tuning does not change mid-run.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 const N_INIT: usize = 6;
 const ITERATIONS: usize = 10;
@@ -111,6 +122,7 @@ fn assert_traces_identical(a: &[TraceRow], b: &[TraceRow], label: &str) {
 
 #[test]
 fn optimizer_and_servers_produce_bit_identical_traces() {
+    let _guard = lock();
     let opt = run_optimizer();
     assert_eq!(opt.len(), TOTAL);
     let sync = run_sync_server();
@@ -121,6 +133,7 @@ fn optimizer_and_servers_produce_bit_identical_traces() {
 
 #[test]
 fn parity_holds_over_a_bounded_domain() {
+    let _guard = lock();
     let run_opt = || {
         let trace = TraceHandle::new();
         let mut opt = def(trace.clone())
@@ -150,6 +163,7 @@ fn parity_holds_over_a_bounded_domain() {
 
 #[test]
 fn determinism_same_def_same_trace() {
+    let _guard = lock();
     let a = run_optimizer();
     let b = run_optimizer();
     assert_traces_identical(&a, &b, "repeatability");
@@ -161,9 +175,10 @@ fn determinism_same_def_same_trace() {
 /// bit-identical to one with it disabled.
 #[test]
 fn metrics_on_or_off_leaves_traces_bit_identical() {
+    let _guard = lock();
     // Serialize against other tests that toggle the global enabled flag
     // (the obs unit tests); the flag itself is what this test varies.
-    let _guard = limbo::obs::test_serial_guard();
+    let _obs_guard = limbo::obs::test_serial_guard();
     let prior = limbo::obs::enabled();
     limbo::obs::set_enabled(false);
     let off = run_optimizer();
@@ -171,4 +186,27 @@ fn metrics_on_or_off_leaves_traces_bit_identical() {
     let on = run_optimizer();
     limbo::obs::set_enabled(prior);
     assert_traces_identical(&off, &on, "metrics off vs on");
+}
+
+/// The la thread-count knob must stay out of the deterministic trace:
+/// parallel fan-outs only split disjoint output panels with fixed
+/// per-element arithmetic, so a full optimizer run is bit-identical at
+/// 1, 2, and 8 threads. (The `block`/`small` knobs are *not* swept here
+/// — they legitimately pick different summation orders and are pinned
+/// by the `<= 1e-12` parity tests in `blocked_la.rs` instead.)
+#[test]
+fn la_tuning_thread_count_leaves_traces_bit_identical() {
+    let _guard = lock();
+    let prior = limbo::la::tune();
+    // force the blocked + parallel paths regardless of problem size so
+    // the sweep actually exercises the fan-out code
+    let forced = limbo::la::Tune { block: 8, small: 0, par_min_flops: 0, threads: 1 };
+    limbo::la::set_tune(forced);
+    let base = run_optimizer();
+    for threads in [2, 8] {
+        limbo::la::set_tune(limbo::la::Tune { threads, ..forced });
+        let other = run_optimizer();
+        assert_traces_identical(&base, &other, &format!("1 thread vs {threads} threads"));
+    }
+    limbo::la::set_tune(prior);
 }

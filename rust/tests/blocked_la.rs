@@ -1,0 +1,251 @@
+//! Property tests for the blocked/threaded dense kernels in `limbo::la`.
+//!
+//! Two families of guarantees, matching the contract documented in
+//! `la::tune`:
+//!
+//! * **parity** — the blocked code paths agree with scalar references to
+//!   `<= 1e-12` across awkward sizes (1, block-1, block, block+1,
+//!   non-square), because `block`/`small` may legitimately change the
+//!   floating-point summation order;
+//! * **bit-stability** — `threads` (and `par_min_flops`) NEVER change a
+//!   result bitwise, because parallelism only splits disjoint output
+//!   panels whose per-element arithmetic is fixed.
+//!
+//! The global [`limbo::la::Tune`] is process-wide, so every test that
+//! overrides it goes through [`with_tune`], which serializes on a mutex
+//! and restores the prior configuration even on panic.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use limbo::kernel::{Kernel, Matern52};
+use limbo::la::{set_tune, tune, CholeskyFactor, Matrix, Tune};
+use limbo::rng::Pcg64;
+
+static TUNE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the global la tuning set to `t`, restoring the previous
+/// configuration afterwards (also on panic, so one failing test does not
+/// poison the others).
+fn with_tune<R>(t: Tune, f: impl FnOnce() -> R) -> R {
+    let _guard = TUNE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prior = tune();
+    set_tune(t);
+    let out = catch_unwind(AssertUnwindSafe(f));
+    set_tune(prior);
+    match out {
+        Ok(r) => r,
+        Err(p) => resume_unwind(p),
+    }
+}
+
+/// A tuning that forces the blocked + threaded paths regardless of size.
+fn forced(threads: usize, block: usize) -> Tune {
+    Tune { threads, block, small: 0, par_min_flops: 0 }
+}
+
+fn random_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| rng.uniform(-1.0, 1.0))
+}
+
+/// SPD test matrix: `B Bᵀ + n·I` (well conditioned at every size).
+fn random_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+    let b = random_matrix(rng, n, n);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += b[(i, k)] * b[(j, k)];
+            }
+            a[(i, j)] = s;
+        }
+        a[(i, i)] += n as f64;
+    }
+    a
+}
+
+/// Scalar ikj reference product (the order the blocked kernel preserves).
+fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (n, k, m) = (a.rows(), b.rows(), b.cols());
+    let mut out = Matrix::zeros(n, m);
+    for i in 0..n {
+        for kk in 0..k {
+            let av = a[(i, kk)];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..m {
+                out[(i, j)] += av * b[(kk, j)];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn blocked_matmul_matches_naive_across_odd_shapes() {
+    // (n, k, m): 1, block-1, block, block+1, and non-square mixes for a
+    // forced block of 32.
+    let shapes = [
+        (1, 1, 1),
+        (7, 8, 9),
+        (31, 32, 33),
+        (32, 32, 32),
+        (33, 31, 65),
+        (64, 64, 64),
+        (65, 64, 63),
+        (100, 20, 5),
+    ];
+    let mut rng = Pcg64::seed(0xB10C);
+    for &(n, k, m) in &shapes {
+        let a = random_matrix(&mut rng, n, k);
+        let b = random_matrix(&mut rng, k, m);
+        let want = naive_matmul(&a, &b);
+        for t in [forced(8, 32), forced(3, 5)] {
+            let got = with_tune(t, || a.matmul(&b));
+            let diff = got.max_abs_diff(&want);
+            assert!(diff <= 1e-12, "matmul ({n}x{k})·({k}x{m}) t={t:?}: diff={diff:e}");
+        }
+    }
+}
+
+#[test]
+fn blocked_col_gram_matches_naive() {
+    let mut rng = Pcg64::seed(0xC0DE);
+    for &(rows, m) in &[(1usize, 1usize), (9, 7), (40, 31), (33, 32), (50, 33), (20, 65)] {
+        let a = random_matrix(&mut rng, rows, m);
+        let mut want = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                let mut s = 0.0;
+                for r in 0..rows {
+                    s += a[(r, i)] * a[(r, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        let got = with_tune(forced(8, 16), || a.col_gram());
+        let diff = got.max_abs_diff(&want);
+        assert!(diff <= 1e-12, "col_gram {rows}x{m}: diff={diff:e}");
+        // the diagonal contract used by lowrank code: g[(j,j)] equals the
+        // column norm bitwise
+        let norms = a.col_squared_norms();
+        for j in 0..m {
+            assert_eq!(got[(j, j)].to_bits(), norms[j].to_bits(), "diag {j}");
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_unblocked_across_odd_sizes() {
+    let mut rng = Pcg64::seed(0x50D);
+    // forced block of 8: covers below/at/above the panel width and sizes
+    // with ragged trailing panels
+    for &n in &[1usize, 7, 8, 9, 31, 32, 33, 65, 130] {
+        let a = random_spd(&mut rng, n);
+        let want = CholeskyFactor::factor_unblocked(&a).expect("spd");
+        let got = with_tune(forced(8, 8), || CholeskyFactor::factor(&a).expect("spd"));
+        let diff = got.l().max_abs_diff(want.l());
+        assert!(diff <= 1e-12, "cholesky n={n}: diff={diff:e}");
+    }
+}
+
+#[test]
+fn multi_rhs_solves_match_per_column_references() {
+    let mut rng = Pcg64::seed(0xABCD);
+    for &(n, m) in &[(5usize, 1usize), (20, 63), (33, 64), (40, 65), (16, 130)] {
+        let a = random_spd(&mut rng, n);
+        let b = random_matrix(&mut rng, n, m);
+        let chol = CholeskyFactor::factor_unblocked(&a).expect("spd");
+        let (lo, lot, full) = with_tune(forced(8, 16), || {
+            (chol.solve_lower_multi(&b), chol.solve_lower_t_multi(&b), chol.solve_multi(&b))
+        });
+        for j in 0..m {
+            let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+            let r_lo = chol.solve_lower(&col);
+            let r_lot = chol.solve_lower_t(&col);
+            let r_full = chol.solve(&col);
+            for i in 0..n {
+                assert!((lo[(i, j)] - r_lo[i]).abs() <= 1e-12, "solve_lower n={n} m={m}");
+                assert!((lot[(i, j)] - r_lot[i]).abs() <= 1e-12, "solve_lower_t n={n} m={m}");
+                assert!((full[(i, j)] - r_full[i]).abs() <= 1e-12, "solve n={n} m={m}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_cov_and_grad_block_match_pairwise_references() {
+    let mut rng = Pcg64::seed(0xFACE);
+    let dim = 3;
+    let k = Matern52::new(dim);
+    let xs: Vec<Vec<f64>> = (0..140).map(|_| rng.unit_point(dim)).collect();
+    let cands: Vec<Vec<f64>> = (0..70).map(|_| rng.unit_point(dim)).collect();
+
+    let cov = with_tune(forced(8, 16), || k.cross_cov(&xs, &cands));
+    let mut max_diff: f64 = 0.0;
+    for (i, a) in xs.iter().enumerate() {
+        for (j, b) in cands.iter().enumerate() {
+            max_diff = max_diff.max((cov[(i, j)] - k.eval(a, b)).abs());
+        }
+    }
+    assert!(max_diff <= 1e-12, "cross_cov vs eval: diff={max_diff:e}");
+
+    let w = random_matrix(&mut rng, xs.len(), cands.len());
+    let np = k.n_params();
+    let mut got = vec![0.0; np];
+    with_tune(forced(8, 16), || k.grad_params_block(&xs, &cands, &w, &mut got));
+    let mut want = vec![0.0; np];
+    let mut tmp = vec![0.0; np];
+    for (i, a) in xs.iter().enumerate() {
+        for (j, b) in cands.iter().enumerate() {
+            k.grad_params(a, b, &mut tmp);
+            for (acc, g) in want.iter_mut().zip(&tmp) {
+                *acc += w[(i, j)] * g;
+            }
+        }
+    }
+    for p in 0..np {
+        let rel = (got[p] - want[p]).abs() / (1.0 + want[p].abs());
+        assert!(rel <= 1e-9, "grad_params_block param {p}: {} vs {}", got[p], want[p]);
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results_bitwise() {
+    let mut rng = Pcg64::seed(0x7EAD);
+    let a = random_spd(&mut rng, 96);
+    let b = random_matrix(&mut rng, 96, 40);
+    let dim = 3;
+    let kern = Matern52::new(dim);
+    let xs: Vec<Vec<f64>> = (0..96).map(|_| rng.unit_point(dim)).collect();
+    let cands: Vec<Vec<f64>> = (0..40).map(|_| rng.unit_point(dim)).collect();
+    let w = random_matrix(&mut rng, xs.len(), cands.len());
+
+    // full pipeline under each thread count: factor, multi-solve, matmul,
+    // cross-covariance, and the gradient contraction
+    let run = |threads: usize| {
+        with_tune(forced(threads, 16), || {
+            let chol = CholeskyFactor::factor(&a).expect("spd");
+            let x = chol.solve_lower_multi(&b);
+            let c = a.matmul(&b);
+            let cov = kern.cross_cov(&xs, &cands);
+            let mut grad = vec![0.0; kern.n_params()];
+            kern.grad_params_block(&xs, &cands, &w, &mut grad);
+            let mut bits: Vec<u64> = Vec::new();
+            bits.extend(chol.l().data().iter().map(|v| v.to_bits()));
+            bits.extend(x.data().iter().map(|v| v.to_bits()));
+            bits.extend(c.data().iter().map(|v| v.to_bits()));
+            bits.extend(cov.data().iter().map(|v| v.to_bits()));
+            bits.extend(grad.iter().map(|v| v.to_bits()));
+            bits
+        })
+    };
+
+    let base = run(1);
+    for threads in [2, 8] {
+        let other = run(threads);
+        assert_eq!(base, other, "threads={threads} changed a result bitwise");
+    }
+}

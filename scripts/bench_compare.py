@@ -4,7 +4,9 @@
 Merges the JSON-lines rows emitted by the smoke benches
 (`acqui_opt --smoke` -> target/acqui_opt_batch.json,
 `gp_scaling --smoke` -> target/gp_scaling.json,
-`batch_propose --smoke` -> target/batch_propose.json) into one
+`batch_propose --smoke` -> target/batch_propose.json,
+`fig1_time --smoke` -> target/fig1_time.json,
+`kernel_micro --smoke` -> target/kernel_micro.json) into one
 `BENCH_PR.json` document, compares it against the checked-in
 `rust/benches/baseline.json`, and fails (exit 1) on a >30%
 candidates/sec regression at any batch size.
@@ -18,16 +20,26 @@ Gate policy
   `fit_plus_predict_s` / `propose_s` (lower is better) regressions print
   a warning but never fail the job (wall-clock timings are too noisy on
   shared CI runners for a hard gate).
-* `gp_scaling_phase` and `batch_propose_phase` rows (per-phase seconds
-  from the `limbo::obs` span registry) are also warn-only; they exist to
-  attribute a headline regression to a phase — when `propose_s` warns,
-  the matching phase rows say whether the inner optimizer, the qEI MC
-  sampler, or the Cholesky factor slowed down.
+* `fig1_time` rows track the static-vs-dynamic speed-up `ratio` (higher
+  is better) and `kernel_micro` rows track `gram_blocked_s` (lower is
+  better); both warn-only — a ratio falling below the 2x advantage the
+  PR pins is a warning, not a hard failure, because full-run wall-clock
+  on shared runners is noisy.
+* `gp_scaling_phase`, `batch_propose_phase`, and `fig1_time_phase` rows
+  (per-phase seconds from the `limbo::obs` span registry) are also
+  warn-only; they exist to attribute a headline regression to a phase —
+  when `propose_s` or `ratio` warns, the matching phase rows say whether
+  the inner optimizer, the qEI MC sampler, or the Cholesky factor
+  slowed down.
 * If the baseline has `"warn_only": true`, or has no matching row for a
   PR row, everything downgrades to warnings — this is how the gate
   behaves on first landing, while the baseline seeds. With
   `"warn_only": false` the candidates/sec gate is armed and fails the
   job as soon as matching baseline rows exist.
+* `--baseline-fallback` names a second rows file (CI passes the
+  trunk-cache copy of the seed artifact) used ONLY when the committed
+  baseline has no rows: the armed gate then compares against the last
+  trunk run instead of silently passing with "baseline still seeding".
 
 Refreshing the baseline
 -----------------------
@@ -77,6 +89,14 @@ def row_key(row):
     if row.get("bench") == "batch_propose_phase":
         return ("batch_propose_phase", row.get("strategy"), row.get("n"),
                 row.get("q"), row.get("phase"))
+    if row.get("bench") == "fig1_time":
+        return ("fig1_time", row.get("func"), row.get("dim"), row.get("iters"),
+                row.get("hpo"))
+    if row.get("bench") == "fig1_time_phase":
+        return ("fig1_time_phase", row.get("func"), row.get("dim"),
+                row.get("iters"), row.get("hpo"), row.get("phase"))
+    if row.get("bench") == "kernel_micro":
+        return ("kernel_micro", row.get("kernel"), row.get("n"))
     return (row.get("bench"), json.dumps(row, sort_keys=True))
 
 
@@ -89,6 +109,10 @@ def main():
                     help="fractional candidates/sec drop that fails the job")
     ap.add_argument("--write-baseline",
                     help="write a fresh baseline from the PR rows and exit")
+    ap.add_argument("--baseline-fallback",
+                    help="JSON rows file used when the committed baseline "
+                         "has no rows (CI passes the trunk-cache copy of "
+                         "the seed artifact)")
     args = ap.parse_args()
 
     pr_rows = read_rows(args.pr)
@@ -120,6 +144,18 @@ def main():
         baseline = {"warn_only": True, "rows": []}
 
     warn_only = bool(baseline.get("warn_only", False))
+    if not baseline.get("rows") and args.baseline_fallback:
+        try:
+            with open(args.baseline_fallback) as f:
+                doc = json.load(f)
+            fb_rows = doc.get("rows", []) if isinstance(doc, dict) else doc
+            if fb_rows:
+                print(f"baseline has no rows; comparing against fallback "
+                      f"{args.baseline_fallback} ({len(fb_rows)} trunk rows)")
+                baseline["rows"] = fb_rows
+        except FileNotFoundError:
+            print(f"WARN: baseline fallback {args.baseline_fallback} not "
+                  "found (no trunk cache yet)")
     base_by_key = {row_key(r): r for r in baseline.get("rows", [])}
     failures, warnings = [], []
 
@@ -164,7 +200,30 @@ def main():
                 warnings.append(line)
             else:
                 print(f"ok   {line}")
-        elif row.get("bench") in ("gp_scaling_phase", "batch_propose_phase"):
+        elif row.get("bench") == "fig1_time":
+            # static-vs-dynamic speed-up: higher is better, warn-only
+            now, then = row.get("ratio"), base.get("ratio")
+            if now is None or then is None or then <= 0:
+                continue
+            drop = 1.0 - now / then
+            line = f"{key} speed-up ratio: {then:.2f}x -> {now:.2f}x ({-drop:+.1%})"
+            if drop > args.max_regression:
+                warnings.append(line)
+            else:
+                print(f"ok   {line}")
+        elif row.get("bench") == "kernel_micro":
+            # blocked Gram wall-clock: lower is better, warn-only
+            now, then = row.get("gram_blocked_s"), base.get("gram_blocked_s")
+            if now is None or then is None or then <= 0:
+                continue
+            slowdown = now / then - 1.0
+            line = f"{key} gram_blocked: {then:.6f}s -> {now:.6f}s ({slowdown:+.1%})"
+            if slowdown > args.max_regression:
+                warnings.append(line)
+            else:
+                print(f"ok   {line}")
+        elif row.get("bench") in ("gp_scaling_phase", "batch_propose_phase",
+                                  "fig1_time_phase"):
             # per-phase attribution rows (warn-only): when a headline row
             # above warns, these say WHICH phase regressed
             now, then = row.get("seconds"), base.get("seconds")
