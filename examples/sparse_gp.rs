@@ -36,8 +36,9 @@ fn main() {
     // marginal likelihood once the model has migrated
     // (refit points 40, 80, 160, 320, ... land one refit past the
     // migration threshold even in the smoke run)
-    let mut srv = AskTellServer::new(model, Ucb::default(), RandomPoint::new(96), dim, 42)
-        .with_refit(RefitSchedule::Doubling { first: 40 });
+    let mut srv =
+        AskTellServer::from_core(BoCore::new(model, Ucb::default(), RandomPoint::new(96), dim, 42))
+            .with_refit(RefitSchedule::Doubling { first: 40 });
 
     // profile the whole run: the phase table at the end attributes the
     // wall time to ask/tell service, Cholesky, sparse fit, migration...

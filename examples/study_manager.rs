@@ -1,0 +1,120 @@
+//! Study manager — a fleet of concurrent Branin optimizations behind
+//! one [`StudyManager`], with forced eviction and a crash/recovery.
+//!
+//! The single-study ask/tell server owns a thread per optimization; a
+//! tuning service runs thousands of mostly-idle studies and cannot
+//! afford that. The manager inverts the ownership: studies are passive
+//! registry state, operations run as jobs on one shared thread pool,
+//! and a live-study budget evicts cold studies to disk — from where
+//! they rehydrate transparently (snapshot + event-log replay through
+//! the live code path, bit-exact) on their next operation. The same
+//! machinery survives a process crash: a fresh manager `recover`s every
+//! study from its durability directory and the traces continue as if
+//! nothing happened.
+//!
+//! Run: `cargo run --release --example study_manager`
+//! (`LIMBO_SMOKE=1` shrinks the fleet to a CI-sized run that still
+//! exercises eviction, rehydration and one recovery.)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use limbo::bayes_opt::RefitSchedule;
+use limbo::benchfns::Branin;
+use limbo::coordinator::{StudyId, StudyManager};
+use limbo::pool::ThreadPool;
+use limbo::prelude::*;
+
+fn study_def(seed: u64) -> limbo::coordinator::DefaultDenseServer {
+    BoDef::service(2)
+        .seed(seed)
+        .refit(RefitSchedule::Doubling { first: 6 })
+        .build_server()
+}
+
+fn run_rounds(mgr: &StudyManager, ids: &[StudyId], rounds: usize) {
+    let branin = Branin;
+    for _ in 0..rounds {
+        for &id in ids {
+            let x = mgr.ask(id).expect("ask");
+            // Branin::eval is already negated onto the unit square: the
+            // library convention is maximization, optimum ≈ -0.39789
+            let y = branin.eval(&x);
+            mgr.tell(id, &x, y).expect("tell");
+        }
+    }
+}
+
+fn fleet_best(mgr: &StudyManager, ids: &[StudyId]) -> (StudyId, f64) {
+    ids.iter()
+        .filter_map(|&id| mgr.best(id).expect("best").map(|(_, v)| (id, v)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("finite"))
+        .expect("fleet has data")
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
+    let fleet = if smoke { 12 } else { 48 };
+    let rounds = if smoke { 8 } else { 20 };
+    let max_live = fleet / 4;
+    let root = std::env::temp_dir().join("limbo_study_manager_example");
+    let _ = std::fs::remove_dir_all(&root);
+    let pool = Arc::new(ThreadPool::new(4));
+    let t0 = Instant::now();
+
+    // phase 1: a durable fleet under a live-study budget
+    println!("fleet of {fleet} Branin studies, live budget {max_live}, pool of 4");
+    let mgr = StudyManager::durable(Arc::clone(&pool), &root)
+        .expect("durability root")
+        .with_max_live(max_live);
+    let ids: Vec<StudyId> = (0..fleet)
+        .map(|s| {
+            let seed = 100 + s as u64;
+            mgr.create(move || study_def(seed)).expect("create study")
+        })
+        .collect();
+    run_rounds(&mgr, &ids, rounds);
+    let (live, evicted) = mgr.counts();
+    println!(
+        "after {rounds} rounds: {live} live / {evicted} evicted (budget {max_live}), \
+         t={:.2?}",
+        t0.elapsed()
+    );
+
+    // phase 2: forced eviction is transparent for a durable study
+    let victim = ids[0];
+    mgr.evict(victim).expect("evict");
+    let x = mgr.ask(victim).expect("rehydrates on demand");
+    println!("evicted {victim}, next ask rehydrated it: x = ({:.3}, {:.3})", x[0], x[1]);
+    let y = Branin.eval(&x);
+    mgr.tell(victim, &x, y).expect("tell");
+
+    // phase 3: "crash" — drop the manager without closing anything; the
+    // event logs flush on drop, nothing else is saved
+    drop(mgr);
+    println!("manager dropped mid-run ({} studies lost in memory)", fleet);
+
+    // phase 4: a fresh manager recovers every study from disk and the
+    // fleet continues exactly where it stopped
+    let mgr = StudyManager::durable(pool, &root).expect("durability root").with_max_live(max_live);
+    for &id in &ids {
+        mgr.recover(id, {
+            let seed = 100 + id.as_u64();
+            move || study_def(seed)
+        })
+        .expect("recover study");
+    }
+    run_rounds(&mgr, &ids, 2);
+    let (id, best) = fleet_best(&mgr, &ids);
+    println!(
+        "recovered {} studies, 2 more rounds: fleet best {best:.5} (true optimum \
+         {:.5}) from {id}",
+        ids.len(),
+        Branin.optimum()
+    );
+    for &id in &ids {
+        mgr.close(id).expect("close");
+    }
+    println!("total {:.2?}", t0.elapsed());
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,154 @@
+//! Manager load sweep: round-robin ask/tell over many concurrent
+//! studies multiplexed through one [`limbo::coordinator::StudyManager`].
+//!
+//! Two headline columns per configuration:
+//! * `studies_per_sec` — completed study-rounds (one ask + one tell)
+//!   per second of wall clock, the manager's multiplexing throughput;
+//! * `ask_p99_s` — 99th-percentile end-to-end `ask` latency as a client
+//!   sees it (checkout + pool dispatch + acquisition + checkin), the
+//!   tail a fleet of evaluators actually waits on.
+//!
+//! Two configurations run: `ephemeral` (all studies stay in memory —
+//! pure dispatch overhead) and `durable` with a live-study budget at a
+//! quarter of the fleet (every operation beyond the budget pays
+//! eviction, event-log append and snapshot/replay rehydration — the
+//! restart-survivable deployment). One JSON row per configuration goes
+//! to stdout and `target/manager_load.json`, which CI merges into
+//! `BENCH_PR.json` (`scripts/bench_compare.py`; tracked warn-only like
+//! the other wall-clock rows). `--smoke` shrinks the fleet to the
+//! CI-sized variant.
+//!
+//! The timed loops run with the `limbo::obs` span registry **on** —
+//! `"bench":"manager_load_phase"` rows (ask/tell vs snapshot vs replay
+//! seconds) attribute a throughput regression to the optimizer itself
+//! or to the durability machinery.
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use limbo::bayes_opt::{BoDef, RefitSchedule};
+use limbo::benchlib::header;
+use limbo::coordinator::StudyManager;
+use limbo::obs::Phase;
+use limbo::opt::RandomPoint;
+use limbo::pool::ThreadPool;
+
+fn objective(study: usize, x: &[f64]) -> f64 {
+    let target = (study % 97) as f64 / 96.0;
+    -(x[0] - target).powi(2)
+}
+
+struct Outcome {
+    wall_s: f64,
+    ask_p99_s: f64,
+    ops: usize,
+}
+
+/// Round-robin `rounds` × (ask + tell) over every study.
+fn drive(mgr: &StudyManager, ids: &[limbo::coordinator::StudyId], rounds: usize) -> Outcome {
+    let mut ask_times = Vec::with_capacity(ids.len() * rounds);
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for (s, &id) in ids.iter().enumerate() {
+            let ta = Instant::now();
+            let x = mgr.ask(id).expect("ask");
+            ask_times.push(ta.elapsed().as_secs_f64());
+            mgr.tell(id, &x, objective(s, &x)).expect("tell");
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    ask_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99_idx = ((ask_times.len() as f64) * 0.99).ceil() as usize;
+    let ask_p99_s = ask_times[p99_idx.clamp(1, ask_times.len()) - 1];
+    Outcome { wall_s, ask_p99_s, ops: ask_times.len() * 2 }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let studies = if smoke { 64 } else { 2000 };
+    // ≥5 rounds so the Doubling{first:4} refit fires in every study and
+    // the durable mode pays real snapshot + replay costs, not just log
+    // appends
+    let rounds = if smoke { 5 } else { 6 };
+    let threads = 4;
+    header(&format!(
+        "study-manager load ({studies} concurrent 1-D studies, {rounds} ask/tell \
+         rounds round-robin, pool={threads})"
+    ));
+    limbo::obs::set_enabled(true);
+
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut run = |mode: &str, mgr: &StudyManager, max_live: usize| {
+        let ids: Vec<_> = (0..studies)
+            .map(|s| {
+                let seed = 9000 + s as u64;
+                mgr.create(move || {
+                    BoDef::service(1)
+                        .seed(seed)
+                        .inner_opt(RandomPoint::new(16))
+                        .refit(RefitSchedule::Doubling { first: 4 })
+                        .build_server()
+                })
+                .expect("create study")
+            })
+            .collect();
+        let base = limbo::obs::snapshot();
+        let out = drive(mgr, &ids, rounds);
+        let delta = limbo::obs::snapshot().delta_since(&base);
+        let study_rounds = studies * rounds;
+        let studies_per_sec = study_rounds as f64 / out.wall_s;
+        let (live, evicted) = mgr.counts();
+        println!(
+            "  {mode:<9} {study_rounds} study-rounds in {:.3}s -> {studies_per_sec:.0} \
+             studies/s, ask p99 {:.5}s (live {live}, evicted {evicted})",
+            out.wall_s, out.ask_p99_s
+        );
+        json_rows.push(format!(
+            "{{\"bench\":\"manager_load\",\"smoke\":{smoke},\"mode\":\"{mode}\",\
+             \"studies\":{studies},\"rounds\":{rounds},\"max_live\":{max_live},\
+             \"ops\":{},\"wall_s\":{:.6},\"studies_per_sec\":{studies_per_sec:.3},\
+             \"ask_p99_s\":{:.6}}}",
+            out.ops, out.wall_s, out.ask_p99_s
+        ));
+        for p in [Phase::Ask, Phase::Tell, Phase::Refit, Phase::Snapshot, Phase::Replay] {
+            json_rows.push(format!(
+                "{{\"bench\":\"manager_load_phase\",\"mode\":\"{mode}\",\
+                 \"studies\":{studies},\"phase\":\"{}\",\"seconds\":{:.6},\
+                 \"calls\":{}}}",
+                p.name(),
+                delta.seconds(p),
+                delta.calls(p)
+            ));
+        }
+    };
+
+    let pool = Arc::new(ThreadPool::new(threads));
+    let ephemeral = StudyManager::new(Arc::clone(&pool));
+    run("ephemeral", &ephemeral, usize::MAX);
+    drop(ephemeral);
+
+    let root = std::env::temp_dir().join("limbo_manager_load_bench");
+    let _ = std::fs::remove_dir_all(&root);
+    let max_live = (studies / 4).max(1);
+    let durable =
+        StudyManager::durable(pool, &root).expect("durable root").with_max_live(max_live);
+    run("durable", &durable, max_live);
+    drop(durable);
+    let _ = std::fs::remove_dir_all(&root);
+
+    let path = std::path::Path::new("target").join("manager_load.json");
+    let _ = std::fs::create_dir_all("target");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            for row in &json_rows {
+                let _ = writeln!(f, "{row}");
+            }
+            println!("\nJSON rows written to {}", path.display());
+        }
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    for row in &json_rows {
+        println!("{row}");
+    }
+}

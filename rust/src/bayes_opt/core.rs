@@ -78,6 +78,49 @@ pub enum BatchStrategy {
     },
 }
 
+/// A typed construction error for the fallible `BoDef`/[`Domain`] paths
+/// (the panicking setters delegate to these and `expect` the result, so
+/// services can validate client-supplied definitions without
+/// `catch_unwind`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BoError {
+    /// A component's dimensionality disagrees with the definition's.
+    DimMismatch {
+        /// The definition's dimension.
+        expected: usize,
+        /// The offending component's dimension.
+        got: usize,
+    },
+    /// A box bound is non-finite or inverted (`hi <= lo`).
+    InvalidBounds {
+        /// Index of the offending dimension.
+        index: usize,
+        /// Lower bound as supplied.
+        lo: f64,
+        /// Upper bound as supplied.
+        hi: f64,
+    },
+}
+
+impl std::fmt::Display for BoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BoError::DimMismatch { expected, got } => {
+                write!(f, "dimension mismatch: definition is {expected}-d, component is {got}-d")
+            }
+            BoError::InvalidBounds { index, lo, hi } => {
+                write!(
+                    f,
+                    "invalid bounds at dimension {index}: ({lo}, {hi}) — bounds must be \
+                     finite with hi > lo"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for BoError {}
+
 /// A rectangular search domain: per-dimension `[lo, hi]` bounds mapped
 /// to the internal unit cube.
 ///
@@ -102,21 +145,28 @@ impl Domain {
     /// A box domain from per-dimension `(lo, hi)` bounds.
     ///
     /// # Panics
-    /// If any bound is non-finite or `hi <= lo`.
+    /// If any bound is non-finite or `hi <= lo`. The non-panicking form
+    /// is [`try_from_bounds`](Self::try_from_bounds).
     pub fn from_bounds(bounds: &[(f64, f64)]) -> Self {
+        Self::try_from_bounds(bounds).expect("Domain bounds must be finite with hi > lo")
+    }
+
+    /// A box domain from per-dimension `(lo, hi)` bounds, returning
+    /// [`BoError::InvalidBounds`] instead of panicking on a non-finite
+    /// or inverted bound.
+    pub fn try_from_bounds(bounds: &[(f64, f64)]) -> Result<Self, BoError> {
         let mut lo = Vec::with_capacity(bounds.len());
         let mut span = Vec::with_capacity(bounds.len());
         let mut unit = true;
-        for &(l, h) in bounds {
-            assert!(
-                l.is_finite() && h.is_finite() && h > l,
-                "Domain bounds must be finite with hi > lo, got ({l}, {h})"
-            );
+        for (index, &(l, h)) in bounds.iter().enumerate() {
+            if !(l.is_finite() && h.is_finite() && h > l) {
+                return Err(BoError::InvalidBounds { index, lo: l, hi: h });
+            }
             unit &= l == 0.0 && h == 1.0;
             lo.push(l);
             span.push(h - l);
         }
-        Self { lo, span, unit }
+        Ok(Self { lo, span, unit })
     }
 
     /// Dimensionality.
@@ -206,6 +256,42 @@ pub trait Observer: Send {
     /// Handle one event. Called synchronously from the loop; keep it
     /// cheap (buffer writes, defer flushes to [`BoEvent::Stopped`]).
     fn on_event(&mut self, event: &BoEvent);
+}
+
+/// The loop bookkeeping of a [`BoCore`], captured for checkpointing.
+///
+/// Everything here is *loop* state — counters, the pending init queue,
+/// the incumbent (unit coordinates) and the raw RNG registers. Model
+/// state (data + hyper-parameters) is checkpointed separately via
+/// [`crate::model::ModelState`]; policies (acquisition, inner optimizer,
+/// schedules, domain) are rebuilt from the study's
+/// [`crate::bayes_opt::BoDef`]. A core restored from a `CoreState` whose
+/// model was restored alongside it continues the exact proposal sequence
+/// of the captured run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreState {
+    /// Problem dimensionality (validated on import).
+    pub dim: usize,
+    /// Queued initial-design points not yet proposed (unit cube).
+    pub init_queue: Vec<Vec<f64>>,
+    /// Total initial-design points ever queued.
+    pub init_total: usize,
+    /// Design points handed out so far.
+    pub init_served: usize,
+    /// Observations attributed to the initial design so far.
+    pub init_observed: usize,
+    /// Model-guided observations.
+    pub iteration: usize,
+    /// Total observations.
+    pub evaluations: usize,
+    /// Incumbent best `(x, y)` in unit coordinates.
+    pub best: Option<(Vec<f64>, f64)>,
+    /// Next observation count that triggers a doubling-schedule refit.
+    pub next_refit: Option<usize>,
+    /// Whether `finish` has already fired.
+    pub finished: bool,
+    /// RNG `(state, increment)` registers.
+    pub rng: (u64, u64),
 }
 
 /// The single ask/tell core: one generic, monomorphized implementation
@@ -633,6 +719,45 @@ where
             }
             Self::emit(&mut self.observers, &BoEvent::Refit { n_samples: n });
         }
+    }
+
+    /// Capture the loop bookkeeping for a checkpoint (pure read — the
+    /// live run is not perturbed). Pair with the model's own state
+    /// capture; see [`CoreState`] for what is and is not covered.
+    pub fn export_state(&self) -> CoreState {
+        CoreState {
+            dim: self.dim,
+            init_queue: self.init_queue.iter().cloned().collect(),
+            init_total: self.init_total,
+            init_served: self.init_served,
+            init_observed: self.init_observed,
+            iteration: self.iteration,
+            evaluations: self.evaluations,
+            best: self.best.clone(),
+            next_refit: self.next_refit,
+            finished: self.finished,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Restore loop bookkeeping captured by
+    /// [`export_state`](Self::export_state) into a freshly built core
+    /// (same `BoDef`, model restored separately).
+    ///
+    /// # Panics
+    /// If the captured dimensionality differs from the core's.
+    pub fn import_state(&mut self, state: CoreState) {
+        assert_eq!(state.dim, self.dim, "CoreState dim must match the core dim");
+        self.init_queue = state.init_queue.into();
+        self.init_total = state.init_total;
+        self.init_served = state.init_served;
+        self.init_observed = state.init_observed;
+        self.iteration = state.iteration;
+        self.evaluations = state.evaluations;
+        self.best = state.best;
+        self.next_refit = state.next_refit;
+        self.finished = state.finished;
+        self.rng = Pcg64::from_state(state.rng.0, state.rng.1);
     }
 
     /// Signal the end of the run to the observers (fired once; later

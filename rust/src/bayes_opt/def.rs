@@ -33,7 +33,7 @@
 //! ```
 
 use crate::acqui::{AcquiFn, Ucb};
-use crate::bayes_opt::core::{BatchStrategy, BoCore, Domain, Observer, RefitSchedule};
+use crate::bayes_opt::core::{BatchStrategy, BoCore, BoError, Domain, Observer, RefitSchedule};
 use crate::bayes_opt::BOptimizer;
 use crate::coordinator::service::{AskTellServer, ServerHandle};
 use crate::init::{Initializer, NoInit, RandomSampling};
@@ -289,18 +289,38 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
     ///
     /// # Panics
     /// If `bounds.len()` differs from the definition's dimension or any
-    /// bound is invalid.
-    pub fn bounds(mut self, bounds: &[(f64, f64)]) -> Self {
-        assert_eq!(bounds.len(), self.dim, "bounds must cover every dimension");
-        self.domain = Domain::from_bounds(bounds);
-        self
+    /// bound is invalid. The non-panicking form is
+    /// [`try_bounds`](Self::try_bounds).
+    pub fn bounds(self, bounds: &[(f64, f64)]) -> Self {
+        self.try_bounds(bounds).expect("bounds must cover every dimension with finite hi > lo")
+    }
+
+    /// Fallible form of [`bounds`](Self::bounds): a service validating a
+    /// client-supplied definition gets a typed [`BoError`] instead of a
+    /// panic.
+    pub fn try_bounds(self, bounds: &[(f64, f64)]) -> Result<Self, BoError> {
+        if bounds.len() != self.dim {
+            return Err(BoError::DimMismatch { expected: self.dim, got: bounds.len() });
+        }
+        let domain = Domain::try_from_bounds(bounds)?;
+        Ok(Self { domain, ..self })
     }
 
     /// Set the search domain directly.
-    pub fn domain(mut self, domain: Domain) -> Self {
-        assert_eq!(domain.dim(), self.dim, "Domain dim must match the definition dim");
-        self.domain = domain;
-        self
+    ///
+    /// # Panics
+    /// If the domain dimensionality differs from the definition's. The
+    /// non-panicking form is [`try_domain`](Self::try_domain).
+    pub fn domain(self, domain: Domain) -> Self {
+        self.try_domain(domain).expect("Domain dim must match the definition dim")
+    }
+
+    /// Fallible form of [`domain`](Self::domain).
+    pub fn try_domain(self, domain: Domain) -> Result<Self, BoError> {
+        if domain.dim() != self.dim {
+            return Err(BoError::DimMismatch { expected: self.dim, got: domain.dim() });
+        }
+        Ok(Self { domain, ..self })
     }
 
     /// Subscribe a run observer (repeatable).

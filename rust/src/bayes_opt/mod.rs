@@ -24,7 +24,9 @@
 pub mod core;
 pub mod def;
 
-pub use self::core::{BatchStrategy, BoCore, BoEvent, Domain, Observer, RefitSchedule};
+pub use self::core::{
+    BatchStrategy, BoCore, BoError, BoEvent, CoreState, Domain, Observer, RefitSchedule,
+};
 pub use self::def::{BoDef, DefaultInnerOpt};
 
 use crate::acqui::{AcquiFn, Ucb};

@@ -1,0 +1,1182 @@
+//! Multi-study coordination: thousands of concurrent optimizations
+//! multiplexed over one shared [`ThreadPool`], each durable across
+//! process restarts.
+//!
+//! The ask/tell server ([`super::service`]) scales the *single-study*
+//! deployment mode: one optimization, one thread. A hyper-parameter
+//! tuning service or a robot fleet runs *thousands* of concurrent
+//! studies, most of them idle at any instant — one thread per study
+//! wastes memory and scheduler pressure on parked threads. The
+//! [`StudyManager`] inverts the ownership: studies are passive state in
+//! a registry, client calls check a study out, run the operation as a
+//! job on the shared pool, and check it back in. Per-study operations
+//! serialize (checkout is exclusive); operations on *different* studies
+//! run concurrently up to the pool width.
+//!
+//! # Identity and errors
+//!
+//! Studies are addressed by the opaque [`StudyId`] newtype and every
+//! fallible operation returns a typed [`StudyError`] — no stringly ids,
+//! no panics on the public surface. The [`Study`] trait is the common
+//! ask/tell vocabulary implemented by the inline server, the spawned
+//! server handle and the managed-study handle, so driver code is
+//! generic over the deployment mode.
+//!
+//! # Durability: event sourcing + refit-barrier snapshots
+//!
+//! A manager built with [`StudyManager::durable`] gives every study a
+//! directory holding an append-only JSONL event log (the exact
+//! [`crate::stat::JsonlObserver`] format — 17-significant-digit floats,
+//! so a replayed log reproduces the run bit-for-bit) and a periodic
+//! snapshot. Recovery is snapshot load + tail replay through the *live*
+//! code path: replayed proposals re-run the acquisition maximization
+//! (advancing the RNG exactly as the original did), replayed
+//! observations re-enter the model, and scheduled refits re-fire on the
+//! same counts. No warm-start approximation — the rehydrated study
+//! continues the exact trace of the lost one.
+//!
+//! Snapshots are only taken at a *refit barrier*: the moment right
+//! after a scheduled ML-II refit, when the model's live state is — by
+//! construction — exactly the state a fresh full fit at the restored
+//! hyper-parameters reproduces. (Between refits the dense GP's
+//! incremental Cholesky updates drift from a from-scratch factorization
+//! at the rounding level; snapshotting there would break bit-exact
+//! resume.) The event log covers everything after the barrier.
+//!
+//! # Eviction
+//!
+//! Live studies cost memory (a fitted GP, its factorizations). A
+//! manager with [`StudyManager::with_max_live`] evicts the
+//! least-recently-used durable study over the limit: the live state is
+//! dropped (flushing its log) and the slot rehydrates transparently on
+//! the next operation. Ephemeral (non-durable) studies are never
+//! auto-evicted — an explicit [`StudyManager::evict`] discards them and
+//! later operations report [`StudyError::Evicted`]. The
+//! [`crate::obs::Gauge::LiveStudies`] / `EvictedStudies` gauges and the
+//! [`crate::obs::Phase::Snapshot`] / `Replay` spans make the churn
+//! observable.
+//!
+//! # Threading contract
+//!
+//! Manager calls block the *calling* thread on a reply channel while
+//! the operation runs on the pool; pool workers never wait on other
+//! jobs, so any number of client threads is safe. Do not call manager
+//! operations from *inside* a job running on the same pool — that
+//! reintroduces the worker-waits-on-worker cycle the design avoids.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+
+use crate::acqui::AcquiFn;
+use crate::bayes_opt::core::{BoEvent, CoreState, Observer};
+use crate::model::{ModelState, StateModel};
+use crate::obs::{self, Counter, Gauge, Phase};
+use crate::opt::Optimizer;
+use crate::pool::ThreadPool;
+use crate::stat::{JsonlObserver, ReplayEvent};
+
+use super::service::AskTellServer;
+
+/// Opaque study identity: allocated by [`StudyManager::create`],
+/// printable (`study-000042` — also the on-disk directory name), and
+/// reconstructible after a restart via [`StudyId::from_u64`] for
+/// [`StudyManager::recover`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StudyId(u64);
+
+impl StudyId {
+    /// The raw numeric id (persist this across restarts).
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild an id from its persisted raw value.
+    pub fn from_u64(raw: u64) -> Self {
+        Self(raw)
+    }
+}
+
+impl fmt::Display for StudyId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "study-{:06}", self.0)
+    }
+}
+
+/// What can go wrong on the study surface. Every public manager and
+/// handle operation returns this — no `unwrap`, no stringly errors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StudyError {
+    /// No study with this id is registered.
+    NotFound(StudyId),
+    /// The study was evicted and has no durable state to rehydrate
+    /// from (ephemeral study + explicit [`StudyManager::evict`]).
+    Evicted(StudyId),
+    /// The study (or server) was closed and accepts no more operations.
+    Closed,
+    /// Durability I/O or log-replay failure (message carries the cause).
+    Io(String),
+}
+
+impl fmt::Display for StudyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StudyError::NotFound(id) => write!(f, "{id} is not registered"),
+            StudyError::Evicted(id) => {
+                write!(f, "{id} was evicted and has no durable state to rehydrate")
+            }
+            StudyError::Closed => write!(f, "study is closed"),
+            StudyError::Io(msg) => write!(f, "study durability error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StudyError {}
+
+/// The common ask/tell vocabulary across deployment modes: the inline
+/// [`AskTellServer`], the spawned [`super::ServerHandle`] and the
+/// [`ManagedStudy`] handle all implement it, so a driving loop is
+/// generic over *where* the study runs.
+pub trait Study {
+    /// Next suggested trial point (user coordinates).
+    fn ask(&mut self) -> Result<Vec<f64>, StudyError>;
+
+    /// `q` diverse trial points for parallel evaluation.
+    fn ask_batch(&mut self, q: usize) -> Result<Vec<Vec<f64>>, StudyError>;
+
+    /// Report an observation (user coordinates).
+    fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError>;
+
+    /// Incumbent best `(x, value)`, if any data.
+    fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError>;
+
+    /// Signal the end of the run (observers flush).
+    fn finish(&mut self) -> Result<(), StudyError>;
+}
+
+/// Object-safe erasure of a concrete `AskTellServer<M, A, O>` — the
+/// manager stores every study behind this, so one registry multiplexes
+/// heterogeneous model/acquisition/optimizer stacks.
+pub(crate) trait CoreStudy: Send {
+    fn ask(&mut self) -> Vec<f64>;
+    fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>>;
+    fn tell(&mut self, x: &[f64], y: f64);
+    fn best(&self) -> Option<(Vec<f64>, f64)>;
+    fn finish(&mut self);
+    fn export_core(&self) -> CoreState;
+    fn import_core(&mut self, state: CoreState);
+    fn capture_model(&self) -> ModelState;
+    fn restore_model(&mut self, state: &ModelState) -> Result<(), String>;
+    fn hp_refits(&self) -> u64;
+    fn set_hp_refits(&mut self, refits: u64);
+    fn add_observer(&mut self, observer: Box<dyn Observer>);
+}
+
+impl<M, A, O> CoreStudy for AskTellServer<M, A, O>
+where
+    M: StateModel + Clone + Send + 'static,
+    A: AcquiFn<M> + Send + 'static,
+    O: Optimizer + Send + 'static,
+{
+    fn ask(&mut self) -> Vec<f64> {
+        self.core.propose()
+    }
+
+    fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>> {
+        self.core.propose_batch(q)
+    }
+
+    fn tell(&mut self, x: &[f64], y: f64) {
+        self.core.observe(x, y);
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.core.best()
+    }
+
+    fn finish(&mut self) {
+        self.core.finish();
+    }
+
+    fn export_core(&self) -> CoreState {
+        self.core.export_state()
+    }
+
+    fn import_core(&mut self, state: CoreState) {
+        self.core.import_state(state);
+    }
+
+    fn capture_model(&self) -> ModelState {
+        self.core.model.capture_state()
+    }
+
+    fn restore_model(&mut self, state: &ModelState) -> Result<(), String> {
+        self.core.model.restore_state(state)
+    }
+
+    fn hp_refits(&self) -> u64 {
+        self.core.model.hp_refits()
+    }
+
+    fn set_hp_refits(&mut self, refits: u64) {
+        self.core.model.set_hp_refits(refits);
+    }
+
+    fn add_observer(&mut self, observer: Box<dyn Observer>) {
+        self.core.add_boxed_observer(observer);
+    }
+}
+
+/// Type-erased study constructor kept per slot: rehydration re-runs it
+/// and overwrites the fresh state with the restored checkpoint.
+type StudyFactory = Arc<dyn Fn() -> Box<dyn CoreStudy> + Send + Sync>;
+
+/// Snapshot-barrier sentinel: attached *after* the study's
+/// [`JsonlObserver`], it counts every logged event (keeping the
+/// snapshot's replay offset aligned with the file) and raises the flag
+/// on [`BoEvent::Refit`] — the only moment a snapshot is bit-exact.
+struct Sentinel {
+    refit: Arc<AtomicBool>,
+    events: Arc<AtomicU64>,
+}
+
+impl Observer for Sentinel {
+    fn on_event(&mut self, event: &BoEvent) {
+        self.events.fetch_add(1, Ordering::Relaxed);
+        if matches!(event, BoEvent::Refit { .. }) {
+            self.refit.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Where a registered study currently lives.
+enum SlotState {
+    /// In memory, ready for checkout.
+    Live(Box<dyn CoreStudy>),
+    /// Not in memory. Durable slots rehydrate on the next operation;
+    /// ephemeral ones report [`StudyError::Evicted`].
+    Evicted,
+    /// Checked out by an operation in flight; waiters block on the
+    /// manager's condvar.
+    Busy,
+    /// Finished for good; operations report [`StudyError::Closed`].
+    Closed,
+}
+
+/// One registered study: its state, the factory that rebuilds it from
+/// its definition, and the durability plumbing.
+struct Slot {
+    state: SlotState,
+    factory: StudyFactory,
+    /// Durability directory (`<root>/<study-id>/`); `None` = ephemeral.
+    dir: Option<PathBuf>,
+    /// LRU clock value of the last checkout.
+    last_used: u64,
+    /// Set by the [`Sentinel`] when a refit made the state
+    /// snapshot-safe; consumed at the next check-in.
+    refit_flag: Arc<AtomicBool>,
+    /// Events written to the log so far == the replay offset a snapshot
+    /// taken now should record.
+    events: Arc<AtomicU64>,
+}
+
+struct Inner {
+    slots: HashMap<StudyId, Slot>,
+    next_id: u64,
+    /// Monotonic LRU clock.
+    tick: u64,
+}
+
+impl Inner {
+    fn counts(&self) -> (usize, usize) {
+        let mut live = 0;
+        let mut evicted = 0;
+        for slot in self.slots.values() {
+            match slot.state {
+                SlotState::Live(_) | SlotState::Busy => live += 1,
+                SlotState::Evicted => evicted += 1,
+                SlotState::Closed => {}
+            }
+        }
+        (live, evicted)
+    }
+
+    fn publish_gauges(&self) {
+        let (live, evicted) = self.counts();
+        obs::gauge_set(Gauge::LiveStudies, live as u64);
+        obs::gauge_set(Gauge::EvictedStudies, evicted as u64);
+    }
+}
+
+/// What `checkout` decided to do after inspecting the slot under the
+/// lock (the action itself runs with the lock released or re-acquired).
+enum Checkout {
+    Wait,
+    Got(Box<dyn CoreStudy>),
+    Rehydrate {
+        factory: StudyFactory,
+        dir: PathBuf,
+        refit: Arc<AtomicBool>,
+        events: Arc<AtomicU64>,
+    },
+}
+
+/// The multi-study registry: create/recover studies, run ask/tell
+/// operations by [`StudyId`] on a shared [`ThreadPool`], evict and
+/// rehydrate under a live-study budget. See the module docs for the
+/// durability and threading contracts.
+pub struct StudyManager {
+    pool: Arc<ThreadPool>,
+    root: Option<PathBuf>,
+    max_live: usize,
+    inner: Mutex<Inner>,
+    idle: Condvar,
+}
+
+fn lock_inner(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn io_err(context: &str, e: std::io::Error) -> StudyError {
+    StudyError::Io(format!("{context}: {e}"))
+}
+
+impl StudyManager {
+    /// An ephemeral manager: studies live in memory only, nothing is
+    /// written to disk, eviction is manual and lossy.
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        Self {
+            pool,
+            root: None,
+            max_live: usize::MAX,
+            inner: Mutex::new(Inner { slots: HashMap::new(), next_id: 0, tick: 0 }),
+            idle: Condvar::new(),
+        }
+    }
+
+    /// A durable manager: every study gets `<root>/<study-id>/` with an
+    /// append-only event log and refit-barrier snapshots, survives
+    /// restarts via [`recover`](Self::recover), and tolerates LRU
+    /// eviction without losing its trace.
+    pub fn durable(pool: Arc<ThreadPool>, root: impl Into<PathBuf>) -> Result<Self, StudyError> {
+        let root = root.into();
+        fs::create_dir_all(&root).map_err(|e| io_err("create durability root", e))?;
+        let mut mgr = Self::new(pool);
+        mgr.root = Some(root);
+        Ok(mgr)
+    }
+
+    /// Cap the number of in-memory studies; the least-recently-used
+    /// *durable* study over the cap is evicted (ephemeral studies are
+    /// never auto-evicted — eviction would lose them).
+    pub fn with_max_live(mut self, n: usize) -> Self {
+        self.max_live = n.max(1);
+        self
+    }
+
+    /// The shared pool operations run on.
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// `(live, evicted)` study counts (closed studies count as neither).
+    pub fn counts(&self) -> (usize, usize) {
+        lock_inner(&self.inner).counts()
+    }
+
+    /// Register a new study built by `factory` (typically a closure
+    /// around a [`crate::bayes_opt::BoDef`], e.g.
+    /// `|| BoDef::service(2).seed(7).build_server()`). The factory is
+    /// kept: rehydration re-runs it and overwrites the fresh state with
+    /// the restored checkpoint, so it must be deterministic in
+    /// everything the checkpoint does not cover (kernel, schedules,
+    /// inner-optimizer budgets...).
+    pub fn create<M, A, O, F>(&self, factory: F) -> Result<StudyId, StudyError>
+    where
+        F: Fn() -> AskTellServer<M, A, O> + Send + Sync + 'static,
+        M: StateModel + Clone + Send + 'static,
+        A: AcquiFn<M> + Send + 'static,
+        O: Optimizer + Send + 'static,
+    {
+        let factory: StudyFactory = Arc::new(move || Box::new(factory()) as Box<dyn CoreStudy>);
+        let id = {
+            let mut inner = lock_inner(&self.inner);
+            let id = StudyId(inner.next_id);
+            inner.next_id += 1;
+            id
+        };
+        let mut study = factory();
+        let refit_flag = Arc::new(AtomicBool::new(false));
+        let events = Arc::new(AtomicU64::new(0));
+        let dir = match &self.root {
+            Some(root) => {
+                let dir = root.join(id.to_string());
+                fs::create_dir_all(&dir).map_err(|e| io_err("create study dir", e))?;
+                let log = JsonlObserver::create(&dir.join("events.jsonl"))
+                    .map_err(|e| io_err("create event log", e))?;
+                study.add_observer(Box::new(log));
+                study.add_observer(Box::new(Sentinel {
+                    refit: Arc::clone(&refit_flag),
+                    events: Arc::clone(&events),
+                }));
+                Some(dir)
+            }
+            None => None,
+        };
+        let stale = {
+            let mut inner = lock_inner(&self.inner);
+            let tick = inner.tick;
+            inner.tick = tick + 1;
+            inner.slots.insert(
+                id,
+                Slot {
+                    state: SlotState::Live(study),
+                    factory,
+                    dir,
+                    last_used: tick,
+                    refit_flag,
+                    events,
+                },
+            );
+            let stale = Self::over_budget_evictions(&mut inner, self.max_live);
+            inner.publish_gauges();
+            stale
+        };
+        drop(stale); // flush evicted logs outside the lock
+        Ok(id)
+    }
+
+    /// Re-register a study persisted by a previous process under the
+    /// same durability root. `factory` must rebuild the same definition
+    /// the study was created with. The state is loaded lazily: the
+    /// first operation pays the snapshot-load + log-replay cost
+    /// (visible as [`Phase::Replay`]).
+    pub fn recover<M, A, O, F>(&self, id: StudyId, factory: F) -> Result<(), StudyError>
+    where
+        F: Fn() -> AskTellServer<M, A, O> + Send + Sync + 'static,
+        M: StateModel + Clone + Send + 'static,
+        A: AcquiFn<M> + Send + 'static,
+        O: Optimizer + Send + 'static,
+    {
+        let root = self
+            .root
+            .as_ref()
+            .ok_or_else(|| StudyError::Io("recover requires a durable manager".into()))?;
+        let dir = root.join(id.to_string());
+        if !dir.join("events.jsonl").exists() && !dir.join("snapshot.txt").exists() {
+            return Err(StudyError::NotFound(id));
+        }
+        let factory: StudyFactory = Arc::new(move || Box::new(factory()) as Box<dyn CoreStudy>);
+        let mut inner = lock_inner(&self.inner);
+        if inner.slots.contains_key(&id) {
+            return Err(StudyError::Io(format!("{id} is already registered")));
+        }
+        inner.next_id = inner.next_id.max(id.0 + 1);
+        let tick = inner.tick;
+        inner.tick = tick + 1;
+        inner.slots.insert(
+            id,
+            Slot {
+                state: SlotState::Evicted,
+                factory,
+                dir: Some(dir),
+                last_used: tick,
+                refit_flag: Arc::new(AtomicBool::new(false)),
+                events: Arc::new(AtomicU64::new(0)),
+            },
+        );
+        inner.publish_gauges();
+        Ok(())
+    }
+
+    /// Next suggested trial point for `id`.
+    pub fn ask(&self, id: StudyId) -> Result<Vec<f64>, StudyError> {
+        self.run_op(id, |s| s.ask())
+    }
+
+    /// `q` diverse trial points for `id`.
+    pub fn ask_batch(&self, id: StudyId, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
+        self.run_op(id, move |s| s.ask_batch(q))
+    }
+
+    /// Report an observation for `id`.
+    pub fn tell(&self, id: StudyId, x: &[f64], y: f64) -> Result<(), StudyError> {
+        let x = x.to_vec();
+        self.run_op(id, move |s| s.tell(&x, y))
+    }
+
+    /// Incumbent best of `id`.
+    pub fn best(&self, id: StudyId) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
+        self.run_op(id, |s| s.best())
+    }
+
+    /// Finish `id` for good: observers flush (the event log records the
+    /// stop), the live state is dropped, and every later operation
+    /// reports [`StudyError::Closed`].
+    pub fn close(&self, id: StudyId) -> Result<(), StudyError> {
+        let mut study = self.checkout(id)?;
+        let (tx, rx) = mpsc::channel();
+        self.pool.execute(move || {
+            study.finish();
+            let _ = tx.send(study);
+        });
+        match rx.recv() {
+            Ok(study) => {
+                {
+                    let mut inner = lock_inner(&self.inner);
+                    if let Some(slot) = inner.slots.get_mut(&id) {
+                        slot.state = SlotState::Closed;
+                    }
+                    inner.publish_gauges();
+                }
+                self.idle.notify_all();
+                drop(study); // flush the log outside the lock
+                Ok(())
+            }
+            Err(_) => Err(self.poison(id)),
+        }
+    }
+
+    /// Drop `id`'s in-memory state now. Durable studies rehydrate
+    /// transparently on the next operation; an ephemeral study is gone
+    /// and later operations report [`StudyError::Evicted`]. Idempotent
+    /// on an already-evicted study.
+    pub fn evict(&self, id: StudyId) -> Result<(), StudyError> {
+        let mut inner = lock_inner(&self.inner);
+        loop {
+            let taken = {
+                let inner_ref = &mut *inner;
+                let slot = inner_ref.slots.get_mut(&id).ok_or(StudyError::NotFound(id))?;
+                match std::mem::replace(&mut slot.state, SlotState::Evicted) {
+                    SlotState::Closed => {
+                        slot.state = SlotState::Closed;
+                        return Err(StudyError::Closed);
+                    }
+                    SlotState::Evicted => return Ok(()),
+                    SlotState::Busy => {
+                        slot.state = SlotState::Busy;
+                        None
+                    }
+                    SlotState::Live(study) => Some(study),
+                }
+            };
+            match taken {
+                None => inner = self.idle.wait(inner).unwrap_or_else(|e| e.into_inner()),
+                Some(study) => {
+                    inner.publish_gauges();
+                    drop(inner);
+                    drop(study); // flush the log outside the lock
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// A cloneable per-study handle implementing [`Study`].
+    pub fn study(self: &Arc<Self>, id: StudyId) -> ManagedStudy {
+        ManagedStudy { mgr: Arc::clone(self), id }
+    }
+
+    /// Check the study out (exclusive), rehydrating an evicted durable
+    /// slot from snapshot + log tail.
+    fn checkout(&self, id: StudyId) -> Result<Box<dyn CoreStudy>, StudyError> {
+        let mut inner = lock_inner(&self.inner);
+        loop {
+            let decision = {
+                let inner_ref = &mut *inner;
+                let tick = inner_ref.tick;
+                let slot = inner_ref.slots.get_mut(&id).ok_or(StudyError::NotFound(id))?;
+                match std::mem::replace(&mut slot.state, SlotState::Busy) {
+                    SlotState::Closed => {
+                        slot.state = SlotState::Closed;
+                        return Err(StudyError::Closed);
+                    }
+                    SlotState::Busy => Checkout::Wait,
+                    SlotState::Evicted => match slot.dir.clone() {
+                        None => {
+                            slot.state = SlotState::Evicted;
+                            return Err(StudyError::Evicted(id));
+                        }
+                        // leave the slot Busy: concurrent callers park on
+                        // the condvar while we rehydrate outside the lock
+                        Some(dir) => Checkout::Rehydrate {
+                            factory: Arc::clone(&slot.factory),
+                            dir,
+                            refit: Arc::clone(&slot.refit_flag),
+                            events: Arc::clone(&slot.events),
+                        },
+                    },
+                    SlotState::Live(study) => {
+                        slot.last_used = tick;
+                        inner_ref.tick = tick + 1;
+                        Checkout::Got(study)
+                    }
+                }
+            };
+            match decision {
+                Checkout::Wait => {
+                    inner = self.idle.wait(inner).unwrap_or_else(|e| e.into_inner());
+                }
+                Checkout::Got(study) => return Ok(study),
+                Checkout::Rehydrate { factory, dir, refit, events } => {
+                    drop(inner);
+                    let rehydrated = rehydrate(&factory, &dir, &refit, &events);
+                    inner = lock_inner(&self.inner);
+                    match rehydrated {
+                        Ok((study, false)) => {
+                            let inner_ref = &mut *inner;
+                            let tick = inner_ref.tick;
+                            inner_ref.tick = tick + 1;
+                            if let Some(slot) = inner_ref.slots.get_mut(&id) {
+                                slot.last_used = tick;
+                            }
+                            inner.publish_gauges();
+                            return Ok(study);
+                        }
+                        Ok((study, true)) => {
+                            // the log ends in `stopped`: the study was
+                            // closed before the crash — keep it closed
+                            if let Some(slot) = inner.slots.get_mut(&id) {
+                                slot.state = SlotState::Closed;
+                            }
+                            inner.publish_gauges();
+                            drop(inner);
+                            self.idle.notify_all();
+                            drop(study);
+                            return Err(StudyError::Closed);
+                        }
+                        Err(e) => {
+                            if let Some(slot) = inner.slots.get_mut(&id) {
+                                slot.state = SlotState::Evicted;
+                            }
+                            drop(inner);
+                            self.idle.notify_all();
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Return a checked-out study, taking the refit-barrier snapshot if
+    /// the operation just refitted, then wake waiters and enforce the
+    /// live-study budget.
+    fn checkin(&self, id: StudyId, study: Box<dyn CoreStudy>) {
+        let plumbing = {
+            let inner = lock_inner(&self.inner);
+            inner.slots.get(&id).map(|slot| {
+                (slot.dir.clone(), Arc::clone(&slot.refit_flag), Arc::clone(&slot.events))
+            })
+        };
+        let Some((dir, refit_flag, events)) = plumbing else { return };
+        // the slot is still Busy: the state is exclusively ours, nothing
+        // can run between the refit that raised the flag and this capture
+        if let Some(dir) = dir {
+            if refit_flag.swap(false, Ordering::Relaxed) {
+                let snapshot = StudySnapshot {
+                    core: study.export_core(),
+                    model: study.capture_model(),
+                    hp_refits: study.hp_refits(),
+                    offset: events.load(Ordering::Relaxed),
+                };
+                // a failed snapshot write is not fatal: the event log
+                // still covers the full history, the next refit re-arms
+                if snapshot.write(&dir).is_err() {
+                    obs::counter_add(Counter::StatWriteFailures, 1);
+                }
+            }
+        }
+        let stale = {
+            let mut inner = lock_inner(&self.inner);
+            if let Some(slot) = inner.slots.get_mut(&id) {
+                slot.state = SlotState::Live(study);
+            }
+            let stale = Self::over_budget_evictions(&mut inner, self.max_live);
+            inner.publish_gauges();
+            stale
+        };
+        self.idle.notify_all();
+        drop(stale); // flush evicted logs outside the lock
+    }
+
+    /// Pop LRU durable live studies until the live count fits the
+    /// budget; the returned boxes must be dropped outside the lock.
+    fn over_budget_evictions(inner: &mut Inner, max_live: usize) -> Vec<Box<dyn CoreStudy>> {
+        let mut dropped = Vec::new();
+        loop {
+            let (live, _) = inner.counts();
+            if live <= max_live {
+                return dropped;
+            }
+            let victim = inner
+                .slots
+                .iter()
+                .filter(|(_, s)| matches!(s.state, SlotState::Live(_)) && s.dir.is_some())
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(id, _)| *id);
+            let Some(victim) = victim else {
+                return dropped; // nothing evictable (ephemeral or busy)
+            };
+            let slot = inner.slots.get_mut(&victim).expect("victim exists");
+            if let SlotState::Live(study) = std::mem::replace(&mut slot.state, SlotState::Evicted)
+            {
+                dropped.push(study);
+            }
+        }
+    }
+
+    /// Run one operation on the pool with the study checked out.
+    fn run_op<R, F>(&self, id: StudyId, f: F) -> Result<R, StudyError>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut dyn CoreStudy) -> R + Send + 'static,
+    {
+        let mut study = self.checkout(id)?;
+        let (tx, rx) = mpsc::channel();
+        self.pool.execute(move || {
+            let r = f(study.as_mut());
+            let _ = tx.send((study, r));
+        });
+        match rx.recv() {
+            Ok((study, r)) => {
+                self.checkin(id, study);
+                Ok(r)
+            }
+            // the job panicked on the pool and the study state is lost
+            Err(_) => Err(self.poison(id)),
+        }
+    }
+
+    /// A pool job lost the study state (panic): close the slot so
+    /// waiters fail fast instead of parking forever.
+    fn poison(&self, id: StudyId) -> StudyError {
+        {
+            let mut inner = lock_inner(&self.inner);
+            if let Some(slot) = inner.slots.get_mut(&id) {
+                slot.state = SlotState::Closed;
+            }
+            inner.publish_gauges();
+        }
+        self.idle.notify_all();
+        StudyError::Io(format!("{id}: operation panicked on the pool; study closed"))
+    }
+}
+
+/// Handle binding a [`StudyManager`] to one [`StudyId`]; the managed
+/// implementation of [`Study`].
+#[derive(Clone)]
+pub struct ManagedStudy {
+    mgr: Arc<StudyManager>,
+    id: StudyId,
+}
+
+impl ManagedStudy {
+    /// The study this handle addresses.
+    pub fn id(&self) -> StudyId {
+        self.id
+    }
+}
+
+impl Study for ManagedStudy {
+    fn ask(&mut self) -> Result<Vec<f64>, StudyError> {
+        self.mgr.ask(self.id)
+    }
+
+    fn ask_batch(&mut self, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
+        self.mgr.ask_batch(self.id, q)
+    }
+
+    fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError> {
+        self.mgr.tell(self.id, x, y)
+    }
+
+    fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
+        self.mgr.best(self.id)
+    }
+
+    fn finish(&mut self) -> Result<(), StudyError> {
+        self.mgr.close(self.id)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Durability: snapshot text format and snapshot + log-tail rehydration.
+// ---------------------------------------------------------------------
+
+/// A refit-barrier checkpoint: the loop bookkeeping, the model state,
+/// the restart-derivation refit counter, and the replay offset (event
+/// log lines already covered by this snapshot).
+struct StudySnapshot {
+    core: CoreState,
+    model: ModelState,
+    hp_refits: u64,
+    offset: u64,
+}
+
+/// Exact `f64` as 16 hex digits of its bit pattern — the snapshot is a
+/// private format, so bit-exactness beats readability.
+fn hex_f64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_hex_f64(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s.trim(), 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad hex float {s:?}: {e}"))
+}
+
+fn parse_hex_point(s: &str) -> Result<Vec<f64>, String> {
+    s.split_whitespace().map(parse_hex_f64).collect()
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64, String> {
+    u64::from_str_radix(s.trim(), 16).map_err(|e| format!("bad hex integer {s:?}: {e}"))
+}
+
+/// `line` must be `"<key> <rest>"`; returns `rest`.
+fn field<'a>(line: Option<&'a str>, key: &str) -> Result<&'a str, String> {
+    let line = line.ok_or_else(|| format!("snapshot truncated before {key:?}"))?;
+    line.strip_prefix(key)
+        .and_then(|r| r.strip_prefix(' '))
+        .ok_or_else(|| format!("expected {key:?} line, got {line:?}"))
+}
+
+fn parse_usize(s: &str) -> Result<usize, String> {
+    s.trim().parse().map_err(|e| format!("bad integer {s:?}: {e}"))
+}
+
+fn parse_u64(s: &str) -> Result<u64, String> {
+    s.trim().parse().map_err(|e| format!("bad integer {s:?}: {e}"))
+}
+
+impl StudySnapshot {
+    fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let c = &self.core;
+        let mut out = String::new();
+        out.push_str("limbo-study v1\n");
+        let _ = writeln!(out, "dim {}", c.dim);
+        let _ = writeln!(out, "offset {}", self.offset);
+        let _ = writeln!(out, "hp_refits {}", self.hp_refits);
+        let _ = writeln!(out, "init_total {}", c.init_total);
+        let _ = writeln!(out, "init_served {}", c.init_served);
+        let _ = writeln!(out, "init_observed {}", c.init_observed);
+        let _ = writeln!(out, "iteration {}", c.iteration);
+        let _ = writeln!(out, "evaluations {}", c.evaluations);
+        let _ = writeln!(out, "finished {}", u8::from(c.finished));
+        match c.next_refit {
+            Some(n) => {
+                let _ = writeln!(out, "next_refit {n}");
+            }
+            None => out.push_str("next_refit none\n"),
+        }
+        let _ = writeln!(out, "rng {:016x} {:016x}", c.rng.0, c.rng.1);
+        match &c.best {
+            Some((x, y)) => {
+                let xs: Vec<String> = x.iter().map(|&v| hex_f64(v)).collect();
+                let _ = writeln!(out, "best {} {}", hex_f64(*y), xs.join(" "));
+            }
+            None => out.push_str("best none\n"),
+        }
+        let _ = writeln!(out, "init_queue {}", c.init_queue.len());
+        for x in &c.init_queue {
+            let xs: Vec<String> = x.iter().map(|&v| hex_f64(v)).collect();
+            out.push_str(&xs.join(" "));
+            out.push('\n');
+        }
+        out.push_str("model\n");
+        out.push_str(&self.model.to_text());
+        out
+    }
+
+    fn from_text(text: &str) -> Result<Self, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty snapshot")?;
+        if header.trim() != "limbo-study v1" {
+            return Err(format!("not a limbo-study snapshot: {header:?}"));
+        }
+        let dim = parse_usize(field(lines.next(), "dim")?)?;
+        let offset = parse_u64(field(lines.next(), "offset")?)?;
+        let hp_refits = parse_u64(field(lines.next(), "hp_refits")?)?;
+        let init_total = parse_usize(field(lines.next(), "init_total")?)?;
+        let init_served = parse_usize(field(lines.next(), "init_served")?)?;
+        let init_observed = parse_usize(field(lines.next(), "init_observed")?)?;
+        let iteration = parse_usize(field(lines.next(), "iteration")?)?;
+        let evaluations = parse_usize(field(lines.next(), "evaluations")?)?;
+        let finished = field(lines.next(), "finished")?.trim() == "1";
+        let next_refit = match field(lines.next(), "next_refit")?.trim() {
+            "none" => None,
+            n => Some(parse_usize(n)?),
+        };
+        let rng_line = field(lines.next(), "rng")?;
+        let mut rng_parts = rng_line.split_whitespace();
+        let rng_state = parse_hex_u64(rng_parts.next().ok_or("rng missing state")?)?;
+        let rng_inc = parse_hex_u64(rng_parts.next().ok_or("rng missing inc")?)?;
+        let best_line = field(lines.next(), "best")?;
+        let best = if best_line.trim() == "none" {
+            None
+        } else {
+            let mut parts = best_line.split_whitespace();
+            let y = parse_hex_f64(parts.next().ok_or("best missing value")?)?;
+            let x: Vec<f64> = parts.map(parse_hex_f64).collect::<Result<_, _>>()?;
+            Some((x, y))
+        };
+        let n_queue = parse_usize(field(lines.next(), "init_queue")?)?;
+        let mut init_queue = Vec::with_capacity(n_queue);
+        for _ in 0..n_queue {
+            let row = lines.next().ok_or("snapshot truncated in init_queue")?;
+            init_queue.push(parse_hex_point(row)?);
+        }
+        let model_marker = lines.next().ok_or("snapshot truncated before model")?;
+        if model_marker.trim() != "model" {
+            return Err(format!("expected \"model\" line, got {model_marker:?}"));
+        }
+        let model_text: String = lines.collect::<Vec<_>>().join("\n");
+        let model = ModelState::from_text(&model_text)?;
+        Ok(Self {
+            core: CoreState {
+                dim,
+                init_queue,
+                init_total,
+                init_served,
+                init_observed,
+                iteration,
+                evaluations,
+                best,
+                next_refit,
+                finished,
+                rng: (rng_state, rng_inc),
+            },
+            model,
+            hp_refits,
+            offset,
+        })
+    }
+
+    /// Atomic write: tmp file + rename, so a crash mid-write leaves the
+    /// previous snapshot intact.
+    fn write(&self, dir: &Path) -> std::io::Result<()> {
+        let _span = obs::span(Phase::Snapshot);
+        let tmp = dir.join("snapshot.tmp");
+        fs::write(&tmp, self.to_text())?;
+        fs::rename(&tmp, dir.join("snapshot.txt"))
+    }
+}
+
+/// Rebuild a study from its durability directory: factory → snapshot
+/// restore (if one exists) → replay of the event-log tail through the
+/// live code path → re-attach the log writer and snapshot sentinel.
+/// Returns `(study, closed)`; `closed` means the log ends in `stopped`.
+fn rehydrate(
+    factory: &StudyFactory,
+    dir: &Path,
+    refit_flag: &Arc<AtomicBool>,
+    events: &Arc<AtomicU64>,
+) -> Result<(Box<dyn CoreStudy>, bool), StudyError> {
+    let _span = obs::span(Phase::Replay);
+    let mut study = factory();
+    let snap_path = dir.join("snapshot.txt");
+    let mut offset = 0usize;
+    if snap_path.exists() {
+        let text = fs::read_to_string(&snap_path).map_err(|e| io_err("read snapshot", e))?;
+        let snapshot = StudySnapshot::from_text(&text).map_err(StudyError::Io)?;
+        study.restore_model(&snapshot.model).map_err(StudyError::Io)?;
+        study.set_hp_refits(snapshot.hp_refits);
+        study.import_core(snapshot.core);
+        offset = snapshot.offset as usize;
+    }
+    let log_path = dir.join("events.jsonl");
+    let log = if log_path.exists() {
+        ReplayEvent::read_log(&log_path).map_err(StudyError::Io)?
+    } else {
+        Vec::new()
+    };
+    if log.len() < offset {
+        return Err(StudyError::Io(format!(
+            "event log has {} events but the snapshot covers {offset} — log truncated?",
+            log.len()
+        )));
+    }
+    // No observers are attached yet: replay-driven proposals, refits and
+    // init-done events are not re-logged, and the file offset stays
+    // aligned with the events counter.
+    let mut closed = false;
+    for event in &log[offset..] {
+        match event {
+            ReplayEvent::Proposal { q: 1, .. } => {
+                let _ = study.ask();
+            }
+            ReplayEvent::Proposal { q, .. } => {
+                let _ = study.ask_batch(*q);
+            }
+            ReplayEvent::Observation { x, y, .. } => study.tell(x, *y),
+            ReplayEvent::InitDone { .. } | ReplayEvent::Refit { .. } => {}
+            ReplayEvent::Stopped { .. } => {
+                study.finish();
+                closed = true;
+            }
+        }
+    }
+    events.store(log.len() as u64, Ordering::Relaxed);
+    refit_flag.store(false, Ordering::Relaxed);
+    if !closed {
+        let log = JsonlObserver::append(&log_path).map_err(|e| io_err("reopen event log", e))?;
+        study.add_observer(Box::new(log));
+        study.add_observer(Box::new(Sentinel {
+            refit: Arc::clone(refit_flag),
+            events: Arc::clone(events),
+        }));
+    }
+    Ok((study, closed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acqui::Ucb;
+    use crate::bayes_opt::BoDef;
+    use crate::kernel::Matern52;
+    use crate::mean::DataMean;
+    use crate::model::Gp;
+    use crate::opt::RandomPoint;
+
+    type TestServer = AskTellServer<Gp<Matern52, DataMean>, Ucb, RandomPoint>;
+
+    fn tiny_factory(seed: u64) -> impl Fn() -> TestServer + Send + Sync {
+        move || BoDef::service(1).seed(seed).inner_opt(RandomPoint::new(16)).build_server()
+    }
+
+    fn pool() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(2))
+    }
+
+    #[test]
+    fn create_ask_tell_best_round_trip() {
+        let mgr = StudyManager::new(pool());
+        let id = mgr.create(tiny_factory(7)).expect("create");
+        for _ in 0..5 {
+            let x = mgr.ask(id).expect("ask");
+            assert_eq!(x.len(), 1);
+            let y = -(x[0] - 0.4).powi(2);
+            mgr.tell(id, &x, y).expect("tell");
+        }
+        let (_, bv) = mgr.best(id).expect("best").expect("data");
+        assert!(bv <= 0.0);
+    }
+
+    #[test]
+    fn unknown_id_reports_not_found() {
+        let mgr = StudyManager::new(pool());
+        let bogus = StudyId::from_u64(999);
+        assert_eq!(mgr.ask(bogus), Err(StudyError::NotFound(bogus)));
+    }
+
+    #[test]
+    fn closed_study_rejects_operations() {
+        let mgr = StudyManager::new(pool());
+        let id = mgr.create(tiny_factory(3)).expect("create");
+        let x = mgr.ask(id).expect("ask");
+        mgr.tell(id, &x, 1.0).expect("tell");
+        mgr.close(id).expect("close");
+        assert_eq!(mgr.ask(id), Err(StudyError::Closed));
+        assert_eq!(mgr.close(id), Err(StudyError::Closed));
+    }
+
+    #[test]
+    fn ephemeral_eviction_is_lossy_and_typed() {
+        let mgr = StudyManager::new(pool());
+        let id = mgr.create(tiny_factory(5)).expect("create");
+        mgr.ask(id).expect("ask");
+        mgr.evict(id).expect("evict");
+        assert_eq!(mgr.ask(id), Err(StudyError::Evicted(id)));
+        mgr.evict(id).expect("evict is idempotent");
+    }
+
+    #[test]
+    fn durable_eviction_rehydrates_transparently() {
+        let dir = std::env::temp_dir().join("limbo_mgr_evict_rehydrate");
+        let _ = fs::remove_dir_all(&dir);
+        let mgr = StudyManager::durable(pool(), &dir).expect("durable");
+        let id = mgr.create(tiny_factory(11)).expect("create");
+        let mut trace = Vec::new();
+        for _ in 0..4 {
+            let x = mgr.ask(id).expect("ask");
+            let y = -(x[0] - 0.5).powi(2);
+            mgr.tell(id, &x, y).expect("tell");
+            trace.push((x, y));
+        }
+        mgr.evict(id).expect("evict");
+        assert_eq!(mgr.counts(), (0, 1));
+        // the next op rehydrates (replaying the log) and continues
+        let x = mgr.ask(id).expect("ask after evict");
+        assert_eq!(mgr.counts(), (1, 0));
+        // parity: an isolated run of the same definition takes the same
+        // trajectory straight through the eviction boundary
+        let mut iso = tiny_factory(11)();
+        for (tx, ty) in &trace {
+            let ix = iso.core.propose();
+            assert_eq!(&ix, tx, "pre-eviction trace must match");
+            iso.core.observe(&ix, *ty);
+        }
+        let ix = iso.core.propose();
+        assert_eq!(
+            ix.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "post-rehydration proposal must be bit-identical"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_budget() {
+        let dir = std::env::temp_dir().join("limbo_mgr_lru");
+        let _ = fs::remove_dir_all(&dir);
+        let mgr = StudyManager::durable(pool(), &dir).expect("durable").with_max_live(2);
+        let ids: Vec<StudyId> =
+            (0..4).map(|i| mgr.create(tiny_factory(20 + i)).expect("create")).collect();
+        let (live, evicted) = mgr.counts();
+        assert_eq!(live, 2, "budget enforced at create");
+        assert_eq!(evicted, 2);
+        // every study still serves — evicted ones rehydrate on demand
+        for &id in &ids {
+            mgr.ask(id).expect("study serves after LRU churn");
+        }
+        let (live, _) = mgr.counts();
+        assert_eq!(live, 2, "budget enforced after rehydration churn");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_text_round_trips() {
+        let core = CoreState {
+            dim: 2,
+            init_queue: vec![vec![0.1, 0.9], vec![std::f64::consts::PI, 1.0 / 3.0]],
+            init_total: 4,
+            init_served: 2,
+            init_observed: 2,
+            iteration: 7,
+            evaluations: 9,
+            best: Some((vec![0.25, 1e-17], -3.5e-9)),
+            next_refit: Some(16),
+            finished: false,
+            rng: (0xDEAD_BEEF_0123_4567, 0x89AB_CDEF_0000_0001),
+        };
+        let mut gp = Gp::new(Matern52::new(2), DataMean::default(), 1e-3);
+        crate::model::Model::fit(&mut gp, &[vec![0.1, 0.2], vec![0.8, 0.7]], &[1.0, -0.5]);
+        let snapshot = StudySnapshot {
+            core: core.clone(),
+            model: StateModel::capture_state(&gp),
+            hp_refits: 3,
+            offset: 41,
+        };
+        let parsed = StudySnapshot::from_text(&snapshot.to_text()).expect("parse");
+        assert_eq!(parsed.core, core);
+        assert_eq!(parsed.hp_refits, 3);
+        assert_eq!(parsed.offset, 41);
+        assert_eq!(parsed.model.n_samples(), 2);
+    }
+}

@@ -18,6 +18,11 @@
 //!   backend, now a thin adapter over the generic
 //!   [`crate::opt::PopulationSearch`] + `eval_many` machinery (still ~64
 //!   candidates per artifact execution);
+//! * [`manager`] — the multi-study registry: thousands of concurrent
+//!   studies multiplexed over one shared [`crate::pool::ThreadPool`]
+//!   behind the typed [`manager::StudyId`] / [`manager::Study`] surface,
+//!   each durable across restarts via event sourcing + refit-barrier
+//!   snapshots and evictable under a live-study budget;
 //! * [`config`] — tiny key=value run-configuration parser for the CLI;
 //! * [`multiobj`] — ParEGO-style scalarized multi-objective support (the
 //!   paper notes "Limbo can support multi-objective optimization").
@@ -26,10 +31,14 @@ pub mod batched_opt;
 pub mod config;
 pub mod experiment;
 pub mod fig1;
+pub mod manager;
 pub mod multiobj;
 pub mod service;
 pub mod xla_model;
 
 pub use experiment::{ExperimentRunner, ExperimentRow, RunOutcome};
-pub use service::{AskTellServer, BatchStrategy, DefaultAskTellServer, ServerHandle};
+pub use manager::{ManagedStudy, Study, StudyError, StudyId, StudyManager};
+pub use service::{
+    AskTellServer, BatchStrategy, DefaultAskTellServer, DefaultDenseServer, ServerHandle,
+};
 pub use xla_model::XlaGpModel;

@@ -31,8 +31,10 @@ use crate::acqui::{AcquiFn, Ucb};
 use crate::bayes_opt::core::{BoCore, Domain, Observer, RefitSchedule};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
-use crate::model::{AdaptiveModel, Model};
+use crate::model::{AdaptiveModel, Gp, Model};
 use crate::opt::{Chained, NelderMead, Optimizer, ParallelRepeater, RandomPoint};
+
+use super::manager::{Study, StudyError};
 
 pub use crate::bayes_opt::core::BatchStrategy;
 
@@ -70,18 +72,33 @@ pub type DefaultAskTellServer = AskTellServer<
     ParallelRepeater<Chained<RandomPoint, NelderMead>>,
 >;
 
+/// The dense service configuration —
+/// `BoDef::service(dim).build_server()` returns this. The named alias
+/// keeps [`crate::coordinator::StudyManager`] factory signatures
+/// writable without spelling out the optimizer stack.
+pub type DefaultDenseServer = AskTellServer<
+    Gp<Matern52, DataMean>,
+    Ucb,
+    ParallelRepeater<Chained<RandomPoint, NelderMead>>,
+>;
+
 impl<M, A, O> AskTellServer<M, A, O>
 where
     M: Model + 'static,
     A: AcquiFn<M> + 'static,
     O: Optimizer + 'static,
 {
-    /// Compose a server. A model that already has data (`fit` /
-    /// deserialized state) seeds the incumbent: without this, the first
-    /// `ask` ran EI/UCB against a `-inf` incumbent and
-    /// [`best`](Self::best) lied `None` until the first `tell`.
-    pub fn new(model: M, acquisition: A, inner_opt: O, dim: usize, seed: u64) -> Self {
-        Self { core: BoCore::new(model, acquisition, inner_opt, dim, seed) }
+    /// Wrap an assembled [`BoCore`] as a server. This is the escape
+    /// hatch for configurations [`crate::bayes_opt::BoDef`] does not
+    /// express (e.g. a hand-built [`AdaptiveModel`] with custom sparse
+    /// thresholds, or a pre-fitted model); everything else should go
+    /// through the definition builder —
+    /// `BoDef::service(dim).build_server()` — which validates bounds
+    /// and seeds the initial design. [`BoCore::new`] seeds the
+    /// incumbent from a model that already has data, so a server around
+    /// a pre-fitted model never lies `best() == None`.
+    pub fn from_core(core: BoCore<M, A, O>) -> Self {
+        Self { core }
     }
 
     /// Select the q-point proposal strategy for
@@ -191,6 +208,38 @@ where
     }
 }
 
+/// The inline server *is* a [`Study`]: infallible operations wrapped in
+/// `Ok`, so generic driver code runs unchanged against the inline,
+/// threaded and managed deployment modes.
+impl<M, A, O> Study for AskTellServer<M, A, O>
+where
+    M: Model + Clone + 'static,
+    A: AcquiFn<M> + 'static,
+    O: Optimizer + 'static,
+{
+    fn ask(&mut self) -> Result<Vec<f64>, StudyError> {
+        Ok(self.core.propose())
+    }
+
+    fn ask_batch(&mut self, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
+        Ok(self.core.propose_batch(q))
+    }
+
+    fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError> {
+        self.core.observe(x, y);
+        Ok(())
+    }
+
+    fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
+        Ok(self.core.best())
+    }
+
+    fn finish(&mut self) -> Result<(), StudyError> {
+        self.core.finish();
+        Ok(())
+    }
+}
+
 /// Client handle to a spawned [`AskTellServer`].
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
@@ -198,34 +247,85 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Request the next trial point (blocks for the reply).
+    /// Request the next trial point (blocks for the reply). Panics if
+    /// the server is gone; see [`try_ask`](Self::try_ask).
     pub fn ask(&self) -> Vec<f64> {
+        self.try_ask().expect("server alive")
+    }
+
+    /// Fallible [`ask`](Self::ask): [`StudyError::Closed`] once the
+    /// server thread has shut down.
+    pub fn try_ask(&self) -> Result<Vec<f64>, StudyError> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Request::Ask(tx)).expect("server alive");
-        rx.recv().expect("server replied")
+        self.tx.send(Request::Ask(tx)).map_err(|_| StudyError::Closed)?;
+        rx.recv().map_err(|_| StudyError::Closed)
     }
 
     /// Request `q` diverse trial points for parallel evaluation (blocks
     /// for the reply). The proposal strategy is server-side
     /// configuration: select constant liar vs joint-posterior qEI with
     /// [`AskTellServer::with_batch_strategy`] *before*
-    /// [`AskTellServer::spawn`].
+    /// [`AskTellServer::spawn`]. Panics if the server is gone; see
+    /// [`try_ask_batch`](Self::try_ask_batch).
     pub fn ask_batch(&self, q: usize) -> Vec<Vec<f64>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Request::AskBatch(q, tx)).expect("server alive");
-        rx.recv().expect("server replied")
+        self.try_ask_batch(q).expect("server alive")
     }
 
-    /// Report an observation (fire and forget).
+    /// Fallible [`ask_batch`](Self::ask_batch).
+    pub fn try_ask_batch(&self, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Request::AskBatch(q, tx)).map_err(|_| StudyError::Closed)?;
+        rx.recv().map_err(|_| StudyError::Closed)
+    }
+
+    /// Report an observation (fire and forget). Panics if the server is
+    /// gone; see [`try_tell`](Self::try_tell).
     pub fn tell(&self, x: Vec<f64>, y: f64) {
-        self.tx.send(Request::Tell(x, y)).expect("server alive");
+        self.try_tell(x, y).expect("server alive")
     }
 
-    /// Incumbent best.
+    /// Fallible [`tell`](Self::tell).
+    pub fn try_tell(&self, x: Vec<f64>, y: f64) -> Result<(), StudyError> {
+        self.tx.send(Request::Tell(x, y)).map_err(|_| StudyError::Closed)
+    }
+
+    /// Incumbent best. Panics if the server is gone; see
+    /// [`try_best`](Self::try_best).
     pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.try_best().expect("server alive")
+    }
+
+    /// Fallible [`best`](Self::best).
+    pub fn try_best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Request::Best(tx)).expect("server alive");
-        rx.recv().expect("server replied")
+        self.tx.send(Request::Best(tx)).map_err(|_| StudyError::Closed)?;
+        rx.recv().map_err(|_| StudyError::Closed)
+    }
+}
+
+/// The threaded handle as a [`Study`]: operations after shutdown report
+/// [`StudyError::Closed`]. `finish` shuts the server thread down (the
+/// exiting thread flushes observers); the eventual [`Drop`] join is a
+/// harmless no-op afterwards.
+impl Study for ServerHandle {
+    fn ask(&mut self) -> Result<Vec<f64>, StudyError> {
+        self.try_ask()
+    }
+
+    fn ask_batch(&mut self, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
+        self.try_ask_batch(q)
+    }
+
+    fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError> {
+        self.try_tell(x.to_vec(), y)
+    }
+
+    fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
+        self.try_best()
+    }
+
+    fn finish(&mut self) -> Result<(), StudyError> {
+        self.tx.send(Request::Shutdown).map_err(|_| StudyError::Closed)
     }
 }
 
@@ -253,13 +353,10 @@ mod tests {
         Ucb,
         crate::opt::ParallelRepeater<crate::opt::Chained<RandomPoint, NelderMead>>,
     > {
-        AskTellServer::new(
-            Gp::new(Matern52::new(1), DataMean::default(), 1e-3),
-            Ucb::default(),
-            RandomPoint::new(64).then(NelderMead::default()).restarts(2, 2),
-            1,
-            9,
-        )
+        BoDef::service(1)
+            .seed(9)
+            .inner_opt(RandomPoint::new(64).then(NelderMead::default()).restarts(2, 2))
+            .build_server()
     }
 
     #[test]
@@ -333,7 +430,8 @@ mod tests {
         // first tell
         let mut gp = Gp::new(Matern52::new(1), DataMean::default(), 1e-3);
         gp.fit(&[vec![0.1], vec![0.6], vec![0.9]], &[-5.0, -2.0, -4.0]);
-        let mut srv = AskTellServer::new(gp, Ucb::default(), RandomPoint::new(32), 1, 3);
+        let mut srv =
+            AskTellServer::from_core(BoCore::new(gp, Ucb::default(), RandomPoint::new(32), 1, 3));
         let (bx, bv) = srv.best().expect("incumbent seeded from the model");
         assert_eq!(bx, vec![0.6]);
         assert_eq!(bv, -2.0);
@@ -359,8 +457,9 @@ mod tests {
         let ys: Vec<f64> = xs.iter().map(|x| (7.0 * x[0]).sin()).collect();
         let mut gp = Gp::new(Matern52::new(1), DataMean::default(), 0.05);
         gp.fit(&xs, &ys);
-        let mut srv = AskTellServer::new(gp, Ucb::default(), RandomPoint::new(16), 1, 13)
-            .with_refit(RefitSchedule::Doubling { first: 16 });
+        let mut srv =
+            AskTellServer::from_core(BoCore::new(gp, Ucb::default(), RandomPoint::new(16), 1, 13))
+                .with_refit(RefitSchedule::Doubling { first: 16 });
         srv.core.model.hp_opt.config.restarts = 1;
         srv.core.model.hp_opt.config.iterations = 3;
         // a 4-point burst (one ask_batch round's worth of tells)
@@ -410,14 +509,12 @@ mod tests {
     #[test]
     fn hp_refit_schedule_fires_on_doubling_counts() {
         let mut rng = crate::rng::Pcg64::seed(31);
-        let mut srv = AskTellServer::new(
-            Gp::new(Matern52::new(1), DataMean::default(), 0.05),
-            Ucb::default(),
-            RandomPoint::new(32),
-            1,
-            7,
-        )
-        .with_refit(RefitSchedule::Doubling { first: 8 });
+        let mut srv = BoDef::service(1)
+            .noise(0.05)
+            .seed(7)
+            .inner_opt(RandomPoint::new(32))
+            .build_server()
+            .with_refit(RefitSchedule::Doubling { first: 8 });
         srv.core.model.hp_opt.config.restarts = 1;
         srv.core.model.hp_opt.config.iterations = 10;
         let start_hp = srv.core.model.hp_vector();

@@ -98,6 +98,45 @@
 //! optimizer run). `block` and `small` pick different — equally valid —
 //! summation orders and are pinned to the scalar references at
 //! `<= 1e-12` by `tests/blocked_la.rs`.
+//!
+//! # Running as a service
+//!
+//! One optimization is a [`coordinator::AskTellServer`]; a *fleet* of
+//! them is a [`coordinator::StudyManager`] — the registry that
+//! multiplexes thousands of concurrent studies over one shared [`pool`]
+//! and survives restarts:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use limbo::coordinator::StudyManager;
+//! use limbo::pool::ThreadPool;
+//! use limbo::prelude::*;
+//!
+//! let pool = Arc::new(ThreadPool::new(4));
+//! let mgr = StudyManager::durable(pool, "/var/lib/studies")
+//!     .expect("durability root")
+//!     .with_max_live(256); // LRU-evict cold studies past the budget
+//! let id = mgr.create(|| BoDef::service(2).seed(7).build_server())?;
+//! let x = mgr.ask(id)?; // typed errors: NotFound / Evicted / Closed / Io
+//! mgr.tell(id, &x, -(x[0] * x[0] + x[1]))?;
+//! # Ok::<(), limbo::coordinator::StudyError>(())
+//! ```
+//!
+//! Studies are addressed by the opaque [`coordinator::StudyId`] and every
+//! operation returns a typed [`coordinator::StudyError`] — no stringly
+//! ids, no panicking surface. Durability is event sourcing: each study
+//! appends its [`bayes_opt::BoEvent`]s to a JSONL log
+//! (17-significant-digit floats) and checkpoints at *refit barriers*,
+//! the moments where model state is reproducible bit-for-bit; recovery
+//! ([`coordinator::StudyManager::recover`]) replays the log tail through
+//! the live code path, so a rehydrated study continues the **exact**
+//! trace of the lost one (`tests/study_manager.rs` proves byte-identical
+//! event logs across a kill). The [`coordinator::Study`] trait is the
+//! common ask/tell vocabulary across all three deployment modes —
+//! inline server, spawned [`coordinator::ServerHandle`], managed
+//! [`coordinator::ManagedStudy`] — so driver code is generic over where
+//! the study runs. `benches/manager_load.rs` tracks multiplexing
+//! throughput and tail ask latency in CI.
 
 pub mod acqui;
 pub mod baseline;
@@ -126,20 +165,26 @@ pub mod prelude {
         Pi, QEi, Ucb,
     };
     pub use crate::bayes_opt::{
-        BOptimizer, BatchStrategy, Best, BoCore, BoDef, BoEvent, Domain, Evaluator, FnEval,
-        Observer, RefitSchedule,
+        BOptimizer, BatchStrategy, Best, BoCore, BoDef, BoError, BoEvent, CoreState, Domain,
+        Evaluator, FnEval, Observer, RefitSchedule,
     };
     pub use crate::benchfns::TestFunction;
-    pub use crate::coordinator::{AskTellServer, DefaultAskTellServer, ServerHandle};
+    pub use crate::coordinator::{
+        AskTellServer, DefaultAskTellServer, DefaultDenseServer, ManagedStudy, ServerHandle,
+        Study, StudyError, StudyId, StudyManager,
+    };
     pub use crate::init::{Initializer, Lhs, NoInit, RandomSampling};
     pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
     pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
-    pub use crate::model::{gp::Gp, AdaptiveModel, GpState, Model, SgpConfig, SgpState, SparseGp};
+    pub use crate::model::{
+        gp::Gp, AdaptiveModel, GpState, Model, ModelState, SgpConfig, SgpState, SparseGp,
+        StateModel,
+    };
     pub use crate::opt::{
         Cmaes, Direct, NelderMead, Objective, Optimizer, OptimizerExt, PopulationSearch,
         RandomPoint,
     };
     pub use crate::rng::Pcg64;
-    pub use crate::stat::{JsonlObserver, MetricsObserver, RunLogger, TraceHandle};
+    pub use crate::stat::{JsonlObserver, MetricsObserver, ReplayEvent, RunLogger, TraceHandle};
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
 }

@@ -19,11 +19,7 @@ use limbo::coordinator::config::Config;
 use limbo::coordinator::experiment::{print_table, speedups, ExperimentRunner};
 use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
 use limbo::coordinator::xla_model::XlaGpModel;
-use limbo::coordinator::AskTellServer;
 use limbo::init::Lhs;
-use limbo::kernel::Matern52;
-use limbo::mean::DataMean;
-use limbo::model::gp::Gp;
 use limbo::opt::{Direct, NelderMead, OptimizerExt, RandomPoint};
 use limbo::runtime::{find_artifact_dir, RtClient, XlaGp};
 use limbo::stat::{MetricsObserver, RunLogger};
@@ -198,14 +194,10 @@ fn cmd_fig1(cfg: &Config) {
 fn cmd_serve(cfg: &Config) {
     let dim = cfg.get_usize("dim", 2);
     let seed = cfg.get_usize("seed", 1) as u64;
-    let server = AskTellServer::new(
-        Gp::new(Matern52::new(dim), DataMean::default(), 1e-3),
-        limbo::acqui::Ucb::default(),
-        RandomPoint::new(256).then(NelderMead::default()).restarts(4, 2),
-        dim,
-        seed,
-    );
-    let handle = server.spawn();
+    let handle = BoDef::service(dim)
+        .seed(seed)
+        .inner_opt(RandomPoint::new(256).then(NelderMead::default()).restarts(4, 2))
+        .spawn_server();
     eprintln!("ask/tell server on stdin (dim={dim}): ask | tell <y> | best | quit");
     let stdin = std::io::stdin();
     let mut last_x: Option<Vec<f64>> = None;

@@ -106,6 +106,14 @@ impl KernelLFOpt {
         self.refits
     }
 
+    /// Restore the refit counter from a checkpoint. The counter feeds
+    /// [`restart_seed`], so a rehydrated study must carry it over for its
+    /// next refit to draw the same perturbations the uninterrupted run
+    /// would have drawn.
+    pub fn set_refits(&mut self, refits: u64) {
+        self.refits = refits;
+    }
+
     /// Maximize the model's LML in place. Restarts run in parallel on
     /// clones of the model (each a full rprop trajectory); the best of
     /// all restarts — never worse than the starting point — is applied.

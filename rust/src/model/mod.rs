@@ -14,7 +14,7 @@ pub mod serde;
 pub mod sgp;
 
 pub use gp::Gp;
-pub use serde::{GpState, SgpState};
+pub use serde::{GpState, ModelState, SgpState, StateModel};
 pub use hp_opt::{HpOptConfig, KernelLFOpt, LmlModel};
 pub use sgp::{AdaptiveModel, SgpConfig, SparseGp};
 

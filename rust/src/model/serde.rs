@@ -306,6 +306,115 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     }
 }
 
+/// A captured model state of either representation — what a study
+/// checkpoint stores without knowing whether the surrogate had migrated
+/// to the sparse form yet. The text round-trip dispatches on the header
+/// line (`limbo-gp v1` vs `limbo-sgp v1`), so a snapshot file is
+/// self-describing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelState {
+    /// Dense-GP state.
+    Dense(GpState),
+    /// Sparse-GP state (includes the inducing set).
+    Sparse(SgpState),
+}
+
+impl ModelState {
+    /// Serialize to the text format of the captured representation.
+    pub fn to_text(&self) -> String {
+        match self {
+            ModelState::Dense(s) => s.to_text(),
+            ModelState::Sparse(s) => s.to_text(),
+        }
+    }
+
+    /// Parse either text format, dispatching on the header line.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let header = text
+            .lines()
+            .map(str::trim)
+            .find(|l| !l.is_empty() && !l.starts_with('#'))
+            .ok_or("empty file")?;
+        match header {
+            "limbo-gp v1" => GpState::from_text(text).map(ModelState::Dense),
+            "limbo-sgp v1" => SgpState::from_text(text).map(ModelState::Sparse),
+            other => Err(format!("bad header {other:?}")),
+        }
+    }
+
+    /// Number of training samples in the captured state.
+    pub fn n_samples(&self) -> usize {
+        match self {
+            ModelState::Dense(s) => s.ys.len(),
+            ModelState::Sparse(s) => s.ys.len(),
+        }
+    }
+}
+
+/// A surrogate whose full state (data + hyper-parameters + any inducing
+/// structure) can be captured into a [`ModelState`] and restored from
+/// one — the model-side contract of study checkpointing.
+///
+/// Capture is a pure read. On the dense path, restoring a state that was
+/// captured right after a full refit reproduces the live factors
+/// **bit-exactly** (`restore` re-runs the same deterministic fit); the
+/// sparse path is exact up to factorization round-off (~1e-8).
+pub trait StateModel: Model {
+    /// Capture the full model state (pure read).
+    fn capture_state(&self) -> ModelState;
+
+    /// Restore a captured state (data is refit in place).
+    fn restore_state(&mut self, state: &ModelState) -> Result<(), String>;
+
+    /// The ML-II refit counter (feeds the restart-seed stream).
+    fn hp_refits(&self) -> u64;
+
+    /// Restore the ML-II refit counter from a checkpoint.
+    fn set_hp_refits(&mut self, refits: u64);
+}
+
+impl<K: Kernel, M: MeanFn> StateModel for Gp<K, M> {
+    fn capture_state(&self) -> ModelState {
+        ModelState::Dense(GpState::capture(self))
+    }
+
+    fn restore_state(&mut self, state: &ModelState) -> Result<(), String> {
+        match state {
+            ModelState::Dense(s) => s.restore(self),
+            ModelState::Sparse(_) => Err("cannot restore sparse state into a dense GP".into()),
+        }
+    }
+
+    fn hp_refits(&self) -> u64 {
+        self.hp_opt.refits()
+    }
+
+    fn set_hp_refits(&mut self, refits: u64) {
+        self.hp_opt.set_refits(refits);
+    }
+}
+
+impl<K: Kernel, M: MeanFn> StateModel for SparseGp<K, M> {
+    fn capture_state(&self) -> ModelState {
+        ModelState::Sparse(SgpState::capture(self))
+    }
+
+    fn restore_state(&mut self, state: &ModelState) -> Result<(), String> {
+        match state {
+            ModelState::Sparse(s) => s.restore(self),
+            ModelState::Dense(_) => Err("cannot restore dense state into a sparse GP".into()),
+        }
+    }
+
+    fn hp_refits(&self) -> u64 {
+        self.hp_opt.refits()
+    }
+
+    fn set_hp_refits(&mut self, refits: u64) {
+        self.hp_opt.set_refits(refits);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -69,6 +69,7 @@ pub use inducing::{InducingSet, InducingUpdate};
 use crate::kernel::Kernel;
 use crate::mean::MeanFn;
 use crate::model::gp::Gp;
+use crate::model::serde::{ModelState, StateModel};
 use crate::model::Model;
 
 /// Default observation count at which [`AdaptiveModel`] goes sparse.
@@ -147,6 +148,29 @@ impl<K: Kernel, M: MeanFn> AdaptiveModel<K, M> {
         match &self.inner {
             AdaptiveInner::Dense(g) => Some(g),
             AdaptiveInner::Sparse(_) => None,
+        }
+    }
+
+    /// Restore a captured state, switching representation if the capture
+    /// happened on the other side of the dense→sparse migration: a
+    /// freshly built adaptive model starts dense, so restoring a sparse
+    /// checkpoint first migrates the (empty) dense model to carry the
+    /// kernel/mean/config across, then applies the sparse state.
+    fn restore_adaptive(&mut self, state: &ModelState) -> Result<(), String> {
+        if matches!(state, ModelState::Sparse(_)) && !self.is_sparse() {
+            let sparse = match &self.inner {
+                AdaptiveInner::Dense(gp) => SparseGp::from_dense(gp, self.config.clone()),
+                AdaptiveInner::Sparse(_) => unreachable!(),
+            };
+            self.inner = AdaptiveInner::Sparse(sparse);
+        }
+        match (&mut self.inner, state) {
+            (AdaptiveInner::Dense(gp), ModelState::Dense(s)) => s.restore(gp),
+            (AdaptiveInner::Sparse(sgp), ModelState::Sparse(s)) => s.restore(sgp),
+            (AdaptiveInner::Sparse(_), ModelState::Dense(_)) => {
+                Err("cannot restore dense state into a migrated sparse model".into())
+            }
+            (AdaptiveInner::Dense(_), ModelState::Sparse(_)) => unreachable!(),
         }
     }
 
@@ -233,6 +257,33 @@ impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
         match &mut self.inner {
             AdaptiveInner::Dense(gp) => gp.optimize_hyperparams(),
             AdaptiveInner::Sparse(sgp) => sgp.optimize_hyperparams(),
+        }
+    }
+}
+
+impl<K: Kernel, M: MeanFn> StateModel for AdaptiveModel<K, M> {
+    fn capture_state(&self) -> ModelState {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.capture_state(),
+            AdaptiveInner::Sparse(sgp) => sgp.capture_state(),
+        }
+    }
+
+    fn restore_state(&mut self, state: &ModelState) -> Result<(), String> {
+        self.restore_adaptive(state)
+    }
+
+    fn hp_refits(&self) -> u64 {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.hp_opt.refits(),
+            AdaptiveInner::Sparse(sgp) => sgp.hp_opt.refits(),
+        }
+    }
+
+    fn set_hp_refits(&mut self, refits: u64) {
+        match &mut self.inner {
+            AdaptiveInner::Dense(gp) => gp.hp_opt.set_refits(refits),
+            AdaptiveInner::Sparse(sgp) => sgp.hp_opt.set_refits(refits),
         }
     }
 }

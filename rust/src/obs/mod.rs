@@ -116,11 +116,15 @@ pub enum Phase {
     Tell,
     /// service: one scheduled hyper-refit inside `tell`.
     Refit,
+    /// manager: capturing a study checkpoint (core + model state).
+    Snapshot,
+    /// manager: rehydrating a study (snapshot load + event-log replay).
+    Replay,
 }
 
 impl Phase {
     /// Every phase, in declaration order (indexes the shard arrays).
-    pub const ALL: [Phase; 19] = [
+    pub const ALL: [Phase; 21] = [
         Phase::CholFactor,
         Phase::CholSolve,
         Phase::MatMul,
@@ -140,6 +144,8 @@ impl Phase {
         Phase::Ask,
         Phase::Tell,
         Phase::Refit,
+        Phase::Snapshot,
+        Phase::Replay,
     ];
 
     /// Number of phases.
@@ -168,6 +174,8 @@ impl Phase {
             Phase::Ask => "ask",
             Phase::Tell => "tell",
             Phase::Refit => "refit",
+            Phase::Snapshot => "snapshot",
+            Phase::Replay => "replay",
         }
     }
 }
@@ -230,11 +238,16 @@ pub enum Gauge {
     ModelSamples,
     /// Inducing points of the sparse model (0 while dense).
     InducingPoints,
+    /// Studies currently resident in a `StudyManager` registry.
+    LiveStudies,
+    /// Studies evicted to disk (rehydratable) in a `StudyManager`.
+    EvictedStudies,
 }
 
 impl Gauge {
     /// Every gauge, in declaration order.
-    pub const ALL: [Gauge; 2] = [Gauge::ModelSamples, Gauge::InducingPoints];
+    pub const ALL: [Gauge; 4] =
+        [Gauge::ModelSamples, Gauge::InducingPoints, Gauge::LiveStudies, Gauge::EvictedStudies];
 
     /// Number of gauges.
     pub const COUNT: usize = Gauge::ALL.len();
@@ -244,6 +257,8 @@ impl Gauge {
         match self {
             Gauge::ModelSamples => "model_samples",
             Gauge::InducingPoints => "inducing_points",
+            Gauge::LiveStudies => "live_studies",
+            Gauge::EvictedStudies => "evicted_studies",
         }
     }
 }

@@ -216,6 +216,18 @@ impl JsonlObserver {
         Ok(Self { out: BufWriter::new(File::create(path)?) })
     }
 
+    /// Open the event log at `path` in append mode — the continuation
+    /// writer for a rehydrated study: replayed history stays in the
+    /// file, new events extend it, and the log remains one contiguous
+    /// record across crash/recover cycles.
+    pub fn append(path: &Path) -> std::io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::OpenOptions::new().append(true).create(true).open(path)?;
+        Ok(Self { out: BufWriter::new(file) })
+    }
+
     fn flush_counting(&mut self) {
         if self.out.flush().is_err() {
             obs::counter_add(Counter::StatWriteFailures, 1);
@@ -224,10 +236,12 @@ impl JsonlObserver {
 
     /// JSON-safe float: non-finite values (a `-inf` incumbent before
     /// any data, a NaN objective) become `null` — `inf`/`NaN` tokens
-    /// would make the whole line unparseable.
+    /// would make the whole line unparseable. 17 significant digits
+    /// round-trip every finite `f64` exactly, so a replayed event log
+    /// reproduces the run bit-for-bit.
     fn fmt_f64(v: f64) -> String {
         if v.is_finite() {
-            format!("{v:.10e}")
+            format!("{v:.17e}")
         } else {
             "null".to_string()
         }
@@ -285,6 +299,185 @@ impl Observer for JsonlObserver {
         if r.is_err() {
             obs::counter_add(Counter::StatWriteFailures, 1);
         }
+    }
+}
+
+/// An owned, parsed [`BoEvent`] read back from a [`JsonlObserver`] log —
+/// the replay side of study event sourcing. `null` floats (non-finite
+/// values at write time) come back as NaN.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplayEvent {
+    /// `{"event":"init_done",...}`
+    InitDone {
+        /// Observations in the model at that point.
+        n_samples: usize,
+    },
+    /// `{"event":"proposal",...}`
+    Proposal {
+        /// Model-guided iteration counter at proposal time.
+        iteration: usize,
+        /// Number of points proposed.
+        q: usize,
+        /// The proposed points.
+        xs: Vec<Vec<f64>>,
+    },
+    /// `{"event":"observation",...}`
+    Observation {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: Vec<f64>,
+        /// Observed value.
+        y: f64,
+        /// Incumbent best after this observation.
+        best: f64,
+    },
+    /// `{"event":"refit",...}`
+    Refit {
+        /// Observations in the model at refit time.
+        n_samples: usize,
+    },
+    /// `{"event":"stopped",...}`
+    Stopped {
+        /// Problem dimensionality.
+        dim: usize,
+        /// Total observations.
+        evaluations: usize,
+        /// Final incumbent best.
+        best: f64,
+    },
+}
+
+/// Raw text of JSON field `key` in `line` (a single flat object as
+/// written by [`JsonlObserver`]): everything after `"key":` up to the
+/// value's end — bracket-matched for arrays, comma/brace-delimited for
+/// scalars.
+fn json_field<'a>(line: &'a str, key: &str) -> Result<&'a str, String> {
+    let needle = format!("\"{key}\":");
+    let start = line.find(&needle).ok_or_else(|| format!("missing field {key:?} in {line:?}"))?
+        + needle.len();
+    let rest = &line[start..];
+    if rest.starts_with('[') {
+        let mut depth = 0usize;
+        for (i, c) in rest.char_indices() {
+            match c {
+                '[' => depth += 1,
+                ']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(&rest[..=i]);
+                    }
+                }
+                _ => {}
+            }
+        }
+        Err(format!("unterminated array for {key:?} in {line:?}"))
+    } else if let Some(s) = rest.strip_prefix('"') {
+        let end = s.find('"').ok_or_else(|| format!("unterminated string for {key:?}"))?;
+        Ok(&s[..end])
+    } else {
+        let end = rest.find([',', '}']).unwrap_or(rest.len());
+        Ok(rest[..end].trim())
+    }
+}
+
+/// Parse a scalar float field (`null` → NaN).
+fn json_f64(line: &str, key: &str) -> Result<f64, String> {
+    let raw = json_field(line, key)?;
+    if raw == "null" {
+        return Ok(f64::NAN);
+    }
+    raw.parse::<f64>().map_err(|e| format!("bad float {raw:?} for {key:?}: {e}"))
+}
+
+/// Parse an unsigned integer field.
+fn json_usize(line: &str, key: &str) -> Result<usize, String> {
+    let raw = json_field(line, key)?;
+    raw.parse::<usize>().map_err(|e| format!("bad integer {raw:?} for {key:?}: {e}"))
+}
+
+/// Parse a flat float array field `[a,b,...]` (`null` entries → NaN).
+fn json_point(raw: &str) -> Result<Vec<f64>, String> {
+    let inner = raw
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("not an array: {raw:?}"))?;
+    if inner.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|v| {
+            let v = v.trim();
+            if v == "null" {
+                Ok(f64::NAN)
+            } else {
+                v.parse::<f64>().map_err(|e| format!("bad float {v:?}: {e}"))
+            }
+        })
+        .collect()
+}
+
+impl ReplayEvent {
+    /// Parse one [`JsonlObserver`] line.
+    pub fn parse_line(line: &str) -> Result<Self, String> {
+        match json_field(line, "event")? {
+            "init_done" => Ok(ReplayEvent::InitDone { n_samples: json_usize(line, "n_samples")? }),
+            "proposal" => {
+                let raw = json_field(line, "xs")?;
+                let inner = raw
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| format!("bad xs in {line:?}"))?;
+                // split the outer array on top-level commas
+                let mut xs = Vec::new();
+                let mut depth = 0usize;
+                let mut start = 0usize;
+                for (i, c) in inner.char_indices() {
+                    match c {
+                        '[' => depth += 1,
+                        ']' => depth -= 1,
+                        ',' if depth == 0 => {
+                            xs.push(json_point(inner[start..i].trim())?);
+                            start = i + 1;
+                        }
+                        _ => {}
+                    }
+                }
+                if !inner.trim().is_empty() {
+                    xs.push(json_point(inner[start..].trim())?);
+                }
+                Ok(ReplayEvent::Proposal {
+                    iteration: json_usize(line, "iteration")?,
+                    q: json_usize(line, "q")?,
+                    xs,
+                })
+            }
+            "observation" => Ok(ReplayEvent::Observation {
+                evaluations: json_usize(line, "evaluations")?,
+                x: json_point(json_field(line, "x")?)?,
+                y: json_f64(line, "y")?,
+                best: json_f64(line, "best")?,
+            }),
+            "refit" => Ok(ReplayEvent::Refit { n_samples: json_usize(line, "n_samples")? }),
+            "stopped" => Ok(ReplayEvent::Stopped {
+                dim: json_usize(line, "dim")?,
+                evaluations: json_usize(line, "evaluations")?,
+                best: json_f64(line, "best")?,
+            }),
+            other => Err(format!("unknown event {other:?} in {line:?}")),
+        }
+    }
+
+    /// Read every event from a [`JsonlObserver`] log file (empty lines
+    /// skipped). A missing file is an error; an empty file is `Ok(vec![])`.
+    pub fn read_log(path: &Path) -> Result<Vec<ReplayEvent>, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        text.lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty())
+            .map(Self::parse_line)
+            .collect()
     }
 }
 
@@ -543,6 +736,85 @@ mod tests {
         }
         let content = std::fs::read_to_string(&path).unwrap();
         assert_eq!(content.lines().count(), 2, "buffered events lost on drop: {content}");
+    }
+
+    /// The write → parse round-trip is exact: `.17e` floats reparse to
+    /// the identical bits, so an event log is a faithful replay source.
+    #[test]
+    fn replay_round_trip_is_bit_exact() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_replay/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let y = 0.123456789012345678_f64.sin() * 1e-7;
+        let best = -std::f64::consts::PI;
+        let xs = vec![vec![0.1 + 0.2, 1.0 / 3.0], vec![f64::MIN_POSITIVE, 0.9999999999999999]];
+        {
+            let mut writer = JsonlObserver::create(&path).unwrap();
+            writer.on_event(&BoEvent::Proposal { iteration: 3, q: 2, xs: &xs });
+            writer.on_event(&BoEvent::Observation { evaluations: 4, x: &xs[0], y, best });
+            writer.on_event(&BoEvent::InitDone { n_samples: 4 });
+            writer.on_event(&BoEvent::Refit { n_samples: 4 });
+            writer.on_event(&BoEvent::Stopped { dim: 2, evaluations: 4, best });
+        }
+        let events = ReplayEvent::read_log(&path).unwrap();
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0], ReplayEvent::Proposal { iteration: 3, q: 2, xs: xs.clone() });
+        match &events[1] {
+            ReplayEvent::Observation { evaluations, x, y: ry, best: rb } => {
+                assert_eq!(*evaluations, 4);
+                assert_eq!(
+                    x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    xs[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(ry.to_bits(), y.to_bits(), "y must round-trip bitwise");
+                assert_eq!(rb.to_bits(), best.to_bits(), "best must round-trip bitwise");
+            }
+            other => panic!("expected observation, got {other:?}"),
+        }
+        assert_eq!(events[2], ReplayEvent::InitDone { n_samples: 4 });
+        assert_eq!(events[3], ReplayEvent::Refit { n_samples: 4 });
+        match &events[4] {
+            ReplayEvent::Stopped { dim, evaluations, best: rb } => {
+                assert_eq!((*dim, *evaluations), (2, 4));
+                assert_eq!(rb.to_bits(), best.to_bits());
+            }
+            other => panic!("expected stopped, got {other:?}"),
+        }
+    }
+
+    /// Append mode extends an existing log instead of truncating it.
+    #[test]
+    fn jsonl_append_extends_the_log() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_append/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut writer = JsonlObserver::create(&path).unwrap();
+            writer.on_event(&BoEvent::InitDone { n_samples: 1 });
+        }
+        {
+            let mut writer = JsonlObserver::append(&path).unwrap();
+            writer.on_event(&BoEvent::Refit { n_samples: 2 });
+        }
+        let events = ReplayEvent::read_log(&path).unwrap();
+        assert_eq!(
+            events,
+            vec![ReplayEvent::InitDone { n_samples: 1 }, ReplayEvent::Refit { n_samples: 2 }]
+        );
+    }
+
+    #[test]
+    fn replay_parses_null_as_nan_and_rejects_garbage() {
+        let line = r#"{"event":"observation","evaluations":1,"x":[null],"y":null,"best":1.0e0}"#;
+        let ev = ReplayEvent::parse_line(line).unwrap();
+        match ev {
+            ReplayEvent::Observation { x, y, best, .. } => {
+                assert!(x[0].is_nan() && y.is_nan());
+                assert_eq!(best, 1.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(ReplayEvent::parse_line(r#"{"event":"wat"}"#).is_err());
+        assert!(ReplayEvent::parse_line(r#"{"event":"refit"}"#).is_err());
+        assert!(ReplayEvent::parse_line("not json").is_err());
     }
 
     #[test]

@@ -10,12 +10,9 @@
 //! below covers estimator noise, ~1/sqrt(mc_samples)).
 
 use limbo::acqui::Ei;
-use limbo::bayes_opt::RefitSchedule;
+use limbo::bayes_opt::{BoDef, RefitSchedule};
 use limbo::benchfns::{Branin, TestFunction};
-use limbo::coordinator::{AskTellServer, BatchStrategy};
-use limbo::kernel::Matern52;
-use limbo::mean::DataMean;
-use limbo::model::gp::Gp;
+use limbo::coordinator::BatchStrategy;
 use limbo::opt::{NelderMead, OptimizerExt, RandomPoint};
 use limbo::rng::Pcg64;
 
@@ -26,15 +23,14 @@ const N_INIT: usize = 6;
 /// One full batched BO run on Branin; returns the simple regret.
 fn run_branin(strategy: BatchStrategy, seed: u64) -> f64 {
     let branin = Branin;
-    let mut srv = AskTellServer::new(
-        Gp::new(Matern52::new(2), DataMean::default(), 1e-2),
-        Ei::default(),
-        RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2),
-        2,
-        seed,
-    )
-    .with_refit(RefitSchedule::Doubling { first: 8 })
-    .with_batch_strategy(strategy);
+    let mut srv = BoDef::service(2)
+        .noise(1e-2)
+        .acquisition(Ei::default())
+        .inner_opt(RandomPoint::new(128).then(NelderMead::default()).restarts(4, 2))
+        .seed(seed)
+        .refit(RefitSchedule::Doubling { first: 8 })
+        .batch(strategy)
+        .build_server();
     // shared init design per seed (identical across strategies)
     let mut init_rng = Pcg64::seed(seed ^ 0xB0A71);
     for _ in 0..N_INIT {

@@ -125,8 +125,7 @@ fn padding_is_exact_across_random_dataset_sizes() {
 
 #[test]
 fn ask_tell_state_is_consistent() {
-    use limbo::acqui::Ucb;
-    use limbo::coordinator::AskTellServer;
+    use limbo::bayes_opt::BoDef;
     use limbo::opt::RandomPoint;
     testing::check(
         "ask-tell-state",
@@ -134,13 +133,8 @@ fn ask_tell_state_is_consistent() {
         16,
         |rng: &mut Pcg64| (1 + rng.below(3), 3 + rng.below(10), rng.next_u64()),
         |&(dim, steps, seed)| {
-            let mut srv = AskTellServer::new(
-                Gp::new(Matern52::new(dim), DataMean::default(), 1e-3),
-                Ucb::default(),
-                RandomPoint::new(32),
-                dim,
-                seed,
-            );
+            let mut srv =
+                BoDef::service(dim).seed(seed).inner_opt(RandomPoint::new(32)).build_server();
             let mut true_best = f64::NEG_INFINITY;
             for i in 0..steps {
                 let x = srv.ask();

@@ -1,0 +1,197 @@
+//! Integration: the multi-study [`StudyManager`] at scale and across
+//! "process" boundaries.
+//!
+//! Three claims from the manager's contract:
+//!
+//! 1. **Interleaving is invisible.** ≥1000 studies driven round-robin
+//!    through one manager (with LRU eviction churn forcing constant
+//!    rehydration) produce traces **bit-identical** to each study run
+//!    in isolation through the plain `BoDef::build_server` frontend.
+//! 2. **Crashes are invisible.** A durable study killed mid-run (the
+//!    manager dropped without `close`) and rehydrated by a fresh
+//!    manager from its snapshot + event-log tail continues the exact
+//!    trace of an uninterrupted run — byte-identical event logs.
+//! 3. **Deployment mode is invisible.** The same definition driven
+//!    through `&mut dyn Study` — inline server, spawned thread,
+//!    managed study — yields bit-identical traces.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use limbo::bayes_opt::{BoDef, RefitSchedule};
+use limbo::coordinator::{Study, StudyError, StudyManager};
+use limbo::opt::RandomPoint;
+use limbo::pool::ThreadPool;
+
+fn pool(threads: usize) -> Arc<ThreadPool> {
+    Arc::new(ThreadPool::new(threads))
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic 1-D objective, different optimum per study.
+fn objective(study: usize, x: &[f64]) -> f64 {
+    let target = (study % 97) as f64 / 96.0;
+    -(x[0] - target).powi(2)
+}
+
+fn bits(xs: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    xs.iter().map(|x| x.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+#[test]
+fn a_thousand_interleaved_studies_match_isolated_runs_bitwise() {
+    const STUDIES: usize = 1000;
+    const ROUNDS: usize = 3;
+    let root = tmp_root("limbo_mgr_thousand");
+    // max_live far below the study count: most operations hit an
+    // evicted slot and must rehydrate by replaying the event log
+    let mgr = StudyManager::durable(pool(4), &root).expect("durable root").with_max_live(64);
+    let ids: Vec<_> = (0..STUDIES)
+        .map(|s| {
+            let seed = 1000 + s as u64;
+            mgr.create(move || {
+                BoDef::service(1).seed(seed).inner_opt(RandomPoint::new(8)).build_server()
+            })
+            .expect("create study")
+        })
+        .collect();
+    let (live, evicted) = mgr.counts();
+    assert_eq!(live + evicted, STUDIES);
+    assert!(live <= 64, "live budget violated: {live}");
+
+    // drive all studies round-robin: maximal interleaving, every study's
+    // operations separated by ~999 other studies' operations
+    let mut traces: Vec<Vec<Vec<f64>>> = vec![Vec::new(); STUDIES];
+    for _round in 0..ROUNDS {
+        for (s, &id) in ids.iter().enumerate() {
+            let x = mgr.ask(id).expect("ask");
+            let y = objective(s, &x);
+            mgr.tell(id, &x, y).expect("tell");
+            traces[s].push(x);
+        }
+    }
+    let (live, _) = mgr.counts();
+    assert!(live <= 64, "live budget violated after churn: {live}");
+
+    // parity: each study in isolation, straight through the frontend
+    for (s, trace) in traces.iter().enumerate() {
+        let seed = 1000 + s as u64;
+        let mut iso = BoDef::service(1).seed(seed).inner_opt(RandomPoint::new(8)).build_server();
+        for expected in trace {
+            let x = iso.ask();
+            assert_eq!(
+                bits(std::slice::from_ref(&x)),
+                bits(std::slice::from_ref(expected)),
+                "study {s}: interleaved trace diverged from the isolated run"
+            );
+            iso.tell(&x, objective(s, &x));
+        }
+    }
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// Drive `rounds` ask/tell rounds against study 0 of `mgr`.
+fn drive(mgr: &StudyManager, id: limbo::coordinator::StudyId, rounds: usize) {
+    for _ in 0..rounds {
+        let x = mgr.ask(id).expect("ask");
+        let y = objective(0, &x);
+        mgr.tell(id, &x, y).expect("tell");
+    }
+}
+
+#[test]
+fn killed_study_resumes_the_exact_trace_from_snapshot_and_log_tail() {
+    let factory = || {
+        BoDef::service(1)
+            .seed(77)
+            .inner_opt(RandomPoint::new(8))
+            // early refits so a refit-barrier snapshot lands before the
+            // "crash" and the recovery exercises snapshot + tail replay
+            .refit(RefitSchedule::Doubling { first: 4 })
+            .build_server()
+    };
+
+    // reference: 12 uninterrupted rounds
+    let root_a = tmp_root("limbo_mgr_crash_a");
+    {
+        let mgr = StudyManager::durable(pool(2), &root_a).expect("durable");
+        let id = mgr.create(factory).expect("create");
+        drive(&mgr, id, 12);
+        // manager dropped without close: Drop flushes the event log
+    }
+
+    // crashed: 5 rounds, drop the manager mid-run, recover, 7 more
+    let root_b = tmp_root("limbo_mgr_crash_b");
+    let id = {
+        let mgr = StudyManager::durable(pool(2), &root_b).expect("durable");
+        let id = mgr.create(factory).expect("create");
+        drive(&mgr, id, 5);
+        id
+    };
+    let snap = root_b.join(id.to_string()).join("snapshot.txt");
+    assert!(snap.exists(), "refit at n=4 must have produced a snapshot before the crash");
+    {
+        let mgr = StudyManager::durable(pool(2), &root_b).expect("durable");
+        mgr.recover(id, factory).expect("recover");
+        drive(&mgr, id, 7);
+    }
+
+    let log_a = fs::read(root_a.join(id.to_string()).join("events.jsonl")).expect("log a");
+    let log_b = fs::read(root_b.join(id.to_string()).join("events.jsonl")).expect("log b");
+    assert_eq!(
+        String::from_utf8_lossy(&log_a),
+        String::from_utf8_lossy(&log_b),
+        "resumed trace must be byte-identical to the uninterrupted run"
+    );
+    let _ = fs::remove_dir_all(&root_a);
+    let _ = fs::remove_dir_all(&root_b);
+}
+
+/// The shared driver: everything it needs is the [`Study`] vocabulary.
+fn drive_study(study: &mut dyn Study, rounds: usize) -> Vec<Vec<f64>> {
+    let mut trace = Vec::new();
+    for _ in 0..rounds {
+        let x = study.ask().expect("ask");
+        let y = objective(3, &x);
+        study.tell(&x, y).expect("tell");
+        trace.push(x);
+    }
+    assert!(study.best().expect("best").is_some(), "data recorded, best must exist");
+    trace
+}
+
+#[test]
+fn study_trait_erases_the_deployment_mode() {
+    let def = || BoDef::service(1).seed(5).inner_opt(RandomPoint::new(16)).build_server();
+
+    // (a) inline server
+    let mut inline = def();
+    let trace_inline = drive_study(&mut inline, 6);
+
+    // (b) spawned server behind its channel handle
+    let mut handle = def().spawn();
+    let trace_handle = drive_study(&mut handle, 6);
+    handle.finish().expect("first finish shuts the server down");
+    assert_eq!(
+        handle.try_ask(),
+        Err(StudyError::Closed),
+        "operations after shutdown report Closed"
+    );
+
+    // (c) managed study in a registry
+    let mgr = Arc::new(StudyManager::new(pool(2)));
+    let id = mgr.create(def).expect("create");
+    let mut managed = mgr.study(id);
+    let trace_managed = drive_study(&mut managed, 6);
+    managed.finish().expect("close");
+    assert_eq!(managed.ask(), Err(StudyError::Closed));
+
+    assert_eq!(bits(&trace_inline), bits(&trace_handle), "inline vs threaded trace");
+    assert_eq!(bits(&trace_inline), bits(&trace_managed), "inline vs managed trace");
+}

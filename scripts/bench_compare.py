@@ -6,7 +6,8 @@ Merges the JSON-lines rows emitted by the smoke benches
 `gp_scaling --smoke` -> target/gp_scaling.json,
 `batch_propose --smoke` -> target/batch_propose.json,
 `fig1_time --smoke` -> target/fig1_time.json,
-`kernel_micro --smoke` -> target/kernel_micro.json) into one
+`kernel_micro --smoke` -> target/kernel_micro.json,
+`manager_load --smoke` -> target/manager_load.json) into one
 `BENCH_PR.json` document, compares it against the checked-in
 `rust/benches/baseline.json`, and fails (exit 1) on a >30%
 candidates/sec regression at any batch size.
@@ -97,6 +98,12 @@ def row_key(row):
                 row.get("iters"), row.get("hpo"), row.get("phase"))
     if row.get("bench") == "kernel_micro":
         return ("kernel_micro", row.get("kernel"), row.get("n"))
+    if row.get("bench") == "manager_load":
+        return ("manager_load", row.get("mode"), row.get("studies"),
+                row.get("rounds"))
+    if row.get("bench") == "manager_load_phase":
+        return ("manager_load_phase", row.get("mode"), row.get("studies"),
+                row.get("phase"))
     return (row.get("bench"), json.dumps(row, sort_keys=True))
 
 
@@ -222,8 +229,29 @@ def main():
                 warnings.append(line)
             else:
                 print(f"ok   {line}")
+        elif row.get("bench") == "manager_load":
+            # multi-study throughput (higher is better) and ask tail
+            # latency (lower is better); wall-clock rows are warn-only
+            now, then = row.get("studies_per_sec"), base.get("studies_per_sec")
+            if now is not None and then is not None and then > 0:
+                drop = 1.0 - now / then
+                line = (f"{key} throughput: {then:.0f} -> {now:.0f} "
+                        f"studies/s ({-drop:+.1%})")
+                if drop > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
+            now, then = row.get("ask_p99_s"), base.get("ask_p99_s")
+            if now is not None and then is not None and then > 0:
+                slowdown = now / then - 1.0
+                line = (f"{key} ask p99: {then:.5f}s -> {now:.5f}s "
+                        f"({slowdown:+.1%})")
+                if slowdown > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
         elif row.get("bench") in ("gp_scaling_phase", "batch_propose_phase",
-                                  "fig1_time_phase"):
+                                  "fig1_time_phase", "manager_load_phase"):
             # per-phase attribution rows (warn-only): when a headline row
             # above warns, these say WHICH phase regressed
             now, then = row.get("seconds"), base.get("seconds")
