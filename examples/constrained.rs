@@ -1,0 +1,85 @@
+//! Constrained Bayesian optimization end to end — Branin under a disk
+//! constraint through the probability-of-feasibility weight.
+//!
+//! `BoDef::constraints(k)` declares `k` inequality-constraint channels
+//! (`>= 0` = feasible); `build_constrained_server` then banks one GP
+//! surrogate per channel next to the objective GP and wraps the
+//! acquisition in [`PofWeighted`], which multiplies every candidate's
+//! base score by its probability of satisfying all channels. Each tell
+//! carries the constraint measurement alongside the objective through a
+//! typed [`Observation`], so the feasibility model learns from the same
+//! samples as the objective model.
+//!
+//! The objective is the classic Branin function (maximized as
+//! `-branin`) with the Gardner-style disk constraint
+//! `(x - 2.5)^2 + (y - 7.5)^2 <= 50`: of Branin's three global minima
+//! only `(pi, 2.275)` lies inside the disk, so an unconstrained run is
+//! free to converge to an infeasible optimum while this one must not.
+//!
+//! Run: `cargo run --release --example constrained`
+//! (`LIMBO_SMOKE=1` shrinks the budget for CI.)
+
+use limbo::prelude::*;
+
+/// Branin–Hoo in its native coordinates (minimization form).
+fn branin(x: f64, y: f64) -> f64 {
+    let a = 1.0;
+    let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+    let c = 5.0 / std::f64::consts::PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * std::f64::consts::PI);
+    a * (y - b * x * x + c * x - r).powi(2) + s * (1.0 - t) * x.cos() + s
+}
+
+/// Disk constraint, library convention: `>= 0` = feasible. Keeps one of
+/// Branin's three minima inside the feasible region.
+fn disk(x: f64, y: f64) -> f64 {
+    50.0 - ((x - 2.5).powi(2) + (y - 7.5).powi(2))
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
+    let rounds = if smoke { 35 } else { 90 };
+
+    let mut srv = BoDef::new(2)
+        .bounds(&[(-5.0, 10.0), (0.0, 15.0)])
+        .acquisition(Ei::default())
+        .constraints(1)
+        .init_samples(10)
+        .refit(RefitSchedule::Doubling { first: 8 })
+        .seed(7)
+        .build_constrained_server();
+
+    let mut best_feasible: Option<(Vec<f64>, f64)> = None;
+    let mut n_feasible = 0usize;
+    for _ in 0..rounds {
+        let x = srv.ask();
+        let y = -branin(x[0], x[1]);
+        let c = disk(x[0], x[1]);
+        if c >= 0.0 {
+            n_feasible += 1;
+            let improved = match &best_feasible {
+                None => true,
+                Some((_, incumbent)) => y > *incumbent,
+            };
+            if improved {
+                best_feasible = Some((x.clone(), y));
+            }
+        }
+        srv.tell_observation(&Observation::exact(x, y).with_constraints(vec![c]))
+            .expect("one value per declared constraint channel");
+    }
+    srv.finish();
+
+    let (bx, by) = best_feasible.expect("the run must find at least one feasible point");
+    println!("rounds            : {rounds}");
+    println!("feasible samples  : {n_feasible}");
+    println!("best feasible x   : [{:.4}, {:.4}]", bx[0], bx[1]);
+    println!("best feasible val : {by:.6}  (feasible optimum -0.397887)");
+
+    assert!(disk(bx[0], bx[1]) >= 0.0, "incumbent must satisfy the disk constraint");
+    let floor = if smoke { -10.0 } else { -2.0 };
+    assert!(by > floor, "feasible convergence too weak: {by}");
+    println!("ok");
+}

@@ -1,0 +1,214 @@
+//! Probability-of-feasibility–weighted acquisition for constrained BO.
+//!
+//! The classic constrained-EI construction (Gardner et al. 2014,
+//! Gelbart et al. 2014): score a candidate by the base acquisition on
+//! the *objective* posterior, weighted by the probability that every
+//! constraint channel is satisfied under its own posterior,
+//!
+//! ```text
+//! a_c(x) = a(x) · Π_j  Φ( μ_j(x) / σ_j(x) )
+//! ```
+//!
+//! with the feasibility convention that a constraint value `>= 0` is
+//! feasible (so `Φ(μ/σ) = P[c_j(x) >= 0]` under the channel's Gaussian
+//! posterior). [`PofWeighted`] wraps any base [`AcquiFn`] over a
+//! [`ModelBank`]: the base acquisition sees only the bank's objective
+//! member, the feasibility weight comes from the constraint members.
+//!
+//! With **zero** constraint channels the wrapper returns the base score
+//! untouched (bit-identical — pinned by the degenerate-case parity
+//! tests), so it is always safe to build a constrained definition with
+//! `k = 0`.
+
+use crate::acqui::math::norm_cdf;
+use crate::acqui::{AcquiContext, AcquiFn};
+use crate::model::{Model, ModelBank};
+
+/// Floor on a constraint channel's posterior std before dividing —
+/// matches the guard [`crate::acqui::Pi`] uses for its own `Φ` argument.
+const SIGMA_FLOOR: f64 = 1e-12;
+
+/// A base acquisition weighted by the probability of feasibility.
+///
+/// Designed for nonnegative improvement-style bases (EI, PI), where the
+/// product cleanly down-weights unlikely-feasible candidates. Bases that
+/// can go *negative* (UCB with a pessimistic mean) are still handled
+/// sanely: a negative score is scaled by `2 - PoF` instead, so
+/// infeasibility always *penalizes* (drives the score further negative)
+/// rather than accidentally boosting it toward zero, and the two
+/// branches agree continuously at zero.
+#[derive(Clone, Debug)]
+pub struct PofWeighted<A> {
+    /// The wrapped base acquisition, evaluated on the objective member.
+    pub base: A,
+}
+
+impl<A> PofWeighted<A> {
+    /// Weight `base` by the bank's probability of feasibility.
+    pub fn new(base: A) -> Self {
+        Self { base }
+    }
+}
+
+impl<A> PofWeighted<A> {
+    #[inline]
+    fn weigh(base: f64, pof: f64) -> f64 {
+        if base >= 0.0 {
+            base * pof
+        } else {
+            base * (2.0 - pof)
+        }
+    }
+}
+
+impl<M: Model, A: AcquiFn<M>> AcquiFn<ModelBank<M>> for PofWeighted<A> {
+    fn eval(&self, bank: &ModelBank<M>, x: &[f64], ctx: &AcquiContext) -> f64 {
+        let base = self.base.eval(&bank.objective, x, ctx);
+        if bank.constraints.is_empty() {
+            return base;
+        }
+        let mut pof = 1.0;
+        for c in &bank.constraints {
+            let (mu, var) = c.predict(x);
+            pof *= norm_cdf(mu / var.sqrt().max(SIGMA_FLOOR));
+        }
+        Self::weigh(base, pof)
+    }
+
+    /// One [`Model::predict_batch`] per constraint channel — the whole
+    /// candidate population goes through each channel's batched
+    /// posterior once, mirroring the base acquisition's batch path over
+    /// the objective member.
+    fn eval_batch(
+        &self,
+        bank: &ModelBank<M>,
+        xs: &[Vec<f64>],
+        ctx: &AcquiContext,
+    ) -> Vec<f64> {
+        let mut scores = self.base.eval_batch(&bank.objective, xs, ctx);
+        if bank.constraints.is_empty() {
+            return scores;
+        }
+        let mut pofs = vec![1.0; xs.len()];
+        for c in &bank.constraints {
+            for (p, (mu, var)) in pofs.iter_mut().zip(c.predict_batch(xs)) {
+                *p *= norm_cdf(mu / var.sqrt().max(SIGMA_FLOOR));
+            }
+        }
+        for (s, &p) in scores.iter_mut().zip(&pofs) {
+            *s = Self::weigh(*s, p);
+        }
+        scores
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acqui::{Ei, Ucb};
+    use crate::kernel::Matern52;
+    use crate::mean::ZeroMean;
+    use crate::model::gp::Gp;
+    use crate::rng::Pcg64;
+
+    type DenseGp = Gp<Matern52, ZeroMean>;
+
+    fn trained_bank(n_constraints: usize) -> ModelBank<DenseGp> {
+        let mk = || Gp::new(Matern52::new(2), ZeroMean, 0.01);
+        let mut bank =
+            ModelBank::new(mk(), (0..n_constraints).map(|_| mk()).collect());
+        let mut rng = Pcg64::seed(0xFEA5);
+        for _ in 0..30 {
+            let x = rng.unit_point(2);
+            let y = -(x[0] - 0.8).powi(2) - (x[1] - 0.8).powi(2);
+            bank.add_sample(&x, y);
+            if n_constraints > 0 {
+                // feasible only in the disk of radius 0.4 around (0.35, 0.35)
+                let c =
+                    0.16 - (x[0] - 0.35).powi(2) - (x[1] - 0.35).powi(2);
+                let cs = vec![c; n_constraints];
+                bank.add_constraint_sample(&x, &cs);
+            }
+        }
+        bank
+    }
+
+    #[test]
+    fn zero_constraints_is_bit_identical_to_the_base() {
+        let bank = trained_bank(0);
+        let acq = PofWeighted::new(Ei::default());
+        let base = Ei::default();
+        let ctx = AcquiContext::new(4, -0.1, 2);
+        let cands: Vec<Vec<f64>> = (0..8)
+            .map(|i| vec![0.1 + 0.1 * i as f64, 0.9 - 0.1 * i as f64])
+            .collect();
+        for c in &cands {
+            let w = acq.eval(&bank, c, &ctx);
+            let b = base.eval(&bank.objective, c, &ctx);
+            assert_eq!(w.to_bits(), b.to_bits());
+        }
+        let wb = acq.eval_batch(&bank, &cands, &ctx);
+        let bb = base.eval_batch(&bank.objective, &cands, &ctx);
+        for (w, b) in wb.iter().zip(&bb) {
+            assert_eq!(w.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pof_suppresses_the_infeasible_optimum() {
+        // objective optimum at (0.8, 0.8) is outside the feasible disk:
+        // the weighted score must prefer a feasible point over it
+        let bank = trained_bank(1);
+        let acq = PofWeighted::new(Ei { xi: 0.0 });
+        let ctx = AcquiContext::new(8, f64::NEG_INFINITY, 2);
+        let infeasible_opt = vec![0.85, 0.85];
+        let feasible = vec![0.45, 0.45];
+        let s_inf = acq.eval(&bank, &infeasible_opt, &ctx);
+        let s_feas = acq.eval(&bank, &feasible, &ctx);
+        assert!(
+            s_feas > s_inf,
+            "feasible {s_feas} should outrank infeasible optimum {s_inf}"
+        );
+        // and the weight really is the per-channel PoF product
+        let base = Ei { xi: 0.0 }.eval(&bank.objective, &infeasible_opt, &ctx);
+        let (mu, var) = bank.constraint(0).predict(&infeasible_opt);
+        let pof = norm_cdf(mu / var.sqrt().max(SIGMA_FLOOR));
+        assert!((s_inf - base * pof).abs() < 1e-15);
+        assert!(pof < 0.5, "deep infeasible point should have low PoF: {pof}");
+    }
+
+    #[test]
+    fn eval_batch_matches_pointwise() {
+        let bank = trained_bank(2);
+        let acq = PofWeighted::new(Ei::default());
+        let ctx = AcquiContext::new(3, -0.05, 2);
+        let cands: Vec<Vec<f64>> = (0..9)
+            .map(|i| vec![(i % 3) as f64 * 0.4 + 0.1, (i / 3) as f64 * 0.4 + 0.1])
+            .collect();
+        let batch = acq.eval_batch(&bank, &cands, &ctx);
+        for (j, c) in cands.iter().enumerate() {
+            let v = acq.eval(&bank, c, &ctx);
+            assert!(
+                (batch[j] - v).abs() < 1e-10,
+                "batch[{j}]={} vs pointwise {v}",
+                batch[j]
+            );
+        }
+    }
+
+    #[test]
+    fn negative_base_scores_are_penalized_not_boosted_by_infeasibility() {
+        let bank = trained_bank(1);
+        // alpha=0 UCB = posterior mean, negative everywhere on this toy
+        let acq = PofWeighted::new(Ucb { alpha: 0.0 });
+        let ctx = AcquiContext::new(2, f64::NEG_INFINITY, 2);
+        let x = vec![0.2, 0.9]; // infeasible, objective clearly negative
+        let base = Ucb { alpha: 0.0 }.eval(&bank.objective, &x, &ctx);
+        assert!(base < 0.0, "toy objective mean should be negative: {base}");
+        let weighted = acq.eval(&bank, &x, &ctx);
+        assert!(
+            weighted < base,
+            "infeasibility must penalize a negative base: {weighted} vs {base}"
+        );
+    }
+}

@@ -6,9 +6,11 @@
 //! [`crate::model::gp::Gp`] and the XLA-artifact backend.
 
 pub mod batch;
+pub mod constrained;
 mod math;
 
 pub use batch::{BatchAcquiFn, BatchAcquiObjective, QEi};
+pub use constrained::PofWeighted;
 pub use math::{norm_cdf, norm_pdf};
 
 use crate::model::Model;
@@ -17,13 +19,21 @@ use crate::opt::Objective;
 
 /// Incumbent threshold for the improvement-based acquisitions (EI/PI/qEI).
 ///
-/// Prefers the run context's incumbent; before any `tell` the context
-/// carries `-inf`, in which case the *model's* best observation is the
-/// correct threshold (a server wrapped around a pre-fitted model used to
-/// silently substitute `0.0` here — wrong for objectives whose values
-/// live far from 0). Only when the model has no data either does this
-/// fall back to the best *predicted* mean of the candidates (and 0.0 as
-/// the final no-information default).
+/// When the model carries per-observation noise
+/// ([`Model::has_noisy_observations`]), the max *raw* observation is a
+/// biased incumbent — the largest sample is the one whose noise drew
+/// highest, so EI/PI would chase a threshold no true function value ever
+/// reached. In that case the best *predicted mean* over the training
+/// inputs ([`Model::best_predicted_mean`]) is the right threshold and
+/// takes priority over everything else.
+///
+/// Otherwise this prefers the run context's incumbent; before any `tell`
+/// the context carries `-inf`, in which case the *model's* best
+/// observation is the correct threshold (a server wrapped around a
+/// pre-fitted model used to silently substitute `0.0` here — wrong for
+/// objectives whose values live far from 0). Only when the model has no
+/// data either does this fall back to the best *predicted* mean of the
+/// candidates (and 0.0 as the final no-information default).
 ///
 /// `mus` is the caller's candidate pool: the whole batch for
 /// `eval_batch`, the single candidate's mean for a pointwise `eval`. In
@@ -36,6 +46,13 @@ pub(crate) fn incumbent_for<M: Model + ?Sized>(
     ctx: &AcquiContext,
     mus: &[f64],
 ) -> f64 {
+    if model.has_noisy_observations() {
+        if let Some(b) = model.best_predicted_mean() {
+            if b.is_finite() {
+                return b;
+            }
+        }
+    }
     if ctx.best.is_finite() {
         return ctx.best;
     }
@@ -387,6 +404,46 @@ mod tests {
         // empty model + no incumbent: max predicted mean (prior = 0 here)
         let fresh = Gp::new(SquaredExpArd::new(1), ZeroMean, 0.01);
         assert_eq!(incumbent_for(&fresh, &ctx, &[]), 0.0);
+    }
+
+    #[test]
+    fn noisy_incumbent_uses_best_predicted_mean_not_best_raw_sample() {
+        // 1-D toy: flat true function at 0, one wild positive outlier
+        // reported with huge per-observation noise. The raw max (5.0) is
+        // pure noise; the posterior mean discounts it.
+        let mut gp = Gp::new(SquaredExpArd::new(1), ZeroMean, 1e-4);
+        for (x, y, nv) in [
+            (0.1, 0.02, 0.0),
+            (0.3, -0.03, 0.0),
+            (0.5, 5.0, 25.0), // outlier, sigma_obs = 5
+            (0.7, 0.01, 0.0),
+            (0.9, -0.02, 0.0),
+        ] {
+            gp.add_sample_noisy(&[x], y, nv);
+        }
+        assert!(gp.has_noisy_observations());
+        let best_mu = gp.best_predicted_mean().unwrap();
+        assert!(
+            best_mu < 1.0,
+            "posterior should discount the noisy outlier: {best_mu}"
+        );
+
+        // even when the context carries the raw-max incumbent (5.0), the
+        // threshold must be the predicted mean under noise
+        let ctx = AcquiContext::new(3, 5.0, 1);
+        let thr = incumbent_for(&gp, &ctx, &[0.0]);
+        assert_eq!(thr.to_bits(), best_mu.to_bits());
+
+        // consequence: EI near clean points stays alive instead of being
+        // flattened by an unreachable noise-made threshold
+        let ei = Ei { xi: 0.0 };
+        let v = ei.eval(&gp, &[2.0], &ctx);
+        assert!(v > 1e-6, "EI under noise should not be dead: {v}");
+
+        // a noise-free model is untouched: same context keeps ctx.best
+        let mut clean = Gp::new(SquaredExpArd::new(1), ZeroMean, 1e-4);
+        clean.fit(&[vec![0.2], vec![0.8]], &[1.0, -1.0]);
+        assert_eq!(incumbent_for(&clean, &ctx, &[0.0]).to_bits(), 5.0f64.to_bits());
     }
 
     #[test]

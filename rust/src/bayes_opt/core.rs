@@ -100,6 +100,15 @@ pub enum BoError {
         /// Upper bound as supplied.
         hi: f64,
     },
+    /// An [`Observation`] carried the wrong number of constraint-channel
+    /// values for the model it was told to (a constrained model requires
+    /// exactly one value per channel on **every** tell).
+    ConstraintArity {
+        /// Constraint channels the model carries.
+        expected: usize,
+        /// Constraint values the observation carried.
+        got: usize,
+    },
 }
 
 impl std::fmt::Display for BoError {
@@ -113,6 +122,13 @@ impl std::fmt::Display for BoError {
                     f,
                     "invalid bounds at dimension {index}: ({lo}, {hi}) — bounds must be \
                      finite with hi > lo"
+                )
+            }
+            BoError::ConstraintArity { expected, got } => {
+                write!(
+                    f,
+                    "constraint arity mismatch: the model has {expected} constraint \
+                     channel(s), the observation carried {got} value(s)"
                 )
             }
         }
@@ -202,6 +218,65 @@ impl Domain {
     }
 }
 
+/// One typed observation — the record every `tell` path funnels into.
+///
+/// The plain `(x, y)` tell is the degenerate case (`noise: None`, no
+/// constraint values); the noisy and constrained scenarios attach their
+/// extra channels to the same record instead of growing parallel APIs:
+///
+/// * `noise` is the **variance** of the reporting process for this one
+///   observation, added on top of the model's homoskedastic noise
+///   (heteroskedastic diagonal). `Some(0.0)` (or any non-positive /
+///   non-finite value) is normalized away at the tell boundary, so an
+///   "exact" noisy tell takes the *identical* code path — and produces
+///   the identical event-log bytes — as a plain tell.
+/// * `constraints` carries one value per constraint channel of the
+///   model being told (`>= 0` = feasible); the arity is validated
+///   against [`Model::n_constraint_channels`] before anything mutates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Observation {
+    /// Evaluated point (user coordinates).
+    pub x: Vec<f64>,
+    /// Observed objective value.
+    pub y: f64,
+    /// Per-observation noise **variance**, if the evaluation was noisy.
+    pub noise: Option<f64>,
+    /// Constraint-channel values (`>= 0` = feasible); empty for
+    /// unconstrained models.
+    pub constraints: Vec<f64>,
+}
+
+impl Observation {
+    /// An exact, unconstrained observation — the classic `(x, y)` tell.
+    pub fn exact(x: Vec<f64>, y: f64) -> Self {
+        Self { x, y, noise: None, constraints: Vec::new() }
+    }
+
+    /// An observation reported with `noise` variance.
+    pub fn noisy(x: Vec<f64>, y: f64, noise: f64) -> Self {
+        Self { x, y, noise: Some(noise), constraints: Vec::new() }
+    }
+
+    /// Attach constraint-channel values (builder form).
+    pub fn with_constraints(mut self, constraints: Vec<f64>) -> Self {
+        self.constraints = constraints;
+        self
+    }
+
+    /// The effective per-observation noise after boundary
+    /// normalization: non-finite and non-positive variances mean "this
+    /// observation is exact".
+    pub fn effective_noise(&self) -> Option<f64> {
+        self.noise.filter(|&v| v.is_finite() && v > 0.0)
+    }
+
+    /// True when every constraint channel reports feasible (vacuously
+    /// true for unconstrained observations).
+    pub fn is_feasible(&self) -> bool {
+        self.constraints.iter().all(|&c| c >= 0.0)
+    }
+}
+
 /// Typed run events dispatched from [`BoCore`] to its [`Observer`]s.
 ///
 /// All coordinates are **user coordinates** (see [`Domain`]).
@@ -232,6 +307,47 @@ pub enum BoEvent<'a> {
         y: f64,
         /// Incumbent best value after this observation.
         best: f64,
+    },
+    /// A **noisy** observation entered the model (per-observation noise
+    /// variance on the heteroskedastic diagonal).
+    TellNoisy {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: &'a [f64],
+        /// Observed value.
+        y: f64,
+        /// Per-observation noise variance (normalized: always finite
+        /// and `> 0` — an exact tell emits [`BoEvent::Observation`]).
+        noise: f64,
+        /// Incumbent best value after this observation.
+        best: f64,
+    },
+    /// A **constrained** observation entered the model (objective value
+    /// plus one value per constraint channel).
+    TellConstrained {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: &'a [f64],
+        /// Observed objective value.
+        y: f64,
+        /// Per-observation noise variance, if the tell was also noisy.
+        noise: Option<f64>,
+        /// Constraint-channel values (`>= 0` = feasible).
+        constraints: &'a [f64],
+        /// Incumbent best value after this observation (only feasible
+        /// observations become the incumbent).
+        best: f64,
+    },
+    /// A proposal was registered as **pending** (asynchronous mode):
+    /// until its observation arrives, further proposals fantasize over
+    /// it via kriging-believer mean lies.
+    AskPending {
+        /// Model-guided iteration counter at proposal time.
+        iteration: usize,
+        /// The pending point.
+        x: &'a [f64],
     },
     /// The model re-optimized its hyper-parameters (ML-II).
     Refit {
@@ -292,6 +408,9 @@ pub struct CoreState {
     pub finished: bool,
     /// RNG `(state, increment)` registers.
     pub rng: (u64, u64),
+    /// Outstanding pending proposals (unit coordinates, asynchronous
+    /// mode): asked but not yet told.
+    pub pending: Vec<Vec<f64>>,
 }
 
 /// The single ask/tell core: one generic, monomorphized implementation
@@ -347,6 +466,13 @@ where
     batch_strategy: BatchStrategy,
     observers: Vec<Box<dyn Observer>>,
     finished: bool,
+    /// Asynchronous mode: proposals register as pending and later
+    /// proposals fantasize over them (see
+    /// [`propose_pending`](Self::propose_pending)).
+    async_pending: bool,
+    /// Outstanding pending proposals in unit coordinates (asked, not
+    /// yet told). Always empty when `async_pending` is off.
+    pending: Vec<Vec<f64>>,
 }
 
 impl<M, A, O> BoCore<M, A, O>
@@ -379,6 +505,8 @@ where
             batch_strategy: BatchStrategy::default(),
             observers: Vec::new(),
             finished: false,
+            async_pending: false,
+            pending: Vec::new(),
         }
     }
 
@@ -406,6 +534,15 @@ where
     /// [`propose_batch`](Self::propose_batch).
     pub fn with_batch_strategy(mut self, strategy: BatchStrategy) -> Self {
         self.batch_strategy = strategy;
+        self
+    }
+
+    /// Enable asynchronous pending-point mode: drivers route asks
+    /// through [`propose_pending`](Self::propose_pending), outstanding
+    /// proposals are fantasized over until their tell arrives, and any
+    /// ask/tell interleaving from q workers is well-defined.
+    pub fn with_async_pending(mut self, on: bool) -> Self {
+        self.async_pending = on;
         self
     }
 
@@ -466,6 +603,16 @@ where
     /// The configured q-point proposal strategy.
     pub fn batch_strategy(&self) -> BatchStrategy {
         self.batch_strategy
+    }
+
+    /// Whether asynchronous pending-point mode is on.
+    pub fn async_pending(&self) -> bool {
+        self.async_pending
+    }
+
+    /// Outstanding pending proposals (asked but not yet told).
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
     }
 
     /// Incumbent best `(x, value)` in user coordinates.
@@ -537,6 +684,77 @@ where
         self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
     }
 
+    /// Next suggested trial in **asynchronous** mode: like
+    /// [`propose`](Self::propose), but the proposal is registered as
+    /// pending (retired by the matching `tell`) and the acquisition is
+    /// maximized over a kriging-believer fantasy of the outstanding
+    /// pending points — a scratch clone of the model is told its own
+    /// posterior mean at each pending point, so q workers can ask and
+    /// tell in any interleaving without the acquisition re-proposing a
+    /// point that is already in flight.
+    ///
+    /// With no outstanding pending point this is computationally
+    /// identical to [`propose`](Self::propose) (the clone is skipped),
+    /// so a strictly alternating ask/tell sequence reproduces the
+    /// synchronous trace bit for bit.
+    pub fn propose_pending(&mut self) -> Vec<f64>
+    where
+        M: Clone,
+    {
+        let _span = crate::obs::span(Phase::Ask);
+        let unit = if let Some(x) = self.init_queue.pop_front() {
+            self.init_served += 1;
+            x
+        } else if self.model.n_samples() == 0 {
+            self.rng.unit_point(self.dim)
+        } else {
+            self.maximize_with_pending()
+        };
+        let x = self.domain.from_unit(&unit);
+        // the retire key must equal what `try_observe` derives from the
+        // user-coordinate point we hand out: to_unit(from_unit(u)) is
+        // not bitwise `u` on a non-unit domain
+        let key = self.domain.to_unit(&x);
+        let xs = [x];
+        Self::emit(
+            &mut self.observers,
+            &BoEvent::Proposal { iteration: self.iteration, q: 1, xs: &xs },
+        );
+        Self::emit(
+            &mut self.observers,
+            &BoEvent::AskPending { iteration: self.iteration, x: &xs[0] },
+        );
+        self.pending.push(key);
+        crate::obs::gauge_set(Gauge::PendingTrials, self.pending.len() as u64);
+        let [x] = xs;
+        x
+    }
+
+    /// Acquisition maximization over the kriging-believer fantasy: the
+    /// believer clone is told its own posterior mean at every pending
+    /// point (in registration order), flattening the variance there so
+    /// the maximizer steers clear of in-flight trials. Empty pending =
+    /// the plain [`maximize_acquisition`](Self::maximize_acquisition)
+    /// path, bit for bit.
+    fn maximize_with_pending(&mut self) -> Vec<f64>
+    where
+        M: Clone,
+    {
+        if self.pending.is_empty() {
+            return self.maximize_acquisition();
+        }
+        let mut believer = self.model.clone();
+        let mut lied_best = self.incumbent_value();
+        for p in &self.pending {
+            let (lie, _) = believer.predict(p);
+            believer.add_sample(p, lie);
+            lied_best = lied_best.max(lie);
+        }
+        let ctx = AcquiContext::new(self.iteration, lied_best, self.dim);
+        let objective = AcquiObjective::new(&believer, &self.acquisition, ctx);
+        self.inner_opt.optimize(&objective, self.dim, &mut self.rng).x
+    }
+
     /// Propose `q` diverse trials (user coordinates) to run in parallel,
     /// using the configured [`BatchStrategy`]. Queued initial-design
     /// points are served first; while the model has no data the
@@ -577,6 +795,17 @@ where
             &mut self.observers,
             &BoEvent::Proposal { iteration: self.iteration, q: batch.len(), xs: &batch },
         );
+        if self.async_pending {
+            for x in &batch {
+                Self::emit(
+                    &mut self.observers,
+                    &BoEvent::AskPending { iteration: self.iteration, x },
+                );
+                let key = self.domain.to_unit(x);
+                self.pending.push(key);
+            }
+            crate::obs::gauge_set(Gauge::PendingTrials, self.pending.len() as u64);
+        }
         batch
     }
 
@@ -593,6 +822,14 @@ where
     {
         let mut liar = self.model.clone();
         let mut lied_best = self.incumbent_value();
+        // asynchronous mode: outstanding pending trials enter the liar
+        // first, so a q-batch never re-proposes an in-flight point
+        // (empty pending = the classic path, bit for bit)
+        for p in &self.pending {
+            let (lie, _) = liar.predict(p);
+            liar.add_sample(p, lie);
+            lied_best = lied_best.max(lie);
+        }
         let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
         for k in 0..q {
             let ctx = AcquiContext::new(self.iteration + k, lied_best, self.dim);
@@ -649,9 +886,41 @@ where
     /// design slot (indistinguishable without comparing coordinates —
     /// warm-start before asking if exact accounting matters).
     pub fn observe(&mut self, x: &[f64], y: f64) {
+        self.try_observe(&Observation::exact(x.to_vec(), y)).expect(
+            "plain observe on a constrained model — tell one value per constraint \
+             channel via try_observe/tell_constrained",
+        );
+    }
+
+    /// Report one typed [`Observation`] — the single intake every tell
+    /// flavor funnels into. Returns [`BoError::ConstraintArity`] (before
+    /// anything mutates) when the record's constraint values disagree
+    /// with the model's channel count.
+    ///
+    /// Per-observation noise goes onto the model's heteroskedastic
+    /// diagonal ([`Model::add_sample_noisy`]); constraint values feed
+    /// the model's constraint channels; only **feasible** observations
+    /// can become the incumbent; a pending proposal matching `x` is
+    /// retired (asynchronous mode).
+    pub fn try_observe(&mut self, obs: &Observation) -> Result<(), BoError> {
         let _span = crate::obs::span(Phase::Tell);
-        let unit = self.domain.to_unit(x);
-        self.model.add_sample(&unit, y);
+        let expected = self.model.n_constraint_channels();
+        if obs.constraints.len() != expected {
+            return Err(BoError::ConstraintArity { expected, got: obs.constraints.len() });
+        }
+        let noise = obs.effective_noise();
+        let unit = self.domain.to_unit(&obs.x);
+        match noise {
+            Some(nv) => self.model.add_sample_noisy(&unit, obs.y, nv),
+            None => self.model.add_sample(&unit, obs.y),
+        }
+        if !obs.constraints.is_empty() {
+            self.model.add_constraint_sample(&unit, &obs.constraints);
+        }
+        if let Some(i) = self.pending.iter().position(|p| p == &unit) {
+            self.pending.remove(i);
+            crate::obs::gauge_set(Gauge::PendingTrials, self.pending.len() as u64);
+        }
         crate::obs::gauge_set(Gauge::ModelSamples, self.model.n_samples() as u64);
         self.evaluations += 1;
         self.finished = false;
@@ -661,14 +930,34 @@ where
         } else {
             self.iteration += 1;
         }
-        if y.is_finite() && self.best.as_ref().map_or(true, |b| y > b.1) {
-            self.best = Some((unit, y));
+        if obs.y.is_finite()
+            && obs.is_feasible()
+            && self.best.as_ref().map_or(true, |b| obs.y > b.1)
+        {
+            self.best = Some((unit, obs.y));
         }
         let best = self.incumbent_value();
-        Self::emit(
-            &mut self.observers,
-            &BoEvent::Observation { evaluations: self.evaluations, x, y, best },
-        );
+        let event = if !obs.constraints.is_empty() {
+            BoEvent::TellConstrained {
+                evaluations: self.evaluations,
+                x: &obs.x,
+                y: obs.y,
+                noise,
+                constraints: &obs.constraints,
+                best,
+            }
+        } else if let Some(nv) = noise {
+            BoEvent::TellNoisy {
+                evaluations: self.evaluations,
+                x: &obs.x,
+                y: obs.y,
+                noise: nv,
+                best,
+            }
+        } else {
+            BoEvent::Observation { evaluations: self.evaluations, x: &obs.x, y: obs.y, best }
+        };
+        Self::emit(&mut self.observers, &event);
         let init_completed =
             in_init && self.init_observed == self.init_total && self.init_queue.is_empty();
         if init_completed {
@@ -678,6 +967,7 @@ where
             );
         }
         self.advance_refit_schedule(in_init, init_completed);
+        Ok(())
     }
 
     /// Apply the refit schedule after one observation.
@@ -737,6 +1027,7 @@ where
             next_refit: self.next_refit,
             finished: self.finished,
             rng: self.rng.state(),
+            pending: self.pending.clone(),
         }
     }
 
@@ -758,6 +1049,7 @@ where
         self.next_refit = state.next_refit;
         self.finished = state.finished;
         self.rng = Pcg64::from_state(state.rng.0, state.rng.1);
+        self.pending = state.pending;
     }
 
     /// Signal the end of the run to the observers (fired once; later
@@ -867,9 +1159,12 @@ mod tests {
             match event {
                 BoEvent::InitDone { .. } => c.0 += 1,
                 BoEvent::Proposal { .. } => c.1 += 1,
-                BoEvent::Observation { .. } => c.2 += 1,
+                BoEvent::Observation { .. }
+                | BoEvent::TellNoisy { .. }
+                | BoEvent::TellConstrained { .. } => c.2 += 1,
                 BoEvent::Refit { .. } => c.3 += 1,
                 BoEvent::Stopped { .. } => c.4 += 1,
+                BoEvent::AskPending { .. } => {}
             }
         }
     }
@@ -909,6 +1204,9 @@ mod tests {
                 BoEvent::InitDone { .. } => "init_done",
                 BoEvent::Proposal { .. } => "proposal",
                 BoEvent::Observation { .. } => "observation",
+                BoEvent::TellNoisy { .. } => "tell_noisy",
+                BoEvent::TellConstrained { .. } => "tell_constrained",
+                BoEvent::AskPending { .. } => "ask_pending",
                 BoEvent::Refit { .. } => "refit",
                 BoEvent::Stopped { .. } => "stopped",
             };
@@ -960,5 +1258,91 @@ mod tests {
         assert!(core.best().is_none());
         core.observe(&[0.7], -3.0);
         assert_eq!(core.best().unwrap().1, -3.0);
+    }
+
+    #[test]
+    fn zero_noise_tell_is_the_exact_tell_code_path() {
+        // the normalized record must drive the homoskedastic fast path:
+        // no per-observation noise is retained, and the emitted event is
+        // a plain Observation (checked via the Counter observer above,
+        // which tallies the three tell flavors together)
+        let mut a = make_core();
+        let mut b = make_core();
+        for (i, x) in [0.1, 0.4, 0.7].iter().enumerate() {
+            a.observe(&[*x], i as f64);
+            b.try_observe(&Observation::noisy(vec![*x], i as f64, 0.0)).unwrap();
+        }
+        assert!(!b.model.has_noisy_observations());
+        let (ma, va) = a.model.predict(&[0.5]);
+        let (mb, vb) = b.model.predict(&[0.5]);
+        assert_eq!(ma.to_bits(), mb.to_bits());
+        assert_eq!(va.to_bits(), vb.to_bits());
+        assert_eq!(a.rng.state(), b.rng.state());
+    }
+
+    #[test]
+    fn constraint_arity_is_rejected_before_mutation() {
+        let mut core = make_core(); // unconstrained model: 0 channels
+        let err = core
+            .try_observe(&Observation::exact(vec![0.5], 1.0).with_constraints(vec![0.3]))
+            .unwrap_err();
+        assert_eq!(err, BoError::ConstraintArity { expected: 0, got: 1 });
+        assert_eq!(core.evaluations(), 0, "rejected tell must not count");
+        assert_eq!(core.model.n_samples(), 0, "rejected tell must not enter the model");
+    }
+
+    #[test]
+    fn infeasible_observations_never_become_incumbent() {
+        use crate::model::ModelBank;
+        let mk = || Gp::new(Matern52::new(1), DataMean::default(), 1e-3);
+        let bank = ModelBank::new(mk(), vec![mk()]);
+        let mut core = BoCore::new(bank, Ucb::default(), RandomPoint::new(16), 1, 9);
+        core.try_observe(&Observation::exact(vec![0.3], 5.0).with_constraints(vec![-0.2]))
+            .unwrap();
+        assert!(core.best().is_none(), "infeasible can't be the incumbent");
+        core.try_observe(&Observation::exact(vec![0.6], 1.0).with_constraints(vec![0.4]))
+            .unwrap();
+        assert_eq!(core.best().unwrap().1, 1.0, "feasible lower value wins");
+        assert_eq!(core.model.constraint(0).n_samples(), 2);
+    }
+
+    #[test]
+    fn pending_points_register_fantasize_and_retire() {
+        let mut core = make_core().with_async_pending(true);
+        assert!(core.async_pending());
+        // warm up the model so asks are model-guided
+        core.observe(&[0.2], -1.0);
+        core.observe(&[0.8], 1.0);
+        let a = core.propose_pending();
+        let b = core.propose_pending();
+        let c = core.propose_pending();
+        assert_eq!(core.pending_count(), 3);
+        // out-of-order retirement: tell b, then c, then a
+        core.observe(&b, 0.1);
+        assert_eq!(core.pending_count(), 2);
+        core.observe(&c, 0.2);
+        core.observe(&a, 0.3);
+        assert_eq!(core.pending_count(), 0);
+        // an out-of-band tell (never asked) leaves pending untouched
+        let d = core.propose_pending();
+        core.observe(&[0.123], 0.0);
+        assert_eq!(core.pending_count(), 1);
+        core.observe(&d, 0.0);
+        assert_eq!(core.pending_count(), 0);
+    }
+
+    #[test]
+    fn pending_state_survives_export_import() {
+        let mut core = make_core().with_async_pending(true);
+        core.observe(&[0.2], -1.0);
+        let a = core.propose_pending();
+        let state = core.export_state();
+        assert_eq!(state.pending.len(), 1);
+        let mut fresh = make_core().with_async_pending(true);
+        fresh.observe(&[0.2], -1.0);
+        fresh.import_state(state);
+        assert_eq!(fresh.pending_count(), 1);
+        fresh.observe(&a, 0.5);
+        assert_eq!(fresh.pending_count(), 0, "restored pending point retires");
     }
 }

@@ -32,14 +32,14 @@
 //! let best = opt.optimize(&FnEval::new(2, |x: &[f64]| -(x[0] * x[0] + x[1] * x[1])));
 //! ```
 
-use crate::acqui::{AcquiFn, Ucb};
+use crate::acqui::{AcquiFn, PofWeighted, Ucb};
 use crate::bayes_opt::core::{BatchStrategy, BoCore, BoError, Domain, Observer, RefitSchedule};
 use crate::bayes_opt::BOptimizer;
 use crate::coordinator::service::{AskTellServer, ServerHandle};
 use crate::init::{Initializer, NoInit, RandomSampling};
 use crate::kernel::{Kernel, Matern52};
 use crate::mean::{DataMean, MeanFn};
-use crate::model::{gp::Gp, AdaptiveModel, HpOptConfig};
+use crate::model::{gp::Gp, AdaptiveModel, HpOptConfig, ModelBank};
 use crate::opt::{Chained, NelderMead, Optimizer, OptimizerExt, ParallelRepeater, RandomPoint};
 use crate::stop::{MaxIterations, StopCriterion};
 
@@ -76,6 +76,8 @@ pub struct BoDef<
     domain: Domain,
     hp: Option<HpOptConfig>,
     observers: Vec<Box<dyn Observer>>,
+    async_pending: bool,
+    n_constraints: usize,
 }
 
 impl BoDef {
@@ -98,6 +100,8 @@ impl BoDef {
             domain: Domain::unit(dim),
             hp: None,
             observers: Vec::new(),
+            async_pending: false,
+            n_constraints: 0,
         }
     }
 
@@ -136,6 +140,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -156,6 +162,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -176,6 +184,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -196,6 +206,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -216,6 +228,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -237,6 +251,8 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
             domain: self.domain,
             hp: self.hp,
             observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
         }
     }
 
@@ -328,6 +344,51 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
         self.observers.push(Box::new(observer));
         self
     }
+
+    /// Enable asynchronous pending-point mode: every ask registers a
+    /// pending trial that later proposals fantasize over
+    /// (kriging-believer mean lies) until the matching tell retires it,
+    /// so q workers can ask and tell in any interleaving. With strictly
+    /// alternating ask/tell the trace is bit-identical to the
+    /// synchronous mode.
+    pub fn async_pending(mut self, on: bool) -> Self {
+        self.async_pending = on;
+        self
+    }
+
+    /// Declare `k` inequality-constraint channels (`>= 0` = feasible).
+    /// Consumed by [`build_constrained_server`](Self::build_constrained_server),
+    /// which banks one surrogate per channel next to the objective and
+    /// weights the acquisition by the probability of feasibility; every
+    /// tell must then carry exactly `k` constraint values. Ignored by
+    /// the unconstrained build paths.
+    pub fn constraints(mut self, k: usize) -> Self {
+        self.n_constraints = k;
+        self
+    }
+
+    /// Rewrap the acquisition in place (used by the constrained build
+    /// path to compose [`PofWeighted`] around whatever base was set).
+    fn map_acquisition<A2>(self, f: impl FnOnce(A) -> A2) -> BoDef<K, Mn, A2, I, O, S> {
+        BoDef {
+            dim: self.dim,
+            kernel: self.kernel,
+            mean: self.mean,
+            acquisition: f(self.acquisition),
+            initializer: self.initializer,
+            inner_opt: self.inner_opt,
+            stop: self.stop,
+            noise: self.noise,
+            seed: self.seed,
+            refit: self.refit,
+            batch: self.batch,
+            domain: self.domain,
+            hp: self.hp,
+            observers: self.observers,
+            async_pending: self.async_pending,
+            n_constraints: self.n_constraints,
+        }
+    }
 }
 
 impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S>
@@ -361,12 +422,15 @@ where
             domain,
             hp,
             observers,
+            async_pending,
+            n_constraints,
         } = self;
-        let model = make(kernel, mean, noise, hp);
+        let model = make(kernel, mean, noise, hp, n_constraints);
         let mut core = BoCore::new(model, acquisition, inner_opt, dim, seed)
             .with_domain(domain)
             .with_refit(refit)
-            .with_batch_strategy(batch);
+            .with_batch_strategy(batch)
+            .with_async_pending(async_pending);
         for obs in observers {
             core.add_boxed_observer(obs);
         }
@@ -439,17 +503,56 @@ where
     {
         self.build_server().spawn()
     }
+
+    /// Build the **constrained** ask/tell frontend: a [`ModelBank`]
+    /// with one dense-GP surrogate per declared constraint channel
+    /// (see [`constraints`](Self::constraints)) next to the objective
+    /// GP, and the definition's acquisition wrapped in the
+    /// probability-of-feasibility weight ([`PofWeighted`]). Every tell
+    /// must carry one constraint value per channel (`>= 0` = feasible)
+    /// via `tell_constrained` / a typed
+    /// [`Observation`](crate::bayes_opt::Observation).
+    ///
+    /// With zero declared channels the bank degenerates to the plain
+    /// objective GP and [`PofWeighted`] passes the base score through
+    /// untouched, so the trace is bit-identical to
+    /// [`build_server`](Self::build_server).
+    pub fn build_constrained_server(
+        self,
+    ) -> AskTellServer<ModelBank<Gp<K, Mn>>, PofWeighted<A>, O>
+    where
+        K: Clone,
+        Mn: Clone,
+        A: AcquiFn<Gp<K, Mn>>,
+    {
+        self.map_acquisition(PofWeighted::new).into_server(make_dense_bank)
+    }
+
+    /// Threaded form of
+    /// [`build_constrained_server`](Self::build_constrained_server).
+    pub fn spawn_constrained_server(self) -> ServerHandle
+    where
+        K: Clone + Send + 'static,
+        Mn: Clone + Send + 'static,
+        A: AcquiFn<Gp<K, Mn>> + Send + 'static,
+        O: Send + 'static,
+        Gp<K, Mn>: Clone + Send + 'static,
+    {
+        self.build_constrained_server().spawn()
+    }
 }
 
 /// Surrogate constructor shape [`BoDef`] builds through: kernel, mean,
-/// noise, and the optional hyper-opt settings.
-type Make<K, Mn, M> = fn(K, Mn, f64, Option<HpOptConfig>) -> M;
+/// noise, the optional hyper-opt settings, and the constraint-channel
+/// count (ignored by the single-output surrogates).
+type Make<K, Mn, M> = fn(K, Mn, f64, Option<HpOptConfig>, usize) -> M;
 
 fn make_dense<K: Kernel, Mn: MeanFn>(
     kernel: K,
     mean: Mn,
     noise: f64,
     hp: Option<HpOptConfig>,
+    _constraints: usize,
 ) -> Gp<K, Mn> {
     let mut gp = Gp::new(kernel, mean, noise);
     if let Some(config) = hp {
@@ -463,12 +566,27 @@ fn make_adaptive<K: Kernel, Mn: MeanFn>(
     mean: Mn,
     noise: f64,
     hp: Option<HpOptConfig>,
+    _constraints: usize,
 ) -> AdaptiveModel<K, Mn> {
     let model = AdaptiveModel::new(kernel, mean, noise);
     match hp {
         Some(config) => model.with_hp_config(config),
         None => model,
     }
+}
+
+fn make_dense_bank<K: Kernel + Clone, Mn: MeanFn + Clone>(
+    kernel: K,
+    mean: Mn,
+    noise: f64,
+    hp: Option<HpOptConfig>,
+    constraints: usize,
+) -> ModelBank<Gp<K, Mn>> {
+    let objective = make_dense(kernel.clone(), mean.clone(), noise, hp.clone(), 0);
+    let members = (0..constraints)
+        .map(|_| make_dense(kernel.clone(), mean.clone(), noise, hp.clone(), 0))
+        .collect();
+    ModelBank::new(objective, members)
 }
 
 #[cfg(test)]

@@ -25,7 +25,8 @@ pub mod core;
 pub mod def;
 
 pub use self::core::{
-    BatchStrategy, BoCore, BoError, BoEvent, CoreState, Domain, Observer, RefitSchedule,
+    BatchStrategy, BoCore, BoError, BoEvent, CoreState, Domain, Observation, Observer,
+    RefitSchedule,
 };
 pub use self::def::{BoDef, DefaultInnerOpt};
 

@@ -72,7 +72,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 
 use crate::acqui::AcquiFn;
-use crate::bayes_opt::core::{BoEvent, CoreState, Observer};
+use crate::bayes_opt::core::{BoError, BoEvent, CoreState, Observation, Observer};
 use crate::model::{ModelState, StateModel};
 use crate::obs::{self, Counter, Gauge, Phase};
 use crate::opt::Optimizer;
@@ -117,6 +117,10 @@ pub enum StudyError {
     Evicted(StudyId),
     /// The study (or server) was closed and accepts no more operations.
     Closed,
+    /// The optimizer rejected the observation before mutating any state
+    /// (e.g. [`BoError::ConstraintArity`] — the observation carried the
+    /// wrong number of constraint-channel values for the study's model).
+    Rejected(BoError),
     /// Durability I/O or log-replay failure (message carries the cause).
     Io(String),
 }
@@ -129,6 +133,7 @@ impl fmt::Display for StudyError {
                 write!(f, "{id} was evicted and has no durable state to rehydrate")
             }
             StudyError::Closed => write!(f, "study is closed"),
+            StudyError::Rejected(e) => write!(f, "observation rejected: {e}"),
             StudyError::Io(msg) => write!(f, "study durability error: {msg}"),
         }
     }
@@ -150,6 +155,31 @@ pub trait Study {
     /// Report an observation (user coordinates).
     fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError>;
 
+    /// Report a generalized [`Observation`] — per-trial noise variance
+    /// and/or constraint-channel values ride along with `(x, y)`.
+    /// [`StudyError::Rejected`] when the optimizer refuses it (e.g. a
+    /// constraint-arity mismatch), before any state mutates.
+    fn tell_observation(&mut self, obs: Observation) -> Result<(), StudyError>;
+
+    /// Convenience: report an observation with a per-trial noise
+    /// variance (`<= 0` or non-finite noise degrades to an exact tell).
+    fn tell_noisy(&mut self, x: &[f64], y: f64, noise: f64) -> Result<(), StudyError> {
+        self.tell_observation(Observation::noisy(x.to_vec(), y, noise))
+    }
+
+    /// Convenience: report an observation with constraint-channel values
+    /// (`>= 0` = feasible; one value per channel of the study's model).
+    fn tell_constrained(
+        &mut self,
+        x: &[f64],
+        y: f64,
+        constraints: &[f64],
+    ) -> Result<(), StudyError> {
+        self.tell_observation(
+            Observation::exact(x.to_vec(), y).with_constraints(constraints.to_vec()),
+        )
+    }
+
     /// Incumbent best `(x, value)`, if any data.
     fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError>;
 
@@ -164,6 +194,7 @@ pub(crate) trait CoreStudy: Send {
     fn ask(&mut self) -> Vec<f64>;
     fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>>;
     fn tell(&mut self, x: &[f64], y: f64);
+    fn tell_observation(&mut self, obs: &Observation) -> Result<(), BoError>;
     fn best(&self) -> Option<(Vec<f64>, f64)>;
     fn finish(&mut self);
     fn export_core(&self) -> CoreState;
@@ -182,7 +213,9 @@ where
     O: Optimizer + Send + 'static,
 {
     fn ask(&mut self) -> Vec<f64> {
-        self.core.propose()
+        // branches into the pending-aware proposal when the definition
+        // enabled async_pending — same path as the inline server
+        AskTellServer::ask(self)
     }
 
     fn ask_batch(&mut self, q: usize) -> Vec<Vec<f64>> {
@@ -191,6 +224,10 @@ where
 
     fn tell(&mut self, x: &[f64], y: f64) {
         self.core.observe(x, y);
+    }
+
+    fn tell_observation(&mut self, obs: &Observation) -> Result<(), BoError> {
+        self.core.try_observe(obs)
     }
 
     fn best(&self) -> Option<(Vec<f64>, f64)> {
@@ -508,6 +545,13 @@ impl StudyManager {
         self.run_op(id, move |s| s.tell(&x, y))
     }
 
+    /// Report a generalized [`Observation`] (noisy / constrained) for
+    /// `id`. [`StudyError::Rejected`] when the study's optimizer refuses
+    /// it (e.g. a constraint-arity mismatch) — the study stays usable.
+    pub fn tell_observation(&self, id: StudyId, obs: Observation) -> Result<(), StudyError> {
+        self.run_op(id, move |s| s.tell_observation(&obs))?.map_err(StudyError::Rejected)
+    }
+
     /// Incumbent best of `id`.
     pub fn best(&self, id: StudyId) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
         self.run_op(id, |s| s.best())
@@ -794,6 +838,10 @@ impl Study for ManagedStudy {
         self.mgr.tell(self.id, x, y)
     }
 
+    fn tell_observation(&mut self, obs: Observation) -> Result<(), StudyError> {
+        self.mgr.tell_observation(self.id, obs)
+    }
+
     fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
         self.mgr.best(self.id)
     }
@@ -858,7 +906,7 @@ impl StudySnapshot {
         use std::fmt::Write as _;
         let c = &self.core;
         let mut out = String::new();
-        out.push_str("limbo-study v1\n");
+        out.push_str("limbo-study v2\n");
         let _ = writeln!(out, "dim {}", c.dim);
         let _ = writeln!(out, "offset {}", self.offset);
         let _ = writeln!(out, "hp_refits {}", self.hp_refits);
@@ -888,6 +936,12 @@ impl StudySnapshot {
             out.push_str(&xs.join(" "));
             out.push('\n');
         }
+        let _ = writeln!(out, "pending {}", c.pending.len());
+        for x in &c.pending {
+            let xs: Vec<String> = x.iter().map(|&v| hex_f64(v)).collect();
+            out.push_str(&xs.join(" "));
+            out.push('\n');
+        }
         out.push_str("model\n");
         out.push_str(&self.model.to_text());
         out
@@ -896,9 +950,13 @@ impl StudySnapshot {
     fn from_text(text: &str) -> Result<Self, String> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty snapshot")?;
-        if header.trim() != "limbo-study v1" {
-            return Err(format!("not a limbo-study snapshot: {header:?}"));
-        }
+        // v1 predates the async-pending set (treated as empty); v2 adds
+        // the `pending` section between `init_queue` and `model`
+        let version: u8 = match header.trim() {
+            "limbo-study v1" => 1,
+            "limbo-study v2" => 2,
+            other => return Err(format!("not a limbo-study snapshot: {other:?}")),
+        };
         let dim = parse_usize(field(lines.next(), "dim")?)?;
         let offset = parse_u64(field(lines.next(), "offset")?)?;
         let hp_refits = parse_u64(field(lines.next(), "hp_refits")?)?;
@@ -931,6 +989,15 @@ impl StudySnapshot {
             let row = lines.next().ok_or("snapshot truncated in init_queue")?;
             init_queue.push(parse_hex_point(row)?);
         }
+        let mut pending = Vec::new();
+        if version >= 2 {
+            let n_pending = parse_usize(field(lines.next(), "pending")?)?;
+            pending.reserve(n_pending);
+            for _ in 0..n_pending {
+                let row = lines.next().ok_or("snapshot truncated in pending")?;
+                pending.push(parse_hex_point(row)?);
+            }
+        }
         let model_marker = lines.next().ok_or("snapshot truncated before model")?;
         if model_marker.trim() != "model" {
             return Err(format!("expected \"model\" line, got {model_marker:?}"));
@@ -941,6 +1008,7 @@ impl StudySnapshot {
             core: CoreState {
                 dim,
                 init_queue,
+                pending,
                 init_total,
                 init_served,
                 init_observed,
@@ -1014,6 +1082,23 @@ fn rehydrate(
                 let _ = study.ask_batch(*q);
             }
             ReplayEvent::Observation { x, y, .. } => study.tell(x, *y),
+            ReplayEvent::TellNoisy { x, y, noise, .. } => study
+                .tell_observation(&Observation::noisy(x.clone(), *y, *noise))
+                .map_err(|e| StudyError::Io(format!("replay rejected a noisy tell: {e}")))?,
+            ReplayEvent::TellConstrained { x, y, noise, constraints, .. } => {
+                let base = match noise {
+                    Some(nv) => Observation::noisy(x.clone(), *y, *nv),
+                    None => Observation::exact(x.clone(), *y),
+                };
+                study
+                    .tell_observation(&base.with_constraints(constraints.clone()))
+                    .map_err(|e| {
+                        StudyError::Io(format!("replay rejected a constrained tell: {e}"))
+                    })?;
+            }
+            // pending registrations are re-derived by the replayed asks
+            // above — the logged record is for audit, not replay
+            ReplayEvent::AskPending { .. } => {}
             ReplayEvent::InitDone { .. } | ReplayEvent::Refit { .. } => {}
             ReplayEvent::Stopped { .. } => {
                 study.finish();
@@ -1155,6 +1240,7 @@ mod tests {
         let core = CoreState {
             dim: 2,
             init_queue: vec![vec![0.1, 0.9], vec![std::f64::consts::PI, 1.0 / 3.0]],
+            pending: vec![vec![0.5, 0.25], vec![1e-300, -0.0]],
             init_total: 4,
             init_served: 2,
             init_observed: 2,

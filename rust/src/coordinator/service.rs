@@ -28,7 +28,7 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::acqui::{AcquiFn, Ucb};
-use crate::bayes_opt::core::{BoCore, Domain, Observer, RefitSchedule};
+use crate::bayes_opt::core::{BoCore, BoError, Domain, Observation, Observer, RefitSchedule};
 use crate::kernel::Matern52;
 use crate::mean::DataMean;
 use crate::model::{AdaptiveModel, Gp, Model};
@@ -46,6 +46,9 @@ enum Request {
     AskBatch(usize, mpsc::Sender<Vec<Vec<f64>>>),
     /// Report an observation.
     Tell(Vec<f64>, f64),
+    /// Report a generalized [`Observation`] (noisy / constrained),
+    /// acknowledged so arity errors reach the caller.
+    TellObs(Box<Observation>, mpsc::Sender<Result<(), BoError>>),
     /// Ask for the incumbent best (x, value).
     Best(mpsc::Sender<Option<(Vec<f64>, f64)>>),
     Shutdown,
@@ -138,9 +141,19 @@ where
 
     /// Next suggested trial: a queued initial-design point if the server
     /// was built from a definition with one, a random probe before any
-    /// data, else the acquisition maximizer.
-    pub fn ask(&mut self) -> Vec<f64> {
-        self.core.propose()
+    /// data, else the acquisition maximizer. When the core runs in
+    /// async-pending mode ([`crate::bayes_opt::BoDef::async_pending`]),
+    /// the proposal also fantasizes over outstanding trials and registers
+    /// itself as pending, so concurrent workers never get duplicates.
+    pub fn ask(&mut self) -> Vec<f64>
+    where
+        M: Clone,
+    {
+        if self.core.async_pending() {
+            self.core.propose_pending()
+        } else {
+            self.core.propose()
+        }
     }
 
     /// Propose `q` diverse trials to run in parallel, using the
@@ -158,6 +171,14 @@ where
     /// refit (see [`with_refit`](Self::with_refit)).
     pub fn tell(&mut self, x: &[f64], y: f64) {
         self.core.observe(x, y);
+    }
+
+    /// Report a generalized [`Observation`] — per-trial noise and/or
+    /// constraint-channel values ride along with `(x, y)`. Fails with
+    /// [`BoError::ConstraintArity`] (before any state mutates) when the
+    /// observation's constraint count does not match the model's.
+    pub fn tell_observation(&mut self, obs: &Observation) -> Result<(), BoError> {
+        self.core.try_observe(obs)
     }
 
     /// Incumbent best.
@@ -195,6 +216,9 @@ where
                         let _ = reply.send(self.ask_batch(q));
                     }
                     Request::Tell(x, y) => self.tell(&x, y),
+                    Request::TellObs(obs, reply) => {
+                        let _ = reply.send(self.core.try_observe(&obs));
+                    }
                     Request::Best(reply) => {
                         let _ = reply.send(self.best());
                     }
@@ -218,7 +242,7 @@ where
     O: Optimizer + 'static,
 {
     fn ask(&mut self) -> Result<Vec<f64>, StudyError> {
-        Ok(self.core.propose())
+        Ok(AskTellServer::ask(self))
     }
 
     fn ask_batch(&mut self, q: usize) -> Result<Vec<Vec<f64>>, StudyError> {
@@ -228,6 +252,10 @@ where
     fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError> {
         self.core.observe(x, y);
         Ok(())
+    }
+
+    fn tell_observation(&mut self, obs: Observation) -> Result<(), StudyError> {
+        self.core.try_observe(&obs).map_err(StudyError::Rejected)
     }
 
     fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
@@ -289,6 +317,17 @@ impl ServerHandle {
         self.tx.send(Request::Tell(x, y)).map_err(|_| StudyError::Closed)
     }
 
+    /// Report a generalized [`Observation`] (blocks for the server's
+    /// acknowledgement, unlike the fire-and-forget [`tell`](Self::tell),
+    /// so a constraint-arity mistake surfaces as
+    /// [`StudyError::Rejected`] instead of vanishing on a worker
+    /// thread). [`StudyError::Closed`] once the server is gone.
+    pub fn try_tell_observation(&self, obs: Observation) -> Result<(), StudyError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Request::TellObs(Box::new(obs), tx)).map_err(|_| StudyError::Closed)?;
+        rx.recv().map_err(|_| StudyError::Closed)?.map_err(StudyError::Rejected)
+    }
+
     /// Incumbent best. Panics if the server is gone; see
     /// [`try_best`](Self::try_best).
     pub fn best(&self) -> Option<(Vec<f64>, f64)> {
@@ -318,6 +357,10 @@ impl Study for ServerHandle {
 
     fn tell(&mut self, x: &[f64], y: f64) -> Result<(), StudyError> {
         self.try_tell(x.to_vec(), y)
+    }
+
+    fn tell_observation(&mut self, obs: Observation) -> Result<(), StudyError> {
+        self.try_tell_observation(obs)
     }
 
     fn best(&self) -> Result<Option<(Vec<f64>, f64)>, StudyError> {
@@ -526,6 +569,49 @@ mod tests {
         // refits fired at n = 8 and n = 16 (doubling schedule)
         assert_eq!(srv.core.model.hp_opt.refits(), 2);
         assert_ne!(srv.core.model.hp_vector(), start_hp, "refit should move hyper-params");
+    }
+
+    #[test]
+    fn handle_rejects_constraint_arity_mismatch_and_survives() {
+        let handle = make_server().spawn();
+        let obs = Observation::exact(vec![0.5], -1.0).with_constraints(vec![1.0]);
+        match handle.try_tell_observation(obs) {
+            Err(StudyError::Rejected(BoError::ConstraintArity { expected, got })) => {
+                assert_eq!(expected, 0);
+                assert_eq!(got, 1);
+            }
+            other => panic!("expected an arity rejection, got {other:?}"),
+        }
+        // the rejection must not have wedged or killed the server
+        let x = handle.ask();
+        handle.tell(x, -0.5);
+        assert!(handle.best().is_some());
+    }
+
+    #[test]
+    fn async_pending_server_interleaves_out_of_order_tells() {
+        let mut srv = BoDef::service(1)
+            .seed(23)
+            .async_pending(true)
+            .inner_opt(RandomPoint::new(32).then(NelderMead::default()).restarts(2, 2))
+            .build_server();
+        let f = |x: &[f64]| -(x[0] - 0.3).powi(2);
+        // three asks before any tell — all outstanding at once
+        let a = srv.ask();
+        let b = srv.ask();
+        let c = srv.ask();
+        assert_eq!(srv.core.pending_count(), 3);
+        // tells arrive out of order; each retires its pending entry
+        srv.tell(&c, f(&c));
+        srv.tell(&a, f(&a));
+        srv.tell(&b, f(&b));
+        assert_eq!(srv.core.pending_count(), 0);
+        for _ in 0..10 {
+            let x = srv.ask();
+            srv.tell(&x, f(&x));
+        }
+        let (_, bv) = srv.best().unwrap();
+        assert!(bv > -0.05, "async-pending best={bv}");
     }
 
     #[test]

@@ -137,6 +137,72 @@
 //! [`coordinator::ManagedStudy`] — so driver code is generic over where
 //! the study runs. `benches/manager_load.rs` tracks multiplexing
 //! throughput and tail ask latency in CI.
+//!
+//! # Scenarios: noisy, constrained, asynchronous
+//!
+//! Real evaluations are rarely the exact, sequential, unconstrained
+//! ideal. The observation path is built around one typed record —
+//! [`bayes_opt::Observation`] — so the same ask/tell surface covers all
+//! three deviations.
+//!
+//! **Noisy observations.** Attach a per-trial noise *variance* to any
+//! tell; it is added to that observation's diagonal entry of the train
+//! Gram (heteroskedastic regression), and once any noise is present the
+//! acquisition's incumbent switches from best raw sample to best
+//! *predicted mean* — a lucky noise spike must not freeze the
+//! improvement threshold:
+//!
+//! ```no_run
+//! use limbo::prelude::*;
+//!
+//! let mut srv = BoDef::new(1).seed(7).build_server();
+//! let x = srv.ask();
+//! // y was averaged over few replicates: report its noise variance
+//! srv.tell_observation(&Observation::noisy(x, 0.31, 0.05)).unwrap();
+//! ```
+//!
+//! **Constraints.** Declare `k` constraint channels on the definition
+//! and build a constrained server: the model becomes a
+//! [`model::ModelBank`] (objective + one surrogate per channel, refit
+//! together), the acquisition is wrapped in
+//! [`acqui::PofWeighted`] (probability-of-feasibility weighting,
+//! `>= 0` = feasible), and only feasible observations become the
+//! incumbent. Every tell must carry one value per channel:
+//!
+//! ```no_run
+//! use limbo::prelude::*;
+//!
+//! let mut srv = BoDef::new(2)
+//!     .acquisition(Ei::default())
+//!     .constraints(1)
+//!     .seed(7)
+//!     .build_constrained_server();
+//! let x = srv.ask();
+//! let c = 0.25 - (x[0] - 0.5).powi(2) - (x[1] - 0.5).powi(2);
+//! srv.tell_observation(&Observation::exact(x.clone(), -x[0]).with_constraints(vec![c]))
+//!     .unwrap();
+//! ```
+//!
+//! **Asynchronous workers.** With `async_pending(true)`, an ask
+//! registers its proposal as *pending* and later proposals fantasize
+//! over the outstanding set (kriging-believer mean lies into a scratch
+//! model), so `q` workers can interleave ask/tell in any order without
+//! receiving duplicate points; each tell retires its pending entry:
+//!
+//! ```no_run
+//! use limbo::prelude::*;
+//!
+//! let handle = BoDef::new(1).seed(7).async_pending(true).build_server().spawn();
+//! let (a, b) = (handle.ask(), handle.ask()); // both outstanding at once
+//! handle.tell(b, 0.1); // tells may arrive in any order
+//! handle.tell(a, 0.4);
+//! ```
+//!
+//! All three compose with durability: the generalized tells serialize
+//! through [`stat::JsonlObserver`] (`tell_noisy` / `tell_constrained` /
+//! `ask_pending` records), replay through [`stat::ReplayEvent`], and a
+//! killed noisy/constrained study recovers bit-exact through the
+//! [`coordinator::StudyManager`] snapshot + log-tail path.
 
 pub mod acqui;
 pub mod baseline;
@@ -162,11 +228,11 @@ pub mod testing;
 pub mod prelude {
     pub use crate::acqui::{
         AcquiContext, AcquiFn, AcquiObjective, BatchAcquiFn, BatchAcquiObjective, Ei, GpUcb,
-        Pi, QEi, Ucb,
+        Pi, PofWeighted, QEi, Ucb,
     };
     pub use crate::bayes_opt::{
         BOptimizer, BatchStrategy, Best, BoCore, BoDef, BoError, BoEvent, CoreState, Domain,
-        Evaluator, FnEval, Observer, RefitSchedule,
+        Evaluator, FnEval, Observation, Observer, RefitSchedule,
     };
     pub use crate::benchfns::TestFunction;
     pub use crate::coordinator::{
@@ -177,8 +243,8 @@ pub mod prelude {
     pub use crate::kernel::{Kernel, Matern32, Matern52, SquaredExpArd};
     pub use crate::mean::{ConstantMean, DataMean, MeanFn, ZeroMean};
     pub use crate::model::{
-        gp::Gp, AdaptiveModel, GpState, Model, ModelState, SgpConfig, SgpState, SparseGp,
-        StateModel,
+        gp::Gp, AdaptiveModel, GpState, Model, ModelBank, ModelState, SgpConfig, SgpState,
+        SparseGp, StateModel,
     };
     pub use crate::opt::{
         Cmaes, Direct, NelderMead, Objective, Optimizer, OptimizerExt, PopulationSearch,

@@ -1,0 +1,233 @@
+//! Constraint-model bank — one surrogate per output channel.
+//!
+//! Constrained BO needs a posterior over each inequality constraint as
+//! well as the objective (probability-of-feasibility weighting, see
+//! [`crate::acqui::constrained::PofWeighted`]). [`ModelBank`] packages
+//! an objective surrogate plus one surrogate per constraint channel
+//! behind the plain [`Model`] trait: every single-output operation
+//! (predict, fit, incumbent bookkeeping) delegates to the objective
+//! member, so a bank drops into [`crate::bayes_opt::BoCore`] unchanged,
+//! while the constraint intake
+//! ([`Model::add_constraint_sample`]) and the joint refit
+//! ([`Model::optimize_hyperparams`]) fan out across all members at the
+//! same refit barrier.
+//!
+//! The feasibility convention matches the related libraries: a
+//! constraint channel value `>= 0` is feasible.
+
+use crate::la::Matrix;
+use crate::model::serde::{BankState, ModelState, StateModel};
+use crate::model::Model;
+
+/// An objective surrogate plus one surrogate per constraint channel.
+///
+/// All members share the same input space; constraint surrogates are
+/// fed through [`Model::add_constraint_sample`] with one value per
+/// channel, paired with the objective observation at the same `x`.
+#[derive(Clone)]
+pub struct ModelBank<M> {
+    /// The objective surrogate — the model every single-output
+    /// delegation targets.
+    pub objective: M,
+    /// One surrogate per constraint channel (value `>= 0` = feasible).
+    pub constraints: Vec<M>,
+}
+
+impl<M: Model> ModelBank<M> {
+    /// Bank an objective model with `constraints` channel surrogates
+    /// (typically clones of the objective's empty configuration).
+    pub fn new(objective: M, constraints: Vec<M>) -> Self {
+        Self { objective, constraints }
+    }
+
+    /// Borrow the constraint surrogate for channel `j`.
+    pub fn constraint(&self, j: usize) -> &M {
+        &self.constraints[j]
+    }
+}
+
+impl<M: Model> Model for ModelBank<M> {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) {
+        self.objective.fit(xs, ys);
+    }
+
+    fn add_sample(&mut self, x: &[f64], y: f64) {
+        self.objective.add_sample(x, y);
+    }
+
+    fn add_sample_noisy(&mut self, x: &[f64], y: f64, extra_var: f64) {
+        self.objective.add_sample_noisy(x, y, extra_var);
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        self.objective.predict(x)
+    }
+
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        self.objective.predict_batch(xs)
+    }
+
+    fn predict_joint(&self, xs: &[Vec<f64>]) -> (Vec<f64>, Matrix) {
+        self.objective.predict_joint(xs)
+    }
+
+    fn n_samples(&self) -> usize {
+        self.objective.n_samples()
+    }
+
+    fn dim(&self) -> usize {
+        self.objective.dim()
+    }
+
+    fn best_observation(&self) -> Option<f64> {
+        self.objective.best_observation()
+    }
+
+    fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
+        self.objective.best_sample()
+    }
+
+    fn has_noisy_observations(&self) -> bool {
+        self.objective.has_noisy_observations()
+    }
+
+    fn best_predicted_mean(&self) -> Option<f64> {
+        self.objective.best_predicted_mean()
+    }
+
+    fn n_constraint_channels(&self) -> usize {
+        self.constraints.len()
+    }
+
+    fn add_constraint_sample(&mut self, x: &[f64], cs: &[f64]) {
+        assert_eq!(
+            cs.len(),
+            self.constraints.len(),
+            "constraint arity mismatch (validated by the caller)"
+        );
+        for (m, &c) in self.constraints.iter_mut().zip(cs) {
+            m.add_sample(x, c);
+        }
+    }
+
+    /// Joint refit at the refit barrier: objective first, then every
+    /// constraint surrogate — all members see the same barrier, so a
+    /// checkpoint taken here is reproducible for the whole bank.
+    fn optimize_hyperparams(&mut self) {
+        self.objective.optimize_hyperparams();
+        for m in &mut self.constraints {
+            m.optimize_hyperparams();
+        }
+    }
+}
+
+impl<M: StateModel> StateModel for ModelBank<M> {
+    fn capture_state(&self) -> ModelState {
+        let mut members = Vec::with_capacity(1 + self.constraints.len());
+        members.push(self.objective.capture_state());
+        for m in &self.constraints {
+            members.push(m.capture_state());
+        }
+        ModelState::Bank(BankState { members })
+    }
+
+    fn restore_state(&mut self, state: &ModelState) -> Result<(), String> {
+        let bank = match state {
+            ModelState::Bank(b) => b,
+            _ => return Err("cannot restore a non-bank state into a model bank".into()),
+        };
+        if bank.members.len() != 1 + self.constraints.len() {
+            return Err(format!(
+                "bank arity mismatch: model has {} channels, state has {}",
+                self.constraints.len(),
+                bank.channels()
+            ));
+        }
+        self.objective.restore_state(&bank.members[0])?;
+        for (m, s) in self.constraints.iter_mut().zip(&bank.members[1..]) {
+            m.restore_state(s)?;
+        }
+        Ok(())
+    }
+
+    fn hp_refits(&self) -> u64 {
+        // members refit in lockstep at the shared barrier, so the
+        // objective's counter stands for the whole bank
+        self.objective.hp_refits()
+    }
+
+    fn set_hp_refits(&mut self, refits: u64) {
+        self.objective.set_hp_refits(refits);
+        for m in &mut self.constraints {
+            m.set_hp_refits(refits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Matern52;
+    use crate::mean::ZeroMean;
+    use crate::model::gp::Gp;
+    use crate::rng::Pcg64;
+
+    fn bank_with_disk_constraint() -> ModelBank<Gp<Matern52, ZeroMean>> {
+        let mk = || Gp::new(Matern52::new(2), ZeroMean, 0.01);
+        let mut bank = ModelBank::new(mk(), vec![mk()]);
+        let mut rng = Pcg64::seed(0xBA2);
+        for _ in 0..25 {
+            let x = rng.unit_point(2);
+            let y = -(x[0] - 0.3).powi(2) - (x[1] - 0.7).powi(2);
+            // feasible (>= 0) inside the disk of radius 0.4 around center
+            let c = 0.16 - (x[0] - 0.5).powi(2) - (x[1] - 0.5).powi(2);
+            bank.add_sample(&x, y);
+            bank.add_constraint_sample(&x, &[c]);
+        }
+        bank
+    }
+
+    #[test]
+    fn delegates_objective_and_learns_constraint() {
+        let bank = bank_with_disk_constraint();
+        assert_eq!(bank.n_constraint_channels(), 1);
+        assert_eq!(bank.n_samples(), 25);
+        assert_eq!(bank.constraint(0).n_samples(), 25);
+        // the constraint surrogate learned the disk: center feasible,
+        // corner infeasible
+        let (c_in, _) = bank.constraint(0).predict(&[0.5, 0.5]);
+        let (c_out, _) = bank.constraint(0).predict(&[0.02, 0.02]);
+        assert!(c_in > 0.0, "center should predict feasible: {c_in}");
+        assert!(c_out < 0.0, "corner should predict infeasible: {c_out}");
+        // objective delegation is exact
+        let (mu_bank, var_bank) = bank.predict(&[0.4, 0.6]);
+        let (mu_obj, var_obj) = bank.objective.predict(&[0.4, 0.6]);
+        assert_eq!(mu_bank.to_bits(), mu_obj.to_bits());
+        assert_eq!(var_bank.to_bits(), var_obj.to_bits());
+    }
+
+    #[test]
+    fn state_roundtrip_restores_every_member() {
+        let bank = bank_with_disk_constraint();
+        let state = bank.capture_state();
+        let text = state.to_text();
+        let parsed = ModelState::from_text(&text).unwrap();
+        assert_eq!(state, parsed);
+
+        let mk = || Gp::new(Matern52::new(2), ZeroMean, 0.01);
+        let mut fresh = ModelBank::new(mk(), vec![mk()]);
+        fresh.restore_state(&parsed).unwrap();
+        for probe in [[0.5, 0.5], [0.1, 0.9]] {
+            let (m1, v1) = bank.predict(&probe);
+            let (m2, v2) = fresh.predict(&probe);
+            assert!((m1 - m2).abs() < 1e-12 && (v1 - v2).abs() < 1e-12);
+            let (c1, _) = bank.constraint(0).predict(&probe);
+            let (c2, _) = fresh.constraint(0).predict(&probe);
+            assert!((c1 - c2).abs() < 1e-12, "{c1} vs {c2}");
+        }
+
+        // arity mismatch is a typed error, not a panic
+        let mut wrong = ModelBank::new(mk(), vec![mk(), mk()]);
+        assert!(wrong.restore_state(&parsed).is_err());
+    }
+}

@@ -29,6 +29,11 @@ pub struct Gp<K: Kernel, M: MeanFn> {
     pub hp_opt: KernelLFOpt,
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
+    /// Extra per-observation noise variance added to the train diagonal
+    /// (heteroskedastic intake). Empty when no observation ever carried
+    /// extra noise — the homoskedastic fast path; otherwise kept parallel
+    /// to `ys` with `0.0` for exact observations.
+    noise_vars: Vec<f64>,
     chol: CholeskyFactor,
     alpha: Vec<f64>,
     best: Option<f64>,
@@ -46,6 +51,7 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
             hp_opt: KernelLFOpt::default(),
             xs: Vec::new(),
             ys: Vec::new(),
+            noise_vars: Vec::new(),
             chol: CholeskyFactor::empty(),
             alpha: Vec::new(),
             best: None,
@@ -90,6 +96,36 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
         &self.ys
     }
 
+    /// Extra per-observation noise variances, parallel to
+    /// [`observations`](Self::observations) — or empty when every
+    /// observation is homoskedastic (no `add_sample_noisy` ever).
+    pub fn observation_noise_vars(&self) -> &[f64] {
+        &self.noise_vars
+    }
+
+    /// Full refit from `(x, y, extra noise variance)` triples: the
+    /// restore/migration path for a heteroskedastic data set. An
+    /// all-zero (or empty) `noise_vars` normalizes to the homoskedastic
+    /// representation, so the round-trip through
+    /// [`observation_noise_vars`](Self::observation_noise_vars) is exact.
+    pub fn fit_noisy(&mut self, xs: &[Vec<f64>], ys: &[f64], noise_vars: &[f64]) {
+        assert!(
+            noise_vars.is_empty() || noise_vars.len() == ys.len(),
+            "noise_vars must be empty or parallel to ys"
+        );
+        if noise_vars.iter().any(|&v| v > 0.0) {
+            self.noise_vars = noise_vars.iter().map(|&v| v.max(0.0)).collect();
+        } else {
+            self.noise_vars.clear();
+        }
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.best = ys.iter().cloned().fold(None, |b: Option<f64>, v| {
+            Some(b.map_or(v, |b| b.max(v)))
+        });
+        self.refit();
+    }
+
     /// Prior mean value at `x` (data-dependent means already updated).
     pub fn mean_value(&self, x: &[f64]) -> f64 {
         self.mean.eval(x)
@@ -117,6 +153,13 @@ impl<K: Kernel, M: MeanFn> Gp<K, M> {
         let kdiag = self.kernel.variance() + self.noise_var();
         for i in 0..n {
             k[(i, i)] = kdiag;
+        }
+        // heteroskedastic rows widen their own diagonal entry only; the
+        // `!= 0.0` guard keeps the homoskedastic path bit-identical
+        for (i, &nv) in self.noise_vars.iter().enumerate() {
+            if nv != 0.0 {
+                k[(i, i)] += nv;
+            }
         }
         k
     }
@@ -237,6 +280,7 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
         assert_eq!(xs.len(), ys.len());
         self.xs = xs.to_vec();
         self.ys = ys.to_vec();
+        self.noise_vars.clear();
         self.best = ys.iter().cloned().fold(None, |b: Option<f64>, v| {
             Some(b.map_or(v, |b| b.max(v)))
         });
@@ -244,10 +288,23 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
     }
 
     fn add_sample(&mut self, x: &[f64], y: f64) {
+        self.add_sample_noisy(x, y, 0.0);
+    }
+
+    fn add_sample_noisy(&mut self, x: &[f64], y: f64, extra_var: f64) {
         assert_eq!(x.len(), self.kernel.dim(), "sample dim mismatch");
         // incremental Cholesky extension: O(n^2)
         let b: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
-        let c = self.kernel.eval(x, x) + self.noise_var();
+        let mut c = self.kernel.eval(x, x) + self.noise_var();
+        if extra_var > 0.0 {
+            c += extra_var;
+        }
+        // become heteroskedastic lazily: only once the first noisy
+        // observation arrives does the parallel variance vector exist
+        if extra_var > 0.0 || !self.noise_vars.is_empty() {
+            self.noise_vars.resize(self.xs.len(), 0.0);
+            self.noise_vars.push(extra_var.max(0.0));
+        }
         self.xs.push(x.to_vec());
         self.ys.push(y);
         self.best = Some(self.best.map_or(y, |b| b.max(y)));
@@ -260,6 +317,21 @@ impl<K: Kernel, M: MeanFn> Model for Gp<K, M> {
             }
             Err(_) => self.refit(), // numerically degenerate: jittered refit
         }
+    }
+
+    fn has_noisy_observations(&self) -> bool {
+        !self.noise_vars.is_empty()
+    }
+
+    fn best_predicted_mean(&self) -> Option<f64> {
+        if self.xs.is_empty() {
+            return None;
+        }
+        self.predict_batch(&self.xs)
+            .into_iter()
+            .map(|(mu, _)| mu)
+            .filter(|mu| mu.is_finite())
+            .fold(None, |b: Option<f64>, mu| Some(b.map_or(mu, |b| b.max(mu))))
     }
 
     fn predict(&self, x: &[f64]) -> (f64, f64) {

@@ -8,13 +8,15 @@
 //! [`crate::runtime::XlaGp`] backs the same interface with AOT-compiled
 //! XLA artifacts (adapter in [`crate::coordinator`]).
 
+pub mod bank;
 pub mod gp;
 pub mod hp_opt;
 pub mod serde;
 pub mod sgp;
 
+pub use bank::ModelBank;
 pub use gp::Gp;
-pub use serde::{GpState, ModelState, SgpState, StateModel};
+pub use serde::{BankState, GpState, ModelState, SgpState, StateModel};
 pub use hp_opt::{HpOptConfig, KernelLFOpt, LmlModel};
 pub use sgp::{AdaptiveModel, SgpConfig, SparseGp};
 
@@ -41,6 +43,53 @@ pub trait Model: Send + Sync {
 
     /// Add one observation (implementations may do an incremental update).
     fn add_sample(&mut self, x: &[f64], y: f64);
+
+    /// Add one observation with `extra_var` of *additional* observation
+    /// noise variance on top of the model's homoskedastic `sigma_n^2` —
+    /// the heteroskedastic intake behind
+    /// [`tell_noisy`](crate::coordinator::Study::tell_noisy). The extra
+    /// variance widens the training diagonal for this row only, so a
+    /// known-noisy measurement pulls the posterior less than an exact
+    /// one. `extra_var <= 0.0` must be *exactly* equivalent to
+    /// [`add_sample`](Self::add_sample) (the degenerate-case parity the
+    /// API tests pin bit-for-bit). Default: ignore the extra variance.
+    fn add_sample_noisy(&mut self, x: &[f64], y: f64, extra_var: f64) {
+        let _ = extra_var;
+        self.add_sample(x, y);
+    }
+
+    /// Whether any fitted observation carries extra per-observation noise
+    /// ([`add_sample_noisy`](Self::add_sample_noisy) with a positive
+    /// variance). The improvement-based acquisitions switch their
+    /// incumbent from best raw observation to best *predicted mean* when
+    /// this is true — a single lucky noisy draw must not pin the EI/PI
+    /// threshold. Default `false` for noise-unaware models.
+    fn has_noisy_observations(&self) -> bool {
+        false
+    }
+
+    /// Best (max) posterior mean over the *training* inputs — the
+    /// incumbent under observation noise. `None` if the model has no data
+    /// or does not retain its training inputs. Default `None`.
+    fn best_predicted_mean(&self) -> Option<f64> {
+        None
+    }
+
+    /// Number of constraint channels this model carries surrogates for.
+    /// `0` for plain single-output models; [`bank::ModelBank`] reports
+    /// its constraint-surrogate count.
+    fn n_constraint_channels(&self) -> usize {
+        0
+    }
+
+    /// Feed one constraint observation vector (one value per channel,
+    /// same `x` as the paired objective sample) into the constraint
+    /// surrogates. No-op for models without constraint channels; the
+    /// caller validates arity against
+    /// [`n_constraint_channels`](Self::n_constraint_channels).
+    fn add_constraint_sample(&mut self, x: &[f64], cs: &[f64]) {
+        let _ = (x, cs);
+    }
 
     /// Posterior `(mean, variance)` of the latent function at `x`.
     fn predict(&self, x: &[f64]) -> (f64, f64);

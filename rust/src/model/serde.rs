@@ -10,12 +10,15 @@
 //! n <num samples>
 //! x <d floats>      (n lines)
 //! y <float>         (n lines)
+//! nv <float>        (0 or n lines: extra per-observation noise variance)
 //! ```
 //!
 //! [`SgpState`] extends the same layout for the sparse GP (header
 //! `limbo-sgp v1`, plus one `z <d floats>` line per inducing point), so a
 //! checkpoint restores the exact online-evolved inducing set rather than
-//! re-running the greedy selection.
+//! re-running the greedy selection. [`BankState`] (header `limbo-bank v1`)
+//! wraps a constraint-model bank: a `channels <k>` line followed by the
+//! k + 1 self-describing member sections (objective first).
 
 use std::io::Write;
 use std::path::Path;
@@ -32,6 +35,7 @@ struct ParsedBody {
     hp: Vec<f64>,
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
+    nv: Vec<f64>,
     zs: Vec<Vec<f64>>,
 }
 
@@ -52,6 +56,7 @@ fn parse_body(text: &str, expect_header: &str, allow_z: bool) -> Result<ParsedBo
     let mut n = None;
     let mut xs: Vec<Vec<f64>> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
+    let mut nv: Vec<f64> = Vec::new();
     let mut zs: Vec<Vec<f64>> = Vec::new();
     for line in lines {
         let mut parts = line.split_whitespace();
@@ -69,6 +74,7 @@ fn parse_body(text: &str, expect_header: &str, allow_z: bool) -> Result<ParsedBo
             }
             "x" => xs.push(rest),
             "y" => ys.push(first.ok_or_else(|| format!("missing value on {line:?}"))?),
+            "nv" => nv.push(first.ok_or_else(|| format!("missing value on {line:?}"))?),
             "z" if allow_z => zs.push(rest),
             _ => return Err(format!("unknown tag {tag:?}")),
         }
@@ -78,13 +84,16 @@ fn parse_body(text: &str, expect_header: &str, allow_z: bool) -> Result<ParsedBo
     if xs.len() != n || ys.len() != n {
         return Err(format!("expected {n} samples, got {}x/{}y", xs.len(), ys.len()));
     }
+    if !nv.is_empty() && nv.len() != n {
+        return Err(format!("expected 0 or {n} nv lines, got {}", nv.len()));
+    }
     if xs.iter().any(|x| x.len() != dim) {
         return Err("sample with wrong dimension".into());
     }
     if zs.iter().any(|z| z.len() != dim) {
         return Err("inducing point with wrong dimension".into());
     }
-    Ok(ParsedBody { dim, hp, xs, ys, zs })
+    Ok(ParsedBody { dim, hp, xs, ys, nv, zs })
 }
 
 /// Serializable snapshot of a GP's state.
@@ -98,6 +107,8 @@ pub struct GpState {
     pub xs: Vec<Vec<f64>>,
     /// Training observations.
     pub ys: Vec<f64>,
+    /// Extra per-observation noise variances (empty = homoskedastic).
+    pub noise_vars: Vec<f64>,
 }
 
 impl GpState {
@@ -108,6 +119,7 @@ impl GpState {
             hp: gp.hp_vector(),
             xs: gp.samples().to_vec(),
             ys: gp.observations().to_vec(),
+            noise_vars: gp.observation_noise_vars().to_vec(),
         }
     }
 
@@ -128,7 +140,7 @@ impl GpState {
         gp.learn_noise = true; // make set_hp_vector apply the stored noise
         gp.set_hp_vector(&self.hp);
         gp.learn_noise = learn_noise;
-        gp.fit(&self.xs, &self.ys);
+        gp.fit_noisy(&self.xs, &self.ys, &self.noise_vars);
         Ok(())
     }
 
@@ -152,13 +164,16 @@ impl GpState {
         for y in &self.ys {
             out.push_str(&format!("y {y:.17e}\n"));
         }
+        for v in &self.noise_vars {
+            out.push_str(&format!("nv {v:.17e}\n"));
+        }
         out
     }
 
     /// Parse from the text format.
     pub fn from_text(text: &str) -> Result<Self, String> {
         let body = parse_body(text, "limbo-gp v1", false)?;
-        Ok(Self { dim: body.dim, hp: body.hp, xs: body.xs, ys: body.ys })
+        Ok(Self { dim: body.dim, hp: body.hp, xs: body.xs, ys: body.ys, noise_vars: body.nv })
     }
 
     /// Write to a file.
@@ -199,6 +214,8 @@ pub struct SgpState {
     pub xs: Vec<Vec<f64>>,
     /// Training observations.
     pub ys: Vec<f64>,
+    /// Extra per-observation noise variances (empty = homoskedastic).
+    pub noise_vars: Vec<f64>,
     /// Inducing-point locations.
     pub zs: Vec<Vec<f64>>,
 }
@@ -211,6 +228,7 @@ impl SgpState {
             hp: sgp.hp_vector(),
             xs: sgp.samples().to_vec(),
             ys: sgp.observations().to_vec(),
+            noise_vars: sgp.observation_noise_vars().to_vec(),
             zs: sgp.inducing_points().to_vec(),
         }
     }
@@ -234,7 +252,7 @@ impl SgpState {
         // hyper-params first (no intermediate refit against stale data) —
         // fit_with_inducing performs the single full refit
         sgp.set_hp_vector_no_refit(&self.hp, true);
-        sgp.fit_with_inducing(&self.xs, &self.ys, self.zs.clone());
+        sgp.fit_with_inducing_noisy(&self.xs, &self.ys, &self.noise_vars, self.zs.clone());
         Ok(())
     }
 
@@ -258,6 +276,9 @@ impl SgpState {
         for y in &self.ys {
             out.push_str(&format!("y {y:.17e}\n"));
         }
+        for v in &self.noise_vars {
+            out.push_str(&format!("nv {v:.17e}\n"));
+        }
         for z in &self.zs {
             out.push('z');
             for v in z {
@@ -277,7 +298,14 @@ impl SgpState {
         if !body.zs.is_empty() && body.ys.is_empty() {
             return Err("sparse state with inducing points but no data".into());
         }
-        Ok(Self { dim: body.dim, hp: body.hp, xs: body.xs, ys: body.ys, zs: body.zs })
+        Ok(Self {
+            dim: body.dim,
+            hp: body.hp,
+            xs: body.xs,
+            ys: body.ys,
+            noise_vars: body.nv,
+            zs: body.zs,
+        })
     }
 
     /// Write to a file.
@@ -306,17 +334,86 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     }
 }
 
+/// Captured state of a [`crate::model::bank::ModelBank`]: the objective
+/// surrogate's state followed by one state per constraint channel. The
+/// text format is self-describing — a `limbo-bank v1` header, a
+/// `channels <k>` count, then the k + 1 member sections, each opening
+/// with its own `limbo-gp v1` / `limbo-sgp v1` header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankState {
+    /// Member states: objective first, then one per constraint channel.
+    pub members: Vec<ModelState>,
+}
+
+impl BankState {
+    /// Number of constraint channels (members beyond the objective).
+    pub fn channels(&self) -> usize {
+        self.members.len().saturating_sub(1)
+    }
+
+    /// Serialize to the text format (`limbo-bank v1`).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("limbo-bank v1\n");
+        out.push_str(&format!("channels {}\n", self.channels()));
+        for m in &self.members {
+            out.push_str(&m.to_text());
+        }
+        out
+    }
+
+    /// Parse from the text format.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().ok_or("empty file")?;
+        if header != "limbo-bank v1" {
+            return Err(format!("bad header {header:?}"));
+        }
+        let channels_line = lines.next().ok_or("missing channels line")?;
+        let channels = channels_line
+            .strip_prefix("channels ")
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .ok_or_else(|| format!("bad channels line {channels_line:?}"))?;
+        // split the remainder into member sections on the model headers
+        let mut sections: Vec<String> = Vec::new();
+        for line in lines {
+            if line == "limbo-gp v1" || line == "limbo-sgp v1" {
+                sections.push(String::new());
+            } else if sections.is_empty() {
+                return Err(format!("unexpected line {line:?} before first member"));
+            }
+            let s = sections.last_mut().expect("section started");
+            s.push_str(line);
+            s.push('\n');
+        }
+        if sections.len() != channels + 1 {
+            return Err(format!(
+                "expected {} member sections, got {}",
+                channels + 1,
+                sections.len()
+            ));
+        }
+        let members: Result<Vec<ModelState>, String> =
+            sections.iter().map(|s| ModelState::from_text(s)).collect();
+        Ok(Self { members: members? })
+    }
+}
+
 /// A captured model state of either representation — what a study
 /// checkpoint stores without knowing whether the surrogate had migrated
 /// to the sparse form yet. The text round-trip dispatches on the header
-/// line (`limbo-gp v1` vs `limbo-sgp v1`), so a snapshot file is
-/// self-describing.
+/// line (`limbo-gp v1` vs `limbo-sgp v1` vs `limbo-bank v1`), so a
+/// snapshot file is self-describing.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ModelState {
     /// Dense-GP state.
     Dense(GpState),
     /// Sparse-GP state (includes the inducing set).
     Sparse(SgpState),
+    /// Constraint-bank state (objective + constraint surrogates).
+    Bank(BankState),
 }
 
 impl ModelState {
@@ -325,6 +422,7 @@ impl ModelState {
         match self {
             ModelState::Dense(s) => s.to_text(),
             ModelState::Sparse(s) => s.to_text(),
+            ModelState::Bank(s) => s.to_text(),
         }
     }
 
@@ -338,15 +436,18 @@ impl ModelState {
         match header {
             "limbo-gp v1" => GpState::from_text(text).map(ModelState::Dense),
             "limbo-sgp v1" => SgpState::from_text(text).map(ModelState::Sparse),
+            "limbo-bank v1" => BankState::from_text(text).map(ModelState::Bank),
             other => Err(format!("bad header {other:?}")),
         }
     }
 
-    /// Number of training samples in the captured state.
+    /// Number of training samples in the captured state (the objective
+    /// member's, for a bank).
     pub fn n_samples(&self) -> usize {
         match self {
             ModelState::Dense(s) => s.ys.len(),
             ModelState::Sparse(s) => s.ys.len(),
+            ModelState::Bank(s) => s.members.first().map_or(0, |m| m.n_samples()),
         }
     }
 }

@@ -62,6 +62,10 @@ pub struct SparseGp<K: Kernel, M: MeanFn> {
     pub config: SgpConfig,
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
+    /// Extra per-observation noise variance added to FITC's Λ diagonal
+    /// (heteroskedastic intake). Empty when no observation ever carried
+    /// extra noise; otherwise parallel to `ys` with `0.0` for exact rows.
+    noise_vars: Vec<f64>,
     best: Option<f64>,
     inducing: InducingSet,
     /// chol(K_mm + jitter I)
@@ -99,6 +103,7 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
             config,
             xs: Vec::new(),
             ys: Vec::new(),
+            noise_vars: Vec::new(),
             best: None,
             inducing,
             l_mm: CholeskyFactor::empty(),
@@ -121,7 +126,7 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
         // carry the optimizer across the dense→sparse migration so its
         // settings and refit counter (restart-seed stream) survive
         sgp.hp_opt = gp.hp_opt.clone();
-        sgp.fit(gp.samples(), gp.observations());
+        sgp.fit_noisy(gp.samples(), gp.observations(), gp.observation_noise_vars());
         sgp
     }
 
@@ -148,6 +153,34 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     /// Training observations.
     pub fn observations(&self) -> &[f64] {
         &self.ys
+    }
+
+    /// Extra per-observation noise variances, parallel to
+    /// [`observations`](Self::observations) — or empty when every
+    /// observation is homoskedastic.
+    pub fn observation_noise_vars(&self) -> &[f64] {
+        &self.noise_vars
+    }
+
+    /// Full refit from `(x, y, extra noise variance)` triples — the
+    /// restore/migration path for a heteroskedastic data set. An all-zero
+    /// (or empty) `noise_vars` normalizes to the homoskedastic
+    /// representation.
+    pub fn fit_noisy(&mut self, xs: &[Vec<f64>], ys: &[f64], noise_vars: &[f64]) {
+        assert!(
+            noise_vars.is_empty() || noise_vars.len() == ys.len(),
+            "noise_vars must be empty or parallel to ys"
+        );
+        if noise_vars.iter().any(|&v| v > 0.0) {
+            self.noise_vars = noise_vars.iter().map(|&v| v.max(0.0)).collect();
+        } else {
+            self.noise_vars.clear();
+        }
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.best =
+            ys.iter().cloned().fold(None, |b: Option<f64>, v| Some(b.map_or(v, |b| b.max(v))));
+        self.refit_inner(true);
     }
 
     /// Current inducing-point locations.
@@ -183,7 +216,29 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
     /// Fit with an explicitly chosen inducing set (checkpoint restore /
     /// expert use); skips the greedy selection.
     pub fn fit_with_inducing(&mut self, xs: &[Vec<f64>], ys: &[f64], zs: Vec<Vec<f64>>) {
+        self.fit_with_inducing_noisy(xs, ys, &[], zs);
+    }
+
+    /// [`fit_with_inducing`](Self::fit_with_inducing) carrying extra
+    /// per-observation noise variances (empty = homoskedastic) — the
+    /// checkpoint-restore path for heteroskedastic studies.
+    pub fn fit_with_inducing_noisy(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        noise_vars: &[f64],
+        zs: Vec<Vec<f64>>,
+    ) {
         assert_eq!(xs.len(), ys.len());
+        assert!(
+            noise_vars.is_empty() || noise_vars.len() == ys.len(),
+            "noise_vars must be empty or parallel to ys"
+        );
+        if noise_vars.iter().any(|&v| v > 0.0) {
+            self.noise_vars = noise_vars.iter().map(|&v| v.max(0.0)).collect();
+        } else {
+            self.noise_vars.clear();
+        }
         self.xs = xs.to_vec();
         self.ys = ys.to_vec();
         self.best =
@@ -252,14 +307,21 @@ impl<K: Kernel, M: MeanFn> SparseGp<K, M> {
         let mut w = Vec::with_capacity(n);
         let mut resid = Vec::with_capacity(n);
         let mut scratch = vec![0.0; m];
-        for (x, &y) in self.xs.iter().zip(&self.ys) {
+        for (i, (x, &y)) in self.xs.iter().zip(&self.ys).enumerate() {
             let start = rows.len();
             for z in zs {
                 rows.push(self.kernel.eval(x, z));
             }
             l_mm.solve_lower_into(&rows[start..start + m], &mut scratch);
             let q = dot(&scratch, &scratch);
-            let lambda = (self.kernel.eval(x, x) - q).max(0.0) + noise;
+            let mut lambda = (self.kernel.eval(x, x) - q).max(0.0) + noise;
+            // heteroskedastic rows widen their own Λ entry only; the
+            // `!= 0.0` guard keeps the homoskedastic path bit-identical
+            if let Some(&nv) = self.noise_vars.get(i) {
+                if nv != 0.0 {
+                    lambda += nv;
+                }
+            }
             w.push(1.0 / lambda);
             resid.push(y - self.mean.eval(x));
         }
@@ -435,13 +497,24 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
         assert_eq!(xs.len(), ys.len());
         self.xs = xs.to_vec();
         self.ys = ys.to_vec();
+        self.noise_vars.clear();
         self.best =
             ys.iter().cloned().fold(None, |b: Option<f64>, v| Some(b.map_or(v, |b| b.max(v))));
         self.refit_inner(true);
     }
 
     fn add_sample(&mut self, x: &[f64], y: f64) {
+        self.add_sample_noisy(x, y, 0.0);
+    }
+
+    fn add_sample_noisy(&mut self, x: &[f64], y: f64, extra_var: f64) {
         assert_eq!(x.len(), self.kernel.dim(), "sample dim mismatch");
+        // become heteroskedastic lazily: only once the first noisy
+        // observation arrives does the parallel variance vector exist
+        if extra_var > 0.0 || !self.noise_vars.is_empty() {
+            self.noise_vars.resize(self.xs.len(), 0.0);
+            self.noise_vars.push(extra_var.max(0.0));
+        }
         self.xs.push(x.to_vec());
         self.ys.push(y);
         self.best = Some(self.best.map_or(y, |b| b.max(y)));
@@ -471,7 +544,10 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
                 let mut v = vec![0.0; m];
                 self.l_mm.solve_lower_into(&k_new, &mut v);
                 let q = dot(&v, &v);
-                let lambda = (self.kernel.eval(x, x) - q).max(0.0) + self.noise_var();
+                let mut lambda = (self.kernel.eval(x, x) - q).max(0.0) + self.noise_var();
+                if extra_var > 0.0 {
+                    lambda += extra_var;
+                }
                 let w_new = 1.0 / lambda;
                 rank1_update(&mut self.a_raw, w_new, &k_new);
                 self.rows.extend_from_slice(&k_new);
@@ -607,6 +683,21 @@ impl<K: Kernel, M: MeanFn> Model for SparseGp<K, M> {
 
     fn best_sample(&self) -> Option<(Vec<f64>, f64)> {
         crate::model::best_sample_of(&self.xs, &self.ys)
+    }
+
+    fn has_noisy_observations(&self) -> bool {
+        !self.noise_vars.is_empty()
+    }
+
+    fn best_predicted_mean(&self) -> Option<f64> {
+        if self.xs.is_empty() {
+            return None;
+        }
+        self.predict_batch(&self.xs)
+            .into_iter()
+            .map(|(mu, _)| mu)
+            .filter(|mu| mu.is_finite())
+            .fold(None, |b: Option<f64>, mu| Some(b.map_or(mu, |b| b.max(mu))))
     }
 
     /// ML-II on the **exact FITC marginal likelihood** — the inducing set

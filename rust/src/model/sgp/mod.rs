@@ -204,6 +204,28 @@ impl<K: Kernel, M: MeanFn> Model for AdaptiveModel<K, M> {
         self.migrate_if_due();
     }
 
+    fn add_sample_noisy(&mut self, x: &[f64], y: f64, extra_var: f64) {
+        match &mut self.inner {
+            AdaptiveInner::Dense(gp) => gp.add_sample_noisy(x, y, extra_var),
+            AdaptiveInner::Sparse(sgp) => sgp.add_sample_noisy(x, y, extra_var),
+        }
+        self.migrate_if_due();
+    }
+
+    fn has_noisy_observations(&self) -> bool {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.has_noisy_observations(),
+            AdaptiveInner::Sparse(sgp) => sgp.has_noisy_observations(),
+        }
+    }
+
+    fn best_predicted_mean(&self) -> Option<f64> {
+        match &self.inner {
+            AdaptiveInner::Dense(gp) => gp.best_predicted_mean(),
+            AdaptiveInner::Sparse(sgp) => sgp.best_predicted_mean(),
+        }
+    }
+
     fn predict(&self, x: &[f64]) -> (f64, f64) {
         match &self.inner {
             AdaptiveInner::Dense(gp) => gp.predict(x),

@@ -200,11 +200,14 @@ pub enum Counter {
     /// I/O errors swallowed by the `stat` writers (`RunLogger`,
     /// `JsonlObserver`) — nonzero means run files are incomplete.
     StatWriteFailures,
+    /// Torn trailing lines skipped by `stat::ReplayEvent::read_log`
+    /// (a crash mid-append left a partial final record).
+    ReplayTornLines,
 }
 
 impl Counter {
     /// Every counter, in declaration order.
-    pub const ALL: [Counter; 7] = [
+    pub const ALL: [Counter; 8] = [
         Counter::Refits,
         Counter::HpRestarts,
         Counter::InnerRestarts,
@@ -212,6 +215,7 @@ impl Counter {
         Counter::SparseMigrations,
         Counter::PoolJobs,
         Counter::StatWriteFailures,
+        Counter::ReplayTornLines,
     ];
 
     /// Number of counters.
@@ -227,6 +231,7 @@ impl Counter {
             Counter::SparseMigrations => "sparse_migrations",
             Counter::PoolJobs => "pool_jobs",
             Counter::StatWriteFailures => "stat_write_failures",
+            Counter::ReplayTornLines => "replay_torn_lines",
         }
     }
 }
@@ -242,12 +247,20 @@ pub enum Gauge {
     LiveStudies,
     /// Studies evicted to disk (rehydratable) in a `StudyManager`.
     EvictedStudies,
+    /// Proposals currently outstanding (asked, not yet told) in an
+    /// async-pending `BoCore`.
+    PendingTrials,
 }
 
 impl Gauge {
     /// Every gauge, in declaration order.
-    pub const ALL: [Gauge; 4] =
-        [Gauge::ModelSamples, Gauge::InducingPoints, Gauge::LiveStudies, Gauge::EvictedStudies];
+    pub const ALL: [Gauge; 5] = [
+        Gauge::ModelSamples,
+        Gauge::InducingPoints,
+        Gauge::LiveStudies,
+        Gauge::EvictedStudies,
+        Gauge::PendingTrials,
+    ];
 
     /// Number of gauges.
     pub const COUNT: usize = Gauge::ALL.len();
@@ -259,6 +272,7 @@ impl Gauge {
             Gauge::InducingPoints => "inducing_points",
             Gauge::LiveStudies => "live_studies",
             Gauge::EvictedStudies => "evicted_studies",
+            Gauge::PendingTrials => "pending_trials",
         }
     }
 }

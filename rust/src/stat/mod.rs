@@ -133,7 +133,9 @@ impl Drop for RunLogger {
 impl Observer for RunLogger {
     fn on_event(&mut self, event: &BoEvent) {
         match *event {
-            BoEvent::Observation { evaluations, x, y, best } => {
+            BoEvent::Observation { evaluations, x, y, best }
+            | BoEvent::TellNoisy { evaluations, x, y, best, .. }
+            | BoEvent::TellConstrained { evaluations, x, y, best, .. } => {
                 self.log_sample(evaluations, x, y, best);
             }
             BoEvent::Stopped { dim, evaluations, .. } => self.finish(dim, evaluations),
@@ -187,11 +189,16 @@ impl TraceHandle {
 
 impl Observer for TraceHandle {
     fn on_event(&mut self, event: &BoEvent) {
-        if let BoEvent::Observation { evaluations, x, y, best } = *event {
-            self.rows
-                .lock()
-                .expect("trace lock")
-                .push(TraceRow { evaluations, x: x.to_vec(), y, best });
+        match *event {
+            BoEvent::Observation { evaluations, x, y, best }
+            | BoEvent::TellNoisy { evaluations, x, y, best, .. }
+            | BoEvent::TellConstrained { evaluations, x, y, best, .. } => {
+                self.rows
+                    .lock()
+                    .expect("trace lock")
+                    .push(TraceRow { evaluations, x: x.to_vec(), y, best });
+            }
+            _ => {}
         }
     }
 }
@@ -283,6 +290,39 @@ impl Observer for JsonlObserver {
                 Self::fmt_f64(y),
                 Self::fmt_f64(best)
             ),
+            BoEvent::TellNoisy { evaluations, x, y, noise, best } => writeln!(
+                self.out,
+                concat!(
+                    r#"{{"event":"tell_noisy","evaluations":{},"x":{},"#,
+                    r#""y":{},"noise":{},"best":{}}}"#
+                ),
+                evaluations,
+                Self::fmt_point(x),
+                Self::fmt_f64(y),
+                Self::fmt_f64(noise),
+                Self::fmt_f64(best)
+            ),
+            BoEvent::TellConstrained { evaluations, x, y, noise, constraints, best } => writeln!(
+                self.out,
+                concat!(
+                    r#"{{"event":"tell_constrained","evaluations":{},"x":{},"#,
+                    r#""y":{},"noise":{},"constraints":{},"best":{}}}"#
+                ),
+                evaluations,
+                Self::fmt_point(x),
+                Self::fmt_f64(y),
+                match noise {
+                    Some(nv) => Self::fmt_f64(nv),
+                    None => "null".to_string(),
+                },
+                Self::fmt_point(constraints),
+                Self::fmt_f64(best)
+            ),
+            BoEvent::AskPending { iteration, x } => writeln!(
+                self.out,
+                r#"{{"event":"ask_pending","iteration":{iteration},"x":{}}}"#,
+                Self::fmt_point(x)
+            ),
             BoEvent::Refit { n_samples } => {
                 writeln!(self.out, r#"{{"event":"refit","n_samples":{n_samples}}}"#)
             }
@@ -331,6 +371,42 @@ pub enum ReplayEvent {
         y: f64,
         /// Incumbent best after this observation.
         best: f64,
+    },
+    /// `{"event":"tell_noisy",...}`
+    TellNoisy {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: Vec<f64>,
+        /// Observed value.
+        y: f64,
+        /// Per-observation noise variance (finite, `> 0`).
+        noise: f64,
+        /// Incumbent best after this observation.
+        best: f64,
+    },
+    /// `{"event":"tell_constrained",...}`
+    TellConstrained {
+        /// Total observations including this one.
+        evaluations: usize,
+        /// Evaluated point.
+        x: Vec<f64>,
+        /// Observed objective value.
+        y: f64,
+        /// Per-observation noise variance, if the tell was also noisy.
+        noise: Option<f64>,
+        /// Constraint-channel values (`>= 0` = feasible).
+        constraints: Vec<f64>,
+        /// Incumbent best after this observation.
+        best: f64,
+    },
+    /// `{"event":"ask_pending",...}` — audit record of an asynchronous
+    /// pending registration; replay re-derives it from the proposal.
+    AskPending {
+        /// Iteration counter at proposal time.
+        iteration: usize,
+        /// The pending point.
+        x: Vec<f64>,
     },
     /// `{"event":"refit",...}`
     Refit {
@@ -459,6 +535,30 @@ impl ReplayEvent {
                 y: json_f64(line, "y")?,
                 best: json_f64(line, "best")?,
             }),
+            "tell_noisy" => Ok(ReplayEvent::TellNoisy {
+                evaluations: json_usize(line, "evaluations")?,
+                x: json_point(json_field(line, "x")?)?,
+                y: json_f64(line, "y")?,
+                noise: json_f64(line, "noise")?,
+                best: json_f64(line, "best")?,
+            }),
+            "tell_constrained" => {
+                // noise is Option on the write side; `null` (NaN after
+                // json_f64) means the tell carried no noise
+                let noise = json_f64(line, "noise")?;
+                Ok(ReplayEvent::TellConstrained {
+                    evaluations: json_usize(line, "evaluations")?,
+                    x: json_point(json_field(line, "x")?)?,
+                    y: json_f64(line, "y")?,
+                    noise: if noise.is_nan() { None } else { Some(noise) },
+                    constraints: json_point(json_field(line, "constraints")?)?,
+                    best: json_f64(line, "best")?,
+                })
+            }
+            "ask_pending" => Ok(ReplayEvent::AskPending {
+                iteration: json_usize(line, "iteration")?,
+                x: json_point(json_field(line, "x")?)?,
+            }),
             "refit" => Ok(ReplayEvent::Refit { n_samples: json_usize(line, "n_samples")? }),
             "stopped" => Ok(ReplayEvent::Stopped {
                 dim: json_usize(line, "dim")?,
@@ -471,13 +571,28 @@ impl ReplayEvent {
 
     /// Read every event from a [`JsonlObserver`] log file (empty lines
     /// skipped). A missing file is an error; an empty file is `Ok(vec![])`.
+    ///
+    /// A crash mid-append can tear only the **final** line, so an
+    /// unparseable last record is skipped (counted in
+    /// [`Counter::ReplayTornLines`] with a warning on stderr) rather
+    /// than failing the whole log — that record was never acknowledged
+    /// to anyone. An unparseable line anywhere *else* is genuine
+    /// corruption and still fails.
     pub fn read_log(path: &Path) -> Result<Vec<ReplayEvent>, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
-        text.lines()
-            .map(str::trim)
-            .filter(|l| !l.is_empty())
-            .map(Self::parse_line)
-            .collect()
+        let lines: Vec<&str> = text.lines().map(str::trim).filter(|l| !l.is_empty()).collect();
+        let mut events = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            match Self::parse_line(line) {
+                Ok(event) => events.push(event),
+                Err(e) if i + 1 == lines.len() => {
+                    obs::counter_add(Counter::ReplayTornLines, 1);
+                    eprintln!("warning: {}: skipping torn final line: {e}", path.display());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(events)
     }
 }
 
@@ -779,6 +894,109 @@ mod tests {
             }
             other => panic!("expected stopped, got {other:?}"),
         }
+    }
+
+    /// The generalized-tell events round-trip through write → parse with
+    /// bit-exact floats, like the classic observation does.
+    #[test]
+    fn noisy_constrained_and_pending_events_round_trip() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_general/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let x = vec![0.1 + 0.2, 1.0 / 7.0];
+        let cs = vec![0.16 - 0.01, -1e-9];
+        {
+            let mut writer = JsonlObserver::create(&path).unwrap();
+            writer.on_event(&BoEvent::AskPending { iteration: 2, x: &x });
+            writer.on_event(&BoEvent::TellNoisy {
+                evaluations: 3,
+                x: &x,
+                y: -0.25,
+                noise: 0.09,
+                best: -0.25,
+            });
+            writer.on_event(&BoEvent::TellConstrained {
+                evaluations: 4,
+                x: &x,
+                y: 1.5,
+                noise: None,
+                constraints: &cs,
+                best: -0.25,
+            });
+            writer.on_event(&BoEvent::TellConstrained {
+                evaluations: 5,
+                x: &x,
+                y: 2.5,
+                noise: Some(0.04),
+                constraints: &cs,
+                best: -0.25,
+            });
+        }
+        let events = ReplayEvent::read_log(&path).unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0], ReplayEvent::AskPending { iteration: 2, x: x.clone() });
+        match &events[1] {
+            ReplayEvent::TellNoisy { evaluations, x: rx, y, noise, best } => {
+                assert_eq!(*evaluations, 3);
+                assert_eq!(
+                    rx.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!((y.to_bits(), noise.to_bits(), best.to_bits()), {
+                    ((-0.25f64).to_bits(), 0.09f64.to_bits(), (-0.25f64).to_bits())
+                });
+            }
+            other => panic!("expected tell_noisy, got {other:?}"),
+        }
+        match &events[2] {
+            ReplayEvent::TellConstrained { noise, constraints, .. } => {
+                assert_eq!(*noise, None, "null noise must parse back to None");
+                assert_eq!(
+                    constraints.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    cs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            other => panic!("expected tell_constrained, got {other:?}"),
+        }
+        match &events[3] {
+            ReplayEvent::TellConstrained { noise, .. } => {
+                assert_eq!(noise.map(f64::to_bits), Some(0.04f64.to_bits()));
+            }
+            other => panic!("expected tell_constrained, got {other:?}"),
+        }
+    }
+
+    /// Satellite: a crash mid-append tears only the final line — replay
+    /// must skip it (counted), while mid-file garbage still fails.
+    #[test]
+    fn read_log_skips_a_torn_final_line_but_fails_mid_file() {
+        let path = std::env::temp_dir().join("limbo_stat_jsonl_torn/events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut writer = JsonlObserver::create(&path).unwrap();
+            writer.on_event(&BoEvent::InitDone { n_samples: 2 });
+            writer.on_event(&BoEvent::Observation {
+                evaluations: 1,
+                x: &[0.25],
+                y: -0.5,
+                best: -0.5,
+            });
+        }
+        let full = std::fs::read_to_string(&path).unwrap();
+        // tear inside the final record's x array, mid-float
+        let cut = full.rfind("\"x\":[").unwrap() + 7;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let base = obs::snapshot();
+        let events = ReplayEvent::read_log(&path).unwrap();
+        assert_eq!(events, vec![ReplayEvent::InitDone { n_samples: 2 }]);
+        let delta = obs::snapshot().delta_since(&base);
+        assert!(delta.counter(Counter::ReplayTornLines) >= 1, "torn line must be counted");
+        // the same torn text followed by more records is corruption
+        let mut corrupted = full[..cut].to_string();
+        corrupted.push('\n');
+        corrupted.push_str(r#"{"event":"refit","n_samples":2}"#);
+        corrupted.push('\n');
+        std::fs::write(&path, &corrupted).unwrap();
+        assert!(ReplayEvent::read_log(&path).is_err(), "mid-file tears must still fail");
     }
 
     /// Append mode extends an existing log instead of truncating it.

@@ -188,6 +188,68 @@ fn metrics_on_or_off_leaves_traces_bit_identical() {
     assert_traces_identical(&off, &on, "metrics off vs on");
 }
 
+/// Degenerate-case parity: a `tell_observation` with **zero** noise
+/// variance must normalize onto the exact-tell code path — same event
+/// kind, same model update, same RNG consumption — so the traces agree
+/// bit-for-bit with plain `tell`.
+#[test]
+fn zero_noise_tell_noisy_is_bit_identical_to_plain_tell() {
+    let _guard = lock();
+    let exact = run_sync_server();
+    let noisy = {
+        let trace = TraceHandle::new();
+        let mut srv = def(trace.clone()).build_server();
+        for _ in 0..TOTAL {
+            let x = srv.ask();
+            let y = objective(&x);
+            srv.tell_observation(&Observation::noisy(x.clone(), y, 0.0)).unwrap();
+        }
+        trace.rows()
+    };
+    assert_traces_identical(&exact, &noisy, "tell vs tell_noisy(0.0)");
+}
+
+/// Degenerate-case parity: a constrained build with **zero** constraint
+/// channels (an empty `ModelBank` + `PofWeighted`'s early return) must
+/// trace bit-identically to the plain unconstrained server.
+#[test]
+fn zero_constraint_pof_weighted_is_bit_identical_to_plain_ei() {
+    let _guard = lock();
+    let plain = run_sync_server();
+    let constrained = {
+        let trace = TraceHandle::new();
+        let mut srv = def(trace.clone()).constraints(0).build_constrained_server();
+        for _ in 0..TOTAL {
+            let x = srv.ask();
+            let y = objective(&x);
+            srv.tell(&x, y);
+        }
+        trace.rows()
+    };
+    assert_traces_identical(&plain, &constrained, "plain Ei vs zero-constraint PofWeighted<Ei>");
+}
+
+/// Degenerate-case parity: `async_pending` with a strictly alternating
+/// ask/tell loop — the pending set is empty at every proposal, so the
+/// kriging-believer fantasy path must collapse to the plain acquisition
+/// maximization — traces bit-identically to the synchronous server.
+#[test]
+fn alternating_async_pending_is_bit_identical_to_synchronous() {
+    let _guard = lock();
+    let sync = run_sync_server();
+    let pending = {
+        let trace = TraceHandle::new();
+        let mut srv = def(trace.clone()).async_pending(true).build_server();
+        for _ in 0..TOTAL {
+            let x = srv.ask();
+            let y = objective(&x);
+            srv.tell(&x, y);
+        }
+        trace.rows()
+    };
+    assert_traces_identical(&sync, &pending, "sync vs alternating async_pending");
+}
+
 /// The la thread-count knob must stay out of the deterministic trace:
 /// parallel fan-outs only split disjoint output panels with fixed
 /// per-element arithmetic, so a full optimizer run is bit-identical at

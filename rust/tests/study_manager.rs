@@ -19,7 +19,7 @@ use std::fs;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use limbo::bayes_opt::{BoDef, RefitSchedule};
+use limbo::bayes_opt::{BoDef, Observation, RefitSchedule};
 use limbo::coordinator::{Study, StudyError, StudyManager};
 use limbo::opt::RandomPoint;
 use limbo::pool::ThreadPool;
@@ -148,6 +148,70 @@ fn killed_study_resumes_the_exact_trace_from_snapshot_and_log_tail() {
         String::from_utf8_lossy(&log_a),
         String::from_utf8_lossy(&log_b),
         "resumed trace must be byte-identical to the uninterrupted run"
+    );
+    let _ = fs::remove_dir_all(&root_a);
+    let _ = fs::remove_dir_all(&root_b);
+}
+
+/// Drive `rounds` noisy **and** constrained rounds against study `id`:
+/// every tell carries a deterministic per-observation noise variance and
+/// one constraint value, so the event log is all `tell_constrained`
+/// records with non-null noise.
+fn drive_constrained(mgr: &StudyManager, id: limbo::coordinator::StudyId, rounds: usize) {
+    for _ in 0..rounds {
+        let x = mgr.ask(id).expect("ask");
+        let y = objective(0, &x);
+        let noise = 0.05 + 0.01 * x[0];
+        let c = 0.3 - (x[0] - 0.5).abs();
+        let obs = Observation::noisy(x, y, noise).with_constraints(vec![c]);
+        mgr.tell_observation(id, obs).expect("tell_observation");
+    }
+}
+
+#[test]
+fn killed_noisy_constrained_study_recovers_to_a_byte_identical_log() {
+    let factory = || {
+        BoDef::service(1)
+            .seed(91)
+            .inner_opt(RandomPoint::new(8))
+            .refit(RefitSchedule::Doubling { first: 4 })
+            .constraints(1)
+            .build_constrained_server()
+    };
+
+    // reference: 12 uninterrupted noisy + constrained rounds
+    let root_a = tmp_root("limbo_mgr_crash_bank_a");
+    {
+        let mgr = StudyManager::durable(pool(2), &root_a).expect("durable");
+        let id = mgr.create(factory).expect("create");
+        drive_constrained(&mgr, id, 12);
+    }
+
+    // crashed: 5 rounds, drop the manager mid-run, recover, 7 more. The
+    // refit at n = 4 snapshots the full model bank (objective GP + one
+    // constraint GP) plus per-observation noise, so recovery exercises
+    // the generalized snapshot + the tell_constrained replay arm.
+    let root_b = tmp_root("limbo_mgr_crash_bank_b");
+    let id = {
+        let mgr = StudyManager::durable(pool(2), &root_b).expect("durable");
+        let id = mgr.create(factory).expect("create");
+        drive_constrained(&mgr, id, 5);
+        id
+    };
+    let snap = root_b.join(id.to_string()).join("snapshot.txt");
+    assert!(snap.exists(), "refit at n=4 must have produced a snapshot before the crash");
+    {
+        let mgr = StudyManager::durable(pool(2), &root_b).expect("durable");
+        mgr.recover(id, factory).expect("recover");
+        drive_constrained(&mgr, id, 7);
+    }
+
+    let log_a = fs::read(root_a.join(id.to_string()).join("events.jsonl")).expect("log a");
+    let log_b = fs::read(root_b.join(id.to_string()).join("events.jsonl")).expect("log b");
+    assert_eq!(
+        String::from_utf8_lossy(&log_a),
+        String::from_utf8_lossy(&log_b),
+        "resumed noisy+constrained trace must be byte-identical to the uninterrupted run"
     );
     let _ = fs::remove_dir_all(&root_a);
     let _ = fs::remove_dir_all(&root_b);

@@ -22,8 +22,10 @@ Gate policy
   a warning but never fail the job (wall-clock timings are too noisy on
   shared CI runners for a hard gate).
 * `fig1_time` rows track the static-vs-dynamic speed-up `ratio` (higher
-  is better) and `kernel_micro` rows track `gram_blocked_s` (lower is
-  better); both warn-only — a ratio falling below the 2x advantage the
+  is better), `fig1_scenario` rows track the noisy/constrained Branin
+  cells' `seconds` and `(feasible_)regret` (lower is better), and
+  `kernel_micro` rows track `gram_blocked_s` (lower is
+  better); all warn-only — a ratio falling below the 2x advantage the
   PR pins is a warning, not a hard failure, because full-run wall-clock
   on shared runners is noisy.
 * `gp_scaling_phase`, `batch_propose_phase`, and `fig1_time_phase` rows
@@ -96,6 +98,8 @@ def row_key(row):
     if row.get("bench") == "fig1_time_phase":
         return ("fig1_time_phase", row.get("func"), row.get("dim"),
                 row.get("iters"), row.get("hpo"), row.get("phase"))
+    if row.get("bench") == "fig1_scenario":
+        return ("fig1_scenario", row.get("scenario"), row.get("rounds"))
     if row.get("bench") == "kernel_micro":
         return ("kernel_micro", row.get("kernel"), row.get("n"))
     if row.get("bench") == "manager_load":
@@ -218,6 +222,28 @@ def main():
                 warnings.append(line)
             else:
                 print(f"ok   {line}")
+        elif row.get("bench") == "fig1_scenario":
+            # generalized-observation cells (noisy / constrained Branin):
+            # wall-clock and regret, both warn-only like the other
+            # full-run timing rows
+            now, then = row.get("seconds"), base.get("seconds")
+            if now is not None and then is not None and then > 0:
+                slowdown = now / then - 1.0
+                line = f"{key} seconds: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
+                if slowdown > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
+            for metric in ("regret", "feasible_regret"):
+                now, then = row.get(metric), base.get(metric)
+                if now is None or then is None or then <= 0:
+                    continue
+                growth = now / then - 1.0
+                line = f"{key} {metric}: {then:.4f} -> {now:.4f} ({growth:+.1%})"
+                if growth > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
         elif row.get("bench") == "kernel_micro":
             # blocked Gram wall-clock: lower is better, warn-only
             now, then = row.get("gram_blocked_s"), base.get("gram_blocked_s")
