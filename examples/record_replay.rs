@@ -1,0 +1,80 @@
+//! Record a full DE-driven Branin run, replay it bit-identically.
+//!
+//! A [`RecordingObserver`] rides the event bus of an ask/tell server
+//! whose acquisition maximizer is the self-adaptive DE
+//! ([`limbo::opt::AdaptiveDe`], via the `inner_de` knob), capturing
+//! every proposal/observation plus the per-generation DE state. The
+//! capture is saved to a JSONL file, loaded back, and replayed through
+//! a **fresh, identically-configured** server: every re-asked proposal
+//! is compared bit-for-bit against the recording, so the first
+//! divergence (a changed kernel, a perturbed RNG stream, a different
+//! maximizer) is reported with its event index and iteration.
+//!
+//! Run: `cargo run --release --example record_replay`
+//! (`LIMBO_SMOKE=1` shrinks the budget to a CI-sized run.)
+
+use limbo::benchfns;
+use limbo::opt::AdaptiveDe;
+use limbo::prelude::*;
+use limbo::stat::RecordingObserver;
+
+/// One server over Branin; every call builds the *same* definition so
+/// the replay target is configured identically to the recorded run.
+fn build(rec: RecordingObserver, iterations: usize) -> impl Study {
+    BoDef::new(2)
+        .acquisition(Ei::default())
+        .init(Lhs { n: 8 })
+        .inner_opt(AdaptiveDe::new(200).with_recorder(rec.de_recorder()))
+        .refit(RefitSchedule::Doubling { first: 12 })
+        .noise(1e-3)
+        .seed(42)
+        .iterations(iterations)
+        .observer(rec)
+        .build_server()
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("LIMBO_SMOKE").as_deref(), Ok("1"));
+    let iterations = if smoke { 10 } else { 30 };
+    let total = 8 + iterations;
+    let branin = benchfns::by_name("branin", 2).expect("branin is registered");
+
+    // --- record ---------------------------------------------------------
+    let rec = RecordingObserver::new();
+    let mut srv = build(rec.clone(), iterations);
+    for _ in 0..total {
+        let x = srv.ask().expect("ask");
+        let y = branin.eval(&x);
+        srv.tell(&x, y).expect("tell");
+    }
+    srv.finish().expect("finish");
+    let best = srv.best().expect("best").expect("data");
+    println!(
+        "recorded: {} events, {} DE generations, best={:.6} (accuracy {:.3e})",
+        rec.len(),
+        rec.de_rows().len(),
+        best.1,
+        branin.accuracy(best.1)
+    );
+
+    // --- save / load ----------------------------------------------------
+    let path = std::env::temp_dir().join("limbo_record_replay_example.jsonl");
+    rec.save(&path).expect("save capture");
+    let loaded = RecordingObserver::load(&path).expect("load capture");
+    println!("saved {} events to {}", loaded.len(), path.display());
+
+    // --- replay ---------------------------------------------------------
+    let replay_rec = RecordingObserver::new();
+    let mut fresh = build(replay_rec.clone(), iterations);
+    loaded.replay_into(&mut fresh).expect("bit-identical replay");
+    println!("replayed {} events bit-identically through a fresh server", replay_rec.len());
+
+    // the self-adaptation at work: F/CR drift away from their 0.5/0.9
+    // initialization as winning parameter settings survive selection
+    let rows = rec.de_rows();
+    if let (Some(a), Some(b)) = (rows.first(), rows.last()) {
+        println!("DE self-adaptation across the captured generations:");
+        println!("  first: np={} mean F={:.3} mean CR={:.3}", a.np, a.mean_f, a.mean_cr);
+        println!("  last:  np={} mean F={:.3} mean CR={:.3}", b.np, b.mean_f, b.mean_cr);
+    }
+}

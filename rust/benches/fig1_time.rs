@@ -6,13 +6,19 @@
 //!
 //! Every cell prints one machine-readable JSON row
 //! (`{"bench":"fig1_time","func":...,"dim":...,"iters":...,"hpo":...,
-//! "limbo_s":...,"bayesopt_s":...,"ratio":...}`) plus per-phase
+//! "limbo_s":...,"bayesopt_s":...,"ratio":...,"de_s":...,"de_acc":...}`
+//! — the `de_*` columns are the non-BO comparator: self-adaptive DE on
+//! the raw function at the same total evaluation budget) plus per-phase
 //! attribution rows (`"bench":"fig1_time_phase"`) from one extra
 //! metrics-enabled limbo run, so a ratio regression can be pinned to
 //! Cholesky vs cross-covariance vs the inner optimizer. Two
 //! `"bench":"fig1_scenario"` rows (noisy Branin, constrained Branin)
 //! time the generalized `tell_observation` path — per-trial noise and
 //! the PoF-weighted constraint bank — with (feasible-)regret columns.
+//! `"bench":"fig1_inner_opt"` rows sweep the acquisition maximizer
+//! (DIRECT vs CMA-ES vs DE) at an equal inner-opt evaluation budget
+//! across dimensions, reporting wall seconds and final regret — the
+//! grid behind the claim that DE holds up where DIRECT stalls (d=10).
 //! Rows are also written to `target/fig1_time.json`, which CI merges into
 //! `BENCH_PR.json` for the bench-trajectory gate
 //! (`scripts/bench_compare.py` vs `benches/baseline.json`).
@@ -24,7 +30,9 @@ use std::time::Instant;
 
 use limbo::benchfns::by_name;
 use limbo::coordinator::experiment::BenchConfig;
-use limbo::coordinator::fig1::{BaselineConfig, Fig1Settings, LimboConfig};
+use limbo::coordinator::fig1::{
+    BaselineConfig, DeBaselineConfig, Fig1Settings, InnerOptConfig, InnerOptKind, LimboConfig,
+};
 
 /// One sweep cell: a test function at a given iteration budget, with or
 /// without periodic ML-II refits.
@@ -175,6 +183,37 @@ fn scenario_rows(rows: &mut Vec<String>, rounds: usize, seeds: &[u64]) {
     rows.push(row);
 }
 
+/// The acquisition-maximizer sweep: DIRECT vs CMA-ES vs DE as the
+/// `BoDef` inner optimizer at an **equal** inner-opt evaluation budget,
+/// across dimensions (branin/2, hartmann6/6, ackley/10). One
+/// `"bench":"fig1_inner_opt"` row per (maximizer, function) cell —
+/// median wall seconds plus mean final regret — so the gate tracks both
+/// the cost and the quality of each maximizer. The d=10 row is the
+/// acceptance check that DE matches or beats DIRECT where rectangle
+/// subdivision stalls; smoke mode runs only that cell.
+fn inner_opt_rows(rows: &mut Vec<String>, smoke: bool, seeds: &[u64]) {
+    let funcs: &[(&str, usize)] =
+        if smoke { &[("ackley", 10)] } else { &[("branin", 2), ("hartmann6", 6), ("ackley", 10)] };
+    let iters = if smoke { 10 } else { 20 };
+    let inner_evals = if smoke { 200 } else { 300 };
+    let settings = Fig1Settings { iterations: iters, inner_evals, ..Default::default() };
+    for &(func, dim) in funcs {
+        for inner in [InnerOptKind::Direct, InnerOptKind::Cmaes, InnerOptKind::De] {
+            let cfg = InnerOptConfig::new(settings, inner);
+            let (secs, regret) = time_runs(&cfg, func, dim, seeds);
+            let row = format!(
+                "{{\"bench\":\"fig1_inner_opt\",\"inner\":\"{}\",\"func\":\"{func}\",\
+                 \"dim\":{dim},\"iters\":{iters},\"inner_evals\":{inner_evals},\
+                 \"seconds\":{secs:.4},\"regret\":{regret:.5},\"seeds\":{}}}",
+                inner.name(),
+                seeds.len()
+            );
+            println!("{row}");
+            rows.push(row);
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
 
@@ -213,8 +252,10 @@ fn main() {
         }
         let limbo = LimboConfig::new(settings);
         let bayesopt = BaselineConfig::new(settings);
+        let de = DeBaselineConfig::new(settings);
         let (limbo_s, limbo_acc) = time_runs(&limbo, cell.func, cell.dim, seeds);
         let (bayes_s, bayes_acc) = time_runs(&bayesopt, cell.func, cell.dim, seeds);
+        let (de_s, de_acc) = time_runs(&de, cell.func, cell.dim, seeds);
         let ratio = bayes_s / limbo_s;
         if cell.hpo {
             ratios_hpo.push(ratio);
@@ -224,7 +265,8 @@ fn main() {
         let row = format!(
             "{{\"bench\":\"fig1_time\",\"func\":\"{}\",\"dim\":{},\"iters\":{},\"hpo\":{},\
              \"limbo_s\":{limbo_s:.4},\"bayesopt_s\":{bayes_s:.4},\"ratio\":{ratio:.3},\
-             \"limbo_acc\":{limbo_acc:.5},\"bayesopt_acc\":{bayes_acc:.5},\"seeds\":{}}}",
+             \"limbo_acc\":{limbo_acc:.5},\"bayesopt_acc\":{bayes_acc:.5},\
+             \"de_s\":{de_s:.4},\"de_acc\":{de_acc:.5},\"seeds\":{}}}",
             cell.func,
             cell.dim,
             cell.iters,
@@ -235,6 +277,8 @@ fn main() {
         rows.push(row);
         phase_rows(&mut rows, cell, &limbo, seeds[0]);
     }
+
+    inner_opt_rows(&mut rows, smoke, seeds);
 
     scenario_rows(&mut rows, if smoke { 15 } else { 40 }, seeds);
 

@@ -233,6 +233,17 @@ impl<K, Mn, A, I, O, S> BoDef<K, Mn, A, I, O, S> {
         }
     }
 
+    /// Use self-adaptive Differential Evolution as the acquisition
+    /// maximizer with an evaluation budget of `max_evals` (shorthand for
+    /// `.inner_opt(AdaptiveDe::new(max_evals))`). DE scores whole
+    /// generations through the batched `eval_many` path and holds up in
+    /// higher dimensions where DIRECT's rectangle subdivision stalls —
+    /// see the "Inner optimizers" section of the crate docs for
+    /// dimension guidance.
+    pub fn inner_de(self, max_evals: usize) -> BoDef<K, Mn, A, I, crate::opt::AdaptiveDe, S> {
+        self.inner_opt(crate::opt::AdaptiveDe::new(max_evals))
+    }
+
     /// Swap the stop criterion (only consulted by the run-to-completion
     /// frontend).
     pub fn stop<S2>(self, stop: S2) -> BoDef<K, Mn, A, I, O, S2> {

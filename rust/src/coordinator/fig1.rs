@@ -14,7 +14,8 @@ use crate::benchfns::TestFunction;
 use crate::coordinator::experiment::{BenchConfig, RunOutcome};
 use crate::init::Lhs;
 use crate::model::HpOptConfig;
-use crate::opt::Direct;
+use crate::opt::{AdaptiveDe, Cmaes, Direct, Optimizer};
+use crate::rng::Pcg64;
 use crate::stop::MaxIterations;
 
 /// Shared algorithmic settings of both columns.
@@ -36,7 +37,14 @@ pub struct Fig1Settings {
 
 impl Default for Fig1Settings {
     fn default() -> Self {
-        Self { n_init: 10, iterations: 40, inner_evals: 500, hp_every: None, hp_iters: 20, noise: 1e-2 }
+        Self {
+            n_init: 10,
+            iterations: 40,
+            inner_evals: 500,
+            hp_every: None,
+            hp_iters: 20,
+            noise: 1e-2,
+        }
     }
 }
 
@@ -127,6 +135,121 @@ impl BenchConfig for BaselineConfig {
         };
         let best = opt.optimize(&FnEval::new(f.dim(), |x: &[f64]| f.eval(x)));
         RunOutcome::ok(best.value, best.evaluations)
+    }
+}
+
+/// Non-BO comparator: self-adaptive Differential Evolution applied
+/// **directly** to the test function, at the same total evaluation
+/// budget the BO columns get (`n_init + iterations`). The Fig-1 table's
+/// derivative-free control — it shows what the surrogate model buys
+/// over a plain population search at equal cost.
+pub struct DeBaselineConfig {
+    /// Shared settings (only the evaluation budget is used).
+    pub settings: Fig1Settings,
+}
+
+impl DeBaselineConfig {
+    /// Build the DE comparator column.
+    pub fn new(settings: Fig1Settings) -> Self {
+        Self { settings }
+    }
+}
+
+impl BenchConfig for DeBaselineConfig {
+    fn name(&self) -> &str {
+        "de"
+    }
+
+    fn run(&self, f: &dyn TestFunction, seed: u64) -> RunOutcome {
+        let budget = self.settings.n_init + self.settings.iterations;
+        let objective = |x: &[f64]| f.eval(x);
+        let mut rng = Pcg64::seed(seed);
+        let best = AdaptiveDe::new(budget).optimize(&objective, f.dim(), &mut rng);
+        RunOutcome::ok(best.value, budget)
+    }
+}
+
+/// Which acquisition maximizer an [`InnerOptConfig`] column uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerOptKind {
+    /// Deterministic rectangle subdivision (the BayesOpt default).
+    Direct,
+    /// Covariance-matrix-adaptation evolution strategy.
+    Cmaes,
+    /// Self-adaptive Differential Evolution.
+    De,
+}
+
+impl InnerOptKind {
+    /// Stable lowercase name (the `inner` field of the bench rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            InnerOptKind::Direct => "direct",
+            InnerOptKind::Cmaes => "cmaes",
+            InnerOptKind::De => "de",
+        }
+    }
+}
+
+/// The inner-optimizer sweep column: the same BO configuration as
+/// [`LimboConfig`] with the acquisition maximizer swapped — DIRECT vs
+/// CMA-ES vs DE at an **equal inner-opt evaluation budget**
+/// (`settings.inner_evals`), so the `fig1_inner_opt` bench rows compare
+/// maximizer quality, not budget.
+pub struct InnerOptConfig {
+    /// Shared settings.
+    pub settings: Fig1Settings,
+    /// Which maximizer this column runs.
+    pub inner: InnerOptKind,
+    name: String,
+}
+
+impl InnerOptConfig {
+    /// Build one sweep column.
+    pub fn new(settings: Fig1Settings, inner: InnerOptKind) -> Self {
+        let name = format!("limbo+{}", inner.name());
+        Self { settings, inner, name }
+    }
+}
+
+impl BenchConfig for InnerOptConfig {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, f: &dyn TestFunction, seed: u64) -> RunOutcome {
+        let s = &self.settings;
+        let dim = f.dim();
+        let refit = match s.hp_every {
+            Some(k) => RefitSchedule::Every(k),
+            None => RefitSchedule::Never,
+        };
+        // one builder per arm: each monomorphizes a different BoDef
+        macro_rules! run_with {
+            ($inner:expr) => {{
+                let mut opt = BoDef::new(dim)
+                    .noise(s.noise)
+                    .acquisition(Ei::default())
+                    .init(Lhs { n: s.n_init })
+                    .inner_opt($inner)
+                    .stop(MaxIterations(s.iterations))
+                    .refit(refit)
+                    .hp_config(HpOptConfig {
+                        iterations: s.hp_iters,
+                        restarts: 1,
+                        ..Default::default()
+                    })
+                    .seed(seed)
+                    .build_optimizer();
+                let best = opt.optimize(&FnEval::new(dim, |x: &[f64]| f.eval(x)));
+                RunOutcome::ok(best.value, best.evaluations)
+            }};
+        }
+        match self.inner {
+            InnerOptKind::Direct => run_with!(Direct::new(s.inner_evals)),
+            InnerOptKind::Cmaes => run_with!(Cmaes::new(s.inner_evals)),
+            InnerOptKind::De => run_with!(AdaptiveDe::new(s.inner_evals)),
+        }
     }
 }
 

@@ -73,6 +73,43 @@
 //! Spans never touch the RNG or reorder floating-point work, so traces
 //! are bit-identical with metrics on or off (`tests/api_parity.rs`).
 //!
+//! # Inner optimizers
+//!
+//! Maximizing the acquisition function is its own global-optimization
+//! problem, and [`bayes_opt::BoDef::inner_opt`] makes the maximizer a
+//! swappable policy ([`opt::Optimizer`]). Guidance:
+//!
+//! * [`opt::Direct`] (the BayesOpt default) — deterministic rectangle
+//!   subdivision; excellent in low dimension (d ≲ 6) and reproducible
+//!   without an RNG, but its center-first trisection stalls on
+//!   high-dimensional or deceptive acquisition landscapes.
+//! * [`opt::Cmaes`] — covariance-matrix adaptation; strong on smooth
+//!   mid-dimensional landscapes (d ≈ 5–20) with moderate
+//!   multimodality.
+//! * [`opt::AdaptiveDe`] — self-adaptive Differential Evolution
+//!   (jDE/JADE-style: per-individual F/CR, current-to-pbest/1 mutation
+//!   with an archive, population-size reduction). Batch-first like
+//!   CMA-ES (one [`opt::Objective::eval_many`] call per generation, so
+//!   the model pays one batched posterior per generation) and the most
+//!   robust choice on high-dimensional multimodal landscapes (d ≳ 10);
+//!   `BoDef::new(d).inner_de(300)` swaps it in, and
+//!   [`opt::DeRecorder`] captures its per-generation state (population
+//!   size, best value, mean F/CR).
+//!
+//! All of them compose with [`opt::OptimizerExt::restarts`] (parallel
+//! restarts, bit-reproducible across pool thread counts) and
+//! [`opt::OptimizerExt::then`] (global → local chaining). The
+//! `fig1_inner_opt` rows of `benches/fig1_time.rs` sweep DIRECT vs
+//! CMA-ES vs DE at an equal evaluation budget across dimensions.
+//!
+//! For forensics, [`stat::RecordingObserver`] captures a full run's
+//! event stream (plus the DE generation rows) and
+//! [`stat::RecordingObserver::replay_into`] re-drives a fresh,
+//! identically-configured study through it, verifying every re-asked
+//! proposal bit-for-bit — the first divergence is reported with its
+//! event index and iteration, which turns a convergence regression
+//! into a bisectable fact (`tests/de_convergence.rs` pins this).
+//!
 //! # Performance tuning
 //!
 //! The dense hot kernels (matmul, Cholesky, multi-RHS solves, kernel
@@ -247,10 +284,12 @@ pub mod prelude {
         SparseGp, StateModel,
     };
     pub use crate::opt::{
-        Cmaes, Direct, NelderMead, Objective, Optimizer, OptimizerExt, PopulationSearch,
-        RandomPoint,
+        AdaptiveDe, Cmaes, DeGenRecord, DeRecorder, Direct, NelderMead, Objective, Optimizer,
+        OptimizerExt, PopulationSearch, RandomPoint,
     };
     pub use crate::rng::Pcg64;
-    pub use crate::stat::{JsonlObserver, MetricsObserver, ReplayEvent, RunLogger, TraceHandle};
+    pub use crate::stat::{
+        JsonlObserver, MetricsObserver, RecordingObserver, ReplayEvent, RunLogger, TraceHandle,
+    };
     pub use crate::stop::{MaxIterations, StopCriterion, TargetReached};
 }

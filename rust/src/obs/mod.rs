@@ -203,11 +203,16 @@ pub enum Counter {
     /// Torn trailing lines skipped by `stat::ReplayEvent::read_log`
     /// (a crash mid-append left a partial final record).
     ReplayTornLines,
+    /// Generations advanced by `opt::AdaptiveDe` (self-adaptive DE).
+    DeGenerations,
+    /// Objective evaluations spent by `opt::AdaptiveDe` (initial
+    /// population + one batch per generation).
+    DeEvaluations,
 }
 
 impl Counter {
     /// Every counter, in declaration order.
-    pub const ALL: [Counter; 8] = [
+    pub const ALL: [Counter; 10] = [
         Counter::Refits,
         Counter::HpRestarts,
         Counter::InnerRestarts,
@@ -216,6 +221,8 @@ impl Counter {
         Counter::PoolJobs,
         Counter::StatWriteFailures,
         Counter::ReplayTornLines,
+        Counter::DeGenerations,
+        Counter::DeEvaluations,
     ];
 
     /// Number of counters.
@@ -232,6 +239,8 @@ impl Counter {
             Counter::PoolJobs => "pool_jobs",
             Counter::StatWriteFailures => "stat_write_failures",
             Counter::ReplayTornLines => "replay_torn_lines",
+            Counter::DeGenerations => "de_generations",
+            Counter::DeEvaluations => "de_evaluations",
         }
     }
 }

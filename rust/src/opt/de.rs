@@ -1,0 +1,500 @@
+//! Self-adaptive Differential Evolution (jDE/JADE hybrid) — the
+//! population-based acquisition maximizer for higher dimensions, where
+//! DIRECT's rectangle subdivision stalls and single-run CMA-ES gets
+//! stuck on one basin.
+//!
+//! Three self-adaptation mechanisms, all standard published technique:
+//!
+//! * **per-individual F/CR** (Brest et al. 2006, "jDE"): every
+//!   individual carries its own mutation factor `F` and crossover rate
+//!   `CR`; with probability `tau` each is re-drawn before producing a
+//!   trial, and the new values survive only if the trial wins selection
+//!   — good control parameters propagate with the genomes that used
+//!   them;
+//! * **current-to-pbest/1 mutation with an archive** (Zhang & Sanderson
+//!   2009, "JADE"): `v = x_i + F (x_pbest − x_i) + F (x_r1 − x_r2)`
+//!   where `x_pbest` is drawn from the best `p` fraction and `x_r2` may
+//!   come from an archive of recently replaced parents — greedy
+//!   direction with preserved diversity;
+//! * **linear population-size reduction** (Tanabe & Fukunaga 2014,
+//!   "L-SHADE"): the population shrinks from `np0` toward
+//!   [`np_min`](AdaptiveDe::np_min) as the evaluation budget is spent,
+//!   dropping the worst individuals — broad early exploration, cheap
+//!   late exploitation.
+//!
+//! Every generation is scored with **one** [`Objective::eval_many`]
+//! call, so an acquisition objective pays one cross-covariance block
+//! and one multi-RHS solve per generation instead of per candidate —
+//! the same batch shape [`Cmaes`](super::Cmaes) exploits.
+//!
+//! Attach a [`DeRecorder`] ([`AdaptiveDe::with_recorder`]) to capture
+//! per-generation state (population size, best value, mean F/CR) for
+//! the record/replay workflow — [`crate::stat::RecordingObserver`]
+//! bundles one with the BO event capture.
+
+use std::sync::{Arc, Mutex};
+
+use super::{Candidate, Objective, Optimizer};
+use crate::obs::{self, Counter, Phase};
+use crate::rng::Pcg64;
+
+/// Per-generation state snapshot pushed to a [`DeRecorder`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeGenRecord {
+    /// Generation index (0 = the initial population evaluation).
+    pub generation: usize,
+    /// Population size during this generation.
+    pub np: usize,
+    /// Total objective evaluations spent so far (cumulative).
+    pub evaluations: usize,
+    /// Best objective value seen so far.
+    pub best: f64,
+    /// Population mean of the per-individual mutation factors F.
+    pub mean_f: f64,
+    /// Population mean of the per-individual crossover rates CR.
+    pub mean_cr: f64,
+}
+
+/// Cloneable sink for [`DeGenRecord`]s: attach one clone to an
+/// [`AdaptiveDe`] via [`with_recorder`](AdaptiveDe::with_recorder),
+/// read the rows from another after (or during) the run — the same
+/// handle pattern as [`crate::stat::TraceHandle`]. Recording never
+/// touches the RNG or the floating-point evaluation order, so runs are
+/// bit-identical with or without a recorder attached.
+#[derive(Clone, Default)]
+pub struct DeRecorder {
+    rows: Arc<Mutex<Vec<DeGenRecord>>>,
+}
+
+impl DeRecorder {
+    /// An empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of the rows recorded so far.
+    pub fn rows(&self) -> Vec<DeGenRecord> {
+        self.rows.lock().expect("de recorder lock").clone()
+    }
+
+    /// Rows recorded so far.
+    pub fn len(&self) -> usize {
+        self.rows.lock().expect("de recorder lock").len()
+    }
+
+    /// True before the first recorded generation.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all recorded rows (e.g. between runs sharing one recorder).
+    pub fn clear(&self) {
+        self.rows.lock().expect("de recorder lock").clear();
+    }
+
+    fn push(&self, row: DeGenRecord) {
+        self.rows.lock().expect("de recorder lock").push(row);
+    }
+}
+
+/// Self-adaptive Differential Evolution maximizer on the unit hypercube.
+///
+/// Drop-in anywhere [`Cmaes`](super::Cmaes)/[`Direct`](super::Direct)
+/// go: as the `BoDef` inner optimizer
+/// ([`crate::bayes_opt::BoDef::inner_de`]), inside qEI joint
+/// refinement (it implements [`optimize_from`](Optimizer::optimize_from)
+/// by injecting the seed point into the initial population), or as a
+/// standalone derivative-free baseline over a raw objective.
+///
+/// Knobs (all have sensible defaults — `AdaptiveDe::new(budget)` is the
+/// usual spelling):
+///
+/// * `max_evals` — total objective-evaluation budget;
+/// * `np0` — initial population size (`None` = `5·dim` clamped to
+///   `[8, 64]`);
+/// * `np_min` — floor of the linear population reduction (4 keeps
+///   current-to-pbest/1 well-defined);
+/// * `p_best` — fraction of the population eligible as `x_pbest`;
+/// * `archive` — keep replaced parents as extra difference-vector
+///   donors (capped at the current population size, random eviction);
+/// * `tau_f` / `tau_cr` — jDE re-randomization probabilities.
+#[derive(Clone)]
+pub struct AdaptiveDe {
+    /// Evaluation budget (generations ≈ budget / population size).
+    pub max_evals: usize,
+    /// Initial population size (`None` = `5·dim` clamped to `[8, 64]`).
+    pub np0: Option<usize>,
+    /// Final population size of the linear reduction schedule.
+    pub np_min: usize,
+    /// pbest fraction for current-to-pbest/1 mutation.
+    pub p_best: f64,
+    /// Use the JADE archive of replaced parents.
+    pub archive: bool,
+    /// jDE: probability of re-drawing an individual's F per trial.
+    pub tau_f: f64,
+    /// jDE: probability of re-drawing an individual's CR per trial.
+    pub tau_cr: f64,
+    recorder: Option<DeRecorder>,
+}
+
+impl Default for AdaptiveDe {
+    fn default() -> Self {
+        Self {
+            max_evals: 500,
+            np0: None,
+            np_min: 4,
+            p_best: 0.11,
+            archive: true,
+            tau_f: 0.1,
+            tau_cr: 0.1,
+            recorder: None,
+        }
+    }
+}
+
+impl AdaptiveDe {
+    /// Budgeted constructor with the default self-adaptation knobs.
+    pub fn new(max_evals: usize) -> Self {
+        Self { max_evals, ..Self::default() }
+    }
+
+    /// Attach a per-generation state recorder (a clone of the caller's
+    /// handle; see [`DeRecorder`]).
+    pub fn with_recorder(mut self, recorder: DeRecorder) -> Self {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    /// Effective initial population size for dimension `dim`.
+    fn np0_for(&self, dim: usize) -> usize {
+        let np = self.np0.unwrap_or((5 * dim.max(1)).clamp(8, 64));
+        // never larger than the whole budget allows, never below the floor
+        np.min(self.max_evals.max(self.np_min.max(4))).max(self.np_min.max(4))
+    }
+}
+
+/// Selection score: non-finite objective values (NaN from a degenerate
+/// model state, ±inf from an overflowing objective) never win a
+/// comparison — the same poison-safety as [`Candidate::max`].
+#[inline]
+fn score(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        f64::NEG_INFINITY
+    }
+}
+
+/// One population member: genome, fitness, and its own control params.
+#[derive(Clone)]
+struct Member {
+    x: Vec<f64>,
+    value: f64,
+    f: f64,
+    cr: f64,
+}
+
+impl Optimizer for AdaptiveDe {
+    fn optimize(&self, f: &dyn Objective, dim: usize, rng: &mut Pcg64) -> Candidate {
+        let x0 = rng.unit_point(dim);
+        self.optimize_from(f, &x0, rng)
+    }
+
+    /// The seed point `x0` joins the initial population as member 0, so
+    /// a caller refining a known good point (the qEI joint-refinement
+    /// pass) keeps it as a selection incumbent — it can only be replaced
+    /// by something better.
+    fn optimize_from(&self, f: &dyn Objective, x0: &[f64], rng: &mut Pcg64) -> Candidate {
+        let _span = obs::span(Phase::InnerOpt);
+        let dim = x0.len();
+        let np0 = self.np0_for(dim);
+
+        // initial population: the seed point plus uniform draws, every
+        // member starting from the classic jDE control params
+        let mut pop: Vec<Member> = Vec::with_capacity(np0);
+        let mut seed = x0.to_vec();
+        super::clamp_unit(&mut seed);
+        pop.push(Member { x: seed, value: 0.0, f: 0.5, cr: 0.9 });
+        for _ in 1..np0 {
+            pop.push(Member { x: rng.unit_point(dim), value: 0.0, f: 0.5, cr: 0.9 });
+        }
+        let points: Vec<Vec<f64>> = pop.iter().map(|m| m.x.clone()).collect();
+        let values = f.eval_many(&points);
+        assert_eq!(values.len(), pop.len(), "eval_many: value count mismatch");
+        for (m, v) in pop.iter_mut().zip(values) {
+            m.value = v;
+        }
+        let mut evals = np0;
+        obs::counter_add(Counter::DeEvaluations, np0 as u64);
+
+        let mut best = pop
+            .iter()
+            .max_by(|a, b| score(a.value).partial_cmp(&score(b.value)).expect("scores are ordered"))
+            .map(|m| Candidate { x: m.x.clone(), value: m.value })
+            .expect("population is non-empty");
+
+        let mut archive: Vec<Vec<f64>> = Vec::new();
+        let mut generation = 0usize;
+        self.record(generation, &pop, evals, best.value);
+
+        let np_min = self.np_min.max(4).min(np0);
+        loop {
+            // linear population-size reduction over the eval budget
+            let frac = evals as f64 / self.max_evals.max(1) as f64;
+            let np_target = (np0 as f64 - (np0 - np_min) as f64 * frac).round() as usize;
+            let np_target = np_target.clamp(np_min, np0);
+            if pop.len() > np_target {
+                // drop the worst members (stable sort keeps ties in
+                // insertion order, so the truncation is deterministic)
+                pop.sort_by(|a, b| {
+                    score(b.value).partial_cmp(&score(a.value)).expect("scores are ordered")
+                });
+                pop.truncate(np_target);
+                archive.truncate(pop.len().min(archive.len()));
+            }
+            let np = pop.len();
+            if evals + np > self.max_evals {
+                break;
+            }
+            generation += 1;
+            obs::counter_add(Counter::DeGenerations, 1);
+
+            // fitness ranking for pbest selection
+            let mut order: Vec<usize> = (0..np).collect();
+            order.sort_by(|&a, &b| {
+                score(pop[b].value).partial_cmp(&score(pop[a].value)).expect("scores are ordered")
+            });
+            let n_pbest = ((self.p_best * np as f64).ceil() as usize).clamp(1, np);
+
+            // build the whole generation of trials, then score it as one
+            // eval_many batch
+            let mut trials: Vec<Vec<f64>> = Vec::with_capacity(np);
+            let mut params: Vec<(f64, f64)> = Vec::with_capacity(np);
+            for i in 0..np {
+                // jDE self-adaptation: maybe re-draw this trial's F/CR
+                let fi = if rng.uniform(0.0, 1.0) < self.tau_f {
+                    0.1 + 0.9 * rng.uniform(0.0, 1.0)
+                } else {
+                    pop[i].f
+                };
+                let cri = if rng.uniform(0.0, 1.0) < self.tau_cr {
+                    rng.uniform(0.0, 1.0)
+                } else {
+                    pop[i].cr
+                };
+                params.push((fi, cri));
+
+                // current-to-pbest/1: greedy direction + one difference
+                let pbest = &pop[order[rng.below(n_pbest)]].x;
+                let r1 = loop {
+                    let r = rng.below(np);
+                    if r != i {
+                        break r;
+                    }
+                };
+                // r2 may come from the archive (population ∪ archive)
+                let pool_len = np + if self.archive { archive.len() } else { 0 };
+                let r2 = loop {
+                    let r = rng.below(pool_len);
+                    if r != i && r != r1 {
+                        break r;
+                    }
+                };
+                let x_r2: &[f64] = if r2 < np { &pop[r2].x } else { &archive[r2 - np] };
+
+                let xi = &pop[i].x;
+                let mut v: Vec<f64> = (0..dim)
+                    .map(|j| {
+                        xi[j] + fi * (pbest[j] - xi[j]) + fi * (pop[r1].x[j] - x_r2[j])
+                    })
+                    .collect();
+                // midpoint bound repair: reflect toward the violated
+                // bound's midpoint with the parent (standard JADE repair)
+                for j in 0..dim {
+                    if v[j] < 0.0 {
+                        v[j] = xi[j] / 2.0;
+                    } else if v[j] > 1.0 {
+                        v[j] = (xi[j] + 1.0) / 2.0;
+                    }
+                }
+                // binomial crossover with one forced coordinate
+                let j_rand = rng.below(dim);
+                let trial: Vec<f64> = (0..dim)
+                    .map(|j| {
+                        if j == j_rand || rng.uniform(0.0, 1.0) < cri {
+                            v[j]
+                        } else {
+                            xi[j]
+                        }
+                    })
+                    .collect();
+                trials.push(trial);
+            }
+
+            let values = f.eval_many(&trials);
+            assert_eq!(values.len(), np, "eval_many: value count mismatch");
+            evals += np;
+            obs::counter_add(Counter::DeEvaluations, np as u64);
+
+            // one-to-one selection: the trial replaces its parent only on
+            // strict improvement, carrying its control params with it
+            for (i, (trial, value)) in trials.into_iter().zip(values).enumerate() {
+                if score(value) > score(pop[i].value) {
+                    if self.archive {
+                        if archive.len() >= np {
+                            let evict = rng.below(archive.len());
+                            archive.swap_remove(evict);
+                        }
+                        archive.push(std::mem::take(&mut pop[i].x));
+                    }
+                    let (fi, cri) = params[i];
+                    if score(value) > score(best.value) {
+                        best = Candidate { x: trial.clone(), value };
+                    }
+                    pop[i] = Member { x: trial, value, f: fi, cr: cri };
+                }
+            }
+            self.record(generation, &pop, evals, best.value);
+        }
+        best
+    }
+}
+
+impl AdaptiveDe {
+    fn record(&self, generation: usize, pop: &[Member], evaluations: usize, best: f64) {
+        if let Some(rec) = &self.recorder {
+            let np = pop.len();
+            let mean_f = pop.iter().map(|m| m.f).sum::<f64>() / np as f64;
+            let mean_cr = pop.iter().map(|m| m.cr).sum::<f64>() / np as f64;
+            rec.push(DeGenRecord { generation, np, evaluations, best, mean_f, mean_cr });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::test_objectives::{neg_sphere, wiggly};
+
+    #[test]
+    fn solves_sphere() {
+        let mut rng = Pcg64::seed(20);
+        let c = AdaptiveDe::new(2000).optimize(&neg_sphere, 4, &mut rng);
+        assert!(c.value > -1e-4, "value={}", c.value);
+    }
+
+    #[test]
+    fn solves_multimodal() {
+        // global max per dim = 2.32292 → 4.6458 total; DE's population
+        // should not get stuck on the 3.79 local ridge CMA-ES can land on
+        let mut rng = Pcg64::seed(21);
+        let c = AdaptiveDe::new(2000).optimize(&wiggly, 2, &mut rng);
+        assert!(c.value > 4.5, "value={}", c.value);
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let mut rng = Pcg64::seed(22);
+        let c = AdaptiveDe::new(600).optimize(&|x: &[f64]| x[0] + x[1], 2, &mut rng);
+        assert!(c.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(c.value > 1.9, "boundary max should be found: {}", c.value);
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let f = |x: &[f64]| {
+            count.fetch_add(1, Ordering::Relaxed);
+            -x[0]
+        };
+        let mut rng = Pcg64::seed(23);
+        AdaptiveDe::new(300).optimize(&f, 3, &mut rng);
+        let used = count.load(Ordering::Relaxed);
+        assert!(used <= 300, "budget 300, used {used}");
+        assert!(used >= 200, "budget mostly spent: used {used}");
+    }
+
+    #[test]
+    fn is_deterministic_under_fixed_seed() {
+        let run = || {
+            let mut rng = Pcg64::seed(24);
+            AdaptiveDe::new(800).optimize(&wiggly, 3, &mut rng)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(
+            a.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn optimize_from_keeps_a_good_seed_point() {
+        // the seeded optimum must survive selection: with a tiny budget
+        // the returned best can only be the seed or an improvement
+        let x0 = vec![0.3; 4];
+        let v0 = neg_sphere(&x0);
+        let mut rng = Pcg64::seed(25);
+        let c = AdaptiveDe::new(40).optimize_from(&neg_sphere, &x0, &mut rng);
+        assert!(c.value >= v0, "seed value {v0} lost: {}", c.value);
+    }
+
+    #[test]
+    fn non_finite_values_never_win() {
+        // a poisoned band of the domain returns NaN; the result must be
+        // finite and outside it
+        let f = |x: &[f64]| {
+            if x[0] > 0.5 {
+                f64::NAN
+            } else {
+                x[0]
+            }
+        };
+        let mut rng = Pcg64::seed(26);
+        let c = AdaptiveDe::new(400).optimize(&f, 2, &mut rng);
+        assert!(c.value.is_finite(), "value={}", c.value);
+        assert!(c.x[0] <= 0.5);
+    }
+
+    #[test]
+    fn recorder_captures_generations_and_adaptation() {
+        let rec = DeRecorder::new();
+        let mut rng = Pcg64::seed(27);
+        AdaptiveDe::new(1500).with_recorder(rec.clone()).optimize(&wiggly, 4, &mut rng);
+        let rows = rec.rows();
+        assert!(rows.len() > 5, "expected several generations, got {}", rows.len());
+        assert_eq!(rows[0].generation, 0);
+        // best is monotone non-decreasing, evals strictly increasing
+        for w in rows.windows(2) {
+            assert!(w[1].best >= w[0].best);
+            assert!(w[1].evaluations > w[0].evaluations);
+            assert_eq!(w[1].generation, w[0].generation + 1);
+        }
+        // self-adaptation actually moved the control params off the
+        // (0.5, 0.9) jDE initialization
+        let last = rows.last().unwrap();
+        assert!(
+            (last.mean_f - 0.5).abs() > 1e-6 || (last.mean_cr - 0.9).abs() > 1e-6,
+            "F/CR never adapted: mean_f={} mean_cr={}",
+            last.mean_f,
+            last.mean_cr
+        );
+    }
+
+    #[test]
+    fn population_shrinks_over_the_run() {
+        let rec = DeRecorder::new();
+        let mut rng = Pcg64::seed(28);
+        let de = AdaptiveDe { np0: Some(32), np_min: 4, ..AdaptiveDe::new(2000) }
+            .with_recorder(rec.clone());
+        de.optimize(&neg_sphere, 3, &mut rng);
+        let rows = rec.rows();
+        assert_eq!(rows.first().unwrap().np, 32);
+        assert!(
+            rows.last().unwrap().np < 16,
+            "population never shrank: final np={}",
+            rows.last().unwrap().np
+        );
+    }
+}

@@ -4,8 +4,8 @@
 //! Two roles in a Bayesian optimizer:
 //! * maximizing the **acquisition function** over the unit hypercube
 //!   (derivative-free, multimodal): [`RandomPoint`], [`GridSearch`],
-//!   [`NelderMead`], [`Cmaes`], [`Direct`], composed with
-//!   [`ParallelRepeater`] (parallel restarts) and [`Chained`]
+//!   [`NelderMead`], [`Cmaes`], [`Direct`], [`AdaptiveDe`], composed
+//!   with [`ParallelRepeater`] (parallel restarts) and [`Chained`]
 //!   (global-then-local, Limbo's "chained" optimizers);
 //! * maximizing the **log marginal likelihood** over log-hyper-params
 //!   (gradient available): [`rprop`] / [`adam`].
@@ -15,6 +15,7 @@
 
 pub mod adam;
 pub mod cmaes;
+pub mod de;
 pub mod direct;
 pub mod grid;
 pub mod nelder_mead;
@@ -24,6 +25,7 @@ pub mod rprop;
 
 pub use adam::adam_maximize;
 pub use cmaes::Cmaes;
+pub use de::{AdaptiveDe, DeGenRecord, DeRecorder};
 pub use direct::Direct;
 pub use grid::GridSearch;
 pub use nelder_mead::NelderMead;

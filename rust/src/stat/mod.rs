@@ -14,6 +14,13 @@
 //! * [`TraceHandle`] collects the observation trace in memory behind a
 //!   cloneable handle (the cross-frontend parity tests compare these
 //!   bit-for-bit);
+//! * [`RecordingObserver`] captures the **full** event stream (plus
+//!   per-generation inner-DE state via an embedded
+//!   [`DeRecorder`](crate::opt::DeRecorder)) and can
+//!   [`replay_into`](RecordingObserver::replay_into) a fresh
+//!   identically-configured study — asks are verified bit-for-bit
+//!   against the recording, so a convergence regression bisects to the
+//!   first diverging proposal;
 //! * [`MetricsObserver`] enables the [`crate::obs`] span registry for
 //!   the run and writes its phase breakdown (where the milliseconds
 //!   went: Cholesky vs. refit vs. acquisition) into `meta.dat` and
@@ -27,7 +34,10 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::bayes_opt::core::{BoEvent, Observer};
+use crate::bayes_opt::Observation;
+use crate::coordinator::Study;
 use crate::obs::{self, Counter, Phase};
+use crate::opt::{DeGenRecord, DeRecorder};
 
 /// TSV run logger; every write goes through buffered files flushed on
 /// [`finish`](Self::finish) (and again on drop, so an early-dropped run
@@ -495,6 +505,106 @@ fn json_point(raw: &str) -> Result<Vec<f64>, String> {
 }
 
 impl ReplayEvent {
+    /// Owned copy of a live bus event — the capture side of
+    /// [`RecordingObserver`].
+    pub fn from_event(event: &BoEvent) -> Self {
+        match *event {
+            BoEvent::InitDone { n_samples } => ReplayEvent::InitDone { n_samples },
+            BoEvent::Proposal { iteration, q, xs } => {
+                ReplayEvent::Proposal { iteration, q, xs: xs.to_vec() }
+            }
+            BoEvent::Observation { evaluations, x, y, best } => {
+                ReplayEvent::Observation { evaluations, x: x.to_vec(), y, best }
+            }
+            BoEvent::TellNoisy { evaluations, x, y, noise, best } => {
+                ReplayEvent::TellNoisy { evaluations, x: x.to_vec(), y, noise, best }
+            }
+            BoEvent::TellConstrained { evaluations, x, y, noise, constraints, best } => {
+                ReplayEvent::TellConstrained {
+                    evaluations,
+                    x: x.to_vec(),
+                    y,
+                    noise,
+                    constraints: constraints.to_vec(),
+                    best,
+                }
+            }
+            BoEvent::AskPending { iteration, x } => {
+                ReplayEvent::AskPending { iteration, x: x.to_vec() }
+            }
+            BoEvent::Refit { n_samples } => ReplayEvent::Refit { n_samples },
+            BoEvent::Stopped { dim, evaluations, best } => {
+                ReplayEvent::Stopped { dim, evaluations, best }
+            }
+        }
+    }
+
+    /// Serialize back to the exact [`JsonlObserver`] line format (17
+    /// significant digits, non-finite floats as `null`), so a saved
+    /// recording and a live event log are interchangeable inputs to
+    /// [`read_log`](Self::read_log). Pinned against the writer in the
+    /// module tests — the two formats must never drift.
+    pub fn to_json_line(&self) -> String {
+        let f = JsonlObserver::fmt_f64;
+        let pt = JsonlObserver::fmt_point;
+        match self {
+            ReplayEvent::InitDone { n_samples } => {
+                format!(r#"{{"event":"init_done","n_samples":{n_samples}}}"#)
+            }
+            ReplayEvent::Proposal { iteration, q, xs } => {
+                let pts: Vec<String> = xs.iter().map(|x| pt(x)).collect();
+                format!(
+                    r#"{{"event":"proposal","iteration":{iteration},"q":{q},"xs":[{}]}}"#,
+                    pts.join(",")
+                )
+            }
+            ReplayEvent::Observation { evaluations, x, y, best } => format!(
+                r#"{{"event":"observation","evaluations":{evaluations},"x":{},"y":{},"best":{}}}"#,
+                pt(x),
+                f(*y),
+                f(*best)
+            ),
+            ReplayEvent::TellNoisy { evaluations, x, y, noise, best } => format!(
+                concat!(
+                    r#"{{"event":"tell_noisy","evaluations":{},"x":{},"#,
+                    r#""y":{},"noise":{},"best":{}}}"#
+                ),
+                evaluations,
+                pt(x),
+                f(*y),
+                f(*noise),
+                f(*best)
+            ),
+            ReplayEvent::TellConstrained { evaluations, x, y, noise, constraints, best } => {
+                format!(
+                    concat!(
+                        r#"{{"event":"tell_constrained","evaluations":{},"x":{},"#,
+                        r#""y":{},"noise":{},"constraints":{},"best":{}}}"#
+                    ),
+                    evaluations,
+                    pt(x),
+                    f(*y),
+                    match noise {
+                        Some(nv) => f(*nv),
+                        None => "null".to_string(),
+                    },
+                    pt(constraints),
+                    f(*best)
+                )
+            }
+            ReplayEvent::AskPending { iteration, x } => {
+                format!(r#"{{"event":"ask_pending","iteration":{iteration},"x":{}}}"#, pt(x))
+            }
+            ReplayEvent::Refit { n_samples } => {
+                format!(r#"{{"event":"refit","n_samples":{n_samples}}}"#)
+            }
+            ReplayEvent::Stopped { dim, evaluations, best } => format!(
+                r#"{{"event":"stopped","dim":{dim},"evaluations":{evaluations},"best":{}}}"#,
+                f(*best)
+            ),
+        }
+    }
+
     /// Parse one [`JsonlObserver`] line.
     pub fn parse_line(line: &str) -> Result<Self, String> {
         match json_field(line, "event")? {
@@ -593,6 +703,174 @@ impl ReplayEvent {
             }
         }
         Ok(events)
+    }
+}
+
+/// Full-run capture + deterministic replay, behind a cloneable handle.
+///
+/// Subscribe one clone to a run (`BoDef::observer(rec.clone())`) and it
+/// records **every** [`BoEvent`] as an owned [`ReplayEvent`] — not just
+/// the observation trace [`TraceHandle`] keeps. It also carries a
+/// [`DeRecorder`]: pass [`de_recorder`](Self::de_recorder) to
+/// [`AdaptiveDe::with_recorder`](crate::opt::AdaptiveDe::with_recorder)
+/// and the per-generation inner-DE state (population size, best, mean
+/// F/CR) lands in the same capture.
+///
+/// The capture replays through the **live** code path:
+/// [`replay_into`](Self::replay_into) drives a fresh,
+/// identically-configured [`Study`] through the recorded
+/// proposal/observation sequence, verifying each re-asked point
+/// bit-for-bit against the recording — the first diverging proposal is
+/// reported with its iteration, which is what makes a convergence
+/// regression bisectable. [`save`](Self::save)/[`load`](Self::load)
+/// round-trip the capture through the [`JsonlObserver`] line format at
+/// 17 significant digits, so recordings survive on disk without losing
+/// a bit.
+///
+/// Recording never touches the RNG or the floating-point evaluation
+/// order, so runs are bit-identical with or without a recorder
+/// attached.
+#[derive(Clone, Default)]
+pub struct RecordingObserver {
+    events: Arc<Mutex<Vec<ReplayEvent>>>,
+    de: DeRecorder,
+}
+
+impl RecordingObserver {
+    /// An empty recording.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A recording pre-loaded from a [`JsonlObserver`]-format log file
+    /// (e.g. one written by [`save`](Self::save) or by a live
+    /// `JsonlObserver`).
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let events = ReplayEvent::read_log(path)?;
+        let rec = Self::new();
+        *rec.events.lock().expect("recording lock") = events;
+        Ok(rec)
+    }
+
+    /// Snapshot of the events recorded so far.
+    pub fn events(&self) -> Vec<ReplayEvent> {
+        self.events.lock().expect("recording lock").clone()
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("recording lock").len()
+    }
+
+    /// True before the first event.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all recorded events and DE rows (reuse one handle across
+    /// runs).
+    pub fn clear(&self) {
+        self.events.lock().expect("recording lock").clear();
+        self.de.clear();
+    }
+
+    /// The embedded per-generation DE sink — hand a clone to
+    /// [`AdaptiveDe::with_recorder`](crate::opt::AdaptiveDe::with_recorder).
+    pub fn de_recorder(&self) -> DeRecorder {
+        self.de.clone()
+    }
+
+    /// Per-generation DE rows captured so far.
+    pub fn de_rows(&self) -> Vec<DeGenRecord> {
+        self.de.rows()
+    }
+
+    /// Write the capture as a [`JsonlObserver`]-format log (one event
+    /// per line, bit-exact floats) — readable back via
+    /// [`load`](Self::load) or [`ReplayEvent::read_log`].
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        for event in self.events().iter() {
+            writeln!(out, "{}", event.to_json_line())?;
+        }
+        out.flush()
+    }
+
+    /// Drive `study` (a fresh, identically-configured one) through the
+    /// recorded run. Each recorded proposal is re-asked and compared
+    /// **bit-for-bit**; each recorded observation is re-told with the
+    /// recorded value; `Stopped` finishes the study. `Refit`, `InitDone`
+    /// and `AskPending` records are skipped — the study re-derives them
+    /// (attach another `RecordingObserver` to the replay study and
+    /// compare captures to verify those too).
+    ///
+    /// `Err` carries the first divergence or study error, naming the
+    /// event index and iteration — the bisection point.
+    pub fn replay_into<S: Study + ?Sized>(&self, study: &mut S) -> Result<(), String> {
+        let events = self.events();
+        for (idx, event) in events.iter().enumerate() {
+            match event {
+                ReplayEvent::Proposal { iteration, q, xs } => {
+                    let got: Vec<Vec<f64>> = if *q == 1 {
+                        vec![study
+                            .ask()
+                            .map_err(|e| format!("replay ask at event {idx}: {e:?}"))?]
+                    } else {
+                        study
+                            .ask_batch(*q)
+                            .map_err(|e| format!("replay ask_batch at event {idx}: {e:?}"))?
+                    };
+                    for (k, (g, r)) in got.iter().zip(xs.iter()).enumerate() {
+                        let same = g.len() == r.len()
+                            && g.iter().zip(r).all(|(a, b)| a.to_bits() == b.to_bits());
+                        if !same {
+                            return Err(format!(
+                                "replay diverged at event {idx} (iteration {iteration}, \
+                                 point {k}): recorded {r:?}, got {g:?}"
+                            ));
+                        }
+                    }
+                }
+                ReplayEvent::Observation { x, y, .. } => {
+                    study
+                        .tell(x, *y)
+                        .map_err(|e| format!("replay tell at event {idx}: {e:?}"))?;
+                }
+                ReplayEvent::TellNoisy { x, y, noise, .. } => {
+                    study
+                        .tell_noisy(x, *y, *noise)
+                        .map_err(|e| format!("replay tell_noisy at event {idx}: {e:?}"))?;
+                }
+                ReplayEvent::TellConstrained { x, y, noise, constraints, .. } => {
+                    let record = match noise {
+                        Some(nv) => Observation::noisy(x.clone(), *y, *nv),
+                        None => Observation::exact(x.clone(), *y),
+                    }
+                    .with_constraints(constraints.clone());
+                    study
+                        .tell_observation(record)
+                        .map_err(|e| format!("replay tell_constrained at event {idx}: {e:?}"))?;
+                }
+                ReplayEvent::Stopped { .. } => {
+                    study
+                        .finish()
+                        .map_err(|e| format!("replay finish at event {idx}: {e:?}"))?;
+                }
+                ReplayEvent::InitDone { .. }
+                | ReplayEvent::Refit { .. }
+                | ReplayEvent::AskPending { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Observer for RecordingObserver {
+    fn on_event(&mut self, event: &BoEvent) {
+        self.events.lock().expect("recording lock").push(ReplayEvent::from_event(event));
     }
 }
 

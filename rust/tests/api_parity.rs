@@ -272,3 +272,127 @@ fn la_tuning_thread_count_leaves_traces_bit_identical() {
     }
     limbo::la::set_tune(prior);
 }
+
+/// Every stochastic inner optimizer, wrapped in the `restarts`
+/// combinator, must be bit-reproducible under a fixed seed across 1, 2
+/// and 8 pool threads: the repeater forks one RNG stream per restart
+/// index and folds results in restart order, so the thread count can
+/// only change scheduling, never arithmetic. Covers both entry points
+/// (`optimize` and the seed-forwarding `optimize_from`).
+#[test]
+fn inner_optimizers_are_bit_reproducible_across_pool_threads() {
+    let _guard = lock();
+    // multimodal enough that different restarts land in different basins
+    let f = |x: &[f64]| {
+        -x.iter().map(|&v| (v - 0.62) * (v - 0.62)).sum::<f64>() + 0.05 * (23.0 * x[0]).sin()
+    };
+    let x0 = [0.2, 0.8, 0.5];
+
+    fn assert_same(a: &limbo::opt::Candidate, b: &limbo::opt::Candidate, what: &str) {
+        assert_eq!(a.value.to_bits(), b.value.to_bits(), "{what}: value differs");
+        assert_eq!(a.x.len(), b.x.len(), "{what}: dim differs");
+        for (d, (va, vb)) in a.x.iter().zip(&b.x).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: x[{d}] differs");
+        }
+    }
+
+    fn sweep<O: limbo::opt::Optimizer>(
+        make: impl Fn() -> O,
+        f: &dyn Objective,
+        x0: &[f64],
+        label: &str,
+    ) {
+        let run = |threads: usize| {
+            let rep = make().restarts(4, threads);
+            let mut rng = Pcg64::seed(0xA11CE);
+            let free = rep.optimize(f, x0.len(), &mut rng);
+            let seeded = rep.optimize_from(f, x0, &mut rng);
+            (free, seeded)
+        };
+        let (base_free, base_seeded) = run(1);
+        for threads in [2, 8] {
+            let (free, seeded) = run(threads);
+            assert_same(&base_free, &free, &format!("{label}/optimize @ {threads} threads"));
+            let what = format!("{label}/optimize_from @ {threads} threads");
+            assert_same(&base_seeded, &seeded, &what);
+        }
+    }
+
+    sweep(|| limbo::opt::AdaptiveDe::new(300), &f, &x0, "adaptive_de");
+    sweep(|| Cmaes::new(300), &f, &x0, "cmaes");
+    sweep(|| PopulationSearch::new(10, 16), &f, &x0, "population_search");
+    sweep(|| RandomPoint::new(64).then(NelderMead::default()), &f, &x0, "random+nelder_mead");
+}
+
+/// A DE-driven server definition for the metrics tests below: same
+/// shape as [`def`], with the acquisition maximizer swapped for
+/// [`limbo::opt::AdaptiveDe`] via the `inner_de` knob.
+fn de_def(
+    trace: TraceHandle,
+) -> limbo::bayes_opt::BoDef<
+    Matern52,
+    DataMean,
+    Ei,
+    RandomSampling,
+    limbo::opt::AdaptiveDe,
+    MaxIterations,
+> {
+    BoDef::new(2)
+        .acquisition(Ei::default())
+        .init_samples(N_INIT)
+        .inner_de(120)
+        .refit(RefitSchedule::Never)
+        .noise(1e-3)
+        .seed(0xC0FFEE)
+        .iterations(ITERATIONS)
+        .observer(trace)
+}
+
+fn run_de_optimizer() -> Vec<TraceRow> {
+    let trace = TraceHandle::new();
+    let mut opt = de_def(trace.clone()).build_optimizer();
+    let best = opt.optimize(&FnEval::new(2, objective));
+    assert_eq!(best.evaluations, TOTAL);
+    trace.rows()
+}
+
+/// `--metrics` must attribute DE time correctly: a DE-driven run books
+/// one `Phase::InnerOpt` span per model-guided proposal and bumps the
+/// DE generation/evaluation counters.
+#[test]
+fn de_runs_attribute_inner_opt_spans_and_counters() {
+    let _guard = lock();
+    let _obs_guard = limbo::obs::test_serial_guard();
+    let prior = limbo::obs::enabled();
+    limbo::obs::set_enabled(true);
+    let base = limbo::obs::snapshot();
+    run_de_optimizer();
+    let delta = limbo::obs::snapshot().delta_since(&base);
+    limbo::obs::set_enabled(prior);
+
+    let inner_calls = delta.calls(limbo::obs::Phase::InnerOpt);
+    assert!(
+        inner_calls >= ITERATIONS as u64,
+        "expected one InnerOpt span per model-guided proposal, got {inner_calls}"
+    );
+    let gens = delta.counter(limbo::obs::Counter::DeGenerations);
+    let evals = delta.counter(limbo::obs::Counter::DeEvaluations);
+    assert!(gens > 0, "DE generation counter never moved");
+    assert!(evals >= gens, "DE evaluation counter ({evals}) below generation counter ({gens})");
+}
+
+/// Like [`metrics_on_or_off_leaves_traces_bit_identical`], for the DE
+/// inner optimizer: its spans and counters must stay out of the
+/// deterministic trace.
+#[test]
+fn de_metrics_on_or_off_leaves_traces_bit_identical() {
+    let _guard = lock();
+    let _obs_guard = limbo::obs::test_serial_guard();
+    let prior = limbo::obs::enabled();
+    limbo::obs::set_enabled(false);
+    let off = run_de_optimizer();
+    limbo::obs::set_enabled(true);
+    let on = run_de_optimizer();
+    limbo::obs::set_enabled(prior);
+    assert_traces_identical(&off, &on, "DE metrics off vs on");
+}

@@ -23,7 +23,9 @@ Gate policy
   shared CI runners for a hard gate).
 * `fig1_time` rows track the static-vs-dynamic speed-up `ratio` (higher
   is better), `fig1_scenario` rows track the noisy/constrained Branin
-  cells' `seconds` and `(feasible_)regret` (lower is better), and
+  cells' `seconds` and `(feasible_)regret` (lower is better),
+  `fig1_inner_opt` rows track the acquisition-maximizer sweep's
+  `seconds` and `regret` (DIRECT vs CMA-ES vs DE, lower is better), and
   `kernel_micro` rows track `gram_blocked_s` (lower is
   better); all warn-only — a ratio falling below the 2x advantage the
   PR pins is a warning, not a hard failure, because full-run wall-clock
@@ -100,6 +102,9 @@ def row_key(row):
                 row.get("iters"), row.get("hpo"), row.get("phase"))
     if row.get("bench") == "fig1_scenario":
         return ("fig1_scenario", row.get("scenario"), row.get("rounds"))
+    if row.get("bench") == "fig1_inner_opt":
+        return ("fig1_inner_opt", row.get("inner"), row.get("func"),
+                row.get("dim"))
     if row.get("bench") == "kernel_micro":
         return ("kernel_micro", row.get("kernel"), row.get("n"))
     if row.get("bench") == "manager_load":
@@ -240,6 +245,26 @@ def main():
                     continue
                 growth = now / then - 1.0
                 line = f"{key} {metric}: {then:.4f} -> {now:.4f} ({growth:+.1%})"
+                if growth > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
+        elif row.get("bench") == "fig1_inner_opt":
+            # acquisition-maximizer sweep (DIRECT vs CMA-ES vs DE):
+            # wall-clock and final regret, warn-only like the other
+            # full-run rows
+            now, then = row.get("seconds"), base.get("seconds")
+            if now is not None and then is not None and then > 0:
+                slowdown = now / then - 1.0
+                line = f"{key} seconds: {then:.4f}s -> {now:.4f}s ({slowdown:+.1%})"
+                if slowdown > args.max_regression:
+                    warnings.append(line)
+                else:
+                    print(f"ok   {line}")
+            now, then = row.get("regret"), base.get("regret")
+            if now is not None and then is not None and then > 0:
+                growth = now / then - 1.0
+                line = f"{key} regret: {then:.4f} -> {now:.4f} ({growth:+.1%})"
                 if growth > args.max_regression:
                     warnings.append(line)
                 else:
